@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT artifacts, generate with MHA and CHAI, and
+//! print the phase timing decomposition the paper's Figure 12 is built on.
+//!
+//! Run:  cargo run --release --example quickstart [-- --artifacts DIR]
+
+use anyhow::Result;
+use chai::engine::{Engine, Variant};
+use chai::util::args::Args;
+use chai::util::stats::mean;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let engine = Engine::from_dir(&dir)?;
+    let m = engine.manifest();
+    println!(
+        "loaded {} ({} params, {} AOT artifacts, attn impl = {})",
+        m.model.name,
+        m.model.n_params,
+        m.artifacts.len(),
+        m.attn_impl
+    );
+    println!("offline k_list (elbow): {:?}  -> K-cache saving {:.1}%\n",
+        m.k_list, 100.0 * chai::kv::chai_saving_fraction(m));
+
+    let prompts = [
+        "the color of tom is",
+        "ana keeps the",
+        "question : does leo eat",
+    ];
+    for variant in [Variant::Mha, Variant::Chai] {
+        println!("--- variant: {} ---", variant.name());
+        for p in &prompts {
+            let g = engine.generate(p, 16, &variant)?;
+            println!(
+                "  {p:?} -> {:?}  (ttft {:.1} ms = probe {:.1} + cluster {:.2} + prefill {:.1}; \
+                 decode {:.1} ms/tok)",
+                g.text.trim(),
+                g.timing.ttft_ms,
+                g.timing.probe_ms,
+                g.timing.cluster_ms,
+                g.timing.prefill_ms,
+                mean(&g.timing.decode_ms)
+            );
+        }
+    }
+    println!("\n(first generation per variant includes one-time XLA compilation;");
+    println!(" the latency benches warm up executables before measuring)");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end serving driver (the repro mandate's E2E example): start the
+//! coordinator + TCP server, replay a Poisson trace of batched requests
+//! through real sockets, and report latency/throughput for CHAI vs MHA.
+//!
+//! Run:  cargo run --release --example serve_trace -- \
+//!           [--requests 24] [--rate 4] [--max-new 12] [--variant chai,mha]
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use chai::bench::{poisson_trace, Table};
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::server::{Client, Server};
+use chai::util::args::Args;
+use chai::util::now_ms;
+use chai::util::stats::{mean, percentile};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let n = args.usize("requests", 24)?;
+    let rate = args.f64("rate", 4.0)?;
+    let max_new = args.usize("max-new", 12)?;
+    let variants = args.str("variant", "chai,mha");
+
+    let mut table = Table::new(
+        "E2E serving: Poisson trace over TCP (per variant)",
+        &["variant", "req", "ok", "mean ttft ms", "p95 ttft", "mean e2e ms", "p95 e2e", "tok/s"],
+    );
+
+    for variant in variants.split(',') {
+        let cfg = ServingConfig { artifacts_dir: dir.clone(), max_batch: 8, ..Default::default() };
+        let handle = Coordinator::start(cfg)?;
+        let server = Server::start(handle.coordinator.clone(), "127.0.0.1:0")?;
+        let addr = server.addr.to_string();
+
+        // warm the executables so the trace measures steady-state
+        {
+            let mut c = Client::connect(&addr)?;
+            c.generate("the color of tom is", 2, variant)?;
+        }
+
+        let trace = poisson_trace(n, rate, max_new.saturating_sub(4).max(1), max_new, 42);
+        let t0 = now_ms();
+        let results: Arc<Mutex<Vec<(f64, f64, usize, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut joins = Vec::new();
+        for req in trace {
+            let addr = addr.clone();
+            let variant = variant.to_string();
+            let results = results.clone();
+            joins.push(std::thread::spawn(move || {
+                let wait = req.arrival_ms - (now_ms() - t0);
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_millis(wait as u64));
+                }
+                let mut c = Client::connect(&addr).expect("connect");
+                let sent = now_ms();
+                let resp = c.generate(&req.prompt, req.max_new, &variant).expect("generate");
+                let e2e = now_ms() - sent;
+                let ok = resp.opt("error").is_none();
+                let ttft = resp.opt("ttft_ms").map(|v| v.num().unwrap()).unwrap_or(0.0);
+                let ntok = resp
+                    .opt("n_generated")
+                    .map(|v| v.usize().unwrap())
+                    .unwrap_or(0);
+                results.lock().unwrap().push((ttft, e2e, ntok, ok));
+            }));
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        let span_s = (now_ms() - t0) / 1e3;
+        let res = results.lock().unwrap();
+        let ttfts: Vec<f64> = res.iter().filter(|r| r.3).map(|r| r.0).collect();
+        let e2es: Vec<f64> = res.iter().filter(|r| r.3).map(|r| r.1).collect();
+        let total_tokens: usize = res.iter().filter(|r| r.3).map(|r| r.2).sum();
+        let ok = res.iter().filter(|r| r.3).count();
+        table.row(vec![
+            variant.to_string(),
+            n.to_string(),
+            ok.to_string(),
+            format!("{:.1}", mean(&ttfts)),
+            format!("{:.1}", percentile(&ttfts, 95.0)),
+            format!("{:.1}", mean(&e2es)),
+            format!("{:.1}", percentile(&e2es, 95.0)),
+            format!("{:.1}", total_tokens as f64 / span_s),
+        ]);
+        server.stop();
+        handle.shutdown();
+    }
+    table.print();
+    println!("\nshape check: CHAI ttft/e2e should sit at or below MHA at equal load");
+    println!("(single-core CPU testbed; paper runs 8xV100 — ratios, not absolutes)");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Validate every artifact in the manifest: HLO text parses, compiles on
+//! the PJRT CPU client, and executes with zero-filled inputs of the
+//! manifest shapes. The smoke check to run after `make artifacts`.
+//!
+//! Run:  cargo run --release --example validate_artifacts [-- --artifacts DIR --execute]
+
+use anyhow::Result;
+use chai::config::Manifest;
+use chai::runtime::{In, Runtime};
+use chai::tensor::Tensor;
+use chai::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = std::path::PathBuf::from(args.str("artifacts", "artifacts"));
+    let execute = args.bool("execute");
+    let manifest = Manifest::load(&dir)?;
+    let names: Vec<String> = manifest.artifacts.keys().cloned().collect();
+
+    let mut ok = 0;
+    let mut failed = 0;
+    for name in &names {
+        let spec = manifest.artifact(name)?;
+        let path = manifest.hlo_path(spec);
+        match xla::HloModuleProto::from_text_file(path.to_str().unwrap()) {
+            Ok(_) => {}
+            Err(e) => {
+                println!("PARSE FAIL {name}: {e}");
+                failed += 1;
+                continue;
+            }
+        }
+        if !execute {
+            println!("parse ok   {name}");
+            ok += 1;
+            continue;
+        }
+        // full load + execute with zero inputs
+        let rt = Runtime::load(&dir)?;
+        let tensors: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|i| match i.dtype.as_str() {
+                "int32" => Tensor::zeros_i32(&i.shape),
+                _ => Tensor::zeros_f32(&i.shape),
+            })
+            .collect();
+        let ins: Vec<In> = tensors.iter().map(In::Host).collect();
+        match rt.run(name, &ins) {
+            Ok(outs) => {
+                println!("exec ok    {name} ({} outputs)", outs.len());
+                ok += 1;
+            }
+            Err(e) => {
+                println!("EXEC FAIL  {name}: {e:#}");
+                failed += 1;
+            }
+        }
+    }
+    println!("\n{ok} ok, {failed} failed of {}", names.len());
+    if failed > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}

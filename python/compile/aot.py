@@ -1,0 +1,318 @@
+"""AOT export: lower every (variant × bucket) graph to HLO **text** and
+write ``artifacts/manifest.json`` describing the whole artifact set.
+
+HLO text (not ``.serialize()``) is the interchange format: the image's
+xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit instruction ids; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are runtime inputs in **sorted tensor-name order** (the order the
+rust runtime uploads buffers in, read from the manifest). Python runs once
+— ``make artifacts`` — and never on the request path.
+
+Pipeline (paper Fig 5 offline phase):
+  1. train (or load) the tiny model                       → weights.cbt
+  2. offline cluster identification on held-out samples   → clusters.json
+  3. lower all graphs with per-layer k_l baked static     → *.hlo.txt
+  4. emit eval suites, analysis samples, fixtures, manifest
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import clustering, data, tensorio, tokenizer
+from .configs import (model_config, ANALYZE_BUCKET, DECODE_BUCKETS, DEJAVU_SPARSITIES,
+                      LOGPROB_BUCKET, PREFILL_BUCKETS, PROBE_BUCKET,
+                      PROBE_TOKENS, SPATTEN_HEAD_KEEP, SPATTEN_TOKEN_KEEP,
+                      UNIFORM_K_SWEEP, ModelConfig, TrainConfig,
+                      manifest_dict)
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr_like):
+    a = jax.ShapeDtypeStruct(np.shape(arr_like), np.asarray(arr_like).dtype) \
+        if not isinstance(arr_like, jax.ShapeDtypeStruct) else arr_like
+    return {"name": name, "dtype": str(a.dtype), "shape": list(a.shape)}
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, params, out_dir: str, impl: str):
+        self.cfg = cfg
+        self.out = out_dir
+        self.impl = impl
+        self.weight_names = sorted(params)
+        self.weights = [params[n] for n in self.weight_names]
+        self.manifest = manifest_dict(cfg)
+        self.manifest["weight_order"] = self.weight_names
+        self.manifest["attn_impl"] = impl
+
+    def lower(self, name: str, fn, extra_inputs, output_names,
+              static_meta=None, impl=None):
+        """fn(weights_list, *extras) -> tuple of outputs."""
+        impl = impl or self.impl
+        t0 = time.time()
+        specs = [jax.ShapeDtypeStruct(np.shape(w), np.asarray(w).dtype)
+                 for w in self.weights]
+        extra_specs = [jax.ShapeDtypeStruct(np.shape(v),
+                                            np.asarray(v).dtype)
+                       for _, v in extra_inputs]
+        lowered = jax.jit(fn, keep_unused=True).lower(specs, *extra_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, path), "w") as f:
+            f.write(text)
+        out_avals = jax.tree.leaves(lowered.out_info)
+        outs = [{"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+                for n, a in zip(output_names, out_avals)]
+        assert len(outs) == len(output_names), \
+            f"{name}: {len(out_avals)} outputs vs {len(output_names)} names"
+        entry = {
+            "name": name, "path": path, "impl": impl,
+            "inputs": [_spec(n, v) for n, v in extra_inputs],
+            "outputs": outs,
+            "meta": static_meta or {},
+        }
+        self.manifest["artifacts"].append(entry)
+        print(f"  lowered {name:32s} ({len(text)//1024} KiB, "
+              f"{time.time()-t0:.1f}s)")
+        return entry
+
+
+def offline_clusters(cfg, params, out_dir, n_samples=96, seed=0):
+    """Paper Fig 10a: analyze held-out samples, elbow per layer."""
+    print(f"offline cluster identification ({n_samples} samples)...")
+    w = data.build_world()
+    samples = data.analysis_samples(w, n_samples, seed=42)
+    t = ANALYZE_BUCKET
+
+    @jax.jit
+    def analyze(tok, ln):
+        return M.analyze_graph(params, cfg, tok, ln)
+
+    feats = [[] for _ in range(cfg.n_layers)]  # per layer: list of [H, T]
+    for s in samples:
+        ids = tokenizer.encode(s)[:t]
+        ln = len(ids)
+        ids = ids + [tokenizer.PAD] * (t - ln)
+        maps = np.asarray(analyze(jnp.asarray(ids, jnp.int32),
+                                  jnp.asarray(ln, jnp.int32)))
+        for l in range(cfg.n_layers):
+            feats[l].append(maps[l, :, ln - 1, :ln])  # last-query attention
+    layers = []
+    for l in range(cfg.n_layers):
+        f = np.concatenate(feats[l], axis=1)  # [H, sum(ln)]
+        layers.append(clustering.cluster_layer(f, seed=seed))
+        print(f"  layer {l}: k={layers[l]['k']} "
+              f"membership={layers[l]['membership']}")
+    blob = {"model": cfg.name, "n_samples": n_samples,
+            "k_list": [x["k"] for x in layers], "layers": layers}
+    with open(os.path.join(out_dir, "clusters.json"), "w") as f:
+        json.dump(blob, f, indent=1)
+    return blob
+
+
+def uniform_clusters(cfg, k):
+    """Fig-1 sweep: k uniform clusters per layer, contiguous head blocks
+    (membership overwritten at runtime for the random/static sweeps)."""
+    h = cfg.n_heads
+    mem = [min(i * k // h, k - 1) for i in range(h)]
+    reps = sorted(set(mem.index(j) for j in range(k)))
+    return [k] * cfg.n_layers, mem, reps
+
+
+def export_all(cfg, params, clusters, out_dir, impl, buckets=None,
+               logprob_only=False):
+    ex = Exporter(cfg, params, out_dir, impl)
+    mf = ex.manifest
+    L, H, dh, V = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.vocab_size
+    k_list = clusters["k_list"]
+    k_max = max(k_list)
+    mf["k_list"] = k_list
+    mf["k_max"] = k_max
+    tok_i32 = np.int32(0)
+
+    def wrap(fn):
+        def g(wlist, *extras):
+            p = dict(zip(ex.weight_names, wlist))
+            return fn(p, *extras)
+        return g
+
+    # --- probe + analysis -------------------------------------------------
+    ex.lower("probe_mha",
+             wrap(lambda p, tok, ln:
+                  (M.probe_graph(p, cfg, tok, ln, impl=ex.impl),)),
+             [("tokens", np.zeros(PROBE_BUCKET, np.int32)),
+              ("length", tok_i32)],
+             ["probe_maps"], {"bucket": PROBE_BUCKET})
+    ex.lower("analyze",
+             wrap(lambda p, tok, ln:
+                  (M.analyze_graph(p, cfg, tok, ln),)),
+             [("tokens", np.zeros(ANALYZE_BUCKET, np.int32)),
+              ("length", tok_i32)],
+             ["attn_maps"], {"bucket": ANALYZE_BUCKET}, impl="jnp")
+
+    # --- logprob (eval scoring) family ------------------------------------
+    T = LOGPROB_BUCKET
+    toks = np.zeros(T, np.int32)
+    ex.lower("logprob_mha",
+             wrap(lambda p, tok, ln:
+                  (M.logprob_mha_graph(p, cfg, tok, ln, impl="jnp"),)),
+             [("tokens", toks), ("length", tok_i32)],
+             ["logits"], {"bucket": T}, impl="jnp")
+    mem0 = np.zeros((L, H), np.int32)
+    reps0 = np.zeros((L, k_max), np.int32)
+    for nm, qkv in [("logprob_chai", False), ("logprob_chai_qkv", True)]:
+        ex.lower(nm,
+                 wrap(lambda p, tok, ln, mem, reps, qkv=qkv:
+                      (M.logprob_chai_graph(p, cfg, tok, ln, mem, reps,
+                                            k_list, impl="jnp", qkv=qkv),)),
+                 [("tokens", toks), ("length", tok_i32),
+                  ("membership", mem0), ("reps", reps0)],
+                 ["logits"], {"bucket": T, "k_list": k_list, "qkv": qkv})
+    for k in UNIFORM_K_SWEEP:
+        kl, _, _ = uniform_clusters(cfg, k)
+        ex.lower(f"logprob_chai_k{k}",
+                 wrap(lambda p, tok, ln, mem, reps, kl=kl:
+                      (M.logprob_chai_graph(p, cfg, tok, ln, mem, reps, kl,
+                                            impl="jnp"),)),
+                 [("tokens", toks), ("length", tok_i32),
+                  ("membership", mem0),
+                  ("reps", np.zeros((L, k), np.int32))],
+                 ["logits"], {"bucket": T, "k_list": kl, "uniform_k": k})
+    for sp in DEJAVU_SPARSITIES:
+        n_keep = max(1, round(H * (100 - sp) / 100))
+        ex.lower(f"logprob_dejavu_s{sp}",
+                 wrap(lambda p, tok, ln, kept:
+                      (M.logprob_dejavu_graph(p, cfg, tok, ln, kept,
+                                              impl="jnp"),)),
+                 [("tokens", toks), ("length", tok_i32),
+                  ("kept", np.zeros((L, n_keep), np.int32))],
+                 ["logits"], {"bucket": T, "sparsity": sp,
+                              "n_keep": n_keep})
+    # cascade schedule stretched/truncated to this model's depth
+    spatten_keep = [SPATTEN_TOKEN_KEEP[min(i, len(SPATTEN_TOKEN_KEEP) - 1)]
+                    for i in range(L)]
+    ex.lower("logprob_spatten",
+             wrap(lambda p, tok, ln:
+                  (M.logprob_spatten_graph(p, cfg, tok, ln,
+                                           spatten_keep,
+                                           SPATTEN_HEAD_KEEP),)),
+             [("tokens", toks), ("length", tok_i32)],
+             ["logits"], {"bucket": T,
+                          "token_keep": spatten_keep,
+                          "head_keep": SPATTEN_HEAD_KEEP}, impl="jnp")
+
+    if logprob_only:
+        return ex
+
+    # --- prefill + decode (serving/latency) family ------------------------
+    for T in (buckets or PREFILL_BUCKETS):
+        toks = np.zeros(T, np.int32)
+        # Prefill + scoring artifacts use the XLA-fused jnp path: under
+        # interpret=True the two-stage clustered kernel re-streams the
+        # score panel per query block (no scalar-prefetch on CPU), which
+        # measured 68x slower at T=2048 — see EXPERIMENTS.md §Perf. The
+        # decode hot loop stays on the L1 Pallas kernels.
+        ex.lower(f"prefill_mha_t{T}",
+                 wrap(lambda p, tok, ln:
+                      M.prefill_mha_graph(p, cfg, tok, ln, impl="jnp")),
+                 [("tokens", toks), ("length", tok_i32)],
+                 ["logits", "kcache", "vcache"],
+                 {"bucket": T}, impl="jnp")
+        ex.lower(f"prefill_chai_t{T}",
+                 wrap(lambda p, tok, ln, mem, reps:
+                      M.prefill_chai_graph(p, cfg, tok, ln, mem, reps,
+                                           k_list, impl="jnp")),
+                 [("tokens", toks), ("length", tok_i32),
+                  ("membership", mem0), ("reps", reps0)],
+                 ["logits"] + [f"krep{i}" for i in range(L)] + ["vcache"],
+                 {"bucket": T, "k_list": k_list})
+        kc = np.zeros((L, H, T, dh), np.float32)
+        ex.lower(f"decode_mha_t{T}",
+                 wrap(lambda p, tok, pos, kc, vc:
+                      M.decode_mha_graph(p, cfg, tok, pos, kc, vc,
+                                         impl=ex.impl)),
+                 [("token", tok_i32), ("pos", tok_i32),
+                  ("kcache", kc), ("vcache", kc)],
+                 ["logits", "kcache", "vcache"], {"bucket": T})
+        kreps = [np.zeros((k_list[i], T, dh), np.float32) for i in range(L)]
+        ex.lower(f"decode_chai_t{T}",
+                 wrap(lambda p, tok, pos, *rest:
+                      M.decode_chai_graph(p, cfg, tok, pos,
+                                          list(rest[:L]), rest[L],
+                                          rest[L + 1], rest[L + 2],
+                                          k_list, impl=ex.impl)),
+                 [("token", tok_i32), ("pos", tok_i32)]
+                 + [(f"krep{i}", kreps[i]) for i in range(L)]
+                 + [("vcache", kc), ("membership", mem0), ("reps", reps0)],
+                 ["logits"] + [f"krep{i}" for i in range(L)] + ["vcache"],
+                 {"bucket": T, "k_list": k_list})
+    return ex
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="llama", choices=["llama", "opt", "llama33"])
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "jnp"],
+                    help="attention impl baked into serving artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--cluster-samples", type=int, default=96)
+    ap.add_argument("--buckets", type=int, nargs="*", default=None)
+    ap.add_argument("--logprob-only", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    cfg = model_config(args.model)
+
+    wpath = os.path.join(out, "weights.cbt")
+    if os.path.exists(wpath):
+        print(f"loading weights from {wpath}")
+        params = {k: jnp.asarray(v) for k, v in tensorio.load(wpath).items()}
+    else:
+        from .train import train
+        params, _ = train(cfg, TrainConfig(steps=args.train_steps), out)
+        params = {k: jnp.asarray(np.asarray(v)) for k, v in params.items()}
+
+    cpath = os.path.join(out, "clusters.json")
+    if os.path.exists(cpath):
+        clusters = json.load(open(cpath))
+    else:
+        clusters = offline_clusters(cfg, params, out,
+                                    n_samples=args.cluster_samples)
+
+    ex = export_all(cfg, params, clusters, out, args.impl,
+                    buckets=args.buckets, logprob_only=args.logprob_only)
+
+    # eval suites + analysis samples + tokenizer fixture for rust
+    w = data.build_world()
+    data.write_eval_files(os.path.join(out, "eval"), w)
+    with open(os.path.join(out, "analysis_samples.json"), "w") as f:
+        json.dump({"samples": data.analysis_samples(w, 1024)}, f)
+    fixture = [{"text": t, "ids": tokenizer.encode(t)}
+               for t in ["the color of tom is red .", "question : yes"]]
+    with open(os.path.join(out, "tokenizer_fixture.json"), "w") as f:
+        json.dump({"bos": tokenizer.BOS, "eos": tokenizer.EOS,
+                   "pad": tokenizer.PAD, "vocab": tokenizer.VOCAB_SIZE,
+                   "cases": fixture}, f, indent=1)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(ex.manifest, f, indent=1)
+    print(f"wrote {len(ex.manifest['artifacts'])} artifacts + manifest to "
+          f"{out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Offline cluster identification (paper Fig 10a) — python side.
+
+Runs once per model inside ``make artifacts``: collect per-head attention
+features on held-out samples, k-means++ for k = 1..H, elbow-pick the
+per-layer cluster count, and emit ``artifacts/clusters.json`` with
+  k_list            per-layer cluster count (static shapes for CHAI HLO)
+  static_membership per-layer head→cluster map (the CHAI-static baseline)
+  static_reps       per-layer representative head per cluster
+  elbow_errors      per-layer SSE curve (Figure 8)
+
+The rust side re-implements k-means/elbow (``rust/src/clustering``) for the
+online membership step and the analysis benches; `clusters.json` doubles as
+a cross-language fixture.
+"""
+
+import json
+from typing import List, Tuple
+
+import numpy as np
+
+
+def normalize_features(feats: np.ndarray) -> np.ndarray:
+    """Center + L2-normalize per head so euclidean k-means groups by
+    correlation (the paper clusters on attention-score correlation)."""
+    f = feats - feats.mean(axis=1, keepdims=True)
+    n = np.linalg.norm(f, axis=1, keepdims=True)
+    return f / np.maximum(n, 1e-8)
+
+
+def kmeans(feats: np.ndarray, k: int, seed: int = 0, iters: int = 50
+           ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """k-means++ over rows of ``feats`` [H, F]. Returns (labels [H],
+    centroids [k, F], SSE). Deterministic given seed."""
+    h, f = feats.shape
+    rng = np.random.default_rng(seed)
+    k = min(k, h)
+    # k-means++ init
+    centroids = [feats[rng.integers(h)]]
+    for _ in range(1, k):
+        d2 = np.min([np.sum((feats - c) ** 2, axis=1) for c in centroids],
+                    axis=0)
+        if d2.sum() <= 1e-12:
+            centroids.append(feats[rng.integers(h)])
+            continue
+        centroids.append(feats[rng.choice(h, p=d2 / d2.sum())])
+    cents = np.stack(centroids)
+    labels = np.zeros(h, np.int64)
+    for _ in range(iters):
+        d = ((feats[:, None, :] - cents[None]) ** 2).sum(-1)  # [H, k]
+        new_labels = d.argmin(1)
+        if (new_labels == labels).all() and _ > 0:
+            break
+        labels = new_labels
+        for j in range(k):
+            m = labels == j
+            if m.any():
+                cents[j] = feats[m].mean(0)
+    sse = float(((feats - cents[labels]) ** 2).sum())
+    return labels, cents, sse
+
+
+def representatives(feats: np.ndarray, labels: np.ndarray,
+                    cents: np.ndarray) -> np.ndarray:
+    """Head closest to each centroid (the head whose Q/K survive)."""
+    k = cents.shape[0]
+    reps = np.zeros(k, np.int64)
+    for j in range(k):
+        idx = np.where(labels == j)[0]
+        if len(idx) == 0:
+            reps[j] = j % feats.shape[0]
+            continue
+        d = ((feats[idx] - cents[j]) ** 2).sum(1)
+        reps[j] = idx[d.argmin()]
+    return reps
+
+
+def elbow_pick(errors: List[float], rel_tol: float = 0.08) -> int:
+    """Paper §3.2: choose k where the SSE curve plateaus — the automated
+    form of the manual elbow read.
+
+    Rule: the smallest k whose *residual* SSE falls below ``rel_tol`` of
+    the k=1 SSE (i.e. clustering at k explains ≥ 92% of the head-score
+    variance). Layers with no redundancy never plateau, so the rule
+    returns H (no pruning there — matching the paper's observation that
+    early layers keep many clusters)."""
+    if errors[0] < 1e-6:  # all heads already identical
+        return 1
+    base = errors[0]
+    for k in range(1, len(errors) + 1):
+        if errors[k - 1] / base <= rel_tol:
+            return k
+    return len(errors)
+
+
+def canonical_membership(labels: np.ndarray, reps: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Re-index clusters so reps are sorted by head index (a canonical form
+    shared with rust so memberships compare bit-exactly in tests)."""
+    order = np.argsort(reps)
+    remap = np.zeros(len(reps), np.int64)
+    remap[order] = np.arange(len(reps))
+    return remap[labels], reps[order]
+
+
+def cluster_layer(feats_raw: np.ndarray, max_k: int = None, seed: int = 0):
+    """Full per-layer offline pipeline. feats_raw: [H, F] attention
+    features. Returns dict with k, membership, reps, errors."""
+    h = feats_raw.shape[0]
+    max_k = max_k or h
+    feats = normalize_features(feats_raw)
+    errors = []
+    results = {}
+    for k in range(1, max_k + 1):
+        labels, cents, sse = kmeans(feats, k, seed=seed)
+        errors.append(sse)
+        results[k] = (labels, cents)
+    k = elbow_pick(errors)
+    labels, cents = results[k]
+    reps = representatives(feats, labels, cents)
+    membership, reps = canonical_membership(labels, reps)
+    return {
+        "k": int(k),
+        "membership": membership.astype(int).tolist(),
+        "reps": reps.astype(int).tolist(),
+        "errors": [float(e) for e in errors],
+    }
+
+
+def online_membership(probe_maps: np.ndarray, k: int, seed: int = 0):
+    """Online cluster-membership identification (paper §3.3): k-means on
+    the probe attention maps of ONE request. probe_maps: [H, P, P] causal
+    attention of the first P tokens for one layer. Feature = flattened
+    strictly-causal rows (query rows 1..P-1). Returns (membership [H],
+    reps [k]). Mirrored by rust `clustering::membership`."""
+    h, pp, _ = probe_maps.shape
+    rows = [probe_maps[:, q, : q + 1] for q in range(1, pp)]
+    feats = np.concatenate(rows, axis=1)  # [H, 2+3+..+P]
+    feats = normalize_features(feats)
+    labels, cents, _ = kmeans(feats, k, seed=seed)
+    reps = representatives(feats, labels, cents)
+    membership, reps = canonical_membership(labels, reps)
+    return membership, reps

@@ -1,0 +1,134 @@
+"""Model / bucket / artifact configuration shared across the compile path.
+
+Everything the AOT pipeline needs to agree on with the rust runtime is
+declared here and exported into ``artifacts/manifest.json`` so the rust side
+never hardcodes shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Dict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder-only transformer configuration.
+
+    The default is the ``tiny-llama-chai`` model trained from scratch at
+    build time (see DESIGN.md §Substitutions): a 1.3M-parameter stand-in for
+    LLaMA-7B that preserves the head-count structure CHAI exploits.
+    """
+
+    name: str = "tiny-llama-chai"
+    vocab_size: int = 260  # 256 bytes + BOS/EOS/PAD/SEP
+    n_layers: int = 6
+    n_heads: int = 16
+    d_model: int = 128
+    head_dim: int = 8  # d_model / n_heads
+    d_ff: int = 352  # SwiGLU inner dim (~8/3 * d, multiple of 16)
+    max_seq: int = 2048
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # --- redundancy induction (DESIGN.md §Substitutions) ---------------
+    # Head redundancy is emergent at LLM scale; at 1.3M params we induce
+    # the same structure the paper measures: per-layer Q/K head groups
+    # initialized (and trained) from a shared base, with group count
+    # decreasing with depth (paper Fig 6: later layers more redundant).
+    init_head_groups: tuple = (16, 12, 8, 5, 3, 2)
+    init_group_noise: float = 2e-3
+    # OPT-like variant (paper Fig 4 / Table 1): this many heads per layer
+    # are frozen as near-uniform no-op heads (tiny Q/K scale -> uniform
+    # attention; zero V -> no output contribution) — the heads DejaVu's
+    # uniformity criterion detects and safely prunes on OPT-66B.
+    uniform_heads: int = 0
+
+    @property
+    def n_params(self) -> int:
+        d, h, f, v, L = (
+            self.d_model,
+            self.n_heads * self.head_dim,
+            self.d_ff,
+            self.vocab_size,
+            self.n_layers,
+        )
+        per_layer = 3 * d * h + h * d + 3 * d * f + 2 * d  # qkv, o, mlp, norms
+        return v * d + L * per_layer + d + d * v  # emb, layers, final norm, head
+
+
+# The OPT-66B stand-in: same skeleton, but half the heads per layer are
+# frozen near-uniform no-ops (what DejaVu exploits on OPT, paper Fig 4).
+OPT_CONFIG_KW = dict(name="tiny-opt-chai", uniform_heads=8,
+                     init_head_groups=(8, 8, 6, 4, 3, 2))
+
+# The LLaMA-33B stand-in (Table 3): deeper/wider, same head count, with the
+# paper's depth-redundancy gradient stretched over 8 layers.
+LLAMA33_CONFIG_KW = dict(name="tiny-llama-33b-chai", n_layers=8,
+                         d_model=160, head_dim=10, d_ff=432,
+                         init_head_groups=(16, 14, 12, 8, 6, 4, 3, 2))
+
+
+def model_config(which: str = "llama") -> "ModelConfig":
+    if which == "llama":
+        return ModelConfig()
+    if which == "opt":
+        return ModelConfig(**OPT_CONFIG_KW)
+    if which == "llama33":
+        return ModelConfig(**LLAMA33_CONFIG_KW)
+    raise ValueError(f"unknown model variant {which!r}")
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """From-scratch training of the tiny model on the synthetic corpus."""
+
+    seq_len: int = 128
+    batch_size: int = 8
+    steps: int = 300
+    lr: float = 1e-3
+    warmup: int = 30
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    seed: int = 0
+    corpus_docs: int = 4000
+
+
+# Static shape buckets for AOT-compiled executables. Requests are padded up
+# to the nearest bucket by the rust coordinator.
+PREFILL_BUCKETS: List[int] = [32, 128, 512, 2048]
+DECODE_BUCKETS: List[int] = [32, 128, 512, 2048]  # max cache length
+LOGPROB_BUCKET: int = 96  # MCQ eval sequences are short
+PROBE_BUCKET: int = 8  # first-5-token probe, padded to 8
+PROBE_TOKENS: int = 5  # paper §3.3: cluster after five tokens
+ANALYZE_BUCKET: int = 128  # offline analysis / figures 2,6,7,8,9,13
+
+# DejaVu head-sparsity ratios reproduced from Tables 1-3.
+DEJAVU_SPARSITIES: List[int] = [10, 30, 50]
+
+# Figure-1 / Figure-14 sweep: uniform cluster counts (the paper sweeps
+# 4/8/16/24 of 32 heads on LLaMA-7B; we sweep the same fractions of H=16).
+UNIFORM_K_SWEEP: List[int] = [2, 4, 8, 12]
+
+# SpAtten cascade token-pruning schedule: fraction of tokens kept entering
+# each layer (cascade: monotone non-increasing), plus fraction of heads kept.
+SPATTEN_TOKEN_KEEP: List[float] = [1.0, 1.0, 0.75, 0.625, 0.5, 0.375]
+SPATTEN_HEAD_KEEP: float = 0.75
+
+
+def manifest_dict(cfg: ModelConfig) -> Dict:
+    """Base manifest (artifact entries get appended by aot.py)."""
+    return {
+        "model": asdict(cfg),
+        "n_params": cfg.n_params,
+        "probe_tokens": PROBE_TOKENS,
+        "probe_bucket": PROBE_BUCKET,
+        "analyze_bucket": ANALYZE_BUCKET,
+        "logprob_bucket": LOGPROB_BUCKET,
+        "prefill_buckets": PREFILL_BUCKETS,
+        "decode_buckets": DECODE_BUCKETS,
+        "dejavu_sparsities": DEJAVU_SPARSITIES,
+        "uniform_k_sweep": UNIFORM_K_SWEEP,
+        "spatten_token_keep": SPATTEN_TOKEN_KEEP,
+        "spatten_head_keep": SPATTEN_HEAD_KEEP,
+        "artifacts": [],
+    }

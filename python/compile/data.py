@@ -1,0 +1,174 @@
+"""Synthetic corpus + evaluation suites (the C4 / PIQA / HellaSwag / ARC /
+BoolQ stand-ins, see DESIGN.md §Substitutions).
+
+A small entity-attribute world is rendered through varied sentence templates
+into a training corpus. Five evaluation suites query the *same* facts in the
+formats of the paper's five benchmarks:
+
+  piqa-syn          2-choice tool-affordance completion       (PIQA)
+  hellaswag-syn     4-choice sentence continuation            (HellaSwag)
+  arc-challenge-syn 4-choice compositional (friend-of) query  (ARC-Challenge)
+  arc-easy-syn      4-choice direct-fact query                (ARC-Easy)
+  boolq-syn         yes/no fact verification                  (BoolQ)
+
+Accuracy *deltas* between attention variants are the reproduction target;
+absolute accuracy only needs to sit well above chance so degradation is
+measurable.
+"""
+
+import json
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+NAMES = [
+    "tom", "ana", "raj", "mia", "leo", "zoe",
+    "kai", "eva", "sam", "ida", "max", "joy",
+]
+COLORS = ["red", "blue", "green", "black", "white", "pink", "gray", "gold"]
+OBJECTS = ["hat", "book", "lamp", "drum", "kite", "ring", "fork", "vase", "coin", "bell"]
+PLACES = ["box", "shed", "attic", "drawer", "garden", "cellar", "closet", "barn"]
+FOODS = ["rice", "corn", "plums", "bread", "beans", "dates", "kale", "figs"]
+TOOLS = ["hammer", "wrench", "glue", "tape", "needle", "brush", "saw", "clamp"]
+
+
+@dataclass
+class World:
+    """One consistent assignment of attributes/relations to entities."""
+
+    color: Dict[str, str] = field(default_factory=dict)
+    obj: Dict[str, str] = field(default_factory=dict)
+    place: Dict[str, str] = field(default_factory=dict)
+    food: Dict[str, str] = field(default_factory=dict)
+    tool: Dict[str, str] = field(default_factory=dict)
+    friend: Dict[str, str] = field(default_factory=dict)
+
+
+def build_world(seed: int = 1234) -> World:
+    rng = random.Random(seed)
+    w = World()
+    shuffled = NAMES[:]
+    rng.shuffle(shuffled)
+    for i, n in enumerate(NAMES):
+        w.color[n] = rng.choice(COLORS)
+        w.obj[n] = rng.choice(OBJECTS)
+        w.place[n] = rng.choice(PLACES)
+        w.food[n] = rng.choice(FOODS)
+        w.tool[n] = rng.choice(TOOLS)
+        # friend is a fixed derangement so friend(n) != n
+        w.friend[n] = shuffled[(shuffled.index(n) + 1) % len(shuffled)]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Corpus rendering
+# ---------------------------------------------------------------------------
+
+def _fact_sentences(w: World, n: str) -> List[str]:
+    return [
+        f"the color of {n} is {w.color[n]} .",
+        f"{n} has a {w.color[n]} {w.obj[n]} .",
+        f"{n} keeps the {w.obj[n]} in the {w.place[n]} .",
+        f"{n} likes to eat {w.food[n]} .",
+        f"{n} uses the {w.tool[n]} to fix the {w.obj[n]} .",
+        f"the friend of {n} is {w.friend[n]} .",
+        f"the {w.obj[n]} of {n} is in the {w.place[n]} .",
+    ]
+
+
+def _qa_sentences(w: World, n: str, rng: random.Random) -> List[str]:
+    out = [f"question : is the color of {n} {w.color[n]} ? answer : yes ."]
+    wrong = rng.choice([c for c in COLORS if c != w.color[n]])
+    out.append(f"question : is the color of {n} {wrong} ? answer : no .")
+    out.append(f"question : does {n} eat {w.food[n]} ? answer : yes .")
+    wrongf = rng.choice([f for f in FOODS if f != w.food[n]])
+    out.append(f"question : does {n} eat {wrongf} ? answer : no .")
+    return out
+
+
+def corpus_docs(w: World, n_docs: int, seed: int = 7) -> List[str]:
+    """Training documents: 2-5 fact/QA sentences about random entities."""
+    rng = random.Random(seed)
+    docs = []
+    for _ in range(n_docs):
+        n_sent = rng.randint(2, 5)
+        sents = []
+        for _ in range(n_sent):
+            n = rng.choice(NAMES)
+            pool = _fact_sentences(w, n) + _qa_sentences(w, n, rng)
+            sents.append(rng.choice(pool))
+        docs.append(" ".join(sents))
+    return docs
+
+
+def analysis_samples(w: World, n_samples: int = 1024, seed: int = 99) -> List[str]:
+    """Held-out 'C4' stand-in used for offline elbow/correlation analysis."""
+    return corpus_docs(w, n_samples, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation suites
+# ---------------------------------------------------------------------------
+
+def _mcq(prompt: str, correct: str, distract: List[str], rng: random.Random, k: int):
+    choices = [correct] + rng.sample([d for d in distract if d != correct], k - 1)
+    rng.shuffle(choices)
+    return {"prompt": prompt, "choices": choices, "label": choices.index(correct)}
+
+
+def eval_suites(w: World, seed: int = 5) -> Dict[str, List[dict]]:
+    rng = random.Random(seed)
+    piqa, hella, arc_c, arc_e, boolq = [], [], [], [], []
+    for n in NAMES:
+        # PIQA-like: 2-choice tool affordance.
+        for _ in range(4):
+            piqa.append(_mcq(
+                f"{n} uses the", f" {w.tool[n]}",
+                [f" {t}" for t in TOOLS], rng, 2))
+        # HellaSwag-like: 4-choice continuation of a color sentence.
+        for _ in range(4):
+            hella.append(_mcq(
+                f"the color of {n} is", f" {w.color[n]}",
+                [f" {c}" for c in COLORS], rng, 4))
+        # ARC-Challenge-like: compositional friend-of attribute.
+        f = w.friend[n]
+        for _ in range(4):
+            arc_c.append(_mcq(
+                f"the friend of {n} is {f} . the color of the friend of {n} is",
+                f" {w.color[f]}", [f" {c}" for c in COLORS], rng, 4))
+        # ARC-Easy-like: direct place fact.
+        for _ in range(4):
+            arc_e.append(_mcq(
+                f"{n} keeps the {w.obj[n]} in the", f" {w.place[n]}",
+                [f" {p}" for p in PLACES], rng, 4))
+        # BoolQ-like: yes/no verification, half true half false.
+        boolq.append({
+            "prompt": f"question : is the color of {n} {w.color[n]} ? answer :",
+            "choices": [" yes", " no"], "label": 0})
+        wrong = rng.choice([c for c in COLORS if c != w.color[n]])
+        boolq.append({
+            "prompt": f"question : is the color of {n} {wrong} ? answer :",
+            "choices": [" yes", " no"], "label": 1})
+        boolq.append({
+            "prompt": f"question : does {n} eat {w.food[n]} ? answer :",
+            "choices": [" yes", " no"], "label": 0})
+        wrongf = rng.choice([x for x in FOODS if x != w.food[n]])
+        boolq.append({
+            "prompt": f"question : does {n} eat {wrongf} ? answer :",
+            "choices": [" yes", " no"], "label": 1})
+    return {
+        "piqa-syn": piqa,
+        "hellaswag-syn": hella,
+        "arc-challenge-syn": arc_c,
+        "arc-easy-syn": arc_e,
+        "boolq-syn": boolq,
+    }
+
+
+def write_eval_files(out_dir: str, w: World) -> None:
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    for name, items in eval_suites(w).items():
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump({"name": name, "items": items}, f, indent=1)

@@ -1,0 +1,168 @@
+"""L1 Pallas kernels: CHAI clustered-head attention (the paper's hot path).
+
+Two-stage kernel design (DESIGN.md §Hardware-Adaptation):
+
+  stage 1 — ``clustered_scores``: grid (cluster, q-block). Computes the
+    masked softmax(Q_rep·K_repᵀ) score tile once **per cluster** instead of
+    once per head — this is CHAI's compute saving (K/H of the MHA score
+    FLOPs) and its K-cache saving (K panels exist only for representatives,
+    so HBM→VMEM key traffic shrinks by the same factor).
+
+  stage 2 — ``broadcast_av``: grid (head, q-block). Each member head reuses
+    its representative's score tile (selected through the ``membership``
+    vector) against its **own** V panel (the paper keeps all V vectors;
+    Table 4 shows pruning V too costs accuracy — that variant is
+    ``broadcast_av_qkv``). The broadcast never materializes H full score
+    matrices in HBM: the representative's tile is loaded once per member via
+    a dynamic slice on the cluster axis. On a real TPU this index would come
+    from scalar-prefetch (PrefetchScalarGridSpec) so the DMA engine can
+    schedule the gather; under ``interpret=True`` we keep the portable
+    dynamic-slice form, which lowers to identical HLO semantics.
+
+VMEM per program (config dh=8..16, Tk ≤ 2048, block_q=128, K ≤ 16):
+  stage 1: q tile 8 KiB + K panel 128 KiB + score tile 1 MiB
+  stage 2: score panel K·block_q·Tk ≤ 16 MiB worst case → block_q drops to
+           32 for Tk = 2048 to stay ≤ 4 MiB (see ``_block_q_for_bcast``).
+
+Correctness oracles: ``ref.clustered_attention_ref`` / ``_qkv_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _scores_kernel(qo_ref, len_ref, q_ref, k_ref, p_ref, *, block_q, dh):
+    iq = pl.program_id(1)
+    q = q_ref[0]                      # [block_q, dh]
+    k = k_ref[0]                      # [Tk, dh]
+    tk = k.shape[0]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(dh))
+    qpos = qo_ref[0] + iq * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    kpos = jax.lax.iota(jnp.int32, tk)[None, :]
+    mask = (kpos <= qpos) & (kpos < len_ref[0])
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    p_ref[0] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _block_q_for(tq: int, block_q: int) -> int:
+    bq = min(block_q, tq)
+    while tq % bq != 0:
+        bq -= 1
+    return bq
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def clustered_scores(q_rep, k_rep, q_offset, length, *, block_q=128):
+    """Per-cluster attention probabilities.
+
+    q_rep/k_rep: [K, T, dh] representative-head projections.
+    Returns probs [K, Tq, Tk].
+    """
+    kk, tq, dh = q_rep.shape
+    tk = k_rep.shape[1]
+    bq = _block_q_for(tq, block_q)
+    qo = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    ln = jnp.asarray(length, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_scores_kernel, block_q=bq, dh=dh),
+        grid=(kk, tq // bq),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ic, iq: (0,)),
+            pl.BlockSpec((1,), lambda ic, iq: (0,)),
+            pl.BlockSpec((1, bq, dh), lambda ic, iq: (ic, iq, 0)),
+            pl.BlockSpec((1, tk, dh), lambda ic, iq: (ic, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, tk), lambda ic, iq: (ic, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((kk, tq, tk), jnp.float32),
+        interpret=True,
+    )(qo, ln, q_rep, k_rep)
+
+
+def _bcast_kernel(mem_ref, p_ref, v_ref, o_ref):
+    """One (head, q-block) program: o_h = probs[membership[h]] · V_h."""
+    ih = pl.program_id(0)
+    m = mem_ref[ih]
+    # Dynamic slice on the cluster axis — scalar-prefetch analogue.
+    probs = pl.load(p_ref, (pl.ds(m, 1), slice(None), slice(None)))[0]
+    o_ref[0] = jnp.dot(probs, v_ref[0])
+
+
+def _block_q_for_bcast(tq: int, tk: int, kk: int) -> int:
+    """Shrink the query block so the K·bq·Tk score panel stays ≤ ~4 MiB."""
+    budget = 4 * 1024 * 1024 // 4  # f32 elements
+    bq = _block_q_for(tq, 128)
+    while bq > 1 and kk * bq * tk > budget:
+        bq //= 2
+    while tq % bq != 0:
+        bq -= 1
+    return bq
+
+
+@jax.jit
+def broadcast_av(probs, v, membership):
+    """Score broadcast + per-head A·V. probs [K,Tq,Tk], v [H,Tk,dh],
+    membership [H] int32 → out [H,Tq,dh]."""
+    kk, tq, tk = probs.shape
+    h, _, dh = v.shape
+    bq = _block_q_for_bcast(tq, tk, kk)
+    return pl.pallas_call(
+        _bcast_kernel,
+        grid=(h, tq // bq),
+        in_specs=[
+            pl.BlockSpec((h,), lambda ih, iq: (0,)),                 # membership
+            pl.BlockSpec((kk, bq, tk), lambda ih, iq: (0, iq, 0)),   # score panel
+            pl.BlockSpec((1, tk, dh), lambda ih, iq: (ih, 0, 0)),    # V panel
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dh), jnp.float32),
+        interpret=True,
+    )(membership.astype(jnp.int32), probs, v)
+
+
+def _bcast_qkv_kernel(mem_ref, p_ref, v_ref, o_ref):
+    """CHAI-QKV ablation: V comes from the representative too. v_ref is the
+    already-gathered representative V panel [K, Tk, dh]."""
+    ih = pl.program_id(0)
+    m = mem_ref[ih]
+    probs = pl.load(p_ref, (pl.ds(m, 1), slice(None), slice(None)))[0]
+    v = pl.load(v_ref, (pl.ds(m, 1), slice(None), slice(None)))[0]
+    o_ref[0] = jnp.dot(probs, v)
+
+
+@jax.jit
+def broadcast_av_qkv(probs, v_rep, membership, n_heads: int = None):
+    """Table-4 variant: whole-head reuse. probs [K,Tq,Tk], v_rep [K,Tk,dh]
+    (V of representative heads), membership [H] → out [H,Tq,dh]."""
+    kk, tq, tk = probs.shape
+    _, _, dh = v_rep.shape
+    h = membership.shape[0]
+    bq = _block_q_for_bcast(tq, tk, kk)
+    return pl.pallas_call(
+        _bcast_qkv_kernel,
+        grid=(h, tq // bq),
+        in_specs=[
+            pl.BlockSpec((h,), lambda ih, iq: (0,)),
+            pl.BlockSpec((kk, bq, tk), lambda ih, iq: (0, iq, 0)),
+            pl.BlockSpec((kk, tk, dh), lambda ih, iq: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dh), jnp.float32),
+        interpret=True,
+    )(membership.astype(jnp.int32), probs, v_rep)
+
+
+def clustered_attention(q_rep, k_rep, v, membership, q_offset, length, *,
+                        block_q=128):
+    """Convenience wrapper: full CHAI attention = stage1 + stage2.
+
+    Returns (out [H,Tq,dh], probs_rep [K,Tq,Tk]).
+    """
+    probs = clustered_scores(q_rep, k_rep, q_offset, length, block_q=block_q)
+    return broadcast_av(probs, v, membership), probs

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: dense multi-head attention (the MHA baseline).
+
+Grid/tiling plan (the TPU mapping — see DESIGN.md §Hardware-Adaptation):
+grid = (head, query-block). Each program holds in VMEM one query tile
+``[block_q, dh]``, the head's full K and V panels ``[Tk, dh]`` and the score
+tile ``[block_q, Tk]``. For the reproduction config (dh=8..16, Tk ≤ 2048,
+block_q = 128) that is ≤ ~1.2 MiB f32 per program — comfortably inside the
+~16 MiB VMEM budget, so no streaming-softmax (flash) accumulation pass is
+needed; QKᵀ and A·V are each a single MXU contraction per tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain
+HLO (loops of dynamic-slice + dot), which is what ``aot.py`` exports and the
+rust runtime executes. Correctness oracle: ``ref.mha_attention_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _attn_kernel(qo_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, dh,
+                 with_probs=False, p_ref=None):
+    """One (head, q-block) program: masked softmax(qKᵀ)·V."""
+    iq = pl.program_id(1)
+    q = q_ref[0]                       # [block_q, dh]
+    k = k_ref[0]                       # [Tk, dh]
+    v = v_ref[0]                       # [Tk, dh]
+    tk = k.shape[0]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(dh))   # [block_q, Tk]
+    qpos = qo_ref[0] + iq * block_q + jax.lax.iota(jnp.int32, block_q)[:, None]
+    kpos = jax.lax.iota(jnp.int32, tk)[None, :]
+    mask = (kpos <= qpos) & (kpos < len_ref[0])
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v)
+    if with_probs:
+        p_ref[0] = probs
+
+
+def _block_q_for(tq: int, block_q: int) -> int:
+    bq = min(block_q, tq)
+    while tq % bq != 0:  # buckets are powers of two; this only trips in tests
+        bq -= 1
+    return bq
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "with_probs"))
+def mha_attention(q, k, v, q_offset, length, *, block_q=128, with_probs=False):
+    """Dense MHA. q: [H,Tq,dh], k/v: [H,Tk,dh]; scalars q_offset/length.
+
+    Returns out [H,Tq,dh] (and probs [H,Tq,Tk] when ``with_probs`` — only
+    used by the probe/analyze artifacts where Tk is small).
+    """
+    h, tq, dh = q.shape
+    tk = k.shape[1]
+    bq = _block_q_for(tq, block_q)
+    grid = (h, tq // bq)
+    qo = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    ln = jnp.asarray(length, jnp.int32).reshape(1)
+
+    out_shapes = [jax.ShapeDtypeStruct((h, tq, dh), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0))]
+    if with_probs:
+        out_shapes.append(jax.ShapeDtypeStruct((h, tq, tk), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, bq, tk), lambda ih, iq: (ih, iq, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=bq, dh=dh, with_probs=with_probs)
+    if with_probs:
+        def kernel(qo_ref, len_ref, q_ref, k_ref, v_ref, o_ref, p_ref):
+            _attn_kernel(qo_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         block_q=bq, dh=dh, with_probs=True, p_ref=p_ref)
+
+    res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ih, iq: (0,)),        # q_offset
+            pl.BlockSpec((1,), lambda ih, iq: (0,)),        # length
+            pl.BlockSpec((1, bq, dh), lambda ih, iq: (ih, iq, 0)),  # q tile
+            pl.BlockSpec((1, tk, dh), lambda ih, iq: (ih, 0, 0)),   # K panel
+            pl.BlockSpec((1, tk, dh), lambda ih, iq: (ih, 0, 0)),   # V panel
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=True,
+    )(qo, ln, q, k, v)
+    if with_probs:
+        return res[0], res[1]
+    return res[0]

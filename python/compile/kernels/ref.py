@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is asserted allclose against these under pytest + hypothesis sweeps
+(``python/tests/test_kernels.py``), and the L2 model can be lowered against
+either implementation (``attn_impl='jnp'|'pallas'``) — both must produce the
+same HLO-level numerics.
+
+Shapes (unbatched; the serving path is B=1 and L2 vmaps where needed):
+    q:   [H, Tq, dh]   queries for H heads (or [K, Tq, dh] representatives)
+    k:   [H, Tk, dh]
+    v:   [H, Tk, dh]
+    membership: [H] int32 in [0, K)  — cluster id of each head
+Masking: query i sits at absolute position q_offset + i; key j at position
+j. Allowed iff j <= q_offset + i and j < length.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def _mask(tq: int, tk: int, q_offset, length):
+    qpos = q_offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(tk)[None, :]
+    return (kpos <= qpos) & (kpos < length)
+
+
+def attention_scores_ref(q, k, q_offset, length):
+    """softmax(q kᵀ / sqrt(dh)) with causal + length masking.
+
+    q: [G, Tq, dh], k: [G, Tk, dh] -> [G, Tq, Tk] row-stochastic.
+    """
+    g, tq, dh = q.shape
+    tk = k.shape[1]
+    scores = jnp.einsum("gqd,gkd->gqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = _mask(tq, tk, q_offset, length)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def mha_attention_ref(q, k, v, q_offset, length):
+    """Dense multi-head attention. Returns (out [H,Tq,dh], probs [H,Tq,Tk])."""
+    probs = attention_scores_ref(q, k, q_offset, length)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v)
+    return out, probs
+
+
+def clustered_attention_ref(q_rep, k_rep, v, membership, q_offset, length):
+    """CHAI clustered-head attention (paper §3.4).
+
+    Attention scores are computed once per cluster representative
+    (q_rep/k_rep: [K, Tq, dh], K = #clusters for this layer), broadcast to
+    every member head via ``membership``, and applied to each head's own V
+    (the paper keeps all V vectors — Table 4 shows pruning V hurts).
+
+    Returns (out [H, Tq, dh], probs_rep [K, Tq, Tk]).
+    """
+    probs = attention_scores_ref(q_rep, k_rep, q_offset, length)  # [K,Tq,Tk]
+    probs_full = probs[membership]  # [H,Tq,Tk] broadcast to members
+    out = jnp.einsum("hqk,hkd->hqd", probs_full, v)
+    return out, probs
+
+
+def clustered_attention_qkv_ref(q_rep, k_rep, v, membership, rep_heads,
+                                q_offset, length):
+    """Table-4 ablation (CHAI-QKV): V is also taken from the representative
+    head, i.e. the whole head is pruned. rep_heads: [K] int32 — original head
+    index of each representative (indexes into v)."""
+    probs = attention_scores_ref(q_rep, k_rep, q_offset, length)
+    v_rep = v[rep_heads]                       # [K,Tk,dh]
+    out_rep = jnp.einsum("kqt,ktd->kqd", probs, v_rep)
+    return out_rep[membership], probs          # [H,Tq,dh]

@@ -1,0 +1,71 @@
+"""`.cbt` ("CHAI binary tensors") file format — the weight/activation
+interchange between the python compile path and the rust runtime.
+
+Layout:
+    magic  b"CBT1"
+    u32 LE header length
+    header: UTF-8 JSON  {"tensors": [{name, dtype, shape, offset, nbytes}]}
+    data section: raw little-endian C-order buffers, each 64-byte aligned,
+                  offsets relative to the start of the data section.
+
+Mirrored by ``rust/src/tensor/io.rs``; roundtrip-tested from both sides.
+"""
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"CBT1"
+_DTYPES = {"float32": "f32", "int32": "i32"}
+_NP = {"f32": np.float32, "i32": np.int32}
+_ALIGN = 64
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    entries = []
+    offset = 0
+    bufs = []
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        dt = _DTYPES.get(arr.dtype.name)
+        if dt is None:
+            raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+        raw = arr.tobytes()
+        pad = (-offset) % _ALIGN
+        offset += pad
+        bufs.append((pad, raw))
+        entries.append({
+            "name": name, "dtype": dt, "shape": list(arr.shape),
+            "offset": offset, "nbytes": len(raw),
+        })
+        offset += len(raw)
+    header = json.dumps({"tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for pad, raw in bufs:
+            f.write(b"\0" * pad)
+            f.write(raw)
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    (hlen,) = struct.unpack("<I", blob[4:8])
+    header = json.loads(blob[8:8 + hlen].decode("utf-8"))
+    data = blob[8 + hlen:]
+    out = {}
+    for e in header["tensors"]:
+        buf = data[e["offset"]:e["offset"] + e["nbytes"]]
+        arr = np.frombuffer(buf, dtype=_NP[e["dtype"]]).reshape(e["shape"])
+        out[e["name"]] = arr.copy()
+    return out

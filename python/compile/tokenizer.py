@@ -1,0 +1,28 @@
+"""Byte-level tokenizer with special tokens.
+
+Tokens 0..255 are raw bytes; 256..259 are specials. This is the entire
+tokenizer the system needs: the synthetic corpus is ASCII, and byte-level
+vocab keeps the from-scratch model small. The rust engine mirrors this
+mapping in ``rust/src/model/tokenizer.rs`` (kept in sync via the manifest's
+vocab_size and the pytest/cargo cross-tests on the shared fixture in
+``artifacts/tokenizer_fixture.json``).
+"""
+
+BOS = 256
+EOS = 257
+PAD = 258
+SEP = 259
+VOCAB_SIZE = 260
+
+
+def encode(text: str, bos: bool = True, eos: bool = False) -> list:
+    ids = list(text.encode("utf-8"))
+    if bos:
+        ids = [BOS] + ids
+    if eos:
+        ids = ids + [EOS]
+    return ids
+
+
+def decode(ids) -> str:
+    return bytes(i for i in ids if 0 <= i < 256).decode("utf-8", errors="replace")

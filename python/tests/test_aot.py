@@ -1,0 +1,102 @@
+"""AOT exporter smoke tests: lowering produces parseable HLO text, the
+manifest records faithful shapes, and the offline clustering pipeline
+yields a consistent clusters blob. Uses a 2-layer config for speed."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from compile import model as M
+from compile.aot import Exporter, offline_clusters, to_hlo_text, uniform_clusters
+from compile.configs import ModelConfig, PROBE_BUCKET
+
+
+CFG = ModelConfig(n_layers=2, init_head_groups=(4, 2))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_to_hlo_text_is_parseable_hlo(params):
+    import jax.numpy as jnp
+    fn = lambda t, ln: M.logprob_mha_graph(params, CFG, t, ln)
+    low = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    text = to_hlo_text(low)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # no ops the 0.5.1 parser rejects
+    assert "topk(" not in text
+
+
+def test_exporter_writes_artifact_and_manifest(tmp_path, params):
+    ex = Exporter(CFG, params, str(tmp_path), "jnp")
+    entry = ex.lower(
+        "probe_test",
+        lambda wlist, tok, ln: (M.probe_graph(
+            dict(zip(ex.weight_names, wlist)), CFG, tok, ln),),
+        [("tokens", np.zeros(PROBE_BUCKET, np.int32)),
+         ("length", np.int32(0))],
+        ["probe_maps"], {"bucket": PROBE_BUCKET})
+    assert (tmp_path / "probe_test.hlo.txt").exists()
+    assert entry["outputs"][0]["shape"] == [CFG.n_layers, CFG.n_heads,
+                                            PROBE_BUCKET, PROBE_BUCKET]
+    assert entry["inputs"][0]["shape"] == [PROBE_BUCKET]
+    assert ex.manifest["artifacts"][0]["name"] == "probe_test"
+    assert ex.manifest["weight_order"] == sorted(
+        ex.manifest["weight_order"])
+
+
+def test_exporter_rejects_output_name_mismatch(tmp_path, params):
+    ex = Exporter(CFG, params, str(tmp_path), "jnp")
+    with pytest.raises(AssertionError):
+        ex.lower(
+            "bad",
+            lambda wlist, tok, ln: (M.probe_graph(
+                dict(zip(ex.weight_names, wlist)), CFG, tok, ln),),
+            [("tokens", np.zeros(PROBE_BUCKET, np.int32)),
+             ("length", np.int32(0))],
+            ["a", "b"])  # 2 names for 1 output
+
+
+def test_offline_clusters_blob(tmp_path, params):
+    blob = offline_clusters(CFG, params, str(tmp_path), n_samples=4)
+    assert len(blob["k_list"]) == CFG.n_layers
+    for layer in blob["layers"]:
+        assert len(layer["membership"]) == CFG.n_heads
+        assert max(layer["membership"]) < layer["k"]
+        assert len(layer["reps"]) == layer["k"]
+        assert layer["errors"][0] >= layer["errors"][-1]
+    # file written and reloadable
+    on_disk = json.load(open(os.path.join(tmp_path, "clusters.json")))
+    assert on_disk["k_list"] == blob["k_list"]
+
+
+def test_uniform_clusters_shape():
+    kl, mem, reps = uniform_clusters(CFG, 4)
+    assert kl == [4] * CFG.n_layers
+    assert len(mem) == CFG.n_heads
+    assert max(mem) == 3
+    assert len(reps) == 4
+
+
+def test_built_manifest_consistent_with_files():
+    """If the real artifacts exist, every manifest entry's file exists and
+    the weight order covers weights.cbt exactly."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    m = json.load(open(mpath))
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(art, a["path"])), a["path"]
+    from compile import tensorio
+    weights = tensorio.load(os.path.join(art, "weights.cbt"))
+    assert sorted(weights.keys()) == m["weight_order"]
+    assert m["k_list"] == json.load(open(os.path.join(art, "clusters.json")))["k_list"]

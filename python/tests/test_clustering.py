@@ -1,0 +1,118 @@
+"""Offline/online clustering pipeline tests (python side)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import clustering as C
+
+
+def blobs(rng, k, per, f, spread=0.05):
+    cents = rng.normal(size=(k, f)) * 3
+    pts = np.concatenate([c + rng.normal(size=(per, f)) * spread
+                          for c in cents])
+    labels = np.repeat(np.arange(k), per)
+    return pts.astype(np.float32), labels
+
+
+def test_kmeans_recovers_separated_blobs():
+    rng = np.random.default_rng(0)
+    pts, true = blobs(rng, 3, 5, 8)
+    labels, cents, sse = C.kmeans(pts, 3, seed=1)
+    # same-blob points share a label; cross-blob points don't
+    for b in range(3):
+        blk = labels[true == b]
+        assert (blk == blk[0]).all()
+    assert len(set(labels[::5])) == 3
+    assert sse < 1.0
+
+
+def test_kmeans_deterministic():
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(16, 10)).astype(np.float32)
+    a = C.kmeans(pts, 4, seed=7)
+    b = C.kmeans(pts, 4, seed=7)
+    assert (a[0] == b[0]).all()
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(2, 16), k=st.integers(1, 16), seed=st.integers(0, 999))
+def test_kmeans_labels_in_range_and_sse_monotone_in_k(h, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(h, 6)).astype(np.float32)
+    labels, cents, sse = C.kmeans(pts, k, seed=seed)
+    k_eff = min(k, h)
+    assert labels.min() >= 0 and labels.max() < k_eff
+    if k_eff > 1:
+        _, _, sse1 = C.kmeans(pts, 1, seed=seed)
+        assert sse <= sse1 + 1e-5
+
+
+def test_elbow_pick_plateau():
+    # sharp elbow at k=3 (residual < 8% of base)
+    errors = [100.0, 40.0, 5.0, 4.5, 4.2, 4.0]
+    assert C.elbow_pick(errors) == 3
+    # no structure: linear decline -> keep all heads (no pruning)
+    lin = [16.0 - i for i in range(16)]
+    assert C.elbow_pick(lin) == 16
+    # fully redundant: k=1 already explains everything
+    assert C.elbow_pick([0.001, 0.0005, 0.0]) is not None
+
+
+def test_normalize_features_correlation_semantics():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(1, 20))
+    scaled = 5 * a + 2  # perfectly correlated with a
+    anti = -a
+    f = C.normalize_features(np.concatenate([a, scaled, anti]))
+    assert np.dot(f[0], f[1]) == pytest.approx(1.0, abs=1e-5)
+    assert np.dot(f[0], f[2]) == pytest.approx(-1.0, abs=1e-5)
+
+
+def test_representatives_are_members_of_their_cluster():
+    rng = np.random.default_rng(3)
+    pts, _ = blobs(rng, 4, 4, 6)
+    labels, cents, _ = C.kmeans(pts, 4, seed=0)
+    reps = C.representatives(pts, labels, cents)
+    for j, r in enumerate(reps):
+        assert labels[r] == j
+
+
+def test_canonical_membership_sorted_reps():
+    labels = np.array([1, 1, 0, 2])
+    reps = np.array([9, 3, 5])
+    mem, reps2 = C.canonical_membership(labels, reps)
+    assert list(reps2) == [3, 5, 9]
+    # head 2 was cluster 0 (rep 9) -> now cluster index of rep 9 = 2
+    assert list(mem) == [0, 0, 2, 1]
+
+
+def test_cluster_layer_redundant_heads_collapse():
+    """Heads with (near-)identical attention rows must land in one cluster
+    and the elbow must find fewer clusters than heads."""
+    rng = np.random.default_rng(4)
+    base = rng.dirichlet(np.ones(32), size=3)  # 3 distinct score patterns
+    feats = np.concatenate([
+        np.tile(base[0], (6, 1)), np.tile(base[1], (6, 1)),
+        np.tile(base[2], (4, 1))]) + rng.normal(size=(16, 32)) * 1e-3
+    res = C.cluster_layer(feats.astype(np.float32))
+    assert res["k"] == 3
+    m = np.array(res["membership"])
+    assert len(set(m[:6])) == 1 and len(set(m[6:12])) == 1
+    assert len(np.array(res["reps"])) == 3
+
+
+def test_online_membership_shapes_and_reuse():
+    rng = np.random.default_rng(5)
+    h, p = 16, 5
+    maps = rng.dirichlet(np.ones(p), size=(h, p)).astype(np.float32)
+    # causal-ify
+    for q in range(p):
+        maps[:, q, q + 1:] = 0
+        maps[:, q, :q + 1] /= maps[:, q, :q + 1].sum(-1, keepdims=True)
+    mem, reps = C.online_membership(maps, 4, seed=0)
+    assert mem.shape == (h,) and len(reps) == 4
+    assert mem.max() < 4
+    for j, r in enumerate(reps):
+        assert mem[r] == j  # rep belongs to its own cluster

@@ -1,0 +1,73 @@
+"""Synthetic corpus / eval-suite generators + tokenizer tests."""
+
+import numpy as np
+
+from compile import data, tokenizer
+
+
+def test_tokenizer_roundtrip():
+    for t in ["hello world", "the color of tom is red .", ""]:
+        ids = tokenizer.encode(t, bos=True, eos=True)
+        assert ids[0] == tokenizer.BOS and ids[-1] == tokenizer.EOS
+        assert tokenizer.decode(ids) == t
+        assert all(0 <= i < tokenizer.VOCAB_SIZE for i in ids)
+
+
+def test_world_deterministic_and_consistent():
+    a, b = data.build_world(), data.build_world()
+    assert a.color == b.color and a.friend == b.friend
+    for n in data.NAMES:
+        assert a.friend[n] != n
+        assert a.friend[n] in data.NAMES
+
+
+def test_corpus_docs_reproducible_and_nonempty():
+    w = data.build_world()
+    d1 = data.corpus_docs(w, 50, seed=7)
+    d2 = data.corpus_docs(w, 50, seed=7)
+    assert d1 == d2
+    assert all(len(x) > 10 for x in d1)
+    assert d1 != data.corpus_docs(w, 50, seed=8)
+
+
+def test_eval_suites_structure():
+    w = data.build_world()
+    suites = data.eval_suites(w)
+    assert set(suites) == {"piqa-syn", "hellaswag-syn", "arc-challenge-syn",
+                           "arc-easy-syn", "boolq-syn"}
+    for name, items in suites.items():
+        assert len(items) >= 24
+        n_choices = 2 if name in ("piqa-syn", "boolq-syn") else 4
+        for it in items:
+            assert len(it["choices"]) == n_choices
+            assert 0 <= it["label"] < n_choices
+            # correct choice actually appears at the label index
+            assert isinstance(it["choices"][it["label"]], str)
+
+
+def test_eval_answers_consistent_with_world():
+    w = data.build_world()
+    suites = data.eval_suites(w)
+    for it in suites["hellaswag-syn"]:
+        name = it["prompt"].split()[3]
+        assert it["choices"][it["label"]].strip() == w.color[name]
+    for it in suites["boolq-syn"]:
+        assert it["choices"] == [" yes", " no"]
+
+
+def test_boolq_balanced():
+    w = data.build_world()
+    items = data.eval_suites(w)["boolq-syn"]
+    labels = [it["label"] for it in items]
+    assert 0.4 < np.mean(labels) < 0.6
+
+
+def test_train_packing():
+    from compile.train import pack_corpus
+    w = data.build_world()
+    docs = data.corpus_docs(w, 20, seed=1)
+    rng = np.random.default_rng(0)
+    chunks = pack_corpus(docs, 32, rng)
+    assert chunks.shape[1] == 33
+    assert chunks.dtype == np.int32
+    assert (chunks >= 0).all() and (chunks < tokenizer.VOCAB_SIZE).all()

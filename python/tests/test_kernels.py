@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/offsets per the repro mandate: the kernel
+is the paper's hot path, so this is the core numeric signal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chai, mha, ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def case(seed, h, k, tq, tk, dh, offset, length):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, h, tq, dh)
+    kk = rand(rng, h, tk, dh)
+    v = rand(rng, h, tk, dh)
+    mem = jnp.asarray(rng.integers(0, k, size=h), jnp.int32)
+    return q, kk, v, mem
+
+
+# ---------------------------------------------------------------------------
+# Dense MHA kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.sampled_from([1, 2, 8, 16]),
+    tq=st.sampled_from([1, 2, 8, 16, 32]),
+    tk=st.sampled_from([8, 16, 32, 64]),
+    dh=st.sampled_from([4, 8, 16]),
+    data=st.data(),
+)
+def test_mha_matches_ref(seed, h, tq, tk, dh, data):
+    if tq > tk:
+        tq = tk
+    offset = data.draw(st.integers(0, tk - tq))
+    length = data.draw(st.integers(1, tk))
+    q, k, v, _ = case(seed, h, 1, tq, tk, dh, offset, length)
+    o_ref, p_ref = ref.mha_attention_ref(q, k, v, offset, length)
+    o, p = mha.mha_attention(q, k, v, offset, length, with_probs=True)
+    np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p, p_ref, rtol=RTOL, atol=ATOL)
+
+
+def test_mha_no_probs_variant():
+    q, k, v, _ = case(0, 4, 1, 16, 16, 8, 0, 16)
+    o = mha.mha_attention(q, k, v, 0, 16)
+    o_ref, _ = ref.mha_attention_ref(q, k, v, 0, 16)
+    np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+
+def test_mha_block_q_tiling():
+    """Result must be invariant to the query-block size."""
+    q, k, v, _ = case(3, 2, 1, 64, 64, 8, 0, 64)
+    base = mha.mha_attention(q, k, v, 0, 64, block_q=64)
+    for bq in (8, 16, 32, 128):
+        o = mha.mha_attention(q, k, v, 0, 64, block_q=bq)
+        np.testing.assert_allclose(o, base, rtol=RTOL, atol=ATOL)
+
+
+def test_mha_probs_are_row_stochastic_and_causal():
+    q, k, v, _ = case(1, 4, 1, 16, 16, 8, 0, 12)
+    _, p = mha.mha_attention(q, k, v, 0, 12, with_probs=True)
+    p = np.array(p)
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    for i in range(15):
+        lo = max(i + 1, 12)
+        if lo < 16:
+            assert p[:, i, lo:].max() <= 1e-6  # causal+length mask
+
+
+# ---------------------------------------------------------------------------
+# CHAI clustered kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.sampled_from([2, 8, 16]),
+    k=st.integers(1, 8),
+    tq=st.sampled_from([1, 8, 16]),
+    tk=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([4, 8]),
+    data=st.data(),
+)
+def test_clustered_matches_ref(seed, h, k, tq, tk, dh, data):
+    k = min(k, h)
+    offset = data.draw(st.integers(0, tk - tq))
+    length = data.draw(st.integers(1, tk))
+    q, kk, v, mem = case(seed, h, k, tq, tk, dh, offset, length)
+    q_rep, k_rep = q[:k], kk[:k]
+    o_ref, p_ref = ref.clustered_attention_ref(q_rep, k_rep, v, mem,
+                                               offset, length)
+    o, p = chai.clustered_attention(q_rep, k_rep, v, mem, offset, length)
+    np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p, p_ref, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 8))
+def test_clustered_qkv_matches_ref(seed, k):
+    h, tq, tk, dh = 16, 8, 32, 8
+    q, kk, v, mem = case(seed, h, k, tq, tk, dh, 0, tk)
+    reps = jnp.arange(k, dtype=jnp.int32)
+    q_rep, k_rep = q[:k], kk[:k]
+    o_ref, p_ref = ref.clustered_attention_qkv_ref(q_rep, k_rep, v, mem,
+                                                   reps, 0, tk)
+    p = chai.clustered_scores(q_rep, k_rep, 0, tk)
+    o = chai.broadcast_av_qkv(p, v[reps], mem)
+    np.testing.assert_allclose(p, p_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+
+def test_chai_identity_clustering_equals_mha():
+    """k = H with identity membership must reproduce dense MHA exactly —
+    the paper's claim that CHAI is a pure redundancy elimination."""
+    h, tq, tk, dh = 8, 16, 16, 8
+    rng = np.random.default_rng(0)
+    q, k, v = (rand(rng, h, tq, dh) for _ in range(3))
+    mem = jnp.arange(h, dtype=jnp.int32)
+    o_mha = mha.mha_attention(q, k, v, 0, tk)
+    o_chai, _ = chai.clustered_attention(q, k, v, mem, 0, tk)
+    np.testing.assert_allclose(o_chai, o_mha, rtol=RTOL, atol=ATOL)
+
+
+def test_chai_single_cluster_all_heads_share_scores():
+    h, tq, tk, dh = 8, 4, 16, 8
+    rng = np.random.default_rng(1)
+    q, k, v = (rand(rng, h, tq, dh) for _ in range(3))
+    mem = jnp.zeros(h, jnp.int32)
+    out, probs = chai.clustered_attention(q[:1], k[:1], v, mem, 0, tk)
+    # every head output = probs[0] @ v[h]
+    for hh in range(h):
+        np.testing.assert_allclose(
+            out[hh], np.array(probs[0]) @ np.array(v[hh]),
+            rtol=RTOL, atol=ATOL)
+
+
+def test_clustered_scores_padded_region_masked():
+    """Keys beyond `length` must receive zero probability."""
+    q, k, _, _ = case(2, 4, 1, 8, 32, 8, 24, 20)
+    p = np.array(chai.clustered_scores(q[:4], k[:4], 24, 20))
+    assert p[:, :, 20:].max() <= 1e-6

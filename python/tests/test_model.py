@@ -1,0 +1,156 @@
+"""L2 model invariants: variant-equivalence limits, decode/prefill parity,
+shape contracts. Uses a 2-layer config so everything runs in seconds."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig
+
+CFG = ModelConfig(n_layers=2)
+T = 16
+L, H, DH = CFG.n_layers, CFG.n_heads, CFG.head_dim
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jnp.asarray(np.arange(T) % 250, jnp.int32)
+
+
+def identity_clusters():
+    mem = jnp.tile(jnp.arange(H, dtype=jnp.int32), (L, 1))
+    return mem, mem, [H] * L
+
+
+def random_clusters(seed=0, k_list=(3, 5)):
+    rng = np.random.default_rng(seed)
+    kmax = max(k_list)
+    mem = np.stack([rng.integers(0, k_list[i], H) for i in range(L)])
+    reps = np.zeros((L, kmax), np.int64)
+    for i in range(L):
+        reps[i, :k_list[i]] = rng.choice(H, k_list[i], replace=False)
+    return (jnp.asarray(mem, jnp.int32), jnp.asarray(reps, jnp.int32),
+            list(k_list))
+
+
+def test_param_count_matches_config(params):
+    n = sum(int(np.prod(v.shape)) for v in params.values())
+    assert n == CFG.n_params
+
+
+def test_chai_with_identity_clustering_equals_mha(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    lm = M.logprob_mha_graph(params, CFG, toks, ln)
+    mem, reps, kl = identity_clusters()
+    lc = M.logprob_chai_graph(params, CFG, toks, ln, mem, reps, kl)
+    np.testing.assert_allclose(lc, lm, rtol=2e-4, atol=2e-5)
+
+
+def test_dejavu_all_heads_equals_mha(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    lm = M.logprob_mha_graph(params, CFG, toks, ln)
+    kept = jnp.tile(jnp.arange(H, dtype=jnp.int32), (L, 1))
+    ld = M.logprob_dejavu_graph(params, CFG, toks, ln, kept)
+    np.testing.assert_allclose(ld, lm, rtol=2e-4, atol=2e-5)
+
+
+def test_spatten_no_pruning_equals_mha(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    lm = M.logprob_mha_graph(params, CFG, toks, ln)
+    ls = M.logprob_spatten_graph(params, CFG, toks, ln, [1.0] * L, 1.0)
+    np.testing.assert_allclose(ls, lm, rtol=2e-4, atol=2e-5)
+
+
+def test_spatten_pruning_changes_output(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    lm = M.logprob_mha_graph(params, CFG, toks, ln)
+    ls = M.logprob_spatten_graph(params, CFG, toks, ln, [1.0, 0.5], 0.5)
+    assert np.abs(np.array(ls) - np.array(lm)).max() > 1e-4
+
+
+def test_mha_decode_chain_matches_prefill(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    lg, kc, vc = M.prefill_mha_graph(params, CFG, toks, ln)
+    kc2 = jnp.zeros((L, H, T, DH))
+    vc2 = jnp.zeros_like(kc2)
+    for i in range(T):
+        lgd, kc2, vc2 = M.decode_mha_graph(
+            params, CFG, toks[i], jnp.asarray(i, jnp.int32), kc2, vc2)
+    np.testing.assert_allclose(lgd, lg, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(kc2, kc, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(vc2, vc, rtol=2e-4, atol=2e-5)
+
+
+def test_chai_decode_chain_matches_prefill(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    mem, reps, kl = random_clusters()
+    out = M.prefill_chai_graph(params, CFG, toks, ln, mem, reps, kl)
+    lg, kreps, vc = out[0], list(out[1:1 + L]), out[-1]
+    kreps2 = [jnp.zeros((kl[i], T, DH)) for i in range(L)]
+    vc2 = jnp.zeros((L, H, T, DH))
+    for i in range(T):
+        res = M.decode_chai_graph(params, CFG, toks[i],
+                                  jnp.asarray(i, jnp.int32), kreps2, vc2,
+                                  mem, reps, kl)
+        lgd, kreps2, vc2 = res[0], list(res[1:1 + L]), res[-1]
+    np.testing.assert_allclose(lgd, lg, rtol=2e-4, atol=2e-5)
+    for a, b in zip(kreps, kreps2):
+        np.testing.assert_allclose(b, a, rtol=2e-4, atol=2e-5)
+
+
+def test_chai_prefill_logits_match_logprob_last_row(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    mem, reps, kl = random_clusters(seed=3)
+    lcl = M.logprob_chai_graph(params, CFG, toks, ln, mem, reps, kl)
+    out = M.prefill_chai_graph(params, CFG, toks, ln, mem, reps, kl)
+    np.testing.assert_allclose(out[0], lcl[T - 1], rtol=2e-4, atol=2e-5)
+
+
+def test_probe_graph_shapes_and_stochasticity(params, toks):
+    from compile.configs import PROBE_TOKENS
+    probe = M.probe_graph(params, CFG, toks[:8], jnp.asarray(8, jnp.int32))
+    assert probe.shape == (L, H, 8, 8)
+    np.testing.assert_allclose(np.array(probe).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_pallas_and_jnp_impl_agree(params, toks):
+    ln = jnp.asarray(T, jnp.int32)
+    a = M.logprob_mha_graph(params, CFG, toks, ln, impl="jnp")
+    b = M.logprob_mha_graph(params, CFG, toks, ln, impl="pallas")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+    mem, reps, kl = random_clusters(seed=5)
+    a = M.logprob_chai_graph(params, CFG, toks, ln, mem, reps, kl, impl="jnp")
+    b = M.logprob_chai_graph(params, CFG, toks, ln, mem, reps, kl,
+                             impl="pallas")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_padded_tokens_do_not_affect_valid_logits(params):
+    """Bucket padding invariant: logits at positions < length must not
+    depend on pad content — the contract the rust coordinator relies on."""
+    ln = 10
+    base = jnp.asarray(list(range(ln)) + [258] * (T - ln), jnp.int32)
+    alt = jnp.asarray(list(range(ln)) + [7] * (T - ln), jnp.int32)
+    a = M.logprob_mha_graph(params, CFG, base, jnp.asarray(ln, jnp.int32))
+    b = M.logprob_mha_graph(params, CFG, alt, jnp.asarray(ln, jnp.int32))
+    np.testing.assert_allclose(a[:ln], b[:ln], rtol=1e-5, atol=1e-6)
+
+
+def test_rope_positions_shift_invariance():
+    """RoPE is relative: shifting absolute positions changes individual
+    projections but attention of (q,k) at equal relative distance holds."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    a = M.rope(x, jnp.arange(4))
+    b = M.rope(x, jnp.arange(4) + 7)
+    # dot products between same relative offsets must match
+    da = float(jnp.dot(a[0], a[2]))
+    db = float(jnp.dot(b[0], b[2]))
+    assert abs(da - db) < 1e-4

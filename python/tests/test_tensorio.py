@@ -1,0 +1,80 @@
+"""`.cbt` format roundtrip + layout contract (mirrored by rust tests)."""
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tensorio
+
+
+def test_roundtrip_basic(tmp_path):
+    p = str(tmp_path / "t.cbt")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int32),
+        "scalarish": np.array(7.5, dtype=np.float32),
+    }
+    tensorio.save(p, tensors)
+    out = tensorio.load(p)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    seed=st.integers(0, 999),
+)
+def test_roundtrip_random(tmp_path_factory, n, seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n):
+        shape = tuple(int(s) for s in rng.integers(1, 6, rng.integers(1, 4)))
+        if rng.random() < 0.5:
+            tensors[f"t{i}"] = rng.normal(size=shape).astype(np.float32)
+        else:
+            tensors[f"t{i}"] = rng.integers(-100, 100, shape).astype(np.int32)
+    p = str(tmp_path_factory.mktemp("cbt") / "r.cbt")
+    tensorio.save(p, tensors)
+    out = tensorio.load(p)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(out[k], v)
+
+
+def test_header_layout(tmp_path):
+    p = str(tmp_path / "h.cbt")
+    tensorio.save(p, {"x": np.zeros((2, 2), np.float32)})
+    blob = open(p, "rb").read()
+    assert blob[:4] == b"CBT1"
+    (hlen,) = struct.unpack("<I", blob[4:8])
+    import json
+    hdr = json.loads(blob[8:8 + hlen])
+    e = hdr["tensors"][0]
+    assert e["name"] == "x" and e["dtype"] == "f32"
+    assert e["shape"] == [2, 2] and e["nbytes"] == 16
+    assert e["offset"] % 64 == 0
+
+
+def test_f64_i64_coerced(tmp_path):
+    p = str(tmp_path / "c.cbt")
+    tensorio.save(p, {"a": np.ones(3, np.float64), "b": np.ones(3, np.int64)})
+    out = tensorio.load(p)
+    assert out["a"].dtype == np.float32
+    assert out["b"].dtype == np.int32
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = str(tmp_path / "bad.cbt")
+    open(p, "wb").write(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        tensorio.load(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        tensorio.save(str(tmp_path / "x.cbt"),
+                      {"c": np.ones(2, np.complex64)})

@@ -1,0 +1,112 @@
+"""Training-loop tests: tied reparametrization, gradient masking, smoke
+convergence. Uses tiny configs so each test runs in seconds."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data
+from compile.configs import ModelConfig, TrainConfig, model_config
+from compile.model import head_group_of
+from compile.train import (adamw_init, adamw_update, clip_grads, lr_at,
+                           materialize, pack_corpus, tied_init, train_step,
+                           loss_fn)
+from compile import model as M
+
+
+TINY = ModelConfig(n_layers=2, init_head_groups=(4, 2))
+
+
+def test_tied_init_shapes():
+    tr, st = tied_init(TINY, jax.random.PRNGKey(0))
+    assert tr["l0.qbase"].shape == (4, TINY.d_model, TINY.head_dim)
+    assert tr["l1.kbase"].shape == (2, TINY.d_model, TINY.head_dim)
+    assert "l0.wq" not in tr  # replaced by bases
+    assert "emb" in tr
+    p = materialize(tr, st, TINY)
+    assert p["l0.wq"].shape == (TINY.d_model, TINY.n_heads * TINY.head_dim)
+
+
+def test_materialized_groups_are_near_identical():
+    tr, st = tied_init(TINY, jax.random.PRNGKey(1))
+    p = materialize(tr, st, TINY)
+    wq = np.asarray(p["l1.wq"]).reshape(TINY.d_model, TINY.n_heads,
+                                        TINY.head_dim)
+    g = TINY.init_head_groups[1]
+    for h in range(1, TINY.n_heads):
+        c = np.corrcoef(wq[:, 0].ravel(), wq[:, h].ravel())[0, 1]
+        if head_group_of(h, TINY.n_heads, g) == head_group_of(0, TINY.n_heads, g):
+            assert c > 0.99, f"head {h} same group but corr {c}"
+        else:
+            assert c < 0.5, f"head {h} different group but corr {c}"
+
+
+def test_opt_uniform_heads_frozen_through_updates():
+    cfg = model_config("opt")
+    cfg = ModelConfig(**{**cfg.__dict__, "n_layers": 2})
+    tr, st = tied_init(cfg, jax.random.PRNGKey(0))
+    p0 = materialize(tr, st, cfg)
+    wv0 = np.asarray(p0["l0.wv"]).reshape(cfg.d_model, cfg.n_heads,
+                                          cfg.head_dim)
+    # uniform heads' V must start exactly zero
+    assert np.abs(wv0[:, cfg.n_heads - cfg.uniform_heads:, :]).max() == 0.0
+
+
+def test_adamw_moves_params_and_decays():
+    tc = TrainConfig(steps=10, warmup=1)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.ones((4,))}
+    new, opt = adamw_update(params, grads, opt, 0.1, tc)
+    assert (np.asarray(new["w"]) < 1.0).all()
+    assert int(opt["t"]) == 1
+
+
+def test_clip_grads_bounds_norm():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_grads(grads, 1.0)
+    total = float(jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                               for g in jax.tree.leaves(clipped))))
+    assert total <= 1.0 + 1e-5
+    assert float(norm) > 100.0
+
+
+def test_lr_schedule_warmup_and_decay():
+    tc = TrainConfig(steps=100, warmup=10, lr=1e-3)
+    assert float(lr_at(0, tc)) < float(lr_at(9, tc))
+    assert float(lr_at(99, tc)) < float(lr_at(50, tc))
+    assert float(lr_at(9, tc)) == pytest.approx(1e-3, rel=1e-5)
+
+
+def test_smoke_training_reduces_loss():
+    cfg = ModelConfig(n_layers=2, init_head_groups=(4, 2))
+    tc = TrainConfig(steps=8, batch_size=4, seq_len=32, corpus_docs=80,
+                     warmup=2)
+    w = data.build_world()
+    rng = np.random.default_rng(0)
+    chunks = pack_corpus(data.corpus_docs(w, tc.corpus_docs), tc.seq_len, rng)
+    tr, st = tied_init(cfg, jax.random.PRNGKey(0))
+    mask = jax.tree.map(jnp.ones_like, tr)
+    opt = adamw_init(tr)
+    losses = []
+    for step in range(tc.steps):
+        idx = rng.integers(0, len(chunks), tc.batch_size)
+        batch = jnp.asarray(chunks[idx])
+        tr, opt, loss, _ = train_step(tr, st, opt, batch,
+                                      jnp.asarray(step), mask, cfg, tc)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert np.isfinite(losses).all()
+
+
+def test_loss_fn_matches_manual_xent():
+    cfg = ModelConfig(n_layers=1)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = jnp.asarray(np.arange(10)[None, :] % 250, jnp.int32)
+    loss = float(loss_fn(p, cfg, batch))
+    logits = M.forward_train(p, cfg, batch[:, :-1])
+    logp = jax.nn.log_softmax(logits, -1)
+    manual = -float(np.mean([logp[0, i, batch[0, i + 1]]
+                             for i in range(9)]))
+    assert loss == pytest.approx(manual, rel=1e-5)

@@ -1,0 +1,300 @@
+//! Analysis figures — regenerates the paper's observation plots:
+//!   Fig 2a/2b: single-sample activations + pairwise correlation clusters
+//!   Fig 4:     OPT-vs-LLaMA uniform-head contrast (entropy statistics)
+//!   Fig 6/7:   per-layer average correlation (many samples vs one)
+//!   Fig 8:     clustering-error elbow curves + chosen k per layer
+//!   Fig 9:     cluster-membership stability vs #tokens used
+//!   Fig 13:    cluster-size distribution (deepest layer)
+//!
+//! Run:  cargo bench --bench bench_analysis [-- --samples 32]
+
+mod common;
+
+use chai::baselines::dejavu;
+use chai::bench::Table;
+use chai::clustering::{correlation, elbow, membership};
+use chai::engine::Engine;
+use chai::model::tokenizer;
+use chai::runtime::In;
+use chai::tensor::Tensor;
+use chai::util::json::Json;
+
+/// Collect per-layer last-query attention features + full maps of the
+/// first sample.
+fn collect(
+    engine: &Engine,
+    samples: &[String],
+) -> anyhow::Result<(Vec<Vec<Vec<f32>>>, Tensor, usize)> {
+    let m = engine.manifest();
+    let (l, h, t) = (m.model.n_layers, m.model.n_heads, m.analyze_bucket);
+    let mut feats: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); h]; l];
+    let mut first: Option<(Tensor, usize)> = None;
+    for s in samples {
+        let mut ids = tokenizer::encode(s, true, false);
+        ids.truncate(t);
+        let ln = ids.len();
+        ids.resize(t, tokenizer::PAD);
+        let outs = engine.rt.run(
+            "analyze",
+            &[In::Host(&Tensor::i32(vec![t], ids)), In::Host(&Tensor::scalar_i32(ln as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        {
+            let v = maps.as_f32()?;
+            for li in 0..l {
+                for hi in 0..h {
+                    let base = ((li * h + hi) * t + (ln - 1)) * t;
+                    feats[li][hi].extend_from_slice(&v[base..base + ln]);
+                }
+            }
+        }
+        if first.is_none() {
+            first = Some((maps, ln));
+        }
+    }
+    let (maps, ln) = first.unwrap();
+    Ok((feats, maps, ln))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
+    let n_samples = args.usize("samples", 24)?;
+    let engine = Engine::from_dir(&dir)?;
+    let m = engine.manifest().clone();
+    let (l, h) = (m.model.n_layers, m.model.n_heads);
+
+    let samples: Vec<String> = Json::parse_file(&dir.join("analysis_samples.json"))?
+        .get("samples")?
+        .str_vec()?
+        .into_iter()
+        .take(n_samples)
+        .collect();
+    eprintln!("[bench] analyzing {} samples...", samples.len());
+    let (feats, first_maps, first_ln) = collect(&engine, &samples)?;
+
+    // ---- Fig 6 (many samples) + Fig 7 (single sample) --------------------
+    let mut fig67 = Table::new(
+        "Figures 6+7: per-layer head correlation (N samples vs 1 sample)",
+        &["layer", "mean corr (N)", "frac>0.95 (N)", "mean corr (1)", "elbow k", "k_list"],
+    );
+    let mut fig6_json = Vec::new();
+    let t = m.analyze_bucket;
+    for li in 0..l {
+        let corr_n = correlation::correlation_matrix(&feats[li]);
+        // single-sample features
+        let v = first_maps.as_f32()?;
+        let single: Vec<Vec<f32>> = (0..h)
+            .map(|hi| {
+                let base = ((li * h + hi) * t + (first_ln - 1)) * t;
+                v[base..base + first_ln].to_vec()
+            })
+            .collect();
+        let corr_1 = correlation::correlation_matrix(&single);
+        let res = elbow::cluster_layer(&feats[li], 0);
+        fig67.row(vec![
+            li.to_string(),
+            format!("{:.3}", correlation::mean_offdiag(&corr_n)),
+            format!("{:.2}", correlation::frac_above(&corr_n, 0.95)),
+            format!("{:.3}", correlation::mean_offdiag(&corr_1)),
+            res.k.to_string(),
+            m.k_list[li].to_string(),
+        ]);
+        fig6_json.push(Json::obj(vec![
+            ("layer", Json::Num(li as f64)),
+            ("mean_corr", Json::Num(correlation::mean_offdiag(&corr_n))),
+            ("frac_above_95", Json::Num(correlation::frac_above(&corr_n, 0.95))),
+        ]));
+    }
+    fig67.print();
+    println!("paper shape: correlation increases toward later layers (Fig 6)\n");
+
+    // ---- Fig 2b: cluster structure of the deepest layer, one sample ------
+    let vv = first_maps.as_f32()?;
+    let deep: Vec<Vec<f32>> = (0..h)
+        .map(|hi| {
+            let base = (((l - 1) * h + hi) * t + (first_ln - 1)) * t;
+            vv[base..base + first_ln].to_vec()
+        })
+        .collect();
+    let corr = correlation::correlation_matrix(&deep);
+    let res = elbow::cluster_layer(&deep, 0);
+    println!("Figure 2b analogue (layer {}, 1 sample): clusters {:?}", l - 1, res.membership);
+    let mut within = Vec::new();
+    let mut across = Vec::new();
+    for i in 0..h {
+        for j in i + 1..h {
+            if res.membership[i] == res.membership[j] {
+                within.push(corr[i][j] as f64);
+            } else {
+                across.push(corr[i][j] as f64);
+            }
+        }
+    }
+    println!(
+        "  within-cluster corr mean {:.3}; across-cluster {:.3} (paper: within > 0.95)\n",
+        chai::util::stats::mean(&within),
+        chai::util::stats::mean(&across)
+    );
+
+    // ---- Fig 4: uniform-head contrast (LLaMA-like vs OPT-like) ----------
+    let mut fig4 = Table::new(
+        "Figure 4: near-uniform heads (probe entropy > 0.9) per model",
+        &["model", "layer 0", "mid layer", "last layer"],
+    );
+    let probe_uniform = |engine: &Engine| -> anyhow::Result<Vec<f64>> {
+        let toks = tokenizer::encode("the color of tom is red .", true, false);
+        let mm = engine.manifest();
+        let pb = mm.probe_bucket;
+        let n = toks.len().min(mm.probe_tokens);
+        let mut padded = vec![tokenizer::PAD; pb];
+        padded[..n].copy_from_slice(&toks[..n]);
+        let outs = engine.rt.run(
+            "probe_mha",
+            &[In::Host(&Tensor::i32(vec![pb], padded)), In::Host(&Tensor::scalar_i32(n as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        let ent = dejavu::head_entropy(&maps, n)?;
+        Ok(ent
+            .iter()
+            .map(|layer| layer.iter().filter(|e| **e > 0.9).count() as f64 / layer.len() as f64)
+            .collect())
+    };
+    let u = probe_uniform(&engine)?;
+    fig4.row(vec![
+        m.model.name.clone(),
+        format!("{:.0}%", u[0] * 100.0),
+        format!("{:.0}%", u[l / 2] * 100.0),
+        format!("{:.0}%", u[l - 1] * 100.0),
+    ]);
+    if let Some(opt_dir) = common::opt_artifacts_dir(&args) {
+        let opt_engine = Engine::from_dir(&opt_dir)?;
+        let uo = probe_uniform(&opt_engine)?;
+        let lo = opt_engine.manifest().model.n_layers;
+        fig4.row(vec![
+            opt_engine.manifest().model.name.clone(),
+            format!("{:.0}%", uo[0] * 100.0),
+            format!("{:.0}%", uo[lo / 2] * 100.0),
+            format!("{:.0}%", uo[lo - 1] * 100.0),
+        ]);
+    }
+    fig4.print();
+    println!("paper shape: OPT has many uniform heads, LLaMA has none (Fig 4)\n");
+
+    // ---- Fig 8: elbow curves --------------------------------------------
+    let mut fig8 = Table::new(
+        "Figure 8: clustering error (SSE) vs #clusters, per layer (chosen k marked *)",
+        &["layer", "k=1", "k=2", "k=4", "k=8", "k=12", "k=16", "chosen"],
+    );
+    let errors = m.elbow_errors()?;
+    for (li, errs) in errors.iter().enumerate() {
+        let pick = m.k_list[li];
+        let grab = |k: usize| {
+            errs.get(k - 1)
+                .map(|e| {
+                    let s = format!("{e:.2}");
+                    if k == pick { format!("{s}*") } else { s }
+                })
+                .unwrap_or_default()
+        };
+        fig8.row(vec![
+            li.to_string(),
+            grab(1),
+            grab(2),
+            grab(4),
+            grab(8),
+            grab(12),
+            grab(16),
+            pick.to_string(),
+        ]);
+    }
+    fig8.print();
+    println!("paper shape: error plateaus at the layer's intrinsic cluster count\n");
+
+    // ---- Fig 9: membership stability vs tokens used ----------------------
+    let mut fig9 = Table::new(
+        "Figure 9: membership changes when adding the n-th token (deepest layer)",
+        &["tokens n", "changes vs n-1 (mean over samples)"],
+    );
+    let max_tok = 12.min(m.analyze_bucket);
+    let mut change_sums = vec![0.0f64; max_tok - 2];
+    let n_stab = samples.len().min(8);
+    for s in samples.iter().take(n_stab) {
+        let mut ids = tokenizer::encode(s, true, false);
+        ids.truncate(t);
+        let ln = ids.len();
+        ids.resize(t, tokenizer::PAD);
+        let outs = engine.rt.run(
+            "analyze",
+            &[In::Host(&Tensor::i32(vec![t], ids)), In::Host(&Tensor::scalar_i32(ln as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        let v = maps.as_f32()?;
+        // deepest layer maps as [H][T][T]
+        let li = l - 1;
+        let heads: Vec<Vec<Vec<f32>>> = (0..h)
+            .map(|hi| {
+                (0..max_tok)
+                    .map(|q| {
+                        let base = ((li * h + hi) * t + q) * t;
+                        v[base..base + max_tok].to_vec()
+                    })
+                    .collect()
+            })
+            .collect();
+        let curve = membership::stability_curve(&heads, max_tok, m.k_list[li], 0);
+        for (i, c) in curve.iter().enumerate() {
+            change_sums[i] += *c as f64;
+        }
+    }
+    let mut fig9_json = Vec::new();
+    for (i, s) in change_sums.iter().enumerate() {
+        let n = i + 3; // curve starts at membership(3) vs membership(2)
+        let mean = s / n_stab as f64;
+        fig9.row(vec![n.to_string(), format!("{mean:.2}")]);
+        fig9_json.push(Json::obj(vec![
+            ("tokens", Json::Num(n as f64)),
+            ("mean_changes", Json::Num(mean)),
+        ]));
+    }
+    fig9.print();
+    println!("paper shape: membership settles after ~5 tokens (Fig 9)\n");
+
+    // ---- Fig 13: cluster-size distribution --------------------------------
+    let mut sizes: Vec<usize> = Vec::new();
+    for s in samples.iter().take(16) {
+        let toks = tokenizer::encode(s, true, false);
+        let (ms, _, _) = engine.online_membership(&toks)?;
+        let deep = &ms[l - 1];
+        let mut counts = vec![0usize; m.k_list[l - 1]];
+        for &c in &deep.membership {
+            counts[c] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        sizes.extend(counts);
+    }
+    let mut fig13 = Table::new(
+        "Figure 13: cluster-size distribution, deepest layer (16 requests)",
+        &["cluster rank", "mean heads"],
+    );
+    let kk = m.k_list[l - 1];
+    let mut fig13_json = Vec::new();
+    for rank in 0..kk {
+        let vals: Vec<f64> = sizes.iter().skip(rank).step_by(kk).map(|x| *x as f64).collect();
+        let mean = chai::util::stats::mean(&vals);
+        fig13.row(vec![format!("#{}", rank + 1), format!("{mean:.1}")]);
+        fig13_json.push(Json::Num(mean));
+    }
+    fig13.print();
+    println!("paper shape: skewed — one or two large clusters hold most heads");
+
+    common::write_results(
+        "analysis",
+        Json::obj(vec![
+            ("fig6", Json::Arr(fig6_json)),
+            ("fig9", Json::Arr(fig9_json)),
+            ("fig13_mean_sizes", Json::Arr(fig13_json)),
+        ]),
+    );
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Figure 12 — end-to-end latency: (a) time-to-first-token including
+//! CHAI's clustering overhead, (b) time-to-next-token, both vs sequence
+//! length, MHA vs CHAI. Prints paper-style series + speedup column.
+//!
+//! Run:  cargo bench --bench bench_latency [-- --iters 5 --buckets 32,128,512,2048]
+
+mod common;
+
+use chai::bench::{fmt_ms, Table};
+use chai::engine::{Engine, Variant};
+use chai::model::tokenizer;
+use chai::runtime::In;
+use chai::tensor::Tensor;
+use chai::util::json::Json;
+use chai::util::stats::{median, time_ms};
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
+    let engine = Engine::from_dir(&dir)?;
+    let m = engine.manifest().clone();
+    let buckets = args.usize_list("buckets", &m.decode_buckets)?;
+    let iters = args.usize("iters", 3)?;
+    let warmup = args.usize("warmup", 1)?;
+
+    // ---------------- Fig 12a: time to first token -----------------------
+    let mut ttft = Table::new(
+        "Figure 12a: time to first token (ms) vs sequence length",
+        &["seq len", "MHA", "CHAI (probe+cluster+prefill)", "speedup"],
+    );
+    let mut ttft_json = Vec::new();
+    for &t in &buckets {
+        // prompt that fills most of the bucket
+        let prompt_len = t.saturating_sub(2).max(8);
+        let prompt = "the color of tom is red . ".repeat(1 + prompt_len / 26);
+        let prompt_tokens: Vec<i32> = tokenizer::encode(&prompt, true, false)
+            .into_iter()
+            .take(prompt_len)
+            .collect();
+        let mut padded = vec![tokenizer::PAD; t];
+        padded[..prompt_tokens.len()].copy_from_slice(&prompt_tokens);
+        let toks = Tensor::i32(vec![t], padded);
+        let ln = Tensor::scalar_i32(prompt_tokens.len() as i32);
+
+        // MHA prefill
+        let mha_name = format!("prefill_mha_t{t}");
+        engine.rt.warmup(&[&mha_name])?;
+        let mha_ms = median(&time_ms(warmup, iters, || {
+            engine.rt.run(&mha_name, &[In::Host(&toks), In::Host(&ln)]).unwrap();
+        }));
+
+        // CHAI: probe + cluster + clustered prefill (paper's accounting)
+        let chai_name = format!("prefill_chai_t{t}");
+        engine.rt.warmup(&[&chai_name, "probe_mha"])?;
+        let chai_ms = median(&time_ms(warmup, iters, || {
+            let (ms, _, _) = engine.online_membership(&prompt_tokens).unwrap();
+            let mem: Vec<Vec<usize>> = ms.iter().map(|x| x.membership.clone()).collect();
+            let reps: Vec<Vec<usize>> = ms.iter().map(|x| x.reps.clone()).collect();
+            let (mt, rt_) = engine.membership_tensors(&mem, &reps, m.k_max);
+            engine
+                .rt
+                .run(&chai_name, &[In::Host(&toks), In::Host(&ln), In::Host(&mt), In::Host(&rt_)])
+                .unwrap();
+        }));
+        ttft.row(vec![
+            t.to_string(),
+            fmt_ms(mha_ms),
+            fmt_ms(chai_ms),
+            format!("{:.2}x", mha_ms / chai_ms),
+        ]);
+        ttft_json.push(Json::obj(vec![
+            ("seq_len", Json::Num(t as f64)),
+            ("mha_ms", Json::Num(mha_ms)),
+            ("chai_ms", Json::Num(chai_ms)),
+        ]));
+    }
+    ttft.print();
+
+    // ---------------- Fig 12b: time to next token ------------------------
+    let mut ttnt = Table::new(
+        "Figure 12b: time to next token (ms) vs sequence length",
+        &["seq len", "MHA", "CHAI", "speedup"],
+    );
+    let mut ttnt_json = Vec::new();
+    let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+    for &t in &buckets {
+        let pos = Tensor::scalar_i32((t - 2) as i32);
+        let tok = Tensor::scalar_i32(42);
+
+        let kc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let vc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let mha_name = format!("decode_mha_t{t}");
+        engine.rt.warmup(&[&mha_name])?;
+        let mha_ms = median(&time_ms(warmup, iters, || {
+            engine
+                .rt
+                .run(&mha_name, &[In::Host(&tok), In::Host(&pos), In::Host(&kc), In::Host(&vc)])
+                .unwrap();
+        }));
+
+        let kreps: Vec<Tensor> =
+            m.k_list.iter().map(|&k| Tensor::zeros_f32(&[k, t, dh])).collect();
+        let mem = Tensor::zeros_i32(&[l, h]);
+        let reps = Tensor::zeros_i32(&[l, m.k_max]);
+        let chai_name = format!("decode_chai_t{t}");
+        engine.rt.warmup(&[&chai_name])?;
+        let chai_ms = median(&time_ms(warmup, iters, || {
+            let mut ins: Vec<In> = vec![In::Host(&tok), In::Host(&pos)];
+            for kr in &kreps {
+                ins.push(In::Host(kr));
+            }
+            ins.push(In::Host(&vc));
+            ins.push(In::Host(&mem));
+            ins.push(In::Host(&reps));
+            engine.rt.run(&chai_name, &ins).unwrap();
+        }));
+        ttnt.row(vec![
+            t.to_string(),
+            fmt_ms(mha_ms),
+            fmt_ms(chai_ms),
+            format!("{:.2}x", mha_ms / chai_ms),
+        ]);
+        ttnt_json.push(Json::obj(vec![
+            ("seq_len", Json::Num(t as f64)),
+            ("mha_ms", Json::Num(mha_ms)),
+            ("chai_ms", Json::Num(chai_ms)),
+        ]));
+    }
+    ttnt.print();
+    println!("\npaper shape: CHAI speedup grows with sequence length");
+    println!("(paper: up to 1.73x TTFT, up to 5x TTNT at 2048 on LLaMA-7B/V100)");
+
+    common::write_results(
+        "latency",
+        Json::obj(vec![
+            ("ttft", Json::Arr(ttft_json)),
+            ("ttnt", Json::Arr(ttnt_json)),
+            ("attn_impl", Json::Str(m.attn_impl.clone())),
+        ]),
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! Microbenchmarks for the perf pass (EXPERIMENTS.md §Perf): per-artifact
+//! execution latency, host<->device transfer cost, clustering cost, and
+//! the engine-step breakdown. These locate the bottleneck before each
+//! optimization iteration.
+//!
+//! Run:  cargo bench --bench bench_microbench [-- --iters 10]
+
+mod common;
+
+use chai::bench::{fmt_ms, Table};
+use chai::engine::Engine;
+use chai::model::tokenizer;
+use chai::runtime::In;
+use chai::tensor::Tensor;
+use chai::util::json::Json;
+use chai::util::stats::{median, time_ms};
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
+    let engine = Engine::from_dir(&dir)?;
+    let m = engine.manifest().clone();
+    let iters = args.usize("iters", 6)?;
+    let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+
+    // ---- artifact execution latency --------------------------------------
+    let mut table = Table::new("Per-artifact execution latency", &["artifact", "median ms"]);
+    let mut rows = Vec::new();
+    let mut bench_artifact = |name: &str, ins: &dyn Fn() -> Vec<Tensor>| -> anyhow::Result<f64> {
+        engine.rt.warmup(&[name])?;
+        let tensors = ins();
+        let ms = median(&time_ms(2, iters, || {
+            let refs: Vec<In> = tensors.iter().map(In::Host).collect();
+            engine.rt.run(name, &refs).unwrap();
+        }));
+        Ok(ms)
+    };
+
+    let probe_ms = bench_artifact("probe_mha", &|| {
+        vec![Tensor::zeros_i32(&[m.probe_bucket]), Tensor::scalar_i32(5)]
+    })?;
+    table.row(vec!["probe_mha".into(), fmt_ms(probe_ms)]);
+    rows.push(Json::obj(vec![("name", Json::Str("probe_mha".into())), ("ms", Json::Num(probe_ms))]));
+
+    let lp = m.logprob_bucket;
+    let lg_ms = bench_artifact("logprob_mha", &|| {
+        vec![Tensor::zeros_i32(&[lp]), Tensor::scalar_i32(24)]
+    })?;
+    table.row(vec!["logprob_mha".into(), fmt_ms(lg_ms)]);
+    rows.push(Json::obj(vec![("name", Json::Str("logprob_mha".into())), ("ms", Json::Num(lg_ms))]));
+
+    for &t in &m.decode_buckets.clone() {
+        let name = format!("decode_mha_t{t}");
+        let ms = bench_artifact(&name, &|| {
+            vec![
+                Tensor::scalar_i32(1),
+                Tensor::scalar_i32((t - 2) as i32),
+                Tensor::zeros_f32(&[l, h, t, dh]),
+                Tensor::zeros_f32(&[l, h, t, dh]),
+            ]
+        })?;
+        table.row(vec![name.clone(), fmt_ms(ms)]);
+        rows.push(Json::obj(vec![("name", Json::Str(name)), ("ms", Json::Num(ms))]));
+    }
+    table.print();
+
+    // ---- transfer cost ----------------------------------------------------
+    let mut xfer = Table::new("Host->device upload cost", &["tensor", "MiB", "median ms"]);
+    for &t in &[128usize, 2048] {
+        let kc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let ms = median(&time_ms(2, iters, || {
+            engine.rt.upload(&kc).unwrap();
+        }));
+        xfer.row(vec![
+            format!("kv cache T={t}"),
+            format!("{:.1}", kc.nbytes() as f64 / 1048576.0),
+            fmt_ms(ms),
+        ]);
+    }
+    xfer.print();
+
+    // ---- clustering cost ---------------------------------------------------
+    let toks = tokenizer::encode("the color of tom is red .", true, false);
+    let cluster_ms = median(&time_ms(1, iters, || {
+        engine.online_membership(&toks).unwrap();
+    }));
+    let mut cl = Table::new("CHAI online overhead (probe + k-means)", &["stage", "median ms"]);
+    cl.row(vec!["probe+cluster total".into(), fmt_ms(cluster_ms)]);
+    cl.row(vec!["probe exec only".into(), fmt_ms(probe_ms)]);
+    cl.row(vec!["k-means only (approx)".into(), fmt_ms(cluster_ms - probe_ms)]);
+    cl.print();
+
+    common::write_results(
+        "microbench",
+        Json::obj(vec![
+            ("artifacts", Json::Arr(rows)),
+            ("online_membership_ms", Json::Num(cluster_ms)),
+        ]),
+    );
+    Ok(())
+}

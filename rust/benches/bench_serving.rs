@@ -1,0 +1,94 @@
+//! End-to-end serving benchmark: coordinator + continuous batcher under a
+//! Poisson trace (in-process, no TCP), CHAI vs MHA at two load levels —
+//! the system-level counterpart of Figure 12.
+//!
+//! Run:  cargo bench --bench bench_serving [-- --requests 16]
+
+mod common;
+
+use chai::bench::{poisson_trace, Table};
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::Variant;
+use chai::util::json::Json;
+use chai::util::now_ms;
+use chai::util::stats::{mean, percentile};
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
+    let n = args.usize("requests", 12)?;
+    let max_new = args.usize("max-new", 8)?;
+
+    let mut table = Table::new(
+        "Serving: Poisson trace through coordinator (continuous batching)",
+        &["variant", "rate/s", "ok", "p50 ttft ms", "p95 ttft", "p50 e2e ms", "tok/s"],
+    );
+    let mut json_rows = Vec::new();
+
+    for variant_name in ["mha", "chai"] {
+        for rate in [2.0f64, 8.0] {
+            let cfg = ServingConfig {
+                artifacts_dir: dir.clone(),
+                max_batch: 8,
+                ..Default::default()
+            };
+            let handle = Coordinator::start(cfg)?;
+            let coord = handle.coordinator.clone();
+            let variant = Variant::parse(variant_name)?;
+
+            // warm executables
+            coord
+                .submit("the color of tom is", 2, variant.clone())
+                .recv()
+                .unwrap();
+
+            let trace = poisson_trace(n, rate, max_new.saturating_sub(2).max(1), max_new, 7);
+            let t0 = now_ms();
+            let mut pending = Vec::new();
+            for req in &trace {
+                let wait = req.arrival_ms - (now_ms() - t0);
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_millis(wait as u64));
+                }
+                pending.push(coord.submit(&req.prompt, req.max_new, variant.clone()));
+            }
+            let mut ttfts = Vec::new();
+            let mut e2es = Vec::new();
+            let mut tokens = 0usize;
+            let mut ok = 0usize;
+            for rx in pending {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+                if r.error.is_none() {
+                    ok += 1;
+                    ttfts.push(r.queue_ms + r.timing.ttft_ms);
+                    e2es.push(r.e2e_ms);
+                    tokens += r.n_generated;
+                }
+            }
+            let span_s = (now_ms() - t0) / 1e3;
+            table.row(vec![
+                variant_name.to_string(),
+                format!("{rate:.0}"),
+                format!("{ok}/{n}"),
+                format!("{:.1}", percentile(&ttfts, 50.0)),
+                format!("{:.1}", percentile(&ttfts, 95.0)),
+                format!("{:.1}", percentile(&e2es, 50.0)),
+                format!("{:.1}", tokens as f64 / span_s),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("variant", Json::Str(variant_name.into())),
+                ("rate", Json::Num(rate)),
+                ("p50_ttft_ms", Json::Num(percentile(&ttfts, 50.0))),
+                ("p50_e2e_ms", Json::Num(percentile(&e2es, 50.0))),
+                ("mean_e2e_ms", Json::Num(mean(&e2es))),
+                ("throughput_tok_s", Json::Num(tokens as f64 / span_s)),
+            ]));
+            handle.shutdown();
+        }
+    }
+    table.print();
+    println!("\nshape: CHAI sustains lower e2e latency / higher tok/s at equal load");
+    common::write_results("serving", Json::obj(vec![("rows", Json::Arr(json_rows))]));
+    Ok(())
+}

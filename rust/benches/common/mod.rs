@@ -1,0 +1,45 @@
+//! Shared bench plumbing: artifacts discovery, JSON result emission
+//! (criterion is not vendored offline; each bench is a `harness = false`
+//! binary printing paper-style tables and writing
+//! `bench_results/<name>.json` for EXPERIMENTS.md).
+
+use std::path::PathBuf;
+
+use chai::util::args::Args;
+use chai::util::json::Json;
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+pub fn opt_artifacts_dir(args: &Args) -> Option<PathBuf> {
+    let d = PathBuf::from(args.str("artifacts-opt", "artifacts-opt"));
+    d.join("manifest.json").exists().then_some(d)
+}
+
+pub fn bench_args() -> Args {
+    // cargo bench passes a trailing "--bench" flag; Args tolerates it.
+    Args::from_env()
+}
+
+pub fn write_results(name: &str, value: Json) {
+    let dir = PathBuf::from("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, value.to_string()) {
+        eprintln!("[bench] could not write {}: {e}", path.display());
+    } else {
+        eprintln!("[bench] wrote {}", path.display());
+    }
+}
+
+/// Skip gracefully when artifacts are missing (fresh checkout).
+pub fn require_artifacts(args: &Args) -> Option<PathBuf> {
+    let d = artifacts_dir(args);
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("[bench] artifacts missing — run `make artifacts` first; skipping");
+        None
+    }
+}

@@ -1,0 +1,118 @@
+//! Baseline head/token selectors (the comparison systems of Tables 1-3).
+//!
+//! * [`dejavu`] — runtime head pruning by attention *uniformity* (the
+//!   criterion DEJAVU exploits on OPT, paper Figure 4): heads whose scores
+//!   are closest to uniform carry the least token-selective signal and are
+//!   pruned first. (The original uses trained MLP predictors; our
+//!   substitution implements the criterion the predictors learn —
+//!   DESIGN.md §Substitutions.)
+//! * SpAtten's cascade token+head pruning is compiled **into** the
+//!   `logprob_spatten` artifact (in-graph top-k, `model.py`); no host-side
+//!   selector is needed.
+
+pub mod dejavu {
+    use anyhow::Result;
+
+    use crate::tensor::Tensor;
+
+    /// Normalized entropy (0..1) of one attention row.
+    fn row_entropy(row: &[f32]) -> f64 {
+        let n = row.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let mut h = 0.0f64;
+        for &p in row {
+            if p > 1e-9 {
+                h -= (p as f64) * (p as f64).ln();
+            }
+        }
+        h / (n as f64).ln()
+    }
+
+    /// Mean normalized attention entropy per head from probe maps
+    /// `[L, H, P, P]` over the first `n_tokens` (queries 1..n, keys ≤ q).
+    pub fn head_entropy(maps: &Tensor, n_tokens: usize) -> Result<Vec<Vec<f64>>> {
+        let (l, h, p) = (maps.shape[0], maps.shape[1], maps.shape[2]);
+        let v = maps.as_f32()?;
+        let mut out = vec![vec![0.0f64; h]; l];
+        for li in 0..l {
+            for hi in 0..h {
+                let mut acc = 0.0;
+                let mut cnt = 0usize;
+                for q in 1..n_tokens.min(p) {
+                    let base = ((li * h + hi) * p + q) * p;
+                    acc += row_entropy(&v[base..base + q + 1]);
+                    cnt += 1;
+                }
+                out[li][hi] = if cnt == 0 { 0.0 } else { acc / cnt as f64 };
+            }
+        }
+        Ok(out)
+    }
+
+    /// Keep the `n_keep` *least-uniform* (lowest-entropy) heads per layer,
+    /// sorted ascending. Returns [L][n_keep] head indices.
+    pub fn select_heads(maps: &Tensor, n_tokens: usize, n_keep: usize) -> Result<Vec<Vec<usize>>> {
+        let ent = head_entropy(maps, n_tokens)?;
+        Ok(ent
+            .iter()
+            .map(|layer| {
+                let mut idx: Vec<usize> = (0..layer.len()).collect();
+                idx.sort_by(|a, b| layer[*a].partial_cmp(&layer[*b]).unwrap());
+                let mut kept: Vec<usize> = idx.into_iter().take(n_keep).collect();
+                kept.sort();
+                kept
+            })
+            .collect())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        /// maps [1, 3, 4, 4]: head 0 peaked, head 1 uniform, head 2 mixed.
+        fn toy_maps() -> Tensor {
+            let p = 4;
+            let mut v = vec![0.0f32; 3 * p * p];
+            let head = |h: usize, q: usize| (h * p + q) * p;
+            for q in 0..p {
+                // head 0: all mass on token 0
+                v[head(0, q)] = 1.0;
+                // head 1: uniform over q+1 keys
+                for k in 0..=q {
+                    v[head(1, q) + k] = 1.0 / (q + 1) as f32;
+                }
+                // head 2: linear ramp
+                let s: f32 = (0..=q).map(|k| (k + 1) as f32).sum();
+                for k in 0..=q {
+                    v[head(2, q) + k] = (k + 1) as f32 / s;
+                }
+            }
+            Tensor::f32(vec![1, 3, p, p], v)
+        }
+
+        #[test]
+        fn entropy_ordering() {
+            let ent = head_entropy(&toy_maps(), 4).unwrap();
+            assert!(ent[0][0] < ent[0][2], "{:?}", ent);
+            assert!(ent[0][2] < ent[0][1], "{:?}", ent);
+            assert!((ent[0][1] - 1.0).abs() < 1e-6, "uniform head entropy {:?}", ent[0][1]);
+        }
+
+        #[test]
+        fn select_prunes_uniform_first() {
+            let kept = select_heads(&toy_maps(), 4, 2).unwrap();
+            assert_eq!(kept[0], vec![0, 2]); // uniform head 1 pruned
+            let kept1 = select_heads(&toy_maps(), 4, 1).unwrap();
+            assert_eq!(kept1[0], vec![0]);
+        }
+
+        #[test]
+        fn kept_sorted_and_bounded() {
+            let kept = select_heads(&toy_maps(), 4, 3).unwrap();
+            assert_eq!(kept[0].len(), 3);
+            assert!(kept[0].windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Benchmark substrate: synthetic serving workloads (Poisson arrivals,
+//! length distributions drawn from the corpus statistics) and table
+//! rendering for the bench binaries.
+
+use crate::util::rng::Rng;
+
+/// One request in a serving trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub arrival_ms: f64,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Prompt pool drawn from the world's fact templates (same distribution
+/// the model was trained on, so generations are meaningful).
+pub fn prompt_pool() -> Vec<String> {
+    let names = ["tom", "ana", "raj", "mia", "leo", "zoe", "kai", "eva"];
+    let mut pool = Vec::new();
+    for n in names {
+        pool.push(format!("the color of {n} is"));
+        pool.push(format!("{n} keeps the"));
+        pool.push(format!("question : does {n} eat"));
+        pool.push(format!("the friend of {n} is"));
+    }
+    pool
+}
+
+/// Poisson-arrival trace with geometric-ish output lengths.
+pub fn poisson_trace(
+    n: usize,
+    rate_per_s: f64,
+    max_new_lo: usize,
+    max_new_hi: usize,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed);
+    let pool = prompt_pool();
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate_per_s) * 1e3;
+            TraceRequest {
+                arrival_ms: t,
+                prompt: pool[rng.below(pool.len())].clone(),
+                max_new: rng.range(max_new_lo, max_new_hi + 1),
+            }
+        })
+        .collect()
+}
+
+/// Fixed-width table printer for bench output (criterion is unavailable;
+/// benches print paper-style rows instead).
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format ms with adaptive precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let t = poisson_trace(50, 10.0, 4, 16, 0);
+        assert_eq!(t.len(), 50);
+        for w in t.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        assert!(t.iter().all(|r| (4..=16).contains(&r.max_new)));
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let a = poisson_trace(10, 5.0, 4, 8, 7);
+        let b = poisson_trace(10, 5.0, 4, 8, 7);
+        assert_eq!(a.iter().map(|r| r.arrival_ms.to_bits()).collect::<Vec<_>>(),
+                   b.iter().map(|r| r.arrival_ms.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trace_rate_roughly_matches() {
+        let t = poisson_trace(2000, 50.0, 1, 2, 3);
+        let span_s = t.last().unwrap().arrival_ms / 1e3;
+        let rate = 2000.0 / span_s;
+        assert!((rate - 50.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo") && s.contains("bb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,108 @@
+//! Pearson correlation across attention heads (paper figures 2b, 6, 7).
+
+/// Pearson correlation matrix of feature rows. Constant rows correlate 0
+/// with everything (paper treats them as their own degenerate cluster).
+pub fn correlation_matrix(feats: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let h = feats.len();
+    let mut normed: Vec<Vec<f32>> = feats.to_vec();
+    crate::clustering::normalize_features(&mut normed);
+    let mut out = vec![vec![0.0f32; h]; h];
+    for i in 0..h {
+        for j in i..h {
+            let c: f32 = normed[i].iter().zip(&normed[j]).map(|(a, b)| a * b).sum();
+            out[i][j] = c;
+            out[j][i] = c;
+        }
+    }
+    out
+}
+
+/// Mean of the off-diagonal (upper-triangle) correlations — the per-layer
+/// redundancy statistic plotted in Figure 6.
+pub fn mean_offdiag(corr: &[Vec<f32>]) -> f64 {
+    let h = corr.len();
+    if h < 2 {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for i in 0..h {
+        for j in i + 1..h {
+            sum += corr[i][j] as f64;
+            n += 1;
+        }
+    }
+    sum / n as f64
+}
+
+/// Fraction of head pairs whose correlation exceeds `thresh` (the ">0.95
+/// within clusters" observation in §1).
+pub fn frac_above(corr: &[Vec<f32>], thresh: f32) -> f64 {
+    let h = corr.len();
+    if h < 2 {
+        return 0.0;
+    }
+    let mut above = 0usize;
+    let mut n = 0usize;
+    for i in 0..h {
+        for j in i + 1..h {
+            if corr[i][j] > thresh {
+                above += 1;
+            }
+            n += 1;
+        }
+    }
+    above as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_rows_correlate_1() {
+        let a: Vec<f32> = (0..10).map(|i| (i as f32).sin()).collect();
+        let corr = correlation_matrix(&[a.clone(), a.clone()]);
+        assert!((corr[0][1] - 1.0).abs() < 1e-5);
+        assert!((corr[0][0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn anticorrelated_rows() {
+        let a: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let b: Vec<f32> = a.iter().map(|x| 10.0 - x).collect();
+        let corr = correlation_matrix(&[a, b]);
+        assert!((corr[0][1] + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn affine_invariance() {
+        let a: Vec<f32> = (0..16).map(|i| (i * i) as f32).collect();
+        let b: Vec<f32> = a.iter().map(|x| 0.5 * x - 3.0).collect();
+        let corr = correlation_matrix(&[a, b]);
+        assert!((corr[0][1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let a: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let b = a.clone();
+        let c: Vec<f32> = a.iter().map(|x| -x).collect();
+        let corr = correlation_matrix(&[a, b, c]);
+        // pairs: (a,b)=1, (a,c)=-1, (b,c)=-1 -> mean = -1/3
+        assert!((mean_offdiag(&corr) + 1.0 / 3.0).abs() < 1e-5);
+        assert!((frac_above(&corr, 0.95) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric() {
+        let f: Vec<Vec<f32>> =
+            (0..4).map(|i| (0..6).map(|j| ((i * 7 + j * 3) % 5) as f32).collect()).collect();
+        let corr = correlation_matrix(&f);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((corr[i][j] - corr[j][i]).abs() < 1e-6);
+            }
+        }
+    }
+}

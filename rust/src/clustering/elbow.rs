@@ -1,0 +1,107 @@
+//! Offline cluster-count selection (paper §3.2, Figure 8): SSE curve over
+//! k = 1..H plus the automated elbow read. Mirrors
+//! `python/compile/clustering.py::{cluster_layer, elbow_pick}` — the
+//! integration tests assert both sides picked identical `k_list` for the
+//! shipped `clusters.json`.
+
+use super::kmeans::{canonicalize, kmeans, representatives};
+
+#[derive(Debug, Clone)]
+pub struct LayerClusters {
+    pub k: usize,
+    pub membership: Vec<usize>,
+    pub reps: Vec<usize>,
+    pub errors: Vec<f64>,
+}
+
+/// Smallest k whose residual SSE falls below `rel_tol` of the k=1 SSE;
+/// layers with no redundancy return H (no pruning).
+pub fn elbow_pick(errors: &[f64], rel_tol: f64) -> usize {
+    if errors.is_empty() {
+        return 1;
+    }
+    if errors[0] < 1e-6 {
+        return 1; // all heads already identical
+    }
+    let base = errors[0];
+    for (i, e) in errors.iter().enumerate() {
+        if e / base <= rel_tol {
+            return i + 1;
+        }
+    }
+    errors.len()
+}
+
+/// Full per-layer offline pipeline over raw [H][F] attention features.
+pub fn cluster_layer(feats_raw: &[Vec<f32>], seed: u64) -> LayerClusters {
+    let h = feats_raw.len();
+    let mut feats = feats_raw.to_vec();
+    crate::clustering::normalize_features(&mut feats);
+    let mut errors = Vec::with_capacity(h);
+    let mut results = Vec::with_capacity(h);
+    for k in 1..=h {
+        let res = kmeans(&feats, k, seed, 50);
+        errors.push(res.sse);
+        results.push(res);
+    }
+    let k = elbow_pick(&errors, 0.08);
+    let res = &results[k - 1];
+    let reps = representatives(&feats, res);
+    let (membership, reps) = canonicalize(&res.labels, &reps);
+    LayerClusters { k, membership, reps, errors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn elbow_rules() {
+        assert_eq!(elbow_pick(&[100.0, 40.0, 5.0, 4.5, 4.0], 0.08), 3);
+        let lin: Vec<f64> = (0..16).map(|i| 16.0 - i as f64).collect();
+        assert_eq!(elbow_pick(&lin, 0.08), 16);
+        assert_eq!(elbow_pick(&[1e-9, 0.0], 0.08), 1);
+        assert_eq!(elbow_pick(&[], 0.08), 1);
+    }
+
+    #[test]
+    fn cluster_layer_recovers_redundant_groups() {
+        // 16 heads in 3 groups of near-identical attention rows.
+        let mut rng = Rng::new(0);
+        let mut patterns = Vec::new();
+        for _ in 0..3 {
+            let p: Vec<f32> = (0..32).map(|_| rng.f32()).collect();
+            patterns.push(p);
+        }
+        let sizes = [6usize, 6, 4];
+        let mut feats = Vec::new();
+        for (g, &sz) in sizes.iter().enumerate() {
+            for _ in 0..sz {
+                feats.push(
+                    patterns[g].iter().map(|x| x + rng.normal() as f32 * 1e-3).collect(),
+                );
+            }
+        }
+        let res = cluster_layer(&feats, 0);
+        assert_eq!(res.k, 3, "errors: {:?}", res.errors);
+        assert!(res.membership[..6].iter().all(|m| *m == res.membership[0]));
+        assert!(res.membership[6..12].iter().all(|m| *m == res.membership[6]));
+        assert_eq!(res.reps.len(), 3);
+        // reps sorted canonical
+        let mut sorted = res.reps.clone();
+        sorted.sort();
+        assert_eq!(sorted, res.reps);
+    }
+
+    #[test]
+    fn errors_monotone_nonincreasing() {
+        let mut rng = Rng::new(3);
+        let feats: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..16).map(|_| rng.f32()).collect()).collect();
+        let res = cluster_layer(&feats, 1);
+        for w in res.errors.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{:?}", res.errors);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Seeded k-means++ over per-head attention features (mirrors
+//! `python/compile/clustering.py::kmeans`). Deterministic given a seed.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub labels: Vec<usize>,
+    pub centroids: Vec<Vec<f32>>,
+    pub sse: f64,
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+}
+
+/// k-means++ with at most `iters` Lloyd iterations.
+pub fn kmeans(feats: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> KMeansResult {
+    let h = feats.len();
+    assert!(h > 0, "empty feature set");
+    let k = k.min(h).max(1);
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding
+    let mut centroids: Vec<Vec<f32>> = vec![feats[rng.below(h)].clone()];
+    while centroids.len() < k {
+        let d2: Vec<f64> = feats
+            .iter()
+            .map(|f| centroids.iter().map(|c| dist2(f, c)).fold(f64::INFINITY, f64::min))
+            .collect();
+        let total: f64 = d2.iter().sum();
+        let idx = if total <= 1e-12 { rng.below(h) } else { rng.weighted(&d2) };
+        centroids.push(feats[idx].clone());
+    }
+
+    let mut labels = vec![0usize; h];
+    for it in 0..iters {
+        let mut changed = false;
+        for (i, f) in feats.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (j, c) in centroids.iter().enumerate() {
+                let d = dist2(f, c);
+                if d < best.0 {
+                    best = (d, j);
+                }
+            }
+            if labels[i] != best.1 {
+                labels[i] = best.1;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        for (j, c) in centroids.iter_mut().enumerate() {
+            let members: Vec<&Vec<f32>> =
+                feats.iter().zip(&labels).filter(|(_, l)| **l == j).map(|(f, _)| f).collect();
+            if members.is_empty() {
+                continue;
+            }
+            for (d, slot) in c.iter_mut().enumerate() {
+                *slot = members.iter().map(|m| m[d]).sum::<f32>() / members.len() as f32;
+            }
+        }
+    }
+    let sse = feats.iter().zip(&labels).map(|(f, l)| dist2(f, &centroids[*l])).sum();
+    KMeansResult { labels, centroids, sse }
+}
+
+/// Head closest to each centroid — its Q/K projections survive pruning.
+pub fn representatives(feats: &[Vec<f32>], res: &KMeansResult) -> Vec<usize> {
+    let k = res.centroids.len();
+    let mut reps = vec![0usize; k];
+    for j in 0..k {
+        let mut best = (f64::INFINITY, usize::MAX);
+        for (i, f) in feats.iter().enumerate() {
+            if res.labels[i] == j {
+                let d = dist2(f, &res.centroids[j]);
+                if d < best.0 {
+                    best = (d, i);
+                }
+            }
+        }
+        reps[j] = if best.1 == usize::MAX { j % feats.len() } else { best.1 };
+    }
+    reps
+}
+
+/// Re-index clusters so representatives are sorted by head index — the
+/// canonical form shared with python so memberships compare exactly.
+pub fn canonicalize(labels: &[usize], reps: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    let mut order: Vec<usize> = (0..reps.len()).collect();
+    order.sort_by_key(|&j| reps[j]);
+    let mut remap = vec![0usize; reps.len()];
+    for (new, &old) in order.iter().enumerate() {
+        remap[old] = new;
+    }
+    let new_labels = labels.iter().map(|&l| remap[l]).collect();
+    let new_reps = order.iter().map(|&j| reps[j]).collect();
+    (new_labels, new_reps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn blobs(rng: &mut Rng, k: usize, per: usize, dim: usize, spread: f32) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut feats = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..k {
+            let center: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 3.0).collect();
+            for _ in 0..per {
+                feats.push(center.iter().map(|x| x + rng.normal() as f32 * spread).collect());
+                truth.push(c);
+            }
+        }
+        (feats, truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(0);
+        let (feats, truth) = blobs(&mut rng, 3, 5, 8, 0.02);
+        let res = kmeans(&feats, 3, 1, 50);
+        for c in 0..3 {
+            let ls: Vec<usize> =
+                (0..15).filter(|i| truth[*i] == c).map(|i| res.labels[i]).collect();
+            assert!(ls.iter().all(|l| *l == ls[0]), "blob {c} split: {ls:?}");
+        }
+        assert!(res.sse < 0.5, "sse {}", res.sse);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(5);
+        let (feats, _) = blobs(&mut rng, 4, 4, 6, 0.5);
+        let a = kmeans(&feats, 4, 9, 50);
+        let b = kmeans(&feats, 4, 9, 50);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn property_labels_in_range_sse_monotone() {
+        check("kmeans-invariants", 30, |rng| {
+            let h = rng.range(2, 17);
+            let dim = rng.range(2, 10);
+            let feats: Vec<Vec<f32>> = (0..h)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let k = rng.range(1, h + 1);
+            let res = kmeans(&feats, k, 3, 30);
+            crate::prop_assert!(res.labels.len() == h, "label count");
+            crate::prop_assert!(
+                res.labels.iter().all(|l| *l < k),
+                "label out of range: {:?} (k={k})", res.labels
+            );
+            let res1 = kmeans(&feats, 1, 3, 30);
+            crate::prop_assert!(
+                res.sse <= res1.sse + 1e-6,
+                "sse not monotone: k={k} sse={} vs k=1 sse={}", res.sse, res1.sse
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn representatives_belong_to_their_cluster() {
+        let mut rng = Rng::new(2);
+        let (feats, _) = blobs(&mut rng, 4, 4, 6, 0.1);
+        let res = kmeans(&feats, 4, 0, 50);
+        let reps = representatives(&feats, &res);
+        for (j, &r) in reps.iter().enumerate() {
+            assert_eq!(res.labels[r], j);
+        }
+    }
+
+    #[test]
+    fn canonicalize_sorts_reps() {
+        let labels = vec![1, 1, 0, 2];
+        let reps = vec![9, 3, 5];
+        let (mem, reps2) = canonicalize(&labels, &reps);
+        assert_eq!(reps2, vec![3, 5, 9]);
+        assert_eq!(mem, vec![0, 0, 2, 1]);
+    }
+
+    #[test]
+    fn k_larger_than_points_clamped() {
+        let feats = vec![vec![0.0f32, 1.0], vec![5.0, 5.0]];
+        let res = kmeans(&feats, 10, 0, 20);
+        assert!(res.centroids.len() <= 2);
+        assert!(res.sse < 1e-9);
+    }
+}

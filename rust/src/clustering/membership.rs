@@ -1,0 +1,125 @@
+//! Online cluster-membership identification (paper §3.3, Figure 10b):
+//! after the first 5 tokens of a request run under dense MHA, k-means the
+//! per-head probe attention into the layer's (offline-fixed) k clusters.
+//! Mirrors `python/compile/clustering.py::online_membership`.
+
+use super::kmeans::{canonicalize, kmeans, representatives};
+
+/// Per-layer online membership result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    /// cluster id per head, in [0, k)
+    pub membership: Vec<usize>,
+    /// representative head per cluster (sorted ascending — canonical form)
+    pub reps: Vec<usize>,
+}
+
+/// Build per-head features from one layer's probe attention maps
+/// `[H][P][P]` (causal; row q has q+1 valid entries): the flattened
+/// strictly-causal rows for queries 1..P-1 — query 0 is identically 1.0.
+pub fn probe_features(maps: &[Vec<Vec<f32>>], n_tokens: usize) -> Vec<Vec<f32>> {
+    maps.iter()
+        .map(|head| {
+            let mut f = Vec::new();
+            for q in 1..n_tokens {
+                f.extend_from_slice(&head[q][..q + 1]);
+            }
+            f
+        })
+        .collect()
+}
+
+/// Identify membership for one layer given its probe maps and offline k.
+pub fn identify(maps: &[Vec<Vec<f32>>], n_tokens: usize, k: usize, seed: u64) -> Membership {
+    let mut feats = probe_features(maps, n_tokens);
+    crate::clustering::normalize_features(&mut feats);
+    let res = kmeans(&feats, k, seed, 50);
+    let reps = representatives(&feats, &res);
+    let (membership, reps) = canonicalize(&res.labels, &reps);
+    Membership { membership, reps }
+}
+
+/// Count membership changes between consecutive prefix lengths — the
+/// stability experiment behind Figure 9 ("after five tokens the
+/// membership rarely changes").
+pub fn stability_curve(maps: &[Vec<Vec<f32>>], max_tokens: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut prev: Option<Vec<usize>> = None;
+    let mut changes = Vec::new();
+    for n in 2..=max_tokens {
+        let m = identify(maps, n, k, seed);
+        if let Some(p) = &prev {
+            changes.push(m.membership.iter().zip(p).filter(|(a, b)| a != b).count());
+        }
+        prev = Some(m.membership);
+    }
+    changes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic causal probe maps with `groups` score patterns.
+    fn probe_maps(rng: &mut Rng, h: usize, p: usize, groups: usize) -> Vec<Vec<Vec<f32>>> {
+        let mut patterns = Vec::new();
+        for _ in 0..groups {
+            let mut m = vec![vec![0.0f32; p]; p];
+            for q in 0..p {
+                let mut row: Vec<f32> = (0..=q).map(|_| rng.f32() + 0.05).collect();
+                let s: f32 = row.iter().sum();
+                row.iter_mut().for_each(|x| *x /= s);
+                m[q][..q + 1].copy_from_slice(&row);
+            }
+            patterns.push(m);
+        }
+        (0..h)
+            .map(|i| {
+                let base = &patterns[i * groups / h];
+                base.iter()
+                    .map(|row| row.iter().map(|x| x + rng.normal() as f32 * 1e-4).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn probe_features_lengths() {
+        let mut rng = Rng::new(0);
+        let maps = probe_maps(&mut rng, 4, 5, 2);
+        let f = probe_features(&maps, 5);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f[0].len(), 2 + 3 + 4 + 5);
+    }
+
+    #[test]
+    fn identify_groups_same_pattern_heads() {
+        let mut rng = Rng::new(1);
+        let maps = probe_maps(&mut rng, 16, 5, 2);
+        let m = identify(&maps, 5, 2, 0);
+        assert_eq!(m.membership.len(), 16);
+        assert!(m.membership[..8].iter().all(|x| *x == m.membership[0]));
+        assert!(m.membership[8..].iter().all(|x| *x == m.membership[8]));
+        assert_ne!(m.membership[0], m.membership[8]);
+        for (j, &r) in m.reps.iter().enumerate() {
+            assert_eq!(m.membership[r], j);
+        }
+    }
+
+    #[test]
+    fn stability_settles_with_clear_structure() {
+        let mut rng = Rng::new(2);
+        let maps = probe_maps(&mut rng, 16, 8, 4);
+        let curve = stability_curve(&maps, 8, 4, 0);
+        assert_eq!(curve.len(), 6);
+        // with near-identical group patterns the tail must be stable
+        assert_eq!(*curve.last().unwrap(), 0, "curve: {curve:?}");
+    }
+
+    #[test]
+    fn identify_is_deterministic() {
+        let mut rng = Rng::new(3);
+        let maps = probe_maps(&mut rng, 8, 5, 3);
+        assert_eq!(identify(&maps, 5, 3, 7), identify(&maps, 5, 3, 7));
+    }
+}

@@ -1,0 +1,61 @@
+//! Clustering: the paper's core machinery, reimplemented on the request
+//! path (rust) and cross-checked against the python offline pipeline
+//! (`python/compile/clustering.py`) via shared fixtures.
+//!
+//! * [`kmeans`] — seeded k-means++ over per-head feature rows.
+//! * [`correlation`] — Pearson correlation matrices (figures 2/6/7).
+//! * [`elbow`] — offline cluster-count selection (figure 8).
+//! * [`membership`] — online 5-token cluster-membership identification
+//!   (paper §3.3, figure 9) from probe attention maps.
+
+pub mod correlation;
+pub mod elbow;
+pub mod kmeans;
+pub mod membership;
+
+/// Center + L2-normalize feature rows so euclidean k-means groups heads by
+/// score *correlation* (mirrors `clustering.normalize_features`).
+pub fn normalize_features(feats: &mut [Vec<f32>]) {
+    for row in feats.iter_mut() {
+        let n = row.len() as f32;
+        let mean = row.iter().sum::<f32>() / n;
+        for x in row.iter_mut() {
+            *x -= mean;
+        }
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+        for x in row.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_gives_unit_centered_rows() {
+        let mut f = vec![vec![1.0, 2.0, 3.0], vec![10.0, 10.0, 10.0]];
+        normalize_features(&mut f);
+        let mean0: f32 = f[0].iter().sum::<f32>() / 3.0;
+        assert!(mean0.abs() < 1e-6);
+        let norm0: f32 = f[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm0 - 1.0).abs() < 1e-5);
+        // constant row -> zero vector (no NaN)
+        assert!(f[1].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn correlated_rows_align_after_normalization() {
+        let a: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let b: Vec<f32> = a.iter().map(|x| 3.0 * x + 5.0).collect(); // corr 1
+        let c: Vec<f32> = a.iter().map(|x| -x).collect(); // corr -1
+        let mut f = vec![a, b, c];
+        normalize_features(&mut f);
+        let dot = |x: &[f32], y: &[f32]| -> f32 {
+            x.iter().zip(y).map(|(a, b)| a * b).sum()
+        };
+        assert!((dot(&f[0], &f[1]) - 1.0).abs() < 1e-5);
+        assert!((dot(&f[0], &f[2]) + 1.0).abs() < 1e-5);
+    }
+}

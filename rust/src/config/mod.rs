@@ -1,0 +1,254 @@
+//! Configuration: the AOT manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`) plus serving-side settings. The manifest is the
+//! single source of truth for shapes — the rust side never hardcodes model
+//! dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions (mirror of `python/compile/configs.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+/// One AOT-compiled executable: shapes of its runtime inputs/outputs.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub impl_name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    pub fn bucket(&self) -> Result<usize> {
+        self.meta.get("bucket")?.usize()
+    }
+}
+
+/// The parsed manifest: model config + artifact index + cluster config.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub weight_order: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub probe_tokens: usize,
+    pub probe_bucket: usize,
+    pub analyze_bucket: usize,
+    pub logprob_bucket: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_buckets: Vec<usize>,
+    pub dejavu_sparsities: Vec<usize>,
+    pub uniform_k_sweep: Vec<usize>,
+    /// per-layer cluster counts from the offline elbow (clusters.json)
+    pub k_list: Vec<usize>,
+    pub k_max: usize,
+    pub attn_impl: String,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.arr()?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.get("name")?.str()?.to_string(),
+                dtype: e.get("dtype")?.str()?.to_string(),
+                shape: e.get("shape")?.usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let m = j.get("model")?;
+        let model = ModelConfig {
+            name: m.get("name")?.str()?.to_string(),
+            vocab_size: m.get("vocab_size")?.usize()?,
+            n_layers: m.get("n_layers")?.usize()?,
+            n_heads: m.get("n_heads")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            head_dim: m.get("head_dim")?.usize()?,
+            d_ff: m.get("d_ff")?.usize()?,
+            max_seq: m.get("max_seq")?.usize()?,
+            n_params: j.get("n_params")?.usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.arr()? {
+            let spec = ArtifactSpec {
+                name: a.get("name")?.str()?.to_string(),
+                path: a.get("path")?.str()?.to_string(),
+                impl_name: a.get("impl")?.str()?.to_string(),
+                inputs: tensor_specs(a.get("inputs")?)?,
+                outputs: tensor_specs(a.get("outputs")?)?,
+                meta: a.get("meta")?.clone(),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        let k_list = j.get("k_list")?.usize_vec()?;
+        if k_list.len() != model.n_layers {
+            bail!("k_list length {} != n_layers {}", k_list.len(), model.n_layers);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            weight_order: j.get("weight_order")?.str_vec()?,
+            artifacts,
+            probe_tokens: j.get("probe_tokens")?.usize()?,
+            probe_bucket: j.get("probe_bucket")?.usize()?,
+            analyze_bucket: j.get("analyze_bucket")?.usize()?,
+            logprob_bucket: j.get("logprob_bucket")?.usize()?,
+            prefill_buckets: j.get("prefill_buckets")?.usize_vec()?,
+            decode_buckets: j.get("decode_buckets")?.usize_vec()?,
+            dejavu_sparsities: j.get("dejavu_sparsities")?.usize_vec()?,
+            uniform_k_sweep: j.get("uniform_k_sweep")?.usize_vec()?,
+            k_max: j.get("k_max")?.usize()?,
+            k_list,
+            attn_impl: j.get("attn_impl")?.str()?.to_string(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+
+    /// Smallest bucket that fits `len`.
+    pub fn bucket_for(buckets: &[usize], len: usize) -> Option<usize> {
+        buckets.iter().copied().filter(|b| *b >= len).min()
+    }
+
+    /// The CHAI-static membership/reps from clusters.json (offline phase).
+    pub fn static_clusters(&self) -> Result<(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+        let j = Json::parse_file(&self.dir.join("clusters.json"))?;
+        let mut membership = Vec::new();
+        let mut reps = Vec::new();
+        for l in j.get("layers")?.arr()? {
+            membership.push(l.get("membership")?.usize_vec()?);
+            reps.push(l.get("reps")?.usize_vec()?);
+        }
+        Ok((membership, reps))
+    }
+
+    /// Per-layer elbow SSE curves (Figure 8) from clusters.json.
+    pub fn elbow_errors(&self) -> Result<Vec<Vec<f64>>> {
+        let j = Json::parse_file(&self.dir.join("clusters.json"))?;
+        j.get("layers")?.arr()?.iter().map(|l| l.get("errors")?.f64_vec()).collect()
+    }
+}
+
+/// Serving-side settings (engine + coordinator).
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub artifacts_dir: PathBuf,
+    /// attention variant the engine serves with
+    pub variant: String,
+    /// max new tokens per request default
+    pub max_new_tokens: usize,
+    /// max requests admitted per scheduler tick
+    pub max_batch: usize,
+    /// sampling temperature (0 = greedy)
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            variant: "chai".into(),
+            max_new_tokens: 32,
+            max_batch: 8,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let b = [32, 128, 512, 2048];
+        assert_eq!(Manifest::bucket_for(&b, 1), Some(32));
+        assert_eq!(Manifest::bucket_for(&b, 32), Some(32));
+        assert_eq!(Manifest::bucket_for(&b, 33), Some(128));
+        assert_eq!(Manifest::bucket_for(&b, 2048), Some(2048));
+        assert_eq!(Manifest::bucket_for(&b, 2049), None);
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(m) = repo_manifest() else { return };
+        assert_eq!(m.model.n_heads, 16);
+        assert_eq!(m.k_list.len(), m.model.n_layers);
+        assert!(m.artifacts.contains_key("logprob_mha"));
+        assert!(m.artifacts.contains_key("decode_chai_t128"));
+        let a = m.artifact("decode_mha_t128").unwrap();
+        assert_eq!(a.bucket().unwrap(), 128);
+        // kcache input shape [L, H, T, dh]
+        let kc = a.inputs.iter().find(|i| i.name == "kcache").unwrap();
+        assert_eq!(kc.shape, vec![m.model.n_layers, m.model.n_heads, 128, m.model.head_dim]);
+    }
+
+    #[test]
+    fn static_clusters_consistent_with_k_list() {
+        let Some(m) = repo_manifest() else { return };
+        let (mem, reps) = m.static_clusters().unwrap();
+        assert_eq!(mem.len(), m.model.n_layers);
+        for l in 0..m.model.n_layers {
+            assert_eq!(reps[l].len(), m.k_list[l]);
+            assert_eq!(mem[l].len(), m.model.n_heads);
+            assert!(mem[l].iter().all(|x| *x < m.k_list[l]));
+            // canonical: reps sorted
+            let mut sorted = reps[l].clone();
+            sorted.sort();
+            assert_eq!(sorted, reps[l]);
+        }
+    }
+
+    #[test]
+    fn elbow_errors_match_layer_count() {
+        let Some(m) = repo_manifest() else { return };
+        let errs = m.elbow_errors().unwrap();
+        assert_eq!(errs.len(), m.model.n_layers);
+        assert!(errs.iter().all(|e| e.len() == m.model.n_heads));
+    }
+}

@@ -1,0 +1,117 @@
+//! Pure batching/scheduling policy, unit- and property-tested in
+//! isolation from the engine thread.
+//!
+//! Policy: prefill-prioritized continuous batching (vLLM-default-like).
+//! Each tick admits as many waiting requests as fit under `max_batch`
+//! live sessions; every live session then decodes one token. Fairness is
+//! FCFS at admission; within a tick every live session makes progress, so
+//! no request starves once admitted.
+
+/// How many new requests may be admitted this tick.
+pub fn admission_quota(live: usize, max_batch: usize) -> usize {
+    max_batch.saturating_sub(live)
+}
+
+/// Bucket-aware admission ordering: FCFS, but requests that would land in
+/// an already-hot bucket are preferred among equals (cache-friendly for
+/// the XLA executable cache). Stable: never reorders across different
+/// arrival times by more than the window.
+pub fn order_admissions(
+    waiting: &[(u64, usize)], // (request id, bucket)
+    hot_buckets: &[usize],
+    window: usize,
+) -> Vec<u64> {
+    let mut out: Vec<(usize, u64, usize)> = waiting
+        .iter()
+        .enumerate()
+        .map(|(i, (id, b))| (i, *id, *b))
+        .collect();
+    // within each `window`-sized chunk, hot buckets first (stable sort)
+    for chunk in out.chunks_mut(window.max(1)) {
+        chunk.sort_by_key(|(i, _, b)| (!hot_buckets.contains(b) as usize, *i));
+    }
+    out.into_iter().map(|(_, id, _)| id).collect()
+}
+
+/// Invariant checks used by tests and debug assertions.
+pub fn check_tick_invariants(
+    live_before: usize,
+    admitted: usize,
+    max_batch: usize,
+) -> Result<(), String> {
+    if live_before + admitted > max_batch {
+        return Err(format!(
+            "overcommit: {live_before} live + {admitted} admitted > max_batch {max_batch}"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn quota_never_overcommits() {
+        assert_eq!(admission_quota(0, 8), 8);
+        assert_eq!(admission_quota(5, 8), 3);
+        assert_eq!(admission_quota(8, 8), 0);
+        assert_eq!(admission_quota(9, 8), 0);
+    }
+
+    #[test]
+    fn ordering_prefers_hot_buckets_within_window() {
+        let waiting = [(1, 128), (2, 512), (3, 128), (4, 2048)];
+        let ord = order_admissions(&waiting, &[512], 4);
+        assert_eq!(ord[0], 2); // hot bucket first
+        // relative order of the cold ones preserved
+        let pos = |id: u64| ord.iter().position(|x| *x == id).unwrap();
+        assert!(pos(1) < pos(3) && pos(3) < pos(4));
+    }
+
+    #[test]
+    fn ordering_is_fcfs_across_windows() {
+        let waiting: Vec<(u64, usize)> = (0..10).map(|i| (i, 128)).collect();
+        let ord = order_admissions(&waiting, &[], 3);
+        assert_eq!(ord, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn property_quota_plus_live_bounded() {
+        check("batcher-quota", 50, |rng| {
+            let max_batch = rng.range(1, 17);
+            let live = rng.below(32);
+            let q = admission_quota(live, max_batch);
+            crate::prop_assert!(
+                live >= max_batch || live + q == max_batch,
+                "live {live} + quota {q} != max_batch {max_batch}"
+            );
+            crate::prop_assert!(
+                check_tick_invariants(live.min(max_batch), q, max_batch).is_ok(),
+                "invariant violated"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_ordering_is_permutation() {
+        check("batcher-permutation", 50, |rng| {
+            let n = rng.range(0, 20);
+            let waiting: Vec<(u64, usize)> = (0..n as u64)
+                .map(|i| (i, [32usize, 128, 512, 2048][rng.below(4)]))
+                .collect();
+            let hot = vec![[32usize, 128, 512, 2048][rng.below(4)]];
+            let window = rng.range(1, 6);
+            let ord = order_admissions(&waiting, &hot, window);
+            let mut sorted = ord.clone();
+            sorted.sort();
+            crate::prop_assert!(
+                sorted == (0..n as u64).collect::<Vec<_>>(),
+                "not a permutation: {ord:?}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,293 @@
+//! Serving coordinator: request queue → continuous batcher → engine loop.
+//!
+//! The `xla` PJRT client is `Rc`-based (not `Send`), so all PJRT state
+//! lives on ONE engine thread (the vLLM-style engine-loop design). Front
+//! ends (TCP server, bench drivers) submit [`Request`]s into a shared
+//! queue and receive a [`Response`] over a per-request channel.
+//!
+//! Scheduling policy (see [`batcher`]): token-level continuous batching —
+//! every tick the loop (1) admits waiting requests up to `max_batch` live
+//! sessions, subject to KV-pool admission control, (2) runs ONE decode
+//! step for every live session (round-robin), (3) retires finished
+//! sessions. Prefill happens at admission (prefill-prioritized, like
+//! vLLM's default).
+
+pub mod batcher;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::engine::{Engine, Session, Timing, Variant};
+use crate::kv::KvPool;
+use crate::metrics::Metrics;
+use crate::util::now_ms;
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub variant: Variant,
+    pub submitted_ms: f64,
+    pub resp_tx: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub queue_ms: f64,
+    pub e2e_ms: f64,
+    pub timing: Timing,
+    pub error: Option<String>,
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct QueueState {
+    waiting: VecDeque<Request>,
+    shutdown: bool,
+}
+
+/// Handle owned by front-ends; cheap to clone.
+#[derive(Clone)]
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    pub metrics: Arc<Metrics>,
+    next_id: Arc<Mutex<u64>>,
+}
+
+pub struct CoordinatorHandle {
+    pub coordinator: Coordinator,
+    engine_thread: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the engine thread and return the submission handle.
+    pub fn start(cfg: ServingConfig) -> Result<CoordinatorHandle> {
+        let shared = Arc::new(Shared::default());
+        let metrics = Arc::new(Metrics::new());
+        let coord = Coordinator {
+            shared: shared.clone(),
+            metrics: metrics.clone(),
+            next_id: Arc::new(Mutex::new(0)),
+        };
+        let thread_shared = shared;
+        let thread_metrics = metrics;
+        let engine_thread = std::thread::Builder::new()
+            .name("chai-engine".into())
+            .spawn(move || {
+                match Engine::load(cfg.clone()) {
+                    Ok(engine) => engine_loop(&engine, &cfg, &thread_shared, &thread_metrics),
+                    Err(e) => {
+                        eprintln!("[engine] failed to load: {e:#}");
+                        // drain queue with errors
+                        let mut g = thread_shared.queue.lock().unwrap();
+                        g.shutdown = true;
+                        while let Some(r) = g.waiting.pop_front() {
+                            let _ = r.resp_tx.send(Response::error(r.id, format!("{e:#}")));
+                        }
+                    }
+                }
+            })?;
+        Ok(CoordinatorHandle { coordinator: coord, engine_thread: Some(engine_thread) })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, prompt: &str, max_new: usize, variant: Variant) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            *g += 1;
+            *g
+        };
+        let req = Request {
+            id,
+            prompt: prompt.to_string(),
+            max_new,
+            variant,
+            submitted_ms: now_ms(),
+            resp_tx: tx,
+        };
+        self.metrics.inc("submitted");
+        let mut g = self.shared.queue.lock().unwrap();
+        g.waiting.push_back(req);
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().waiting.len()
+    }
+
+    fn request_shutdown(&self) {
+        let mut g = self.shared.queue.lock().unwrap();
+        g.shutdown = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Response {
+    fn error(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            n_prompt: 0,
+            n_generated: 0,
+            queue_ms: 0.0,
+            e2e_ms: 0.0,
+            timing: Timing::default(),
+            error: Some(msg),
+        }
+    }
+}
+
+impl CoordinatorHandle {
+    pub fn shutdown(mut self) {
+        self.coordinator.request_shutdown();
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        self.coordinator.request_shutdown();
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Live {
+    req: Request,
+    session: Session,
+    started_ms: f64,
+}
+
+/// The engine loop: continuous batching at token granularity.
+fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
+    // KV budget: generous on CPU, but finite so admission control is real.
+    let mut pool = KvPool::new(512 * 1024 * 1024);
+    let mut live: Vec<Live> = Vec::new();
+    loop {
+        // --- admission (prefill) ------------------------------------------
+        let admit_n = batcher::admission_quota(live.len(), cfg.max_batch);
+        let mut admitted: Vec<Request> = Vec::new();
+        {
+            let mut g = shared.queue.lock().unwrap();
+            if live.is_empty() && g.waiting.is_empty() {
+                if g.shutdown {
+                    return;
+                }
+                // idle: block until work arrives
+                g = shared
+                    .cv
+                    .wait_while(g, |q| q.waiting.is_empty() && !q.shutdown)
+                    .unwrap();
+                if g.shutdown && g.waiting.is_empty() {
+                    return;
+                }
+            }
+            for _ in 0..admit_n {
+                match g.waiting.pop_front() {
+                    Some(r) => admitted.push(r),
+                    None => break,
+                }
+            }
+        }
+        for req in admitted {
+            let queue_ms = now_ms() - req.submitted_ms;
+            metrics.observe_ms("queue", queue_ms);
+            let total = req.prompt.len() + 1 + req.max_new;
+            let bucket = crate::config::Manifest::bucket_for(
+                &engine.manifest().decode_buckets,
+                total,
+            )
+            .unwrap_or(*engine.manifest().decode_buckets.last().unwrap());
+            let kind = req.variant.cache_kind();
+            if pool.admit(req.id, kind, engine.manifest(), bucket).is_err() {
+                // pool full: push back and stop admitting this tick
+                metrics.inc("kv_defer");
+                let mut g = shared.queue.lock().unwrap();
+                g.waiting.push_front(req);
+                break;
+            }
+            let t0 = now_ms();
+            match engine.start_session(&req.prompt, req.max_new, &req.variant) {
+                Ok(session) => {
+                    metrics.inc("admitted");
+                    metrics.observe_ms("ttft", session.timing.ttft_ms);
+                    live.push(Live { req, session, started_ms: t0 });
+                }
+                Err(e) => {
+                    let _ = pool.release(req.id);
+                    metrics.inc("errors");
+                    let _ = req.resp_tx.send(Response::error(req.id, format!("{e:#}")));
+                }
+            }
+        }
+
+        // --- decode tick: one token for every live session ----------------
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, l) in live.iter_mut().enumerate() {
+            pool.touch(l.req.id);
+            match engine.step_session(&mut l.session) {
+                Ok(more) => {
+                    metrics.inc("tokens");
+                    if let Some(ms) = l.session.timing.decode_ms.last() {
+                        metrics.observe_ms("decode_step", *ms);
+                    }
+                    if !more {
+                        finished.push(i);
+                    }
+                }
+                Err(e) => {
+                    metrics.inc("errors");
+                    let _ = l
+                        .req
+                        .resp_tx
+                        .send(Response::error(l.req.id, format!("{e:#}")));
+                    finished.push(i);
+                }
+            }
+        }
+        // retire back-to-front so indices stay valid
+        for &i in finished.iter().rev() {
+            let l = live.swap_remove(i);
+            let _ = pool.release(l.req.id);
+            if l.session.done {
+                let timing = l.session.timing.clone();
+                let n_prompt = l.session.prompt_len;
+                let n_generated = l.session.generated();
+                let gen = engine.finish_session(l.session);
+                metrics.inc("completed");
+                let e2e = now_ms() - l.req.submitted_ms;
+                metrics.observe_ms("e2e", e2e);
+                let _ = l.req.resp_tx.send(Response {
+                    id: l.req.id,
+                    text: gen.text,
+                    n_prompt,
+                    n_generated,
+                    queue_ms: l.started_ms - l.req.submitted_ms,
+                    e2e_ms: e2e,
+                    timing,
+                    error: None,
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,631 @@
+//! Generation engine: drives the paper's probe → cluster → CHAI pipeline
+//! (Figure 10) plus every baseline, on top of the PJRT runtime.
+//!
+//! Request flow for CHAI (Figure 10b/c):
+//!   1. dense-MHA **probe** over the first 5 tokens (`probe_mha` artifact)
+//!   2. online k-means **membership identification** per layer
+//!      (`clustering::membership`, cluster count fixed offline)
+//!   3. **CHAI prefill** over the full prompt (clustered heads, clustered
+//!      K-cache) and **CHAI decode** steps with the clustered cache.
+//!
+//! MHA / DejaVu / SpAtten / CHAI-static run through the same engine with
+//! different artifacts + selector inputs. All timings are measured here
+//! and surfaced per phase (Figure 12 needs probe+cluster overhead included
+//! in time-to-first-token).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::clustering::membership::{identify, Membership};
+use crate::config::{Manifest, ServingConfig};
+use crate::kv::CacheKind;
+use crate::model::tokenizer;
+use crate::runtime::{In, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Attention variant served by the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Variant {
+    Mha,
+    /// online membership (the paper's CHAI)
+    Chai,
+    /// offline membership from clusters.json (CHAI-static baseline)
+    ChaiStatic,
+    /// Table-4 ablation: V pruned too
+    ChaiQkv,
+    /// Figure-1 sweep: uniform k clusters/layer with the given membership
+    /// source ("random" or "static")
+    UniformK { k: usize, random: bool },
+    /// DejaVu head pruning at the given sparsity (percent)
+    Dejavu(usize),
+    Spatten,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "mha" => Variant::Mha,
+            "chai" => Variant::Chai,
+            "chai-static" => Variant::ChaiStatic,
+            "chai-qkv" => Variant::ChaiQkv,
+            "spatten" => Variant::Spatten,
+            _ if s.starts_with("dejavu-") => {
+                Variant::Dejavu(s[7..].trim_end_matches('%').parse()?)
+            }
+            _ if s.starts_with("random-k") => {
+                Variant::UniformK { k: s[8..].parse()?, random: true }
+            }
+            _ if s.starts_with("static-k") => {
+                Variant::UniformK { k: s[8..].parse()?, random: false }
+            }
+            _ => bail!("unknown variant {s:?} (mha|chai|chai-static|chai-qkv|dejavu-P|spatten|random-kK|static-kK)"),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Variant::Mha => "mha".into(),
+            Variant::Chai => "chai".into(),
+            Variant::ChaiStatic => "chai-static".into(),
+            Variant::ChaiQkv => "chai-qkv".into(),
+            Variant::UniformK { k, random: true } => format!("random-k{k}"),
+            Variant::UniformK { k, random: false } => format!("static-k{k}"),
+            Variant::Dejavu(p) => format!("dejavu-{p}"),
+            Variant::Spatten => "spatten".into(),
+        }
+    }
+
+    pub fn cache_kind(&self) -> CacheKind {
+        match self {
+            Variant::Mha | Variant::Dejavu(_) | Variant::Spatten => CacheKind::Mha,
+            _ => CacheKind::Chai,
+        }
+    }
+}
+
+/// Phase timing for one request (Figure 12 decomposition).
+#[derive(Debug, Clone, Default)]
+pub struct Timing {
+    pub probe_ms: f64,
+    pub cluster_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: Vec<f64>,
+    pub ttft_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub tokens: Vec<i32>,
+    pub text: String,
+    pub timing: Timing,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ServingConfig,
+    static_membership: Vec<Vec<usize>>,
+    static_reps: Vec<Vec<usize>>,
+    pub rng: std::cell::RefCell<Rng>,
+    /// Memoized online memberships keyed by probe prefix (§Perf: the
+    /// scoring path evaluates 2-4 choices per item that share a prompt —
+    /// the paper clusters once per request, so reusing the membership for
+    /// an identical probe prefix is semantics-preserving).
+    membership_cache: std::cell::RefCell<
+        std::collections::BTreeMap<Vec<i32>, (Vec<Vec<usize>>, Vec<Vec<usize>>)>,
+    >,
+}
+
+impl Engine {
+    pub fn load(cfg: ServingConfig) -> Result<Engine> {
+        let rt = Runtime::load(&cfg.artifacts_dir)?;
+        let (static_membership, static_reps) = rt.manifest.static_clusters()?;
+        let seed = cfg.seed;
+        Ok(Engine {
+            rt,
+            cfg,
+            static_membership,
+            static_reps,
+            rng: std::cell::RefCell::new(Rng::new(seed)),
+            membership_cache: std::cell::RefCell::new(Default::default()),
+        })
+    }
+
+    pub fn from_dir(dir: &Path) -> Result<Engine> {
+        Engine::load(ServingConfig { artifacts_dir: dir.to_path_buf(), ..Default::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    // ------------------------------------------------------------------
+    // Membership machinery
+    // ------------------------------------------------------------------
+
+    /// Run the probe artifact over the first `probe_tokens` of `tokens`
+    /// and k-means per-layer membership (paper §3.3).
+    pub fn online_membership(&self, tokens: &[i32]) -> Result<(Vec<Membership>, f64, f64)> {
+        let m = self.manifest();
+        let pb = m.probe_bucket;
+        let n = tokens.len().min(m.probe_tokens).max(2);
+        let mut padded = vec![tokenizer::PAD; pb];
+        for (i, t) in tokens.iter().take(n).enumerate() {
+            padded[i] = *t;
+        }
+        let t0 = Instant::now();
+        let outs = self.rt.run(
+            "probe_mha",
+            &[In::Host(&Tensor::i32(vec![pb], padded)), In::Host(&Tensor::scalar_i32(n as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        let probe_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let memberships = self.membership_from_maps(&maps, n, &m.k_list)?;
+        let cluster_ms = t1.elapsed().as_secs_f64() * 1e3;
+        Ok((memberships, probe_ms, cluster_ms))
+    }
+
+    /// k-means each layer of probe maps `[L,H,P,P]` into `k_list[l]`
+    /// clusters.
+    pub fn membership_from_maps(
+        &self,
+        maps: &Tensor,
+        n_tokens: usize,
+        k_list: &[usize],
+    ) -> Result<Vec<Membership>> {
+        let m = self.manifest();
+        let (l, h, p) = (m.model.n_layers, m.model.n_heads, maps.shape[2]);
+        let v = maps.as_f32()?;
+        let mut out = Vec::with_capacity(l);
+        for li in 0..l {
+            let mut heads = Vec::with_capacity(h);
+            for hi in 0..h {
+                let mut rows = Vec::with_capacity(p);
+                for q in 0..p {
+                    let base = ((li * h + hi) * p + q) * p;
+                    rows.push(v[base..base + p].to_vec());
+                }
+                heads.push(rows);
+            }
+            out.push(identify(&heads, n_tokens, k_list[li], self.cfg.seed));
+        }
+        Ok(out)
+    }
+
+    /// Membership/reps tensors for the CHAI artifacts: membership [L,H],
+    /// reps [L,k_max] (padded with 0).
+    pub fn membership_tensors(
+        &self,
+        mem: &[Vec<usize>],
+        reps: &[Vec<usize>],
+        k_max: usize,
+    ) -> (Tensor, Tensor) {
+        let l = mem.len();
+        let h = mem[0].len();
+        let mut mv = Vec::with_capacity(l * h);
+        for row in mem {
+            mv.extend(row.iter().map(|x| *x as i32));
+        }
+        let mut rv = vec![0i32; l * k_max];
+        for (li, row) in reps.iter().enumerate() {
+            for (j, r) in row.iter().enumerate() {
+                rv[li * k_max + j] = *r as i32;
+            }
+        }
+        (Tensor::i32(vec![l, h], mv), Tensor::i32(vec![l, k_max], rv))
+    }
+
+    /// Static (offline) membership — the CHAI-static baseline.
+    pub fn static_membership(&self) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+        (self.static_membership.clone(), self.static_reps.clone())
+    }
+
+    /// Random membership with uniform k per layer (Figure 1 "random head
+    /// selection"): k distinct representative heads, randomly assigned
+    /// members, canonicalized.
+    pub fn random_membership(&self, k: usize) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+        let m = self.manifest();
+        let (l, h) = (m.model.n_layers, m.model.n_heads);
+        let mut rng = self.rng.borrow_mut();
+        let mut mems = Vec::new();
+        let mut repss = Vec::new();
+        for _ in 0..l {
+            let mut reps = rng.choose_distinct(h, k);
+            reps.sort();
+            let mut mem = vec![0usize; h];
+            for (hh, slot) in mem.iter_mut().enumerate() {
+                // rep heads map to themselves; others random cluster
+                *slot = reps.iter().position(|r| *r == hh).unwrap_or_else(|| rng.below(k));
+            }
+            mems.push(mem);
+            repss.push(reps);
+        }
+        (mems, repss)
+    }
+
+    // ------------------------------------------------------------------
+    // Scoring path (accuracy tables)
+    // ------------------------------------------------------------------
+
+    /// Log-probabilities [T, V] for a token sequence under a variant.
+    pub fn logits(&self, tokens: &[i32], variant: &Variant) -> Result<Tensor> {
+        let m = self.manifest();
+        let t = m.logprob_bucket;
+        if tokens.len() > t {
+            bail!("sequence {} exceeds logprob bucket {t}", tokens.len());
+        }
+        let len = tokens.len();
+        let mut padded = vec![tokenizer::PAD; t];
+        padded[..len].copy_from_slice(tokens);
+        let toks = Tensor::i32(vec![t], padded);
+        let ln = Tensor::scalar_i32(len as i32);
+
+        let outs = match variant {
+            Variant::Mha => self.rt.run("logprob_mha", &[In::Host(&toks), In::Host(&ln)])?,
+            Variant::Spatten => {
+                self.rt.run("logprob_spatten", &[In::Host(&toks), In::Host(&ln)])?
+            }
+            Variant::Dejavu(p) => {
+                let kept = self.dejavu_kept(tokens, *p)?;
+                self.rt.run(
+                    &format!("logprob_dejavu_s{p}"),
+                    &[In::Host(&toks), In::Host(&ln), In::Host(&kept)],
+                )?
+            }
+            Variant::Chai | Variant::ChaiStatic | Variant::ChaiQkv => {
+                let (mem, reps) = match variant {
+                    Variant::Chai | Variant::ChaiQkv => {
+                        self.online_membership_cached(tokens)?
+                    }
+                    _ => self.static_membership(),
+                };
+                let (mt, rt_) = self.membership_tensors(&mem, &reps, self.manifest().k_max);
+                let name = if *variant == Variant::ChaiQkv { "logprob_chai_qkv" } else { "logprob_chai" };
+                self.rt.run(
+                    name,
+                    &[In::Host(&toks), In::Host(&ln), In::Host(&mt), In::Host(&rt_)],
+                )?
+            }
+            Variant::UniformK { k, random } => {
+                let (mem, reps) = if *random {
+                    self.random_membership(*k)
+                } else {
+                    self.uniform_static_membership(tokens, *k)?
+                };
+                let (mt, rt_) = self.membership_tensors(&mem, &reps, *k);
+                self.rt.run(
+                    &format!("logprob_chai_k{k}"),
+                    &[In::Host(&toks), In::Host(&ln), In::Host(&mt), In::Host(&rt_)],
+                )?
+            }
+        };
+        outs[0].to_tensor()
+    }
+
+    /// Memoized wrapper over [`Self::online_membership`] keyed by the
+    /// probe prefix (first `probe_tokens` tokens). Used by the scoring
+    /// path; the serving/latency path measures the probe cost for real.
+    pub fn online_membership_cached(
+        &self,
+        tokens: &[i32],
+    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+        let n = tokens.len().min(self.manifest().probe_tokens).max(2);
+        let key: Vec<i32> = tokens[..n].to_vec();
+        if let Some(hit) = self.membership_cache.borrow().get(&key) {
+            return Ok(hit.clone());
+        }
+        let (ms, _, _) = self.online_membership(tokens)?;
+        let mem: Vec<Vec<usize>> = ms.iter().map(|x| x.membership.clone()).collect();
+        let reps: Vec<Vec<usize>> = ms.iter().map(|x| x.reps.clone()).collect();
+        let mut cache = self.membership_cache.borrow_mut();
+        if cache.len() >= 4096 {
+            cache.clear();
+        }
+        cache.insert(key, (mem.clone(), reps.clone()));
+        Ok((mem, reps))
+    }
+
+    /// "Static head selection" for the Figure-1 sweep: cluster THIS
+    /// sequence's probe activations into exactly k clusters per layer
+    /// (activation-informed, unlike random).
+    pub fn uniform_static_membership(
+        &self,
+        tokens: &[i32],
+        k: usize,
+    ) -> Result<(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+        let m = self.manifest();
+        let klist = vec![k; m.model.n_layers];
+        let pb = m.probe_bucket;
+        let n = tokens.len().min(m.probe_tokens).max(2);
+        let mut padded = vec![tokenizer::PAD; pb];
+        for (i, t) in tokens.iter().take(n).enumerate() {
+            padded[i] = *t;
+        }
+        let outs = self.rt.run(
+            "probe_mha",
+            &[In::Host(&Tensor::i32(vec![pb], padded)), In::Host(&Tensor::scalar_i32(n as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        let ms = self.membership_from_maps(&maps, n, &klist)?;
+        Ok((
+            ms.iter().map(|x| x.membership.clone()).collect(),
+            ms.iter().map(|x| x.reps.clone()).collect(),
+        ))
+    }
+
+    /// DejaVu head selector: prune the heads with the most-uniform probe
+    /// attention (highest entropy) — the criterion the paper's Figure 4
+    /// shows DejaVu exploits on OPT. kept: [L, n_keep] head indices.
+    pub fn dejavu_kept(&self, tokens: &[i32], sparsity_pct: usize) -> Result<Tensor> {
+        let m = self.manifest();
+        let l = m.model.n_layers;
+        // n_keep is a static shape baked at lowering; the manifest is the
+        // source of truth (python and rust rounding must not diverge).
+        let n_keep = m
+            .artifact(&format!("logprob_dejavu_s{sparsity_pct}"))?
+            .meta
+            .get("n_keep")?
+            .usize()?;
+        let pb = m.probe_bucket;
+        let n = tokens.len().min(m.probe_tokens).max(2);
+        let mut padded = vec![tokenizer::PAD; pb];
+        for (i, t) in tokens.iter().take(n).enumerate() {
+            padded[i] = *t;
+        }
+        let outs = self.rt.run(
+            "probe_mha",
+            &[In::Host(&Tensor::i32(vec![pb], padded)), In::Host(&Tensor::scalar_i32(n as i32))],
+        )?;
+        let maps = outs[0].to_tensor()?;
+        let kept = crate::baselines::dejavu::select_heads(&maps, n, n_keep)?;
+        let mut v = Vec::with_capacity(l * n_keep);
+        for row in &kept {
+            v.extend(row.iter().map(|x| *x as i32));
+        }
+        Ok(Tensor::i32(vec![l, n_keep], v))
+    }
+
+    /// Length-normalized logprob of `choice` continuing `prompt_tokens`.
+    pub fn score_choice(&self, logits: &Tensor, tokens: &[i32], prompt_len: usize) -> f64 {
+        let v = self.manifest().model.vocab_size;
+        let lf = logits.as_f32().unwrap();
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for pos in prompt_len..tokens.len() {
+            // logits row pos-1 predicts token at pos
+            let row = &lf[(pos - 1) * v..pos * v];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+            total += (row[tokens[pos] as usize] - lse) as f64;
+            n += 1;
+        }
+        total / n.max(1) as f64
+    }
+
+    // ------------------------------------------------------------------
+    // Serving path (latency benches + server)
+    // ------------------------------------------------------------------
+
+    /// Greedy/temperature generation with phase timings (single request;
+    /// the coordinator drives the same [`Session`] API token-by-token for
+    /// continuous batching).
+    pub fn generate(&self, prompt: &str, max_new: usize, variant: &Variant) -> Result<Generation> {
+        let mut s = self.start_session(prompt, max_new, variant)?;
+        while self.step_session(&mut s)? {}
+        Ok(self.finish_session(s))
+    }
+
+    fn sample(&self, logits: &Tensor) -> i32 {
+        let v = logits.as_f32().unwrap();
+        if self.cfg.temperature <= 0.0 {
+            return v
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+        }
+        let t = self.cfg.temperature as f32;
+        let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let ws: Vec<f64> = v.iter().map(|x| (((x - mx) / t) as f64).exp()).collect();
+        self.rng.borrow_mut().weighted(&ws) as i32
+    }
+
+    /// Start a generation session: probe+cluster (CHAI), prefill, first
+    /// token. Returns a [`Session`] the caller steps to completion.
+    pub fn start_session(&self, prompt: &str, max_new: usize, variant: &Variant) -> Result<Session> {
+        let m = self.manifest().clone();
+        let prompt_tokens = tokenizer::encode(prompt, true, false);
+        let total = prompt_tokens.len() + max_new;
+        let bucket = crate::config::Manifest::bucket_for(&m.decode_buckets, total)
+            .with_context(|| format!("sequence {total} exceeds max bucket"))?;
+        let mut padded = vec![tokenizer::PAD; bucket];
+        padded[..prompt_tokens.len()].copy_from_slice(&prompt_tokens);
+        let toks = Tensor::i32(vec![bucket], padded);
+        let ln = Tensor::scalar_i32(prompt_tokens.len() as i32);
+        let l = m.model.n_layers;
+
+        let (caches, logits, timing, mts) = match variant {
+            Variant::Mha => {
+                let t0 = Instant::now();
+                let outs = self
+                    .rt
+                    .run(&format!("prefill_mha_t{bucket}"), &[In::Host(&toks), In::Host(&ln)])?;
+                let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let logits = outs[0].to_tensor()?;
+                let kc = outs[1].to_tensor()?;
+                let vc = outs[2].to_tensor()?;
+                (
+                    Caches::Mha { kc, vc },
+                    logits,
+                    Timing { prefill_ms, ttft_ms: prefill_ms, ..Default::default() },
+                    None,
+                )
+            }
+            Variant::Chai | Variant::ChaiStatic => {
+                let (mem, reps, probe_ms, cluster_ms) = if *variant == Variant::Chai {
+                    let (ms, p, c) = self.online_membership(&prompt_tokens)?;
+                    (
+                        ms.iter().map(|x| x.membership.clone()).collect::<Vec<_>>(),
+                        ms.iter().map(|x| x.reps.clone()).collect::<Vec<_>>(),
+                        p,
+                        c,
+                    )
+                } else {
+                    let (mem, reps) = self.static_membership();
+                    (mem, reps, 0.0, 0.0)
+                };
+                let (mt, rt_) = self.membership_tensors(&mem, &reps, m.k_max);
+                let t0 = Instant::now();
+                let outs = self.rt.run(
+                    &format!("prefill_chai_t{bucket}"),
+                    &[In::Host(&toks), In::Host(&ln), In::Host(&mt), In::Host(&rt_)],
+                )?;
+                let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let logits = outs[0].to_tensor()?;
+                let kreps: Vec<Tensor> =
+                    (1..=l).map(|i| outs[i].to_tensor()).collect::<Result<_>>()?;
+                let vc = outs[l + 1].to_tensor()?;
+                (
+                    Caches::Chai { kreps, vc },
+                    logits,
+                    Timing {
+                        probe_ms,
+                        cluster_ms,
+                        prefill_ms,
+                        ttft_ms: probe_ms + cluster_ms + prefill_ms,
+                        ..Default::default()
+                    },
+                    Some((mt, rt_)),
+                )
+            }
+            _ => bail!(
+                "serving path supports mha|chai|chai-static (got {}); other variants are accuracy-only",
+                variant.name()
+            ),
+        };
+
+        let mut tokens = prompt_tokens.clone();
+        tokens.push(self.sample(&logits));
+        Ok(Session {
+            variant: variant.clone(),
+            tokens,
+            prompt_len: prompt_tokens.len(),
+            max_new,
+            bucket,
+            caches,
+            membership_tensors: mts,
+            timing,
+            done: false,
+        })
+    }
+
+    /// One decode step. Returns false when the session is finished.
+    pub fn step_session(&self, s: &mut Session) -> Result<bool> {
+        if s.done {
+            return Ok(false);
+        }
+        let generated = s.tokens.len() - s.prompt_len;
+        if generated >= s.max_new || *s.tokens.last().unwrap() == tokenizer::EOS {
+            s.done = true;
+            return Ok(false);
+        }
+        let l = self.manifest().model.n_layers;
+        let pos = s.tokens.len() - 1;
+        let tok = Tensor::scalar_i32(*s.tokens.last().unwrap());
+        let pos_t = Tensor::scalar_i32(pos as i32);
+        let td = Instant::now();
+        let next = match &mut s.caches {
+            Caches::Mha { kc, vc } => {
+                let outs = self.rt.run(
+                    &format!("decode_mha_t{}", s.bucket),
+                    &[In::Host(&tok), In::Host(&pos_t), In::Host(kc), In::Host(vc)],
+                )?;
+                let logits = outs[0].to_tensor()?;
+                *kc = outs[1].to_tensor()?;
+                *vc = outs[2].to_tensor()?;
+                self.sample(&logits)
+            }
+            Caches::Chai { kreps, vc } => {
+                let (mt, rt_) = s.membership_tensors.as_ref().unwrap();
+                let mut ins: Vec<In> = vec![In::Host(&tok), In::Host(&pos_t)];
+                for kr in kreps.iter() {
+                    ins.push(In::Host(kr));
+                }
+                ins.push(In::Host(vc));
+                ins.push(In::Host(mt));
+                ins.push(In::Host(rt_));
+                let outs = self.rt.run(&format!("decode_chai_t{}", s.bucket), &ins)?;
+                let logits = outs[0].to_tensor()?;
+                for (i, kr) in kreps.iter_mut().enumerate() {
+                    *kr = outs[1 + i].to_tensor()?;
+                }
+                *vc = outs[l + 1].to_tensor()?;
+                self.sample(&logits)
+            }
+        };
+        s.timing.decode_ms.push(td.elapsed().as_secs_f64() * 1e3);
+        s.tokens.push(next);
+        if next == tokenizer::EOS || s.tokens.len() - s.prompt_len >= s.max_new {
+            s.done = true;
+        }
+        Ok(!s.done)
+    }
+
+    pub fn finish_session(&self, s: Session) -> Generation {
+        let text = tokenizer::decode(&s.tokens[s.prompt_len..]);
+        Generation { tokens: s.tokens, text, timing: s.timing }
+    }
+}
+
+/// KV caches of a live session (host tensors; the CPU PJRT device memory
+/// *is* host memory, so this stages without extra copies of consequence —
+/// see EXPERIMENTS.md §Perf for the buffer-resident variant).
+pub enum Caches {
+    Mha { kc: Tensor, vc: Tensor },
+    Chai { kreps: Vec<Tensor>, vc: Tensor },
+}
+
+/// A live generation (one request) owned by the engine thread.
+pub struct Session {
+    pub variant: Variant,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub bucket: usize,
+    caches: Caches,
+    membership_tensors: Option<(Tensor, Tensor)>,
+    pub timing: Timing,
+    pub done: bool,
+}
+
+impl Session {
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for s in ["mha", "chai", "chai-static", "chai-qkv", "dejavu-30", "spatten", "random-k4", "static-k8"] {
+            let v = Variant::parse(s).unwrap();
+            assert_eq!(v.name(), s);
+        }
+        assert!(Variant::parse("nope").is_err());
+    }
+
+    #[test]
+    fn cache_kinds() {
+        assert_eq!(Variant::Mha.cache_kind(), CacheKind::Mha);
+        assert_eq!(Variant::Chai.cache_kind(), CacheKind::Chai);
+        assert_eq!(Variant::Dejavu(50).cache_kind(), CacheKind::Mha);
+    }
+}

@@ -1,0 +1,108 @@
+//! Accuracy-evaluation harness: length-normalized logprob scoring of the
+//! five synthetic MCQ suites (`artifacts/eval/*.json`) — regenerates the
+//! accuracy columns of Tables 1-4.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Engine, Variant};
+use crate::model::tokenizer;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub label: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: String,
+    pub items: Vec<Item>,
+}
+
+pub const SUITES: [&str; 5] =
+    ["piqa-syn", "hellaswag-syn", "arc-challenge-syn", "arc-easy-syn", "boolq-syn"];
+
+pub fn load_suite(dir: &Path, name: &str) -> Result<Suite> {
+    let j = Json::parse_file(&dir.join("eval").join(format!("{name}.json")))
+        .with_context(|| format!("loading eval suite {name}"))?;
+    let items = j
+        .get("items")?
+        .arr()?
+        .iter()
+        .map(|it| {
+            Ok(Item {
+                prompt: it.get("prompt")?.str()?.to_string(),
+                choices: it.get("choices")?.str_vec()?,
+                label: it.get("label")?.usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Suite { name: name.to_string(), items })
+}
+
+/// Score one item: argmax over per-choice length-normalized logprob.
+pub fn predict(engine: &Engine, item: &Item, variant: &Variant) -> Result<usize> {
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (ci, choice) in item.choices.iter().enumerate() {
+        let prompt_tokens = tokenizer::encode(&item.prompt, true, false);
+        let mut tokens = prompt_tokens.clone();
+        tokens.extend(tokenizer::encode(choice, false, false));
+        let logits = engine.logits(&tokens, variant)?;
+        let score = engine.score_choice(&logits, &tokens, prompt_tokens.len());
+        if score > best.0 {
+            best = (score, ci);
+        }
+    }
+    Ok(best.1)
+}
+
+/// Accuracy of a variant on one suite (optionally subsampled for speed).
+pub fn accuracy(
+    engine: &Engine,
+    suite: &Suite,
+    variant: &Variant,
+    max_items: Option<usize>,
+) -> Result<f64> {
+    let n = max_items.map(|m| m.min(suite.items.len())).unwrap_or(suite.items.len());
+    let mut correct = 0usize;
+    for item in &suite.items[..n] {
+        if predict(engine, item, variant)? == item.label {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_all_suites() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("eval").exists() {
+            return;
+        }
+        for name in SUITES {
+            let s = load_suite(&dir, name).unwrap();
+            assert!(!s.items.is_empty(), "{name} empty");
+            for it in &s.items {
+                assert!(it.label < it.choices.len());
+                assert!(!it.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn missing_suite_errors() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("eval").exists() {
+            return;
+        }
+        assert!(load_suite(&dir, "nope").is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Clustered KV-cache manager (paper §3.5 + Figure 11).
+//!
+//! CHAI stores K panels only for each layer's `k_l` representative heads
+//! while keeping all `H` V panels (Table 4 shows pruning V costs accuracy).
+//! This module owns the per-request cache handles (host tensors or device
+//! buffers), the exact byte accounting that regenerates Figure 11, and a
+//! capacity-managed pool with admission control for the coordinator.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::Manifest;
+
+/// Which attention layout a cache uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheKind {
+    /// dense MHA: K and V are `[L, H, T, dh]`
+    Mha,
+    /// CHAI: per-layer K `[k_l, T, dh]`, V `[L, H, T, dh]`
+    Chai,
+}
+
+/// Exact K,V byte accounting for one request at bucket length `t`.
+/// This is the quantity plotted in Figure 11.
+pub fn cache_bytes(kind: CacheKind, m: &Manifest, t: usize) -> usize {
+    let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+    let f32s = match kind {
+        CacheKind::Mha => 2 * l * h * t * dh,
+        CacheKind::Chai => {
+            let k_sum: usize = m.k_list.iter().sum();
+            (k_sum + l * h) * t * dh
+        }
+    };
+    f32s * 4
+}
+
+/// Relative K,V-cache saving of CHAI vs MHA (paper: up to 21.4%).
+pub fn chai_saving_fraction(m: &Manifest) -> f64 {
+    let mha = cache_bytes(CacheKind::Mha, m, 1024) as f64;
+    let chai = cache_bytes(CacheKind::Chai, m, 1024) as f64;
+    1.0 - chai / mha
+}
+
+/// A live cache registration in the pool.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub request_id: u64,
+    pub kind: CacheKind,
+    pub bucket: usize,
+    pub bytes: usize,
+    pub last_touch: u64,
+}
+
+/// Capacity-managed KV pool: admission control + LRU eviction candidates.
+/// (On this CPU testbed "device memory" is host memory; the pool enforces
+/// the budget the paper's GPU serving setup would.)
+#[derive(Debug)]
+pub struct KvPool {
+    pub capacity_bytes: usize,
+    used: usize,
+    entries: BTreeMap<u64, CacheEntry>,
+    clock: u64,
+}
+
+impl KvPool {
+    pub fn new(capacity_bytes: usize) -> KvPool {
+        KvPool { capacity_bytes, used: 0, entries: BTreeMap::new(), clock: 0 }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Can a cache of this size be admitted right now?
+    pub fn fits(&self, bytes: usize) -> bool {
+        self.used + bytes <= self.capacity_bytes
+    }
+
+    /// Register a request's cache; errors if it would exceed capacity.
+    pub fn admit(&mut self, request_id: u64, kind: CacheKind, m: &Manifest, bucket: usize) -> Result<usize> {
+        let bytes = cache_bytes(kind, m, bucket);
+        if !self.fits(bytes) {
+            bail!(
+                "kv pool full: need {bytes} B, used {}/{} B",
+                self.used,
+                self.capacity_bytes
+            );
+        }
+        if self.entries.contains_key(&request_id) {
+            bail!("request {request_id} already admitted");
+        }
+        self.clock += 1;
+        self.entries.insert(
+            request_id,
+            CacheEntry { request_id, kind, bucket, bytes, last_touch: self.clock },
+        );
+        self.used += bytes;
+        Ok(bytes)
+    }
+
+    /// Mark a request's cache as touched (decode step).
+    pub fn touch(&mut self, request_id: u64) {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&request_id) {
+            e.last_touch = self.clock;
+        }
+    }
+
+    /// Release a finished request's cache.
+    pub fn release(&mut self, request_id: u64) -> Result<()> {
+        match self.entries.remove(&request_id) {
+            Some(e) => {
+                self.used -= e.bytes;
+                Ok(())
+            }
+            None => bail!("request {request_id} not in pool"),
+        }
+    }
+
+    /// Least-recently-touched entry — the eviction/preemption candidate.
+    pub fn lru(&self) -> Option<u64> {
+        self.entries.values().min_by_key(|e| e.last_touch).map(|e| e.request_id)
+    }
+
+    /// A request needs to grow into a larger bucket (sequence outgrew its
+    /// cache): re-account the delta; errors if it does not fit.
+    pub fn grow(&mut self, request_id: u64, m: &Manifest, new_bucket: usize) -> Result<()> {
+        let (kind, old_bytes, old_bucket) = match self.entries.get(&request_id) {
+            Some(e) => (e.kind, e.bytes, e.bucket),
+            None => bail!("request {request_id} not in pool"),
+        };
+        if new_bucket <= old_bucket {
+            return Ok(());
+        }
+        let new_bytes = cache_bytes(kind, m, new_bucket);
+        if self.used - old_bytes + new_bytes > self.capacity_bytes {
+            bail!("kv pool full on grow");
+        }
+        self.used = self.used - old_bytes + new_bytes;
+        let e = self.entries.get_mut(&request_id).unwrap();
+        e.bytes = new_bytes;
+        e.bucket = new_bucket;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn chai_cache_is_smaller() {
+        let Some(m) = manifest() else { return };
+        for t in [128usize, 512, 2048] {
+            let mha = cache_bytes(CacheKind::Mha, &m, t);
+            let chai = cache_bytes(CacheKind::Chai, &m, t);
+            assert!(chai < mha, "t={t}: {chai} !< {mha}");
+        }
+        let s = chai_saving_fraction(&m);
+        assert!(s > 0.05 && s < 0.5, "saving {s}");
+    }
+
+    #[test]
+    fn mha_bytes_formula() {
+        let Some(m) = manifest() else { return };
+        let t = 256;
+        let expect =
+            2 * m.model.n_layers * m.model.n_heads * t * m.model.head_dim * 4;
+        assert_eq!(cache_bytes(CacheKind::Mha, &m, t), expect);
+    }
+
+    #[test]
+    fn pool_admission_and_release() {
+        let Some(m) = manifest() else { return };
+        let one = cache_bytes(CacheKind::Mha, &m, 128);
+        let mut pool = KvPool::new(one * 2 + 1);
+        pool.admit(1, CacheKind::Mha, &m, 128).unwrap();
+        pool.admit(2, CacheKind::Mha, &m, 128).unwrap();
+        assert!(pool.admit(3, CacheKind::Mha, &m, 128).is_err());
+        assert_eq!(pool.len(), 2);
+        pool.release(1).unwrap();
+        pool.admit(3, CacheKind::Mha, &m, 128).unwrap();
+        assert!(pool.release(99).is_err());
+    }
+
+    #[test]
+    fn lru_tracks_touches() {
+        let Some(m) = manifest() else { return };
+        let mut pool = KvPool::new(usize::MAX);
+        pool.admit(1, CacheKind::Chai, &m, 128).unwrap();
+        pool.admit(2, CacheKind::Chai, &m, 128).unwrap();
+        pool.admit(3, CacheKind::Chai, &m, 128).unwrap();
+        assert_eq!(pool.lru(), Some(1));
+        pool.touch(1);
+        assert_eq!(pool.lru(), Some(2));
+    }
+
+    #[test]
+    fn grow_reaccounts() {
+        let Some(m) = manifest() else { return };
+        let small = cache_bytes(CacheKind::Mha, &m, 128);
+        let big = cache_bytes(CacheKind::Mha, &m, 512);
+        let mut pool = KvPool::new(big);
+        pool.admit(1, CacheKind::Mha, &m, 128).unwrap();
+        assert_eq!(pool.used_bytes(), small);
+        pool.grow(1, &m, 512).unwrap();
+        assert_eq!(pool.used_bytes(), big);
+        // shrink request is a no-op
+        pool.grow(1, &m, 128).unwrap();
+        assert_eq!(pool.used_bytes(), big);
+    }
+
+    #[test]
+    fn property_pool_accounting_consistent() {
+        let Some(m) = manifest() else { return };
+        check("kv-pool-accounting", 20, |rng| {
+            let mut pool = KvPool::new(100 * 1024 * 1024);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..100 {
+                match rng.below(3) {
+                    0 => {
+                        let kind = if rng.below(2) == 0 { CacheKind::Mha } else { CacheKind::Chai };
+                        let bucket = [32, 128, 512][rng.below(3)];
+                        if pool.admit(next_id, kind, &m, bucket).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        let id = live.swap_remove(i);
+                        pool.release(id).map_err(|e| e.to_string())?;
+                    }
+                    _ if !live.is_empty() => {
+                        let id = live[rng.below(live.len())];
+                        pool.touch(id);
+                    }
+                    _ => {}
+                }
+                let expect: usize = live
+                    .iter()
+                    .map(|_| 0usize)
+                    .sum();
+                let _ = expect;
+                crate::prop_assert!(
+                    pool.len() == live.len(),
+                    "entry count {} != live {}", pool.len(), live.len()
+                );
+                crate::prop_assert!(
+                    pool.used_bytes() <= pool.capacity_bytes,
+                    "over capacity"
+                );
+                if live.is_empty() {
+                    crate::prop_assert!(pool.used_bytes() == 0, "leak: {} bytes", pool.used_bytes());
+                }
+            }
+            // drain
+            for id in live.drain(..) {
+                pool.release(id).map_err(|e| e.to_string())?;
+            }
+            crate::prop_assert!(pool.used_bytes() == 0, "leak after drain");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! CHAI: Clustered Head Attention for Efficient LLM Inference (ICML 2024)
+//! — full-system reproduction.
+//!
+//! This crate is the Layer-3 serving coordinator of the three-layer stack
+//! described in `DESIGN.md`:
+//!
+//! * [`runtime`] loads AOT-compiled HLO artifacts (produced by the python
+//!   compile path in `python/compile/`) onto a PJRT CPU client and executes
+//!   them with persistent device buffers — python is never on the request
+//!   path.
+//! * [`clustering`] implements the paper's offline elbow analysis and the
+//!   online 5-token cluster-membership identification (k-means++ over
+//!   per-head attention features).
+//! * [`engine`] drives the probe → cluster → CHAI pipeline per request, and
+//!   the MHA / DejaVu / SpAtten / CHAI-static baselines.
+//! * [`kv`] is the clustered KV-cache manager (per-layer `k_l`-head K,
+//!   full-head V) with exact byte accounting (paper Fig 11).
+//! * [`coordinator`] is the serving layer: request queue, continuous
+//!   batcher, prefill/decode scheduler; [`server`] exposes it over a TCP
+//!   line-JSON protocol.
+//! * [`util`] contains the substrates the offline build needs (JSON,
+//!   PRNG, CLI args, stats, a property-testing harness) — the crates.io
+//!   mirror in this environment only vendors `xla` + `anyhow`.
+
+pub mod baselines;
+pub mod bench;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod kv;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,223 @@
+//! `chai` CLI — leader entrypoint for the serving stack.
+//!
+//! Subcommands:
+//!   serve     start the TCP line-JSON server (engine thread + coordinator)
+//!   generate  one-shot generation from the command line
+//!   eval      accuracy of a variant on the synthetic suites (Tables 1-3)
+//!   analyze   offline head analysis: correlations, elbow, memberships
+//!   info      print manifest/model/cluster summary
+//!
+//! Examples:
+//!   chai serve --artifacts artifacts --bind 127.0.0.1:7777
+//!   chai generate --prompt "the color of tom is" --variant chai
+//!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
+//!   chai analyze --samples 64
+//!   chai info
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use chai::bench::Table;
+use chai::clustering::correlation;
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::{Engine, Variant};
+use chai::eval;
+use chai::kv;
+use chai::runtime::In;
+use chai::server::Server;
+use chai::tensor::Tensor;
+use chai::util::args::Args;
+use chai::util::json::Json;
+
+fn serving_config(args: &Args) -> Result<ServingConfig> {
+    Ok(ServingConfig {
+        artifacts_dir: PathBuf::from(args.str("artifacts", "artifacts")),
+        variant: args.str("variant", "chai"),
+        max_new_tokens: args.usize("max-new", 32)?,
+        max_batch: args.usize("max-batch", 8)?,
+        temperature: args.f64("temperature", 0.0)?,
+        seed: args.usize("seed", 0)? as u64,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: chai <serve|generate|eval|analyze|info> [--artifacts DIR] ...\n\
+                 see rust/src/main.rs header for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let bind = args.str("bind", "127.0.0.1:7777");
+    let handle = Coordinator::start(cfg)?;
+    let server = Server::start(handle.coordinator.clone(), &bind)?;
+    println!("chai serving on {}", server.addr);
+    println!("protocol: one JSON per line, e.g. {{\"prompt\": \"the color of tom is\", \"variant\": \"chai\"}}");
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let prompt = args.str("prompt", "the color of tom is");
+    let max_new = args.usize("max-new", 24)?;
+    let variant = Variant::parse(&args.str("variant", "chai"))?;
+    let engine = Engine::load(cfg)?;
+    let gen = engine.generate(&prompt, max_new, &variant)?;
+    println!("prompt:  {prompt}");
+    println!("output:  {}", gen.text);
+    println!(
+        "timing:  ttft {:.2} ms (probe {:.2} + cluster {:.2} + prefill {:.2}), \
+         {} decode steps, mean {:.2} ms/tok",
+        gen.timing.ttft_ms,
+        gen.timing.probe_ms,
+        gen.timing.cluster_ms,
+        gen.timing.prefill_ms,
+        gen.timing.decode_ms.len(),
+        chai::util::stats::mean(&gen.timing.decode_ms),
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let dir = cfg.artifacts_dir.clone();
+    let engine = Engine::load(cfg)?;
+    let variants: Vec<Variant> = args
+        .str("variant", "mha,chai")
+        .split(',')
+        .map(Variant::parse)
+        .collect::<Result<_>>()?;
+    let suites: Vec<String> = match args.opt_str("suites") {
+        Some(s) => s.split(',').map(|x| x.to_string()).collect(),
+        None => eval::SUITES.iter().map(|s| s.to_string()).collect(),
+    };
+    let max_items = args.usize("max-items", 0)?;
+    let max_items = if max_items == 0 { None } else { Some(max_items) };
+    let mut table = Table::new(
+        "Accuracy (synthetic suites)",
+        &std::iter::once("variant")
+            .chain(suites.iter().map(|s| s.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    for v in &variants {
+        let mut row = vec![v.name()];
+        for s in &suites {
+            let suite = eval::load_suite(&dir, s)?;
+            let acc = eval::accuracy(&engine, &suite, v, max_items)?;
+            row.push(format!("{acc:.1}"));
+        }
+        table.row(row);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cfg = serving_config(args)?;
+    let engine = Engine::load(cfg)?;
+    let m = engine.manifest().clone();
+    let n_samples = args.usize("samples", 32)?;
+    let samples = load_analysis_samples(&m.dir, n_samples)?;
+    println!("analyzing {} samples (bucket {})...", samples.len(), m.analyze_bucket);
+
+    // per-layer features: last-query attention rows across samples
+    let mut feats: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); m.model.n_heads]; m.model.n_layers];
+    for s in &samples {
+        let maps = analyze_sample(&engine, s)?;
+        let (l, h, t) = (m.model.n_layers, m.model.n_heads, m.analyze_bucket);
+        let ln = chai::model::tokenizer::encode(s, true, false).len().min(t);
+        let v = maps.as_f32()?;
+        for li in 0..l {
+            for hi in 0..h {
+                let base = ((li * h + hi) * t + (ln - 1)) * t;
+                feats[li][hi].extend_from_slice(&v[base..base + ln]);
+            }
+        }
+    }
+    let mut table = Table::new(
+        "Per-layer head redundancy (Figure 6 analogue)",
+        &["layer", "mean corr", "frac>0.95", "elbow k"],
+    );
+    for (li, layer) in feats.iter().enumerate() {
+        let corr = correlation::correlation_matrix(layer);
+        let res = chai::clustering::elbow::cluster_layer(layer, 0);
+        table.row(vec![
+            li.to_string(),
+            format!("{:.3}", correlation::mean_offdiag(&corr)),
+            format!("{:.2}", correlation::frac_above(&corr, 0.95)),
+            res.k.to_string(),
+        ]);
+    }
+    table.print();
+    println!("offline clusters.json k_list: {:?}", m.k_list);
+    println!(
+        "CHAI K,V-cache saving vs MHA: {:.1}%",
+        100.0 * kv::chai_saving_fraction(&m)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    let m = chai::config::Manifest::load(&dir)?;
+    println!("model:       {} ({} params)", m.model.name, m.model.n_params);
+    println!(
+        "dims:        L={} H={} d={} dh={} ff={} vocab={}",
+        m.model.n_layers, m.model.n_heads, m.model.d_model, m.model.head_dim,
+        m.model.d_ff, m.model.vocab_size
+    );
+    println!("k_list:      {:?} (k_max {})", m.k_list, m.k_max);
+    println!("buckets:     prefill {:?} decode {:?}", m.prefill_buckets, m.decode_buckets);
+    println!("attn impl:   {}", m.attn_impl);
+    println!("artifacts:   {}", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!("  {name:32} {} inputs, {} outputs", a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+// --- helpers shared with benches (duplicated minimally) -------------------
+
+pub fn load_analysis_samples(dir: &std::path::Path, n: usize) -> Result<Vec<String>> {
+    let j = Json::parse_file(&dir.join("analysis_samples.json"))?;
+    let samples = j.get("samples")?.str_vec()?;
+    if samples.is_empty() {
+        bail!("no analysis samples");
+    }
+    Ok(samples.into_iter().take(n).collect())
+}
+
+pub fn analyze_sample(engine: &Engine, text: &str) -> Result<Tensor> {
+    let m = engine.manifest();
+    let t = m.analyze_bucket;
+    let mut ids = chai::model::tokenizer::encode(text, true, false);
+    ids.truncate(t);
+    let ln = ids.len();
+    ids.resize(t, chai::model::tokenizer::PAD);
+    let outs = engine.rt.run(
+        "analyze",
+        &[
+            In::Host(&Tensor::i32(vec![t], ids)),
+            In::Host(&Tensor::scalar_i32(ln as i32)),
+        ],
+    )?;
+    outs[0].to_tensor()
+}

@@ -1,0 +1,125 @@
+//! Serving metrics: counters + latency histograms, thread-safe, exported
+//! as JSON by the server's `stats` command and printed by benches.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.entry(name.to_string()).or_default().record(ms);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn mean_ms(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|h| h.mean())
+            .unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let lat = Json::Obj(
+            g.latencies
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.total as f64)),
+                            ("mean_ms", Json::Num(h.mean())),
+                            ("p50_ms", Json::Num(h.quantile(0.5))),
+                            ("p95_ms", Json::Num(h.quantile(0.95))),
+                            ("p99_ms", Json::Num(h.quantile(0.99))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("latency", lat)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("req");
+        m.add("req", 4);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_summary() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.observe_ms("ttft", 1.0 + i as f64 * 0.1);
+        }
+        assert!(m.mean_ms("ttft") > 1.0);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("latency").unwrap().get("ttft").unwrap().get("count").unwrap().usize().unwrap(),
+            100
+        );
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.inc("x");
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("x"), 4000);
+    }
+}

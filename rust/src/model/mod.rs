@@ -1,0 +1,154 @@
+//! Model-side helpers on the rust path: the byte-level tokenizer (mirror of
+//! `python/compile/tokenizer.py`, cross-checked against the shared fixture)
+//! and analytic FLOP accounting per attention variant (Figure 1's x-axis).
+
+pub mod tokenizer {
+    pub const BOS: i32 = 256;
+    pub const EOS: i32 = 257;
+    pub const PAD: i32 = 258;
+    pub const SEP: i32 = 259;
+    pub const VOCAB_SIZE: usize = 260;
+
+    pub fn encode(text: &str, bos: bool, eos: bool) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() + 2);
+        if bos {
+            ids.push(BOS);
+        }
+        ids.extend(text.bytes().map(|b| b as i32));
+        if eos {
+            ids.push(EOS);
+        }
+        ids
+    }
+
+    pub fn decode(ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids.iter().filter(|&&i| (0..256).contains(&i)).map(|&i| i as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Analytic FLOP accounting (fused-multiply-add = 2 flops) per attention
+/// variant, for a full forward over `t` tokens. This regenerates the
+/// x-axis of Figure 1 / Figure 14.
+pub mod flops {
+    use crate::config::Manifest;
+
+    /// FLOPs of everything except the attention-score path (projections,
+    /// MLP, lm head) — identical across variants except the Q/K gather.
+    fn common(m: &Manifest, t: usize, qk_heads: &[usize]) -> f64 {
+        let c = &m.model;
+        let (d, hd, f, v) = (
+            c.d_model as f64,
+            (c.n_heads * c.head_dim) as f64,
+            c.d_ff as f64,
+            c.vocab_size as f64,
+        );
+        let t = t as f64;
+        let mut fl = 0.0;
+        for &kh in qk_heads {
+            let qk_dim = (kh * c.head_dim) as f64;
+            // q,k projections only for surviving heads; v,o full
+            fl += 2.0 * t * d * qk_dim * 2.0; // wq, wk
+            fl += 2.0 * t * d * hd; // wv
+            fl += 2.0 * t * hd * d; // wo
+            fl += 3.0 * 2.0 * t * d * f; // swiglu
+        }
+        fl += 2.0 * t * d * v; // lm head
+        fl
+    }
+
+    /// Attention-score + AV FLOPs with `score_heads[l]` score computations
+    /// and `av_heads[l]` A·V computations per layer.
+    fn attn(m: &Manifest, t: usize, score_heads: &[usize], av_heads: &[usize]) -> f64 {
+        let dh = m.model.head_dim as f64;
+        let t = t as f64;
+        let mut fl = 0.0;
+        for (&sh, &ah) in score_heads.iter().zip(av_heads) {
+            fl += 2.0 * sh as f64 * t * t * dh; // QK^T
+            fl += 2.0 * ah as f64 * t * t * dh; // A·V
+        }
+        fl
+    }
+
+    /// MHA forward FLOPs over `t` tokens.
+    pub fn mha(m: &Manifest, t: usize) -> f64 {
+        let h = vec![m.model.n_heads; m.model.n_layers];
+        common(m, t, &h) + attn(m, t, &h, &h)
+    }
+
+    /// CHAI: scores once per cluster; A·V per head (V kept).
+    pub fn chai(m: &Manifest, t: usize, k_list: &[usize]) -> f64 {
+        let h = vec![m.model.n_heads; m.model.n_layers];
+        common(m, t, k_list) + attn(m, t, k_list, &h)
+    }
+
+    /// DejaVu at `n_keep` heads/layer: whole heads removed.
+    pub fn dejavu(m: &Manifest, t: usize, n_keep: usize) -> f64 {
+        let h = vec![n_keep; m.model.n_layers];
+        common(m, t, &h) + attn(m, t, &h, &h)
+    }
+
+    /// Relative FLOPs vs MHA (the paper reports CHAI at ~0.75× for
+    /// LLaMA-7B-scale models).
+    pub fn ratio_vs_mha(m: &Manifest, t: usize, fl: f64) -> f64 {
+        fl / mha(m, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn tokenizer_matches_python_fixture() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tokenizer_fixture.json");
+        if !p.exists() {
+            return;
+        }
+        let j = crate::util::json::Json::parse_file(&p).unwrap();
+        assert_eq!(j.get("bos").unwrap().int().unwrap(), tokenizer::BOS as i64);
+        assert_eq!(j.get("vocab").unwrap().usize().unwrap(), tokenizer::VOCAB_SIZE);
+        for case in j.get("cases").unwrap().arr().unwrap() {
+            let text = case.get("text").unwrap().str().unwrap();
+            let ids: Vec<i32> = case
+                .get("ids")
+                .unwrap()
+                .arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.int().unwrap() as i32)
+                .collect();
+            assert_eq!(tokenizer::encode(text, true, false), ids, "text {text:?}");
+            assert_eq!(tokenizer::decode(&ids), text);
+        }
+    }
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let t = "the color of tom is red .";
+        let ids = tokenizer::encode(t, true, true);
+        assert_eq!(ids[0], tokenizer::BOS);
+        assert_eq!(*ids.last().unwrap(), tokenizer::EOS);
+        assert_eq!(tokenizer::decode(&ids), t);
+    }
+
+    #[test]
+    fn flops_ordering() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = crate::config::Manifest::load(&dir).unwrap();
+        let t = 512;
+        let mha = flops::mha(&m, t);
+        let chai = flops::chai(&m, t, &m.k_list);
+        let dv50 = flops::dejavu(&m, t, m.model.n_heads / 2);
+        assert!(chai < mha, "chai {chai} !< mha {mha}");
+        assert!(dv50 < mha);
+        // CHAI with k=H degenerates to MHA
+        let kfull = vec![m.model.n_heads; m.model.n_layers];
+        assert!((flops::chai(&m, t, &kfull) - mha).abs() / mha < 1e-9);
+        assert!(flops::ratio_vs_mha(&m, t, chai) < 1.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute with
+//! persistent device buffers.
+//!
+//! Design notes:
+//! * HLO **text** is the interchange format (`HloModuleProto::from_text_file`
+//!   reassigns instruction ids; serialized jax≥0.5 protos are rejected by
+//!   xla_extension 0.5.1).
+//! * Model weights are uploaded to device buffers **once** at startup and
+//!   shared by every executable (the manifest fixes the argument order).
+//! * The `xla` crate's client is `Rc`-based (not `Send`): the whole runtime
+//!   lives on a single engine thread; the coordinator feeds it through
+//!   channels (see `coordinator::EngineLoop`).
+//! * jax lowers with `return_tuple=True`; depending on the PJRT build the
+//!   result arrives either as one tuple buffer or already untupled —
+//!   [`Executable::run`] normalizes both cases.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactSpec, Manifest};
+use crate::tensor::{Data, Tensor};
+
+/// Output of an execution: either still on device or already on host.
+pub enum Out {
+    Buf(xla::PjRtBuffer),
+    Host(Tensor),
+}
+
+impl Out {
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        match self {
+            Out::Host(t) => Ok(t.clone()),
+            Out::Buf(b) => literal_to_tensor(&b.to_literal_sync()?),
+        }
+    }
+}
+
+/// Input to an execution.
+pub enum In<'a> {
+    Host(&'a Tensor),
+    Buf(&'a xla::PjRtBuffer),
+}
+
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    weights: Vec<xla::PjRtBuffer>,
+    exes: RefCell<BTreeMap<String, Rc<Executable>>>,
+    /// cumulative executions per artifact (metrics)
+    pub exec_counts: RefCell<BTreeMap<String, u64>>,
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+        ty => bail!("unsupported element type {ty:?}"),
+    }
+}
+
+impl Runtime {
+    /// Load manifest + weights from an artifacts dir; upload weights.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let weights_file = crate::tensor::io::load(&dir.join("weights.cbt"))
+            .context("loading weights.cbt")?;
+        let mut weights = Vec::with_capacity(manifest.weight_order.len());
+        for name in &manifest.weight_order {
+            let t = weights_file
+                .get(name)
+                .with_context(|| format!("weight {name} missing from weights.cbt"))?;
+            weights.push(upload(&client, t)?);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            weights,
+            exes: RefCell::new(BTreeMap::new()),
+            exec_counts: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Get (lazily compiling + caching) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let e = Rc::new(Executable {
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.exes.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Execute an artifact: uploads host inputs, prepends the persistent
+    /// weight buffers, returns per-output results.
+    pub fn run(&self, name: &str, extras: &[In]) -> Result<Vec<Out>> {
+        let exe = self.executable(name)?;
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        exe.run_with_weights(&self.weights, extras)
+    }
+
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        upload(&self.client, t)
+    }
+
+    /// Precompile a set of artifacts (so first-request latency excludes
+    /// XLA compilation).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+}
+
+pub fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    let buf = match &t.data {
+        Data::F32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+        Data::I32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+    };
+    Ok(buf)
+}
+
+impl Executable {
+    fn run_with_weights(&self, weights: &[xla::PjRtBuffer], extras: &[In]) -> Result<Vec<Out>> {
+        if extras.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} runtime inputs ({:?}), got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                self.spec.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+                extras.len()
+            );
+        }
+        // Host inputs must be uploaded; keep them alive for the call.
+        let uploaded: Vec<xla::PjRtBuffer> = extras
+            .iter()
+            .filter_map(|e| match e {
+                In::Host(t) => Some(upload(&self.client, t)),
+                In::Buf(_) => None,
+            })
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(weights.len() + extras.len());
+        args.extend(weights.iter());
+        let mut up_iter = uploaded.iter();
+        for e in extras {
+            match e {
+                In::Host(_) => args.push(up_iter.next().unwrap()),
+                In::Buf(b) => args.push(b),
+            }
+        }
+        let mut outputs = self.exe.execute_b(&args)?;
+        let replica = outputs.swap_remove(0);
+        let expected = self.spec.outputs.len();
+        if replica.len() == 1 {
+            // jax lowers with return_tuple=True: the result is one
+            // tuple-typed buffer; decompose on the host.
+            let is_tuple = matches!(replica[0].on_device_shape(), Ok(xla::Shape::Tuple(_)));
+            if is_tuple {
+                let mut lit = replica[0].to_literal_sync()?;
+                let parts = lit.decompose_tuple()?;
+                if parts.len() != expected {
+                    bail!(
+                        "{}: tuple arity {} != manifest outputs {}",
+                        self.spec.name,
+                        parts.len(),
+                        expected
+                    );
+                }
+                return parts
+                    .iter()
+                    .map(|l| Ok(Out::Host(literal_to_tensor(l)?)))
+                    .collect();
+            }
+        }
+        if replica.len() == expected {
+            return Ok(replica.into_iter().map(Out::Buf).collect());
+        }
+        bail!(
+            "{}: unexpected output count {} (manifest says {})",
+            self.spec.name,
+            replica.len(),
+            expected
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn literal_tensor_roundtrip() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+        let ti = Tensor::i32(vec![4], vec![1, -2, 3, -4]);
+        let back = literal_to_tensor(&tensor_to_literal(&ti).unwrap()).unwrap();
+        assert_eq!(back, ti);
+    }
+
+    #[test]
+    fn loads_and_runs_probe() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        let m = &rt.manifest;
+        let p = m.probe_bucket;
+        let tokens = Tensor::i32(vec![p], (0..p as i32).map(|i| i % 250).collect());
+        let length = Tensor::scalar_i32(p as i32);
+        let outs = rt
+            .run("probe_mha", &[In::Host(&tokens), In::Host(&length)])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let maps = outs[0].to_tensor().unwrap();
+        assert_eq!(
+            maps.shape,
+            vec![m.model.n_layers, m.model.n_heads, p, p]
+        );
+        // rows are causal probability distributions
+        let v = maps.as_f32().unwrap();
+        let row0: f32 = v[..p].iter().sum();
+        assert!((row0 - 1.0).abs() < 1e-4, "row sum {row0}");
+        assert_eq!(*rt.exec_counts.borrow().get("probe_mha").unwrap(), 1);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        let tokens = Tensor::i32(vec![8], vec![0; 8]);
+        assert!(rt.run("probe_mha", &[In::Host(&tokens)]).is_err());
+    }
+
+    #[test]
+    fn decode_roundtrip_through_buffers() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        let m = rt.manifest.clone();
+        let t = 32usize;
+        let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+        let kc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let vc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let tok = Tensor::scalar_i32(5);
+        let pos = Tensor::scalar_i32(0);
+        let outs = rt
+            .run(
+                "decode_mha_t32",
+                &[In::Host(&tok), In::Host(&pos), In::Host(&kc), In::Host(&vc)],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 3);
+        let logits = outs[0].to_tensor().unwrap();
+        assert_eq!(logits.shape, vec![m.model.vocab_size]);
+        assert!(logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        // feed caches back as buffers for a second step if they are bufs
+        if let (Out::Buf(kb), Out::Buf(vb)) = (&outs[1], &outs[2]) {
+            let tok2 = Tensor::scalar_i32(7);
+            let pos2 = Tensor::scalar_i32(1);
+            let outs2 = rt
+                .run(
+                    "decode_mha_t32",
+                    &[In::Host(&tok2), In::Host(&pos2), In::Buf(kb), In::Buf(vb)],
+                )
+                .unwrap();
+            assert_eq!(outs2.len(), 3);
+        }
+    }
+}

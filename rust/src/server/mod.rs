@@ -1,0 +1,169 @@
+//! TCP line-JSON serving protocol (one JSON object per line).
+//!
+//! Request:  `{"prompt": "...", "max_new": 32, "variant": "chai"}`
+//!           `{"cmd": "stats"}`   `{"cmd": "ping"}`
+//! Response: `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}`
+//!           or `{"error": "..."}`.
+//!
+//! Connection handling is thread-per-connection (requests are forwarded to
+//! the single engine thread through the coordinator, so the server threads
+//! only do I/O). A matching [`Client`] is provided for examples/benches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::engine::Variant;
+use crate::util::json::Json;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve in background threads until `stop`/drop.
+    pub fn start(coordinator: Coordinator, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("chai-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let coord = coordinator.clone();
+                            // Detached: a connection thread lives until its
+                            // client disconnects (joining here would block
+                            // shutdown on clients idling in read_line).
+                            let _ = std::thread::Builder::new()
+                                .name("chai-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, &coord);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = match handle_line(trimmed, coord) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
+    let req = Json::parse(line)?;
+    if let Some(cmd) = req.opt("cmd") {
+        return match cmd.str()? {
+            "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+            "stats" => Ok(coord.metrics.to_json()),
+            other => Ok(Json::obj(vec![(
+                "error",
+                Json::Str(format!("unknown cmd {other:?}")),
+            )])),
+        };
+    }
+    let prompt = req.get("prompt")?.str()?.to_string();
+    let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
+    let variant =
+        Variant::parse(req.opt("variant").map(|v| v.str()).transpose()?.unwrap_or("chai"))?;
+    let rx = coord.submit(&prompt, max_new, variant);
+    let resp = rx.recv().context("engine dropped request")?;
+    if let Some(e) = resp.error {
+        return Ok(Json::obj(vec![("error", Json::Str(e))]));
+    }
+    Ok(Json::obj(vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("text", Json::Str(resp.text)),
+        ("n_generated", Json::Num(resp.n_generated as f64)),
+        ("queue_ms", Json::Num(resp.queue_ms)),
+        ("ttft_ms", Json::Num(resp.timing.ttft_ms)),
+        ("e2e_ms", Json::Num(resp.e2e_ms)),
+    ]))
+}
+
+/// Line-JSON client for examples and the serving bench.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize, variant: &str) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("prompt", Json::Str(prompt.into())),
+            ("max_new", Json::Num(max_new as f64)),
+            ("variant", Json::Str(variant.into())),
+        ]))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.call(&Json::obj(vec![("cmd", Json::Str("ping".into()))]))?;
+        Ok(r.opt("pong").is_some())
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+}

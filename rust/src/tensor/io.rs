@@ -1,0 +1,167 @@
+//! `.cbt` ("CHAI binary tensors") reader/writer — mirrors
+//! `python/compile/tensorio.py`:
+//!
+//! ```text
+//! magic b"CBT1" | u32 LE header len | UTF-8 JSON header | data section
+//! ```
+//!
+//! Header: `{"tensors": [{name, dtype, shape, offset, nbytes}]}` with
+//! offsets relative to the data section start, 64-byte aligned.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Data, DType, Tensor};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"CBT1";
+const ALIGN: usize = 64;
+
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let blob = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if blob.len() < 8 || &blob[..4] != MAGIC {
+        bail!("{}: bad .cbt magic", path.display());
+    }
+    let hlen = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
+    if blob.len() < 8 + hlen {
+        bail!("{}: truncated header", path.display());
+    }
+    let header = Json::parse(std::str::from_utf8(&blob[8..8 + hlen])?)?;
+    let data = &blob[8 + hlen..];
+    let mut out = BTreeMap::new();
+    for e in header.get("tensors")?.arr()? {
+        let name = e.get("name")?.str()?.to_string();
+        let dtype = DType::from_name(e.get("dtype")?.str()?)?;
+        let shape = e.get("shape")?.usize_vec()?;
+        let offset = e.get("offset")?.usize()?;
+        let nbytes = e.get("nbytes")?.usize()?;
+        if offset + nbytes > data.len() {
+            bail!("{}: tensor {name} out of bounds", path.display());
+        }
+        let raw = &data[offset..offset + nbytes];
+        let n = nbytes / 4;
+        let expected: usize = shape.iter().product();
+        if n != expected {
+            bail!("{}: tensor {name} shape/size mismatch", path.display());
+        }
+        let tensor = match dtype {
+            DType::F32 => Tensor::f32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::I32 => Tensor::i32(
+                shape,
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut entries = Vec::new();
+    let mut bufs: Vec<(usize, Vec<u8>)> = Vec::new(); // (pad, raw)
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        let raw: Vec<u8> = match &t.data {
+            Data::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Data::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        };
+        let pad = (ALIGN - offset % ALIGN) % ALIGN;
+        offset += pad;
+        entries.push(Json::obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("dtype", Json::Str(t.dtype().name().into())),
+            ("shape", Json::from_usizes(&t.shape)),
+            ("offset", Json::Num(offset as f64)),
+            ("nbytes", Json::Num(raw.len() as f64)),
+        ]));
+        offset += raw.len();
+        bufs.push((pad, raw));
+    }
+    let header = Json::obj(vec![("tensors", Json::Arr(entries))]).to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (pad, raw) in bufs {
+        f.write_all(&vec![0u8; pad])?;
+        f.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("chai-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]));
+        m.insert("b".into(), Tensor::i32(vec![4], vec![-1, 2, -3, 4]));
+        let p = tmp("roundtrip.cbt");
+        save(&p, &m).unwrap();
+        let out = load(&p).unwrap();
+        assert_eq!(out, m);
+    }
+
+    #[test]
+    fn alignment_honored() {
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), Tensor::f32(vec![1], vec![1.0])); // 4 bytes
+        m.insert("y".into(), Tensor::f32(vec![1], vec![2.0]));
+        let p = tmp("align.cbt");
+        save(&p, &m).unwrap();
+        let blob = std::fs::read(&p).unwrap();
+        let hlen = u32::from_le_bytes(blob[4..8].try_into().unwrap()) as usize;
+        let header = Json::parse(std::str::from_utf8(&blob[8..8 + hlen]).unwrap()).unwrap();
+        for e in header.get("tensors").unwrap().arr().unwrap() {
+            assert_eq!(e.get("offset").unwrap().usize().unwrap() % 64, 0);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.cbt");
+        std::fs::write(&p, b"NOPE\0\0\0\0").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![8], vec![0.0; 8]));
+        let p = tmp("trunc.cbt");
+        save(&p, &m).unwrap();
+        let blob = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &blob[..blob.len() - 8]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn reads_python_written_fixture_if_present() {
+        // Cross-language contract: the build's weights.cbt must parse.
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.cbt");
+        if p.exists() {
+            let m = load(&p).unwrap();
+            assert!(m.contains_key("emb"), "weights.cbt missing emb");
+            assert!(m.keys().any(|k| k.ends_with(".wq")));
+        }
+    }
+}

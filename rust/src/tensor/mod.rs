@@ -1,0 +1,183 @@
+//! Host-side tensors and the `.cbt` interchange format.
+//!
+//! [`Tensor`] is a minimal dense row-major array (f32 or i32) — enough for
+//! weight loading, KV-cache staging, clustering features and literal
+//! conversion. The `.cbt` file layout mirrors `python/compile/tensorio.py`
+//! and is roundtrip-tested from both languages against the same fixture.
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor::i32(shape.to_vec(), vec![0; shape.iter().product()])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![], vec![v])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        idx.iter().zip(self.strides()).map(|(i, s)| i * s).sum()
+    }
+
+    pub fn get_f32(&self, idx: &[usize]) -> f32 {
+        self.as_f32().unwrap()[self.offset(idx)]
+    }
+
+    /// Slice out sub-tensor at leading index `i` (e.g. layer `i` of
+    /// `[L, H, T, dh]` → `[H, T, dh]`). Copies.
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        let shape = self.shape[1..].to_vec();
+        match &self.data {
+            Data::F32(v) => Tensor::f32(shape, v[i * inner..(i + 1) * inner].to_vec()),
+            Data::I32(v) => Tensor::i32(shape, v[i * inner..(i + 1) * inner].to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_contract() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn strides_and_indexing() {
+        let t = Tensor::f32(vec![2, 3, 4], (0..24).map(|x| x as f32).collect());
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.get_f32(&[1, 2, 3]), 23.0);
+        assert_eq!(t.get_f32(&[0, 1, 0]), 4.0);
+    }
+
+    #[test]
+    fn index0_slices_layer() {
+        let t = Tensor::i32(vec![3, 2], vec![1, 2, 3, 4, 5, 6]);
+        let l1 = t.index0(1);
+        assert_eq!(l1.shape, vec![2]);
+        assert_eq!(l1.as_i32().unwrap(), &[3, 4]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar_i32(7);
+        assert_eq!(t.len(), 1);
+        assert!(t.shape.is_empty());
+    }
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        assert_eq!(DType::from_name("f32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("int32").unwrap(), DType::I32);
+        assert!(DType::from_name("f64").is_err());
+    }
+}

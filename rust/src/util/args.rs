@@ -1,0 +1,130 @@
+//! Tiny CLI argument parser (clap is not vendored). Supports
+//! `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects a number, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--x=1"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.usize("port", 0).unwrap(), 8080);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str("x", ""), "1");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert_eq!(a.str("s", "d"), "d");
+        assert!(!a.bool("v"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--n", "xyz"]);
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["--buckets", "32,128, 512"]);
+        assert_eq!(a.usize_list("buckets", &[]).unwrap(), vec![32, 128, 512]);
+        assert_eq!(a.usize_list("other", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "2"]);
+        assert!(a.bool("a"));
+        assert_eq!(a.usize("b", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! Offline-build substrates: JSON, PRNG, CLI args, statistics, logging and
+//! a small property-testing harness (the vendored crates.io mirror only
+//! ships `xla` + `anyhow`, so these are built from scratch — see DESIGN.md
+//! system inventory).
+
+pub mod args;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock helper used by benches and metrics.
+pub fn now_ms() -> f64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap()
+        .as_secs_f64()
+        * 1e3
+}

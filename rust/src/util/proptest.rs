@@ -1,0 +1,69 @@
+//! Miniature property-testing harness (the real `proptest` crate is not
+//! vendored). Runs a property over N seeded random cases; on failure it
+//! reports the failing seed so the case replays deterministically.
+//! Used for the coordinator/kv/clustering invariants per the repro
+//! mandate ("proptest on coordinator invariants").
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper returning Err for `check` properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("fail", 10, |rng| {
+            let x = rng.below(100);
+            if x > 1 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn rng_cases_are_distinct() {
+        let mut first = Vec::new();
+        check("distinct", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut sorted = first.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), first.len());
+    }
+}

@@ -1,0 +1,193 @@
+//! Statistics helpers for benches and metrics: mean/std, percentiles,
+//! fixed-bucket latency histograms and a simple timing harness (criterion
+//! is not vendored; `rust/benches/*` use these instead).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, q in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Benchmark summary for one measured configuration.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+impl Summary {
+    pub fn of(samples_ms: &[f64]) -> Summary {
+        Summary {
+            n: samples_ms.len(),
+            mean_ms: mean(samples_ms),
+            median_ms: median(samples_ms),
+            p95_ms: percentile(samples_ms, 95.0),
+            std_ms: std_dev(samples_ms),
+            min_ms: samples_ms.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs; ms samples.
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect()
+}
+
+/// Streaming latency histogram with exponential bucket edges (µs..minutes).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    edges_ms: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // 0.001ms .. ~2min in ×2 steps
+        let edges_ms: Vec<f64> = (0..28).map(|i| 0.001 * 2f64.powi(i)).collect();
+        let counts = vec![0; edges_ms.len() + 1];
+        Histogram { edges_ms, counts, total: 0, sum_ms: 0.0 }
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        let idx = self.edges_ms.partition_point(|e| *e <= ms);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_ms += ms;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.edges_ms.len() {
+                    self.edges_ms[i]
+                } else {
+                    *self.edges_ms.last().unwrap() * 2.0
+                };
+            }
+        }
+        *self.edges_ms.last().unwrap() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((median(&xs) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 95.0) - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [5.0, 1.0, 3.0];
+        assert!((median(&xs) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.min_ms - 1.0).abs() < 1e-12);
+        assert!((s.median_ms - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        for i in 0..1000 {
+            h.record(0.1 + i as f64 * 0.01);
+        }
+        assert_eq!(h.total, 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn time_ms_counts() {
+        let mut n = 0;
+        let samples = time_ms(2, 5, || n += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7);
+    }
+}
