@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate: format, build, test. Run from the repo root.
+# Artifact-backed tests skip themselves when rust/artifacts is absent,
+# so this is meaningful on a fresh checkout.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q

@@ -7,6 +7,7 @@ mod common;
 
 use chai::bench::Table;
 use chai::config::Manifest;
+use chai::kv::paged::paged_cache_bytes;
 use chai::kv::{cache_bytes, chai_saving_fraction, CacheKind};
 use chai::util::json::Json;
 
@@ -59,10 +60,43 @@ fn main() -> anyhow::Result<()> {
     println!("\ntotal K,V saving: {total:.1}%  (paper: up to 21.4% on LLaMA-7B;");
     println!("saving is length-independent because both caches scale linearly in T)");
 
+    // block-granular occupancy: the paged pool rounds up to whole blocks
+    // (tiny overhead) where the legacy admission pads to whole buckets
+    let block = 16usize;
+    let mut paged_table = Table::new(
+        "Paged occupancy (block = 16) vs contiguous exact bytes",
+        &["seq len", "CHAI exact KiB", "CHAI paged KiB", "round-up %", "paged saving vs MHA %"],
+    );
+    let mut paged_rows = Vec::new();
+    for &t in &seqlens {
+        let exact = cache_bytes(CacheKind::Chai, &m, t);
+        let paged = paged_cache_bytes(CacheKind::Chai, &m, t, block);
+        let paged_mha = paged_cache_bytes(CacheKind::Mha, &m, t, block);
+        let overhead = 100.0 * (paged as f64 / exact as f64 - 1.0);
+        let saving = 100.0 * (1.0 - paged as f64 / paged_mha as f64);
+        paged_table.row(vec![
+            t.to_string(),
+            format!("{}", exact / 1024),
+            format!("{}", paged / 1024),
+            format!("{overhead:.2}"),
+            format!("{saving:.1}"),
+        ]);
+        paged_rows.push(Json::obj(vec![
+            ("seq_len", Json::Num(t as f64)),
+            ("chai_exact_bytes", Json::Num(exact as f64)),
+            ("chai_paged_bytes", Json::Num(paged as f64)),
+            ("mha_paged_bytes", Json::Num(paged_mha as f64)),
+            ("paged_saving_pct", Json::Num(saving)),
+        ]));
+    }
+    paged_table.print();
+
     common::write_results(
         "memory",
         Json::obj(vec![
             ("rows", Json::Arr(rows)),
+            ("paged_rows", Json::Arr(paged_rows)),
+            ("block_size", Json::Num(block as f64)),
             ("k_list", Json::from_usizes(&m.k_list)),
             ("total_saving_pct", Json::Num(total)),
         ]),

@@ -1,0 +1,151 @@
+//! Paged vs contiguous K,V occupancy under a shared-system-prompt
+//! workload (the RelayAttention-style scenario: many requests share a
+//! long system prefix, diverge on user suffixes).
+//!
+//! Needs no artifacts: the accounting subsystem is driven directly with
+//! a synthetic CHAI layout (real manifest dims are used when present).
+//!
+//! Run:  cargo bench --bench bench_paged
+//!       [-- --requests 64 --system-prompts 4 --system-len 96
+//!           --suffix-len 32 --decode 32 --window 8 --block-size 16]
+
+mod common;
+
+use chai::bench::Table;
+use chai::config::Manifest;
+use chai::kv::paged::{KvLayout, PagedKv};
+use chai::kv::CacheKind;
+use chai::util::json::Json;
+use chai::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let n_requests = args.usize("requests", 64)?;
+    let n_system = args.usize("system-prompts", 4)?;
+    let system_len = args.usize("system-len", 96)?;
+    let suffix_len = args.usize("suffix-len", 32)?;
+    let decode = args.usize("decode", 32)?;
+    let window = args.usize("window", 8)?;
+    let block = args.usize("block-size", 16)?;
+
+    // real CHAI geometry when artifacts exist, synthetic otherwise
+    let dir = common::artifacts_dir(&args);
+    let layout = if dir.join("manifest.json").exists() {
+        let m = Manifest::load(&dir)?;
+        KvLayout::from_manifest(&m, CacheKind::Chai)
+    } else {
+        KvLayout { n_layers: 6, n_heads: 16, head_dim: 32, k_heads: vec![6, 7, 8, 9, 10, 12] }
+    };
+    let fpt = layout.floats_per_token();
+    let buckets = [32usize, 128, 512, 2048];
+
+    let mut kv = PagedKv::new(block, 1 << 30);
+    let mut rng = Rng::new(7);
+    // system prompts: token streams disjoint across prompts
+    let systems: Vec<Vec<i32>> = (0..n_system)
+        .map(|s| (0..system_len).map(|i| (s * 100_000 + i) as i32).collect())
+        .collect();
+
+    let mut live: std::collections::VecDeque<(u64, usize)> = Default::default(); // (id, len)
+    let mut peak_paged = 0usize;
+    let mut peak_paged_live = 0usize;
+    let mut peak_contig_exact = 0usize;
+    let mut peak_contig_bucket = 0usize;
+
+    let mut track = |kv: &PagedKv, live: &std::collections::VecDeque<(u64, usize)>| {
+        let snap = kv.snapshot();
+        peak_paged = peak_paged.max(snap.used_bytes);
+        peak_paged_live = peak_paged_live.max(snap.used_bytes - snap.cached_bytes);
+        let exact: usize = live.iter().map(|(_, len)| len * fpt * 4).sum();
+        peak_contig_exact = peak_contig_exact.max(exact);
+        // the legacy admission unit: worst-case bucket for prompt+decode
+        let bucketed: usize = live
+            .iter()
+            .map(|(_, len)| {
+                let b = buckets.iter().copied().find(|b| *b >= *len).unwrap_or(2048);
+                b * fpt * 4
+            })
+            .sum();
+        peak_contig_bucket = peak_contig_bucket.max(bucketed);
+    };
+
+    for id in 0..n_requests as u64 {
+        let sys = &systems[rng.below(n_system)];
+        let mut prompt = sys.clone();
+        // unique suffix → divergence after the shared prefix
+        prompt.extend((0..suffix_len).map(|_| 1_000_000 + rng.below(50_000) as i32));
+        kv.admit(id, layout.clone(), "chai", true, &prompt)?;
+        kv.commit_prefill(id)?;
+        live.push_back((id, prompt.len()));
+        track(&kv, &live);
+
+        // decode the newest request to completion
+        for _ in 0..decode {
+            kv.ensure_append_slot(id)?;
+            kv.append_committed(id, 2_000_000 + rng.below(50_000) as i32)?;
+        }
+        if let Some(back) = live.back_mut() {
+            back.1 += decode;
+        }
+        track(&kv, &live);
+
+        while live.len() > window {
+            let (old, _) = live.pop_front().unwrap();
+            kv.release(old)?;
+        }
+        track(&kv, &live);
+    }
+    while let Some((old, _)) = live.pop_front() {
+        kv.release(old)?;
+    }
+
+    let stats = kv.stats.clone();
+    let mut table = Table::new(
+        "Peak K,V occupancy: shared-system-prompt workload",
+        &["accounting", "peak KiB", "vs bucketed"],
+    );
+    let rows: Vec<(&str, usize)> = vec![
+        ("contiguous, bucket worst-case (legacy admission)", peak_contig_bucket),
+        ("contiguous, exact length", peak_contig_exact),
+        ("paged incl. prefix cache", peak_paged),
+        ("paged live blocks only", peak_paged_live),
+    ];
+    for (name, bytes) in &rows {
+        table.row(vec![
+            name.to_string(),
+            format!("{}", bytes / 1024),
+            format!("{:.2}x", *bytes as f64 / peak_contig_bucket as f64),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nprefix hit-rate {:.1}%  ({} hit / {} miss blocks), {} CoW copies, {} evictions",
+        100.0 * stats.prefix_hit_rate(),
+        stats.prefix_hit_blocks,
+        stats.prefix_miss_blocks,
+        stats.cow_copies,
+        stats.evictions,
+    );
+
+    common::write_results(
+        "paged",
+        Json::obj(vec![
+            ("requests", Json::Num(n_requests as f64)),
+            ("system_prompts", Json::Num(n_system as f64)),
+            ("system_len", Json::Num(system_len as f64)),
+            ("suffix_len", Json::Num(suffix_len as f64)),
+            ("decode", Json::Num(decode as f64)),
+            ("window", Json::Num(window as f64)),
+            ("block_size", Json::Num(block as f64)),
+            ("peak_contig_bucket_bytes", Json::Num(peak_contig_bucket as f64)),
+            ("peak_contig_exact_bytes", Json::Num(peak_contig_exact as f64)),
+            ("peak_paged_bytes", Json::Num(peak_paged as f64)),
+            ("peak_paged_live_bytes", Json::Num(peak_paged_live as f64)),
+            ("prefix_hit_rate", Json::Num(stats.prefix_hit_rate())),
+            ("prefix_hit_blocks", Json::Num(stats.prefix_hit_blocks as f64)),
+            ("cow_copies", Json::Num(stats.cow_copies as f64)),
+            ("evictions", Json::Num(stats.evictions as f64)),
+        ]),
+    );
+    Ok(())
+}

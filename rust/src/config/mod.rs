@@ -180,6 +180,15 @@ pub struct ServingConfig {
     /// sampling temperature (0 = greedy)
     pub temperature: f64,
     pub seed: u64,
+    /// serve K,V through the paged block subsystem (`kv::paged`);
+    /// `false` falls back to contiguous per-session tensors + `KvPool`
+    /// bucket accounting
+    pub paged_kv: bool,
+    /// token positions per KV block (paged path)
+    pub kv_block_size: usize,
+    /// total K,V block pool budget in bytes (paged path; the legacy
+    /// path uses the same budget for its bucket accounting)
+    pub kv_capacity_bytes: usize,
 }
 
 impl Default for ServingConfig {
@@ -191,6 +200,9 @@ impl Default for ServingConfig {
             max_batch: 8,
             temperature: 0.0,
             seed: 0,
+            paged_kv: true,
+            kv_block_size: 16,
+            kv_capacity_bytes: 512 * 1024 * 1024,
         }
     }
 }

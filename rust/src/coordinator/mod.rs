@@ -22,7 +22,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{Engine, Session, Timing, Variant};
+use crate::engine::{Admission, Engine, Session, Timing, Variant};
 use crate::kv::KvPool;
 use crate::metrics::Metrics;
 use crate::util::now_ms;
@@ -179,9 +179,17 @@ struct Live {
 }
 
 /// The engine loop: continuous batching at token granularity.
+///
+/// KV admission control is block-granular by default: a request is
+/// admitted when the engine's paged store can cover its prefill blocks
+/// plus one decode block, counting evictable cached blocks (prefix
+/// reuse can only shrink the real allocation). With `paged_kv = false`
+/// the legacy contiguous [`KvPool`] worst-case bucket accounting is
+/// used instead.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
-    // KV budget: generous on CPU, but finite so admission control is real.
-    let mut pool = KvPool::new(512 * 1024 * 1024);
+    let paged = engine.paged_enabled();
+    // legacy bucket-accounting pool (only consulted when !paged)
+    let mut pool = KvPool::new(cfg.kv_capacity_bytes);
     let mut live: Vec<Live> = Vec::new();
     loop {
         // --- admission (prefill) ------------------------------------------
@@ -209,22 +217,47 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
                 }
             }
         }
-        for req in admitted {
+        // requests that can't start this tick go back to the queue head
+        // in arrival order — including the ones behind a deferral, which
+        // must not be dropped
+        let mut deferred: Vec<Request> = Vec::new();
+        let mut pending = admitted.into_iter();
+        for req in pending.by_ref() {
             let queue_ms = now_ms() - req.submitted_ms;
             metrics.observe_ms("queue", queue_ms);
-            let total = req.prompt.len() + 1 + req.max_new;
-            let bucket = crate::config::Manifest::bucket_for(
-                &engine.manifest().decode_buckets,
-                total,
-            )
-            .unwrap_or(*engine.manifest().decode_buckets.last().unwrap());
-            let kind = req.variant.cache_kind();
-            if pool.admit(req.id, kind, engine.manifest(), bucket).is_err() {
-                // pool full: push back and stop admitting this tick
-                metrics.inc("kv_defer");
-                let mut g = shared.queue.lock().unwrap();
-                g.waiting.push_front(req);
-                break;
+            if paged {
+                match engine.paged_admission(&req.variant, &req.prompt) {
+                    Admission::Admit => {}
+                    Admission::Defer => {
+                        metrics.inc("kv_defer");
+                        deferred.push(req);
+                        break;
+                    }
+                    Admission::Reject => {
+                        // larger than the whole pool: deferring would
+                        // spin the scheduler forever
+                        metrics.inc("errors");
+                        let _ = req.resp_tx.send(Response::error(
+                            req.id,
+                            "prompt exceeds kv pool capacity".into(),
+                        ));
+                        continue;
+                    }
+                }
+            } else {
+                let total = req.prompt.len() + 1 + req.max_new;
+                let bucket = crate::config::Manifest::bucket_for(
+                    &engine.manifest().decode_buckets,
+                    total,
+                )
+                .unwrap_or(*engine.manifest().decode_buckets.last().unwrap());
+                let kind = req.variant.cache_kind();
+                if pool.admit(req.id, kind, engine.manifest(), bucket).is_err() {
+                    // pool full: push back and stop admitting this tick
+                    metrics.inc("kv_defer");
+                    deferred.push(req);
+                    break;
+                }
             }
             let t0 = now_ms();
             match engine.start_session(&req.prompt, req.max_new, &req.variant) {
@@ -234,17 +267,28 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
                     live.push(Live { req, session, started_ms: t0 });
                 }
                 Err(e) => {
-                    let _ = pool.release(req.id);
+                    if !paged {
+                        let _ = pool.release(req.id);
+                    }
                     metrics.inc("errors");
                     let _ = req.resp_tx.send(Response::error(req.id, format!("{e:#}")));
                 }
+            }
+        }
+        deferred.extend(pending); // everything behind the deferral
+        if !deferred.is_empty() {
+            let mut g = shared.queue.lock().unwrap();
+            for r in deferred.into_iter().rev() {
+                g.waiting.push_front(r);
             }
         }
 
         // --- decode tick: one token for every live session ----------------
         let mut finished: Vec<usize> = Vec::new();
         for (i, l) in live.iter_mut().enumerate() {
-            pool.touch(l.req.id);
+            if !paged {
+                pool.touch(l.req.id);
+            }
             match engine.step_session(&mut l.session) {
                 Ok(more) => {
                     metrics.inc("tokens");
@@ -267,8 +311,14 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
         }
         // retire back-to-front so indices stay valid
         for &i in finished.iter().rev() {
-            let l = live.swap_remove(i);
-            let _ = pool.release(l.req.id);
+            let mut l = live.swap_remove(i);
+            if paged {
+                // idempotent: finish_session would release too, but
+                // errored sessions never reach it
+                engine.release_session(&mut l.session);
+            } else {
+                let _ = pool.release(l.req.id);
+            }
             if l.session.done {
                 let timing = l.session.timing.clone();
                 let n_prompt = l.session.prompt_len;
@@ -288,6 +338,23 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
                     error: None,
                 });
             }
+        }
+
+        // --- publish paged-KV occupancy/sharing gauges --------------------
+        // (served verbatim by the server's `stats`/`kv` commands)
+        if let Some(snap) = engine.paged_snapshot() {
+            metrics.set_gauge("kv_capacity_bytes", snap.capacity_bytes as f64);
+            metrics.set_gauge("kv_used_bytes", snap.used_bytes as f64);
+            metrics.set_gauge("kv_cached_bytes", snap.cached_bytes as f64);
+            metrics.set_gauge("kv_live_blocks", snap.live_blocks as f64);
+            metrics.set_gauge("kv_cached_blocks", snap.cached_blocks as f64);
+            metrics.set_gauge("kv_live_tables", snap.live_tables as f64);
+            metrics.set_gauge("paged_prefix_hit_blocks", snap.stats.prefix_hit_blocks as f64);
+            metrics.set_gauge("paged_prefix_miss_blocks", snap.stats.prefix_miss_blocks as f64);
+            metrics.set_gauge("paged_prefix_hit_rate", snap.stats.prefix_hit_rate());
+            metrics.set_gauge("paged_cow_copies", snap.stats.cow_copies as f64);
+            metrics.set_gauge("paged_evictions", snap.stats.evictions as f64);
+            metrics.set_gauge("paged_alloc_failures", snap.stats.alloc_failures as f64);
         }
     }
 }

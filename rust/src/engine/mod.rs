@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::clustering::membership::{identify, Membership};
 use crate::config::{Manifest, ServingConfig};
+use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot};
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
 use crate::runtime::{In, Runtime};
@@ -86,6 +87,17 @@ impl Variant {
     }
 }
 
+/// Outcome of the coordinator's paged admission check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// reserve and start now
+    Admit,
+    /// not enough free/evictable blocks at the moment — retry later
+    Defer,
+    /// larger than the whole pool — can never be served
+    Reject,
+}
+
 /// Phase timing for one request (Figure 12 decomposition).
 #[derive(Debug, Clone, Default)]
 pub struct Timing {
@@ -116,6 +128,11 @@ pub struct Engine {
     membership_cache: std::cell::RefCell<
         std::collections::BTreeMap<Vec<i32>, (Vec<Vec<usize>>, Vec<Vec<usize>>)>,
     >,
+    /// Paged K,V block store (None on the legacy contiguous path). The
+    /// engine is single-threaded, so RefCell suffices; sessions hold
+    /// sequence ids into it rather than cache tensors.
+    paged: Option<std::cell::RefCell<PagedKv>>,
+    next_seq: std::cell::Cell<u64>,
 }
 
 impl Engine {
@@ -123,6 +140,12 @@ impl Engine {
         let rt = Runtime::load(&cfg.artifacts_dir)?;
         let (static_membership, static_reps) = rt.manifest.static_clusters()?;
         let seed = cfg.seed;
+        let paged = cfg.paged_kv.then(|| {
+            std::cell::RefCell::new(PagedKv::new(
+                cfg.kv_block_size.max(1),
+                cfg.kv_capacity_bytes,
+            ))
+        });
         Ok(Engine {
             rt,
             cfg,
@@ -130,6 +153,8 @@ impl Engine {
             static_reps,
             rng: std::cell::RefCell::new(Rng::new(seed)),
             membership_cache: std::cell::RefCell::new(Default::default()),
+            paged,
+            next_seq: std::cell::Cell::new(0),
         })
     }
 
@@ -139,6 +164,71 @@ impl Engine {
 
     pub fn manifest(&self) -> &Manifest {
         &self.rt.manifest
+    }
+
+    // ------------------------------------------------------------------
+    // Paged KV plumbing
+    // ------------------------------------------------------------------
+
+    pub fn paged_enabled(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    pub fn paged_snapshot(&self) -> Option<PagedSnapshot> {
+        self.paged.as_ref().map(|p| p.borrow().snapshot())
+    }
+
+    /// Block-level admission decision for the coordinator, computed in
+    /// one pass (one tokenization): `Admit` when the pool can cover the
+    /// prompt's prefill blocks plus one decode block (counting evictable
+    /// cached blocks), `Defer` when it can't right now, `Reject` when it
+    /// never could. Variants the serving path doesn't route through the
+    /// paged store are admitted so `start_session` surfaces its own
+    /// error. Always `Admit` on the legacy path, where `KvPool` does its
+    /// own bucket accounting.
+    pub fn paged_admission(&self, variant: &Variant, prompt: &str) -> Admission {
+        let Some(store) = &self.paged else { return Admission::Admit };
+        if !matches!(variant, Variant::Mha | Variant::Chai | Variant::ChaiStatic) {
+            return Admission::Admit;
+        }
+        let layout = KvLayout::from_manifest(self.manifest(), variant.cache_kind());
+        let n = tokenizer::encode(prompt, true, false).len();
+        let st = store.borrow();
+        if !st.fits_ever(&layout, n) {
+            Admission::Reject
+        } else if !st.can_admit(&layout, n) {
+            Admission::Defer
+        } else {
+            Admission::Admit
+        }
+    }
+
+    /// Reserve and map a new sequence's prompt blocks (adopting shared
+    /// prefix blocks where the token-hash chain matches).
+    fn paged_admit(&self, variant: &Variant, prompt_tokens: &[i32]) -> Result<u64> {
+        let store = self.paged.as_ref().expect("paged_admit without store");
+        let m = self.manifest();
+        let kind = variant.cache_kind();
+        let layout = KvLayout::from_manifest(m, kind);
+        let mut st = store.borrow_mut();
+        // CHAI rows depend on the cluster membership, a deterministic
+        // function of the probe prefix; sharing is sound only when the
+        // first block covers that prefix (see kv::paged docs).
+        let allow_share = kind == CacheKind::Mha || st.block_size >= m.probe_tokens;
+        let seq = self.next_seq.get();
+        self.next_seq.set(seq + 1);
+        st.admit(seq, layout, &variant.name(), allow_share, prompt_tokens)?;
+        Ok(seq)
+    }
+
+    /// Return a session's blocks to the pool. Idempotent: safe to call
+    /// on error paths and again from [`Self::finish_session`].
+    pub fn release_session(&self, s: &mut Session) {
+        if let Caches::Paged { seq, .. } = &mut s.caches {
+            if let (Some(store), Some(seq)) = (&self.paged, seq.take()) {
+                let _ = store.borrow_mut().release(seq);
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -415,7 +505,17 @@ impl Engine {
     /// continuous batching).
     pub fn generate(&self, prompt: &str, max_new: usize, variant: &Variant) -> Result<Generation> {
         let mut s = self.start_session(prompt, max_new, variant)?;
-        while self.step_session(&mut s)? {}
+        loop {
+            match self.step_session(&mut s) {
+                Ok(true) => {}
+                Ok(false) => break,
+                Err(e) => {
+                    // return the session's blocks before surfacing the error
+                    self.release_session(&mut s);
+                    return Err(e);
+                }
+            }
+        }
         Ok(self.finish_session(s))
     }
 
@@ -437,9 +537,40 @@ impl Engine {
 
     /// Start a generation session: probe+cluster (CHAI), prefill, first
     /// token. Returns a [`Session`] the caller steps to completion.
+    ///
+    /// On the default paged path this first reserves the prompt's KV
+    /// blocks (adopting indexed prefix blocks), then runs prefill and
+    /// scatters the computed rows into the owned blocks; the session
+    /// carries only a sequence id, not cache tensors.
     pub fn start_session(&self, prompt: &str, max_new: usize, variant: &Variant) -> Result<Session> {
-        let m = self.manifest().clone();
         let prompt_tokens = tokenizer::encode(prompt, true, false);
+        let paged_seq = if self.paged.is_some()
+            && matches!(variant, Variant::Mha | Variant::Chai | Variant::ChaiStatic)
+        {
+            Some(self.paged_admit(variant, &prompt_tokens)?)
+        } else {
+            None
+        };
+        match self.start_session_inner(prompt_tokens, max_new, variant, paged_seq) {
+            Ok(s) => Ok(s),
+            Err(e) => {
+                // roll back the block reservation on any prefill failure
+                if let (Some(store), Some(seq)) = (&self.paged, paged_seq) {
+                    let _ = store.borrow_mut().release(seq);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn start_session_inner(
+        &self,
+        prompt_tokens: Vec<i32>,
+        max_new: usize,
+        variant: &Variant,
+        paged_seq: Option<u64>,
+    ) -> Result<Session> {
+        let m = self.manifest().clone();
         let total = prompt_tokens.len() + max_new;
         let bucket = crate::config::Manifest::bucket_for(&m.decode_buckets, total)
             .with_context(|| format!("sequence {total} exceeds max bucket"))?;
@@ -509,6 +640,28 @@ impl Engine {
             ),
         };
 
+        // migrate the prefill caches into the block store and drop the
+        // monolithic tensors — the session then reads/appends K,V
+        // through its block table only
+        let caches = match paged_seq {
+            Some(seq) => {
+                let store = self.paged.as_ref().expect("paged seq without store");
+                let mut st = store.borrow_mut();
+                match &caches {
+                    Caches::Mha { kc, vc } => {
+                        st.write_prefill_mha(seq, kc, vc, prompt_tokens.len())?
+                    }
+                    Caches::Chai { kreps, vc } => {
+                        st.write_prefill_chai(seq, kreps, vc, prompt_tokens.len())?
+                    }
+                    Caches::Paged { .. } => unreachable!("prefill produced paged caches"),
+                }
+                st.commit_prefill(seq)?;
+                Caches::Paged { seq: Some(seq), kind: variant.cache_kind() }
+            }
+            None => caches,
+        };
+
         let mut tokens = prompt_tokens.clone();
         tokens.push(self.sample(&logits));
         Ok(Session {
@@ -567,6 +720,50 @@ impl Engine {
                 *vc = outs[l + 1].to_tensor()?;
                 self.sample(&logits)
             }
+            Caches::Paged { seq, kind } => {
+                let seq =
+                    (*seq).ok_or_else(|| anyhow::anyhow!("stepping a released session"))?;
+                let kind = *kind;
+                let store = self.paged.as_ref().expect("paged session without store");
+                let mut st = store.borrow_mut();
+                // make position `pos` writable first (CoW / fresh block)
+                // so allocation failures surface before any compute
+                st.ensure_append_slot(seq)?;
+                let logits = match kind {
+                    CacheKind::Mha => {
+                        let (kc, vc) = st.gather_mha(seq, s.bucket)?;
+                        let outs = self.rt.run(
+                            &format!("decode_mha_t{}", s.bucket),
+                            &[In::Host(&tok), In::Host(&pos_t), In::Host(&kc), In::Host(&vc)],
+                        )?;
+                        let logits = outs[0].to_tensor()?;
+                        let kc2 = outs[1].to_tensor()?;
+                        let vc2 = outs[2].to_tensor()?;
+                        st.write_decode_row(seq, Some(&kc2), None, &vc2, pos)?;
+                        logits
+                    }
+                    CacheKind::Chai => {
+                        let (kreps, vc) = st.gather_chai(seq, s.bucket)?;
+                        let (mt, rt_) = s.membership_tensors.as_ref().unwrap();
+                        let mut ins: Vec<In> = vec![In::Host(&tok), In::Host(&pos_t)];
+                        for kr in kreps.iter() {
+                            ins.push(In::Host(kr));
+                        }
+                        ins.push(In::Host(&vc));
+                        ins.push(In::Host(mt));
+                        ins.push(In::Host(rt_));
+                        let outs = self.rt.run(&format!("decode_chai_t{}", s.bucket), &ins)?;
+                        let logits = outs[0].to_tensor()?;
+                        let kreps2: Vec<Tensor> =
+                            (1..=l).map(|i| outs[i].to_tensor()).collect::<Result<_>>()?;
+                        let vc2 = outs[l + 1].to_tensor()?;
+                        st.write_decode_row(seq, None, Some(&kreps2), &vc2, pos)?;
+                        logits
+                    }
+                };
+                st.append_committed(seq, *s.tokens.last().unwrap())?;
+                self.sample(&logits)
+            }
         };
         s.timing.decode_ms.push(td.elapsed().as_secs_f64() * 1e3);
         s.tokens.push(next);
@@ -576,18 +773,24 @@ impl Engine {
         Ok(!s.done)
     }
 
-    pub fn finish_session(&self, s: Session) -> Generation {
+    pub fn finish_session(&self, mut s: Session) -> Generation {
+        self.release_session(&mut s);
         let text = tokenizer::decode(&s.tokens[s.prompt_len..]);
         Generation { tokens: s.tokens, text, timing: s.timing }
     }
 }
 
-/// KV caches of a live session (host tensors; the CPU PJRT device memory
-/// *is* host memory, so this stages without extra copies of consequence —
-/// see EXPERIMENTS.md §Perf for the buffer-resident variant).
+/// KV caches of a live session. The legacy variants hold monolithic
+/// host tensors (the CPU PJRT device memory *is* host memory, so this
+/// stages without extra copies of consequence); the default `Paged`
+/// variant holds only a sequence id into the engine's block store —
+/// rows are gathered per step and the new row scattered back, so
+/// physical memory is block-granular and prefix blocks are shared
+/// across sessions.
 pub enum Caches {
     Mha { kc: Tensor, vc: Tensor },
     Chai { kreps: Vec<Tensor>, vc: Tensor },
+    Paged { seq: Option<u64>, kind: CacheKind },
 }
 
 /// A live generation (one request) owned by the engine thread.

@@ -5,6 +5,16 @@
 //! This module owns the per-request cache handles (host tensors or device
 //! buffers), the exact byte accounting that regenerates Figure 11, and a
 //! capacity-managed pool with admission control for the coordinator.
+//!
+//! Two pools coexist:
+//! * [`KvPool`] — the original contiguous accounting pool (worst-case
+//!   bucket bytes per request), kept for the `--no-paged` legacy path
+//!   and the Figure-11 byte formulas.
+//! * [`paged`] — the block-granular subsystem (refcounted block pool,
+//!   per-request block tables, prefix sharing with copy-on-write, LRU
+//!   eviction) that the coordinator serves with by default.
+
+pub mod paged;
 
 use std::collections::BTreeMap;
 
@@ -232,13 +242,20 @@ mod tests {
         check("kv-pool-accounting", 20, |rng| {
             let mut pool = KvPool::new(100 * 1024 * 1024);
             let mut live: Vec<u64> = Vec::new();
+            let mut bytes_by_id: std::collections::BTreeMap<u64, (CacheKind, usize)> =
+                Default::default();
             let mut next_id = 0u64;
             for _ in 0..100 {
-                match rng.below(3) {
+                match rng.below(4) {
                     0 => {
                         let kind = if rng.below(2) == 0 { CacheKind::Mha } else { CacheKind::Chai };
                         let bucket = [32, 128, 512][rng.below(3)];
-                        if pool.admit(next_id, kind, &m, bucket).is_ok() {
+                        if let Ok(bytes) = pool.admit(next_id, kind, &m, bucket) {
+                            crate::prop_assert!(
+                                bytes == cache_bytes(kind, &m, bucket),
+                                "admit returned {bytes} B"
+                            );
+                            bytes_by_id.insert(next_id, (kind, bytes));
                             live.push(next_id);
                         }
                         next_id += 1;
@@ -246,7 +263,19 @@ mod tests {
                     1 if !live.is_empty() => {
                         let i = rng.below(live.len());
                         let id = live.swap_remove(i);
+                        bytes_by_id.remove(&id);
                         pool.release(id).map_err(|e| e.to_string())?;
+                    }
+                    2 if !live.is_empty() => {
+                        // grow to a random bucket; a shrink request is a
+                        // no-op so tracked bytes only ever ratchet up
+                        let id = live[rng.below(live.len())];
+                        let bucket = [32, 128, 512, 2048][rng.below(4)];
+                        let (kind, before) = *bytes_by_id.get(&id).unwrap();
+                        if pool.grow(id, &m, bucket).is_ok() {
+                            let grown = cache_bytes(kind, &m, bucket);
+                            bytes_by_id.insert(id, (kind, before.max(grown)));
+                        }
                     }
                     _ if !live.is_empty() => {
                         let id = live[rng.below(live.len())];
@@ -254,11 +283,11 @@ mod tests {
                     }
                     _ => {}
                 }
-                let expect: usize = live
-                    .iter()
-                    .map(|_| 0usize)
-                    .sum();
-                let _ = expect;
+                let expect: usize = bytes_by_id.values().map(|(_, b)| *b).sum();
+                crate::prop_assert!(
+                    pool.used_bytes() == expect,
+                    "used {} != tracked sum {}", pool.used_bytes(), expect
+                );
                 crate::prop_assert!(
                     pool.len() == live.len(),
                     "entry count {} != live {}", pool.len(), live.len()

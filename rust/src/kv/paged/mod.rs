@@ -1,0 +1,1092 @@
+//! Paged, cluster-aware KV cache (vLLM-style block pool for CHAI).
+//!
+//! The contiguous `kv::KvPool` accounts worst-case bucket bytes per
+//! request; this subsystem replaces it on the serving path with real
+//! block-granular storage:
+//!
+//! * [`pool::BlockPool`] — fixed-capacity allocator of refcounted block
+//!   slabs, with LRU eviction of unreferenced cached blocks.
+//! * [`table::BlockTable`] — per-request logical→physical mapping; one
+//!   block id covers `block_size` token positions across all layers and
+//!   both K/V roles.
+//! * [`prefix::PrefixIndex`] — token-hash-chain index that lets a new
+//!   request adopt matching prompt blocks from earlier requests, with
+//!   copy-on-write when a shared tail block diverges at decode time.
+//! * [`PagedKv`] — the manager tying these together, plus the tensor
+//!   gather/scatter data plane the engine drives.
+//!
+//! CHAI geometry survives paging: a block's K region holds only each
+//! layer's `k_l` representative heads while its V region holds all `H`
+//! heads (paper §3.5 / Figure 11), so a CHAI block is strictly smaller
+//! than an MHA block of the same token span and the Fig.-11 saving
+//! compounds with cross-request block sharing.
+//!
+//! Sharing soundness: attention is causal, so K,V rows for positions
+//! `[0, n)` are a deterministic function of tokens `[0, n)` given fixed
+//! artifacts. For CHAI the rows additionally depend on the cluster
+//! membership, itself a deterministic function of the probe prefix
+//! (first `probe_tokens` tokens) and the engine seed; the engine only
+//! enables sharing when `block_size >= probe_tokens`, so any chain match
+//! pins the probe prefix and therefore the membership. Different
+//! attention variants hash into disjoint namespaces.
+
+pub mod pool;
+pub mod prefix;
+pub mod table;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Manifest;
+use crate::kv::CacheKind;
+use crate::tensor::Tensor;
+
+pub use pool::{BlockId, BlockPool, ReleaseOutcome};
+pub use prefix::{chain_hash, chain_seed, partial_hash, PrefixIndex};
+pub use table::BlockTable;
+
+/// Geometry of one sequence's K,V rows — everything the data plane
+/// needs, decoupled from the manifest so the subsystem is testable
+/// without artifacts.
+///
+/// In-block slab layout for `block_size` B (row-major, f32):
+/// ```text
+/// [ K: layer 0: k_heads[0] x B x head_dim | layer 1: ... ]
+/// [ V: layer 0: n_heads    x B x head_dim | layer 1: ... ]
+/// ```
+/// Each `(layer, head)` panel keeps its B token rows contiguous, so
+/// gather/scatter against bucket-shaped `[.., T, dh]` tensors moves
+/// whole `nt x dh` chunks per panel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    /// V heads per layer (always the full H; Table 4 shows pruning V
+    /// costs accuracy)
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// K heads per layer: `k_list[l]` for CHAI, `n_heads` for MHA
+    pub k_heads: Vec<usize>,
+}
+
+impl KvLayout {
+    pub fn from_manifest(m: &Manifest, kind: CacheKind) -> KvLayout {
+        let k_heads = match kind {
+            CacheKind::Mha => vec![m.model.n_heads; m.model.n_layers],
+            CacheKind::Chai => m.k_list.clone(),
+        };
+        KvLayout {
+            n_layers: m.model.n_layers,
+            n_heads: m.model.n_heads,
+            head_dim: m.model.head_dim,
+            k_heads,
+        }
+    }
+
+    pub fn k_sum(&self) -> usize {
+        self.k_heads.iter().sum()
+    }
+
+    /// f32 slots one token position occupies across all layers and roles.
+    pub fn floats_per_token(&self) -> usize {
+        (self.k_sum() + self.n_layers * self.n_heads) * self.head_dim
+    }
+
+    pub fn block_floats(&self, block_size: usize) -> usize {
+        self.floats_per_token() * block_size
+    }
+
+    pub fn block_bytes(&self, block_size: usize) -> usize {
+        self.block_floats(block_size) * 4
+    }
+
+    /// Offset of layer `l`'s K panel group within a block slab.
+    pub fn k_layer_offset(&self, l: usize, block_size: usize) -> usize {
+        self.k_heads[..l].iter().sum::<usize>() * block_size * self.head_dim
+    }
+
+    /// Offset of the V region within a block slab.
+    pub fn v_base(&self, block_size: usize) -> usize {
+        self.k_sum() * block_size * self.head_dim
+    }
+
+    pub fn v_layer_offset(&self, l: usize, block_size: usize) -> usize {
+        self.v_base(block_size) + l * self.n_heads * block_size * self.head_dim
+    }
+}
+
+/// Exact paged K,V occupancy of one request at sequence length `t`:
+/// `ceil(t / block_size)` blocks. The block-granular analogue of
+/// [`crate::kv::cache_bytes`] (Figure 11 with rounding to pages).
+pub fn paged_cache_bytes(kind: CacheKind, m: &Manifest, t: usize, block_size: usize) -> usize {
+    let layout = KvLayout::from_manifest(m, kind);
+    let blocks = (t + block_size - 1) / block_size;
+    blocks * layout.block_bytes(block_size)
+}
+
+/// Monotonic counters the manager maintains (surfaced through `metrics`
+/// and the server `stats` command).
+#[derive(Debug, Default, Clone)]
+pub struct PagedStats {
+    pub admitted: u64,
+    pub released: u64,
+    pub allocated_blocks: u64,
+    pub prefix_hit_blocks: u64,
+    pub prefix_miss_blocks: u64,
+    pub cow_copies: u64,
+    pub evictions: u64,
+    pub alloc_failures: u64,
+    pub appended_tokens: u64,
+}
+
+impl PagedStats {
+    /// Fraction of shareable prompt blocks adopted from the index.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_blocks + self.prefix_miss_blocks;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hit_blocks as f64 / total as f64
+        }
+    }
+}
+
+/// Point-in-time view for gauges.
+#[derive(Debug, Clone)]
+pub struct PagedSnapshot {
+    pub capacity_bytes: usize,
+    pub used_bytes: usize,
+    pub cached_bytes: usize,
+    pub live_blocks: usize,
+    pub cached_blocks: usize,
+    pub live_tables: usize,
+    pub indexed_prefixes: usize,
+    pub stats: PagedStats,
+}
+
+/// What `admit` did for a request's prompt.
+#[derive(Debug, Default, Clone)]
+pub struct AdmitReport {
+    pub total_blocks: usize,
+    pub adopted_full: usize,
+    pub adopted_partial: bool,
+}
+
+/// The paged KV manager: allocator + prefix index + per-request tables.
+#[derive(Debug)]
+pub struct PagedKv {
+    pub block_size: usize,
+    pool: BlockPool,
+    prefix: PrefixIndex,
+    tables: BTreeMap<u64, BlockTable>,
+    pub stats: PagedStats,
+}
+
+impl PagedKv {
+    pub fn new(block_size: usize, capacity_bytes: usize) -> PagedKv {
+        assert!(block_size > 0, "block_size must be positive");
+        PagedKv {
+            block_size,
+            pool: BlockPool::new(capacity_bytes),
+            prefix: PrefixIndex::new(),
+            tables: BTreeMap::new(),
+            stats: PagedStats::default(),
+        }
+    }
+
+    pub fn has(&self, id: u64) -> bool {
+        self.tables.contains_key(&id)
+    }
+
+    pub fn table(&self, id: u64) -> Option<&BlockTable> {
+        self.tables.get(&id)
+    }
+
+    pub fn snapshot(&self) -> PagedSnapshot {
+        PagedSnapshot {
+            capacity_bytes: self.pool.capacity_bytes(),
+            used_bytes: self.pool.used_bytes(),
+            cached_bytes: self.pool.cached_bytes(),
+            live_blocks: self.pool.live_blocks(),
+            cached_blocks: self.pool.cached_blocks(),
+            live_tables: self.tables.len(),
+            indexed_prefixes: self.prefix.len(),
+            stats: self.stats.clone(),
+        }
+    }
+
+    /// Block-level admission check: can the pool cover this prompt's
+    /// prefill blocks plus one decode block, counting evictable cached
+    /// bytes as available? Prefix adoption can only reduce the real
+    /// need. Note the policy is optimistic about decode growth (only
+    /// the first decode block is reserved, vLLM-style): a long
+    /// generation can still exhaust the pool mid-stream and error —
+    /// live-session preemption is a ROADMAP open item.
+    pub fn can_admit(&self, layout: &KvLayout, prompt_len: usize) -> bool {
+        let need_blocks = (prompt_len + self.block_size - 1) / self.block_size + 1;
+        need_blocks * layout.block_bytes(self.block_size) <= self.pool.reclaimable_bytes()
+    }
+
+    /// Could this prompt fit even in an *empty* pool? `false` means the
+    /// request must be rejected, not deferred — it can never be served.
+    pub fn fits_ever(&self, layout: &KvLayout, prompt_len: usize) -> bool {
+        let need_blocks = (prompt_len + self.block_size - 1) / self.block_size + 1;
+        need_blocks * layout.block_bytes(self.block_size) <= self.pool.capacity_bytes()
+    }
+
+    fn alloc_block(&mut self, floats: usize) -> Result<BlockId> {
+        loop {
+            if let Some(id) = self.pool.try_alloc(floats) {
+                self.stats.allocated_blocks += 1;
+                return Ok(id);
+            }
+            match self.pool.evict_lru() {
+                Some((vid, hash)) => {
+                    if let Some(h) = hash {
+                        self.prefix.remove(h, vid);
+                    }
+                    self.stats.evictions += 1;
+                }
+                None => {
+                    self.stats.alloc_failures += 1;
+                    bail!(
+                        "kv block pool exhausted: need {} B, used {}/{} B (nothing evictable)",
+                        floats * 4,
+                        self.pool.used_bytes(),
+                        self.pool.capacity_bytes()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Create a block table for request `id` over `tokens`, adopting
+    /// every prompt block whose token-hash chain is already indexed and
+    /// allocating the rest. `namespace` isolates attention variants;
+    /// `allow_share` disables both adoption and publication (used when
+    /// sharing would be unsound, e.g. CHAI with tiny blocks).
+    pub fn admit(
+        &mut self,
+        id: u64,
+        layout: KvLayout,
+        namespace: &str,
+        allow_share: bool,
+        tokens: &[i32],
+    ) -> Result<AdmitReport> {
+        if self.tables.contains_key(&id) {
+            bail!("sequence {id} already admitted");
+        }
+        let b = self.block_size;
+        let bf = layout.block_floats(b);
+        let seed = chain_seed(namespace);
+        let mut table = BlockTable::new(layout, b, seed, allow_share);
+        let n_full = tokens.len() / b;
+        let rem = tokens.len() % b;
+
+        let mut failure: Option<anyhow::Error> = None;
+        let mut h = seed;
+        for i in 0..n_full {
+            h = chain_hash(h, &tokens[i * b..(i + 1) * b]);
+            table.hash_chain.push(h);
+            if allow_share {
+                if let Some(bid) = self.prefix.get(h) {
+                    if self.pool.block(bid).filled == b {
+                        self.pool.retain(bid);
+                        table.blocks.push(bid);
+                        table.adopted_full += 1;
+                        self.stats.prefix_hit_blocks += 1;
+                        continue;
+                    }
+                }
+                self.stats.prefix_miss_blocks += 1;
+            }
+            match self.alloc_block(bf) {
+                Ok(bid) => table.blocks.push(bid),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if failure.is_none() && rem > 0 {
+            let ph = partial_hash(h, &tokens[n_full * b..]);
+            let mut adopted = false;
+            if allow_share {
+                if let Some(bid) = self.prefix.get(ph) {
+                    if self.pool.block(bid).filled == rem {
+                        self.pool.retain(bid);
+                        table.blocks.push(bid);
+                        table.adopted_partial = true;
+                        self.stats.prefix_hit_blocks += 1;
+                        adopted = true;
+                    }
+                }
+            }
+            if !adopted {
+                match self.alloc_block(bf) {
+                    Ok(bid) => table.blocks.push(bid),
+                    Err(e) => failure = Some(e),
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // roll back every reference this admission took
+            for bid in table.blocks.drain(..) {
+                self.pool.release(bid);
+            }
+            return Err(e);
+        }
+        table.tokens = tokens.to_vec();
+        table.len = tokens.len();
+        let report = AdmitReport {
+            total_blocks: table.blocks.len(),
+            adopted_full: table.adopted_full,
+            adopted_partial: table.adopted_partial,
+        };
+        self.stats.admitted += 1;
+        self.tables.insert(id, table);
+        Ok(report)
+    }
+
+    /// Finalize a prompt's blocks after the prefill data has been
+    /// written: mark fill levels and publish owned blocks in the prefix
+    /// index (full blocks under their chain hash, the partial tail under
+    /// its salted key).
+    pub fn commit_prefill(&mut self, id: u64) -> Result<()> {
+        let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        let b = t.block_size;
+        let n_full = t.len / b;
+        let rem = t.len % b;
+        let allow = t.allow_share;
+        // snapshot what we need so pool/prefix mutation below doesn't
+        // fight the table borrow
+        let plan: Vec<(BlockId, usize, u64)> = (0..t.blocks.len())
+            .map(|i| {
+                let bid = t.blocks[i];
+                if i < n_full {
+                    (bid, b, t.hash_chain[i])
+                } else {
+                    let ph = partial_hash(t.chain_before(n_full), &t.tokens[n_full * b..]);
+                    (bid, rem, ph)
+                }
+            })
+            .collect();
+        for (bid, filled, hash) in plan {
+            if self.pool.block(bid).hash.is_some() {
+                // adopted — content and registration already in place
+                self.pool.touch(bid);
+                continue;
+            }
+            self.pool.set_filled(bid, filled);
+            if allow && self.prefix.insert(hash, bid) {
+                self.pool.set_hash(bid, hash);
+            }
+        }
+        Ok(())
+    }
+
+    /// Make position `table.len` writable: allocate a fresh tail block
+    /// on a block boundary, or copy-on-write a shared partial tail
+    /// before the sequences diverge. Must be called before
+    /// [`Self::write_decode_row`] / [`Self::append_committed`].
+    pub fn ensure_append_slot(&mut self, id: u64) -> Result<()> {
+        let (bi, off, bf, tail) = {
+            let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            let (bi, off) = t.locate(t.len);
+            (bi, off, t.layout.block_floats(t.block_size), t.blocks.get(bi).copied())
+        };
+        match tail {
+            Some(bid) => {
+                debug_assert!(off > 0, "partial tail with zero offset");
+                if self.pool.block(bid).refs > 1 {
+                    // shared tail: diverge via copy-on-write
+                    let nb = self.alloc_block(bf)?;
+                    let src = self.pool.data(bid).to_vec();
+                    self.pool.data_mut(nb).copy_from_slice(&src);
+                    self.pool.set_filled(nb, off);
+                    self.pool.release(bid);
+                    self.tables.get_mut(&id).unwrap().blocks[bi] = nb;
+                    self.stats.cow_copies += 1;
+                } else if let Some(h) = self.pool.block(bid).hash {
+                    // sole owner of an indexed partial block: unpublish
+                    // before mutating so the index never serves stale
+                    // content
+                    self.prefix.remove(h, bid);
+                    self.pool.clear_hash(bid);
+                }
+            }
+            None => {
+                debug_assert_eq!(off, 0, "missing tail block mid-span");
+                let nb = self.alloc_block(bf)?;
+                self.tables.get_mut(&id).unwrap().blocks.push(nb);
+            }
+        }
+        Ok(())
+    }
+
+    /// Record the token written at position `table.len` (its K,V row
+    /// goes through [`Self::write_decode_row`]); publishes the block's
+    /// chain hash when it fills.
+    pub fn append_committed(&mut self, id: u64, token: i32) -> Result<()> {
+        let (bid, filled, full_hash) = {
+            let t = self.tables.get_mut(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            let (bi, off) = t.locate(t.len);
+            let bid = *t
+                .blocks
+                .get(bi)
+                .ok_or_else(|| anyhow!("append without ensure_append_slot (seq {id})"))?;
+            t.tokens.push(token);
+            t.len += 1;
+            let filled = off + 1;
+            let full_hash = if filled == t.block_size {
+                let h =
+                    chain_hash(t.chain_before(bi), &t.tokens[bi * t.block_size..t.len]);
+                t.hash_chain.push(h);
+                t.allow_share.then_some(h)
+            } else {
+                None
+            };
+            (bid, filled, full_hash)
+        };
+        self.pool.set_filled(bid, filled);
+        self.stats.appended_tokens += 1;
+        if let Some(h) = full_hash {
+            if self.pool.block(bid).hash.is_none() && self.prefix.insert(h, bid) {
+                self.pool.set_hash(bid, h);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a finished request's references. Published blocks stay
+    /// cached for prefix reuse until evicted; private ones free now.
+    pub fn release(&mut self, id: u64) -> Result<()> {
+        let t = self.tables.remove(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        for bid in t.blocks {
+            self.pool.release(bid);
+        }
+        self.stats.released += 1;
+        Ok(())
+    }
+
+    /// Evict every cached block (tests and `drop-caches` ops hook).
+    /// Returns the number of blocks freed.
+    pub fn drop_cached(&mut self) -> usize {
+        let mut n = 0;
+        while let Some((vid, hash)) = self.pool.evict_lru() {
+            if let Some(h) = hash {
+                self.prefix.remove(h, vid);
+            }
+            n += 1;
+        }
+        n
+    }
+
+    /// Internal-consistency scan used by tests.
+    pub fn check_consistency(&self) -> Result<()> {
+        self.pool.check_accounting()?;
+        for (id, t) in &self.tables {
+            if t.blocks.len() != (t.len + t.block_size - 1) / t.block_size {
+                bail!(
+                    "seq {id}: {} blocks for len {} (block_size {})",
+                    t.blocks.len(),
+                    t.len,
+                    t.block_size
+                );
+            }
+            for &bid in &t.blocks {
+                if self.pool.block(bid).refs == 0 {
+                    bail!("seq {id}: references cached/free block {bid}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Tensor data plane (engine-facing)
+    // ------------------------------------------------------------------
+
+    fn table_ref(&self, id: u64) -> Result<&BlockTable> {
+        self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))
+    }
+
+    /// Gather a sequence's K,V into dense MHA-shaped tensors
+    /// (`[L, H, bucket, dh]` each); positions past `len` stay zero.
+    pub fn gather_mha(&self, id: u64, bucket: usize) -> Result<(Tensor, Tensor)> {
+        let t = self.table_ref(id)?;
+        let lay = &t.layout;
+        let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
+        if lay.k_heads.iter().any(|&k| k != h_n) {
+            bail!("gather_mha on a clustered table");
+        }
+        if t.len > bucket {
+            bail!("sequence {} exceeds bucket {bucket}", t.len);
+        }
+        let mut kc = vec![0.0f32; l_n * h_n * bucket * dh];
+        let mut vc = vec![0.0f32; l_n * h_n * bucket * dh];
+        for (bi, &bid) in t.blocks.iter().enumerate() {
+            let t0 = bi * b;
+            let nt = self.pool.block(bid).filled.min(t.len - t0);
+            if nt == 0 {
+                continue;
+            }
+            let data = self.pool.data(bid);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let dst = ((l * h_n + h) * bucket + t0) * dh;
+                    let ksrc = lay.k_layer_offset(l, b) + h * b * dh;
+                    kc[dst..dst + nt * dh].copy_from_slice(&data[ksrc..ksrc + nt * dh]);
+                    let vsrc = lay.v_layer_offset(l, b) + h * b * dh;
+                    vc[dst..dst + nt * dh].copy_from_slice(&data[vsrc..vsrc + nt * dh]);
+                }
+            }
+        }
+        let shape = vec![l_n, h_n, bucket, dh];
+        Ok((Tensor::f32(shape.clone(), kc), Tensor::f32(shape, vc)))
+    }
+
+    /// Gather a CHAI sequence: per-layer K panels `[k_l, bucket, dh]`
+    /// plus the dense V `[L, H, bucket, dh]`.
+    pub fn gather_chai(&self, id: u64, bucket: usize) -> Result<(Vec<Tensor>, Tensor)> {
+        let t = self.table_ref(id)?;
+        let lay = &t.layout;
+        let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
+        if t.len > bucket {
+            bail!("sequence {} exceeds bucket {bucket}", t.len);
+        }
+        let mut kreps: Vec<Vec<f32>> =
+            lay.k_heads.iter().map(|&k| vec![0.0f32; k * bucket * dh]).collect();
+        let mut vc = vec![0.0f32; l_n * h_n * bucket * dh];
+        for (bi, &bid) in t.blocks.iter().enumerate() {
+            let t0 = bi * b;
+            let nt = self.pool.block(bid).filled.min(t.len - t0);
+            if nt == 0 {
+                continue;
+            }
+            let data = self.pool.data(bid);
+            for l in 0..l_n {
+                for r in 0..lay.k_heads[l] {
+                    let dst = (r * bucket + t0) * dh;
+                    let src = lay.k_layer_offset(l, b) + r * b * dh;
+                    kreps[l][dst..dst + nt * dh].copy_from_slice(&data[src..src + nt * dh]);
+                }
+                for h in 0..h_n {
+                    let dst = ((l * h_n + h) * bucket + t0) * dh;
+                    let src = lay.v_layer_offset(l, b) + h * b * dh;
+                    vc[dst..dst + nt * dh].copy_from_slice(&data[src..src + nt * dh]);
+                }
+            }
+        }
+        let kreps = lay
+            .k_heads
+            .iter()
+            .zip(kreps)
+            .map(|(&k, v)| Tensor::f32(vec![k, bucket, dh], v))
+            .collect();
+        Ok((kreps, Tensor::f32(vec![l_n, h_n, bucket, dh], vc)))
+    }
+
+    /// Scatter prefill rows `[0, len)` from MHA-shaped caches into the
+    /// sequence's *owned* blocks; adopted (hash-bearing) blocks already
+    /// hold identical content and are skipped. Call before
+    /// [`Self::commit_prefill`].
+    pub fn write_prefill_mha(&mut self, id: u64, kc: &Tensor, vc: &Tensor, len: usize) -> Result<()> {
+        let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        let lay = t.layout.clone();
+        let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
+        let bucket = *kc
+            .shape
+            .get(2)
+            .ok_or_else(|| anyhow!("kcache must be [L,H,T,dh], got {:?}", kc.shape))?;
+        if kc.shape != vec![l_n, h_n, bucket, dh] || vc.shape != kc.shape {
+            bail!("cache shape mismatch: k {:?} v {:?}", kc.shape, vc.shape);
+        }
+        if len > bucket || len > t.len {
+            bail!("prefill len {len} out of range (bucket {bucket}, table {})", t.len);
+        }
+        let ks = kc.as_f32()?;
+        let vs = vc.as_f32()?;
+        let blocks = t.blocks.clone();
+        for (bi, bid) in blocks.into_iter().enumerate() {
+            let t0 = bi * b;
+            if t0 >= len {
+                break;
+            }
+            if self.pool.block(bid).hash.is_some() {
+                continue; // adopted
+            }
+            let nt = (len - t0).min(b);
+            let data = self.pool.data_mut(bid);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let src = ((l * h_n + h) * bucket + t0) * dh;
+                    let kdst = lay.k_layer_offset(l, b) + h * b * dh;
+                    data[kdst..kdst + nt * dh].copy_from_slice(&ks[src..src + nt * dh]);
+                    let vdst = lay.v_layer_offset(l, b) + h * b * dh;
+                    data[vdst..vdst + nt * dh].copy_from_slice(&vs[src..src + nt * dh]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// CHAI prefill scatter: per-layer K panels + dense V.
+    pub fn write_prefill_chai(
+        &mut self,
+        id: u64,
+        kreps: &[Tensor],
+        vc: &Tensor,
+        len: usize,
+    ) -> Result<()> {
+        let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        let lay = t.layout.clone();
+        let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
+        if kreps.len() != l_n {
+            bail!("expected {l_n} K panels, got {}", kreps.len());
+        }
+        let bucket = *vc
+            .shape
+            .get(2)
+            .ok_or_else(|| anyhow!("vcache must be [L,H,T,dh], got {:?}", vc.shape))?;
+        if vc.shape != vec![l_n, h_n, bucket, dh] {
+            bail!("vcache shape mismatch: {:?}", vc.shape);
+        }
+        for (l, kr) in kreps.iter().enumerate() {
+            if kr.shape != vec![lay.k_heads[l], bucket, dh] {
+                bail!("K panel {l} shape mismatch: {:?}", kr.shape);
+            }
+        }
+        if len > bucket || len > t.len {
+            bail!("prefill len {len} out of range (bucket {bucket}, table {})", t.len);
+        }
+        let vs = vc.as_f32()?;
+        let blocks = t.blocks.clone();
+        for (bi, bid) in blocks.into_iter().enumerate() {
+            let t0 = bi * b;
+            if t0 >= len {
+                break;
+            }
+            if self.pool.block(bid).hash.is_some() {
+                continue; // adopted
+            }
+            let nt = (len - t0).min(b);
+            let data = self.pool.data_mut(bid);
+            for l in 0..l_n {
+                let ks = kreps[l].as_f32()?;
+                for r in 0..lay.k_heads[l] {
+                    let src = (r * bucket + t0) * dh;
+                    let dst = lay.k_layer_offset(l, b) + r * b * dh;
+                    data[dst..dst + nt * dh].copy_from_slice(&ks[src..src + nt * dh]);
+                }
+                for h in 0..h_n {
+                    let src = ((l * h_n + h) * bucket + t0) * dh;
+                    let dst = lay.v_layer_offset(l, b) + h * b * dh;
+                    data[dst..dst + nt * dh].copy_from_slice(&vs[src..src + nt * dh]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter the single new row at `pos` (== `table.len`, after
+    /// [`Self::ensure_append_slot`]) out of post-decode caches.
+    /// `kreps` is `None` for MHA tables (then `kc` must be Some).
+    pub fn write_decode_row(
+        &mut self,
+        id: u64,
+        kc: Option<&Tensor>,
+        kreps: Option<&[Tensor]>,
+        vc: &Tensor,
+        pos: usize,
+    ) -> Result<()> {
+        let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        let lay = t.layout.clone();
+        let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
+        if pos != t.len {
+            bail!("decode row {pos} != next position {}", t.len);
+        }
+        let (bi, off) = t.locate(pos);
+        let bid = *t
+            .blocks
+            .get(bi)
+            .ok_or_else(|| anyhow!("no tail block for pos {pos} (seq {id})"))?;
+        let bucket = *vc
+            .shape
+            .get(2)
+            .ok_or_else(|| anyhow!("vcache must be [L,H,T,dh], got {:?}", vc.shape))?;
+        if pos >= bucket {
+            bail!("pos {pos} outside bucket {bucket}");
+        }
+        let vs = vc.as_f32()?;
+        // borrow-friendly: pull the slab last
+        let data = self.pool.data_mut(bid);
+        for l in 0..l_n {
+            match (kc, kreps) {
+                (Some(k), None) => {
+                    let ks = k.as_f32()?;
+                    for h in 0..h_n {
+                        let src = (((l * h_n + h) * bucket) + pos) * dh;
+                        let dst = lay.k_layer_offset(l, b) + (h * b + off) * dh;
+                        data[dst..dst + dh].copy_from_slice(&ks[src..src + dh]);
+                    }
+                }
+                (None, Some(panels)) => {
+                    let ks = panels[l].as_f32()?;
+                    for r in 0..lay.k_heads[l] {
+                        let src = (r * bucket + pos) * dh;
+                        let dst = lay.k_layer_offset(l, b) + (r * b + off) * dh;
+                        data[dst..dst + dh].copy_from_slice(&ks[src..src + dh]);
+                    }
+                }
+                _ => bail!("exactly one of kc/kreps must be provided"),
+            }
+            for h in 0..h_n {
+                let src = (((l * h_n + h) * bucket) + pos) * dh;
+                let dst = lay.v_layer_offset(l, b) + (h * b + off) * dh;
+                data[dst..dst + dh].copy_from_slice(&vs[src..src + dh]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mha_layout() -> KvLayout {
+        KvLayout { n_layers: 2, n_heads: 4, head_dim: 2, k_heads: vec![4, 4] }
+    }
+
+    fn chai_layout() -> KvLayout {
+        KvLayout { n_layers: 2, n_heads: 4, head_dim: 2, k_heads: vec![2, 3] }
+    }
+
+    #[test]
+    fn chai_block_smaller_than_mha_block() {
+        // the Fig. 11 invariant at block granularity
+        let b = 16;
+        assert!(chai_layout().block_bytes(b) < mha_layout().block_bytes(b));
+        // V region identical; difference is exactly the pruned K heads
+        let diff = mha_layout().block_bytes(b) - chai_layout().block_bytes(b);
+        assert_eq!(diff, (4 - 2 + 4 - 3) * b * 2 * 4);
+    }
+
+    #[test]
+    fn admit_shares_full_and_partial_blocks() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..10).collect(); // 2 full + rem 2
+        let r1 = kv.admit(1, chai_layout(), "chai", true, &tokens).unwrap();
+        assert_eq!(r1.total_blocks, 3);
+        assert_eq!(r1.adopted_full, 0);
+        kv.commit_prefill(1).unwrap();
+        let used_one = kv.snapshot().used_bytes;
+
+        let r2 = kv.admit(2, chai_layout(), "chai", true, &tokens).unwrap();
+        assert_eq!(r2.adopted_full, 2);
+        assert!(r2.adopted_partial);
+        kv.commit_prefill(2).unwrap();
+        // full sharing: no extra bytes for the second identical prompt
+        assert_eq!(kv.snapshot().used_bytes, used_one);
+        assert_eq!(kv.stats.prefix_hit_blocks, 3);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn divergent_prompts_share_only_common_prefix() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let a: Vec<i32> = (0..12).collect();
+        let mut b = a.clone();
+        b[6] = 99; // diverges inside block 1
+        kv.admit(1, mha_layout(), "mha", true, &a).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let r = kv.admit(2, mha_layout(), "mha", true, &b).unwrap();
+        assert_eq!(r.adopted_full, 1, "only block 0 matches");
+        assert!(!r.adopted_partial);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn namespaces_are_isolated() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..8).collect();
+        kv.admit(1, chai_layout(), "chai", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let r = kv.admit(2, chai_layout(), "chai-static", true, &tokens).unwrap();
+        assert_eq!(r.adopted_full, 0, "different variant must not adopt");
+    }
+
+    #[test]
+    fn cow_triggers_on_shared_tail_divergence() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..6).collect(); // 1 full + rem 2
+        kv.admit(1, chai_layout(), "chai", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let r = kv.admit(2, chai_layout(), "chai", true, &tokens).unwrap();
+        assert!(r.adopted_partial);
+
+        // seq 2 decodes first: its append must not touch seq 1's tail
+        kv.ensure_append_slot(2).unwrap();
+        assert_eq!(kv.stats.cow_copies, 1);
+        kv.append_committed(2, 100).unwrap();
+
+        // seq 1 now owns its tail alone; appending unpublishes, no CoW
+        kv.ensure_append_slot(1).unwrap();
+        assert_eq!(kv.stats.cow_copies, 1);
+        kv.append_committed(1, 200).unwrap();
+
+        assert_eq!(kv.table(1).unwrap().len, 7);
+        assert_eq!(kv.table(2).unwrap().len, 7);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn decode_fills_publish_blocks_for_future_reuse() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..6).collect();
+        kv.admit(1, mha_layout(), "mha", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        // generate 2 tokens -> tail block fills (6 + 2 == 2 blocks of 4)
+        for tok in [7, 8] {
+            kv.ensure_append_slot(1).unwrap();
+            kv.append_committed(1, tok).unwrap();
+        }
+        kv.release(1).unwrap();
+        // a prompt equal to prompt+generated adopts both blocks
+        let all: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 7, 8];
+        let r = kv.admit(2, mha_layout(), "mha", true, &all).unwrap();
+        assert_eq!(r.adopted_full, 2);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn release_and_eviction_leave_no_leak() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..10).collect();
+        kv.admit(1, chai_layout(), "chai", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        kv.admit(2, chai_layout(), "chai", true, &tokens).unwrap();
+        kv.commit_prefill(2).unwrap();
+        kv.ensure_append_slot(2).unwrap(); // forces one CoW block
+        kv.append_committed(2, 1).unwrap();
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        let snap = kv.snapshot();
+        assert_eq!(snap.live_tables, 0);
+        // everything left is evictable cache, nothing is leaked
+        assert_eq!(snap.used_bytes, snap.cached_bytes);
+        kv.drop_cached();
+        let snap = kv.snapshot();
+        assert_eq!(snap.used_bytes, 0);
+        assert_eq!(snap.indexed_prefixes, 0);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn eviction_makes_room_under_pressure() {
+        let lay = mha_layout();
+        // room for exactly 4 blocks
+        let mut kv = PagedKv::new(4, 4 * lay.block_bytes(4));
+        let a: Vec<i32> = (0..8).collect();
+        kv.admit(1, lay.clone(), "mha", true, &a).unwrap();
+        kv.commit_prefill(1).unwrap();
+        kv.release(1).unwrap(); // 2 cached blocks
+        let b: Vec<i32> = (100..112).collect(); // needs 3 fresh blocks
+        assert!(kv.can_admit(&lay, b.len()));
+        kv.admit(2, lay.clone(), "mha", true, &b).unwrap();
+        assert!(kv.stats.evictions >= 1, "cached blocks must be evicted for new work");
+        // pool truly full now: an over-size admit fails and rolls back
+        let huge: Vec<i32> = (0..64).collect();
+        assert!(!kv.can_admit(&lay, huge.len()));
+        assert!(kv.admit(3, lay, "mha", true, &huge).is_err());
+        assert!(!kv.has(3));
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn sharing_disabled_blocks_are_private_and_freed() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..8).collect();
+        kv.admit(1, chai_layout(), "chai", false, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let r = kv.admit(2, chai_layout(), "chai", false, &tokens).unwrap();
+        assert_eq!(r.adopted_full, 0);
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        assert_eq!(kv.snapshot().used_bytes, 0, "unpublished blocks free immediately");
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_mha() {
+        let lay = mha_layout();
+        let (l_n, h_n, dh) = (lay.n_layers, lay.n_heads, lay.head_dim);
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..6).collect();
+        kv.admit(1, lay, "mha", true, &tokens).unwrap();
+        let bucket = 8;
+        let n = l_n * h_n * bucket * dh;
+        let kc = Tensor::f32(
+            vec![l_n, h_n, bucket, dh],
+            (0..n).map(|x| x as f32).collect(),
+        );
+        let vc = Tensor::f32(
+            vec![l_n, h_n, bucket, dh],
+            (0..n).map(|x| 1000.0 + x as f32).collect(),
+        );
+        kv.write_prefill_mha(1, &kc, &vc, 6).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let (gk, gv) = kv.gather_mha(1, bucket).unwrap();
+        let (gkf, kf) = (gk.as_f32().unwrap(), kc.as_f32().unwrap());
+        let (gvf, vf) = (gv.as_f32().unwrap(), vc.as_f32().unwrap());
+        for l in 0..l_n {
+            for h in 0..h_n {
+                for t in 0..bucket {
+                    let o = ((l * h_n + h) * bucket + t) * dh;
+                    for d in 0..dh {
+                        if t < 6 {
+                            assert_eq!(gkf[o + d], kf[o + d], "k l{l} h{h} t{t}");
+                            assert_eq!(gvf[o + d], vf[o + d], "v l{l} h{h} t{t}");
+                        } else {
+                            assert_eq!(gkf[o + d], 0.0, "pad k l{l} h{h} t{t}");
+                            assert_eq!(gvf[o + d], 0.0, "pad v l{l} h{h} t{t}");
+                        }
+                    }
+                }
+            }
+        }
+        // decode row appends survive the roundtrip
+        kv.ensure_append_slot(1).unwrap();
+        let mut k2 = kf.to_vec();
+        let mut v2 = vf.to_vec();
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let o = ((l * h_n + h) * bucket + 6) * dh;
+                for d in 0..dh {
+                    k2[o + d] = -1.0 - (l * h_n + h) as f32;
+                    v2[o + d] = -2.0 - (l * h_n + h) as f32;
+                }
+            }
+        }
+        let kc2 = Tensor::f32(vec![l_n, h_n, bucket, dh], k2.clone());
+        let vc2 = Tensor::f32(vec![l_n, h_n, bucket, dh], v2.clone());
+        kv.write_decode_row(1, Some(&kc2), None, &vc2, 6).unwrap();
+        kv.append_committed(1, 42).unwrap();
+        let (gk2, gv2) = kv.gather_mha(1, bucket).unwrap();
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let o = ((l * h_n + h) * bucket + 6) * dh;
+                assert_eq!(gk2.as_f32().unwrap()[o], -1.0 - (l * h_n + h) as f32);
+                assert_eq!(gv2.as_f32().unwrap()[o], -2.0 - (l * h_n + h) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_chai() {
+        let lay = chai_layout();
+        let (l_n, h_n, dh) = (lay.n_layers, lay.n_heads, lay.head_dim);
+        let k_heads = lay.k_heads.clone();
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..5).collect();
+        kv.admit(7, lay, "chai", true, &tokens).unwrap();
+        let bucket = 8;
+        let kreps: Vec<Tensor> = k_heads
+            .iter()
+            .enumerate()
+            .map(|(l, &k)| {
+                Tensor::f32(
+                    vec![k, bucket, dh],
+                    (0..k * bucket * dh).map(|x| (100 * l + x) as f32).collect(),
+                )
+            })
+            .collect();
+        let vn = l_n * h_n * bucket * dh;
+        let vc = Tensor::f32(
+            vec![l_n, h_n, bucket, dh],
+            (0..vn).map(|x| 5000.0 + x as f32).collect(),
+        );
+        kv.write_prefill_chai(7, &kreps, &vc, 5).unwrap();
+        kv.commit_prefill(7).unwrap();
+        let (gk, gv) = kv.gather_chai(7, bucket).unwrap();
+        for (l, (got, want)) in gk.iter().zip(&kreps).enumerate() {
+            assert_eq!(got.shape, want.shape);
+            let (g, w) = (got.as_f32().unwrap(), want.as_f32().unwrap());
+            for r in 0..k_heads[l] {
+                for t in 0..bucket {
+                    for d in 0..dh {
+                        let o = (r * bucket + t) * dh + d;
+                        if t < 5 {
+                            assert_eq!(g[o], w[o], "l{l} r{r} t{t}");
+                        } else {
+                            assert_eq!(g[o], 0.0, "pad l{l} r{r} t{t}");
+                        }
+                    }
+                }
+            }
+        }
+        let (g, w) = (gv.as_f32().unwrap(), vc.as_f32().unwrap());
+        for l in 0..l_n {
+            for h in 0..h_n {
+                for t in 0..5 {
+                    let o = ((l * h_n + h) * bucket + t) * dh;
+                    assert_eq!(g[o], w[o], "v l{l} h{h} t{t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_admission_release_consistent() {
+        use crate::util::proptest::check;
+        check("paged-kv-lifecycle", 15, |rng| {
+            let lay = KvLayout {
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 2,
+                k_heads: vec![1, 2],
+            };
+            let mut kv = PagedKv::new(4, 200 * lay.block_bytes(4));
+            let mut live: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..80 {
+                match rng.below(4) {
+                    0 => {
+                        let n = rng.range(1, 20);
+                        let base = rng.below(3) as i32; // few distinct prompts → sharing
+                        let tokens: Vec<i32> = (0..n as i32).map(|i| base * 1000 + i).collect();
+                        if kv.admit(next, lay.clone(), "mha", true, &tokens).is_ok() {
+                            kv.commit_prefill(next).map_err(|e| e.to_string())?;
+                            live.push(next);
+                        }
+                        next += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = live[rng.below(live.len())];
+                        // alloc failure under pressure is a legal outcome;
+                        // the append only happens once a slot exists
+                        if kv.ensure_append_slot(id).is_ok() {
+                            kv.append_committed(id, rng.below(1000) as i32)
+                                .map_err(|e| e.to_string())?;
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        let id = live.swap_remove(i);
+                        kv.release(id).map_err(|e| e.to_string())?;
+                    }
+                    _ => {}
+                }
+                kv.check_consistency().map_err(|e| e.to_string())?;
+            }
+            for id in live.drain(..) {
+                kv.release(id).map_err(|e| e.to_string())?;
+            }
+            kv.drop_cached();
+            let snap = kv.snapshot();
+            crate::prop_assert!(snap.used_bytes == 0, "leak: {} bytes", snap.used_bytes);
+            crate::prop_assert!(snap.indexed_prefixes == 0, "stale index entries");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,328 @@
+//! Fixed-capacity refcounted block allocator.
+//!
+//! The pool owns every physical KV block slab (a `Vec<f32>` holding the
+//! K and V rows for `block_size` token slots across all layers — see
+//! [`super::KvLayout`] for the in-block layout). Blocks are refcounted:
+//! a block referenced by more than one [`super::BlockTable`] is shared
+//! and must never be written (copy-on-write happens in the manager).
+//! When the last reference drops, a block that carries a prefix hash is
+//! *cached* — it stays resident and adoptable until LRU eviction needs
+//! the bytes back; an unhashed block is freed immediately.
+//!
+//! Capacity is accounted in bytes, not block counts, because CHAI and
+//! MHA tables allocate different block sizes from the same pool (CHAI K
+//! regions hold only each layer's `k_l` representative heads).
+
+use anyhow::{bail, Result};
+
+/// Index into the pool's block slab.
+pub type BlockId = usize;
+
+/// What happened to a block when a reference was dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReleaseOutcome {
+    /// other references remain
+    StillLive,
+    /// refcount hit zero; block retained for prefix reuse (evictable)
+    Cached,
+    /// refcount hit zero; block freed immediately (no prefix hash)
+    Freed,
+}
+
+#[derive(Debug)]
+pub struct Block {
+    pub data: Vec<f32>,
+    /// accounting size (data.len() * 4)
+    pub bytes: usize,
+    pub refs: u32,
+    /// prefix-index key this block is registered under, if any
+    pub hash: Option<u64>,
+    /// token slots actually written (<= block_size)
+    pub filled: usize,
+    pub last_touch: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct BlockPool {
+    capacity_bytes: usize,
+    /// bytes of live + cached blocks
+    used_bytes: usize,
+    /// bytes of cached (refs == 0, evictable) blocks
+    cached_bytes: usize,
+    slots: Vec<Option<Block>>,
+    free_slots: Vec<BlockId>,
+    clock: u64,
+}
+
+impl BlockPool {
+    pub fn new(capacity_bytes: usize) -> BlockPool {
+        BlockPool { capacity_bytes, ..Default::default() }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn cached_bytes(&self) -> usize {
+        self.cached_bytes
+    }
+
+    /// Bytes that an allocation could claim right now: free capacity plus
+    /// everything evictable.
+    pub fn reclaimable_bytes(&self) -> usize {
+        self.capacity_bytes - self.used_bytes + self.cached_bytes
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.slots.iter().flatten().filter(|b| b.refs > 0).count()
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.slots.iter().flatten().filter(|b| b.refs == 0).count()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    pub fn block(&self, id: BlockId) -> &Block {
+        self.slots[id].as_ref().expect("stale block id")
+    }
+
+    fn block_mut(&mut self, id: BlockId) -> &mut Block {
+        self.slots[id].as_mut().expect("stale block id")
+    }
+
+    pub fn data(&self, id: BlockId) -> &[f32] {
+        &self.block(id).data
+    }
+
+    /// Mutable access to a block's slab. Callers must hold the only
+    /// reference (copy-on-write is the manager's job).
+    pub fn data_mut(&mut self, id: BlockId) -> &mut [f32] {
+        let b = self.block_mut(id);
+        debug_assert!(b.refs <= 1, "in-place write to a shared block");
+        &mut b.data
+    }
+
+    /// Allocate a zeroed block of `floats` f32 slots if it fits in the
+    /// *free* capacity. Eviction of cached blocks is driven by the
+    /// manager (it must also unregister prefix hashes).
+    pub fn try_alloc(&mut self, floats: usize) -> Option<BlockId> {
+        let bytes = floats * 4;
+        if self.used_bytes + bytes > self.capacity_bytes {
+            return None;
+        }
+        let t = self.tick();
+        let block = Block {
+            data: vec![0.0; floats],
+            bytes,
+            refs: 1,
+            hash: None,
+            filled: 0,
+            last_touch: t,
+        };
+        self.used_bytes += bytes;
+        let id = match self.free_slots.pop() {
+            Some(id) => {
+                self.slots[id] = Some(block);
+                id
+            }
+            None => {
+                self.slots.push(Some(block));
+                self.slots.len() - 1
+            }
+        };
+        Some(id)
+    }
+
+    /// Take one more reference on a block (live or cached). A cached
+    /// block returns to live accounting.
+    pub fn retain(&mut self, id: BlockId) {
+        let t = self.tick();
+        let b = self.slots[id].as_mut().expect("stale block id");
+        if b.refs == 0 {
+            self.cached_bytes -= b.bytes;
+        }
+        b.refs += 1;
+        b.last_touch = t;
+    }
+
+    /// Drop one reference. A zero-ref hashed block becomes cached; an
+    /// unhashed one is freed.
+    pub fn release(&mut self, id: BlockId) -> ReleaseOutcome {
+        let t = self.tick();
+        let b = self.slots[id].as_mut().expect("stale block id");
+        assert!(b.refs > 0, "release of unreferenced block {id}");
+        b.refs -= 1;
+        b.last_touch = t;
+        if b.refs > 0 {
+            return ReleaseOutcome::StillLive;
+        }
+        if b.hash.is_some() {
+            self.cached_bytes += b.bytes;
+            ReleaseOutcome::Cached
+        } else {
+            self.free_now(id);
+            ReleaseOutcome::Freed
+        }
+    }
+
+    fn free_now(&mut self, id: BlockId) {
+        let b = self.slots[id].take().expect("stale block id");
+        self.used_bytes -= b.bytes;
+        self.free_slots.push(id);
+    }
+
+    /// Evict the least-recently-touched cached block, returning its id
+    /// and the prefix hash the caller must unregister. `None` when
+    /// nothing is evictable.
+    pub fn evict_lru(&mut self) -> Option<(BlockId, Option<u64>)> {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|b| (i, b)))
+            .filter(|(_, b)| b.refs == 0)
+            .min_by_key(|(_, b)| b.last_touch)
+            .map(|(i, _)| i)?;
+        let (hash, bytes) = {
+            let b = self.block(victim);
+            (b.hash, b.bytes)
+        };
+        self.cached_bytes -= bytes;
+        self.free_now(victim);
+        Some((victim, hash))
+    }
+
+    /// Register the prefix hash a block is indexed under. Only set once
+    /// per block lifetime (cleared by [`Self::clear_hash`] on CoW-exempt
+    /// in-place mutation).
+    pub fn set_hash(&mut self, id: BlockId, hash: u64) {
+        let b = self.block_mut(id);
+        debug_assert!(b.hash.is_none(), "re-hashing block {id}");
+        b.hash = Some(hash);
+    }
+
+    /// Forget a block's prefix hash (the caller must also remove it from
+    /// the index): the block is about to be mutated in place.
+    pub fn clear_hash(&mut self, id: BlockId) -> Option<u64> {
+        self.block_mut(id).hash.take()
+    }
+
+    pub fn set_filled(&mut self, id: BlockId, filled: usize) {
+        self.block_mut(id).filled = filled;
+    }
+
+    pub fn touch(&mut self, id: BlockId) {
+        let t = self.tick();
+        self.block_mut(id).last_touch = t;
+    }
+
+    /// Sanity check used by tests: internal byte accounting matches a
+    /// fresh scan over the slots.
+    pub fn check_accounting(&self) -> Result<()> {
+        let scan_used: usize = self.slots.iter().flatten().map(|b| b.bytes).sum();
+        let scan_cached: usize =
+            self.slots.iter().flatten().filter(|b| b.refs == 0).map(|b| b.bytes).sum();
+        if scan_used != self.used_bytes {
+            bail!("used_bytes {} != scanned {}", self.used_bytes, scan_used);
+        }
+        if scan_cached != self.cached_bytes {
+            bail!("cached_bytes {} != scanned {}", self.cached_bytes, scan_cached);
+        }
+        if self.used_bytes > self.capacity_bytes {
+            bail!("over capacity: {} > {}", self.used_bytes, self.capacity_bytes);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut p = BlockPool::new(4096);
+        let a = p.try_alloc(256).unwrap(); // 1024 B
+        let b = p.try_alloc(256).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.used_bytes(), 2048);
+        assert_eq!(p.live_blocks(), 2);
+        assert_eq!(p.release(a), ReleaseOutcome::Freed);
+        assert_eq!(p.used_bytes(), 1024);
+        assert_eq!(p.release(b), ReleaseOutcome::Freed);
+        assert_eq!(p.used_bytes(), 0);
+        p.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn capacity_is_enforced() {
+        let mut p = BlockPool::new(1024);
+        assert!(p.try_alloc(128).is_some()); // 512 B
+        assert!(p.try_alloc(128).is_some());
+        assert!(p.try_alloc(1).is_none());
+    }
+
+    #[test]
+    fn hashed_blocks_cache_and_evict() {
+        let mut p = BlockPool::new(4096);
+        let a = p.try_alloc(256).unwrap();
+        p.set_hash(a, 0xabc);
+        assert_eq!(p.release(a), ReleaseOutcome::Cached);
+        assert_eq!(p.used_bytes(), 1024);
+        assert_eq!(p.cached_bytes(), 1024);
+        assert_eq!(p.cached_blocks(), 1);
+        // adoption brings it back to live
+        p.retain(a);
+        assert_eq!(p.cached_bytes(), 0);
+        assert_eq!(p.release(a), ReleaseOutcome::Cached);
+        let (id, hash) = p.evict_lru().unwrap();
+        assert_eq!(id, a);
+        assert_eq!(hash, Some(0xabc));
+        assert_eq!(p.used_bytes(), 0);
+        assert!(p.evict_lru().is_none());
+        p.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn shared_blocks_stay_until_last_release() {
+        let mut p = BlockPool::new(4096);
+        let a = p.try_alloc(16).unwrap();
+        p.retain(a);
+        assert_eq!(p.block(a).refs, 2);
+        assert_eq!(p.release(a), ReleaseOutcome::StillLive);
+        assert_eq!(p.release(a), ReleaseOutcome::Freed);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_cached() {
+        let mut p = BlockPool::new(8192);
+        let a = p.try_alloc(16).unwrap();
+        let b = p.try_alloc(16).unwrap();
+        p.set_hash(a, 1);
+        p.set_hash(b, 2);
+        p.release(a);
+        p.release(b);
+        p.touch(a); // a is now more recent
+        let (id, _) = p.evict_lru().unwrap();
+        assert_eq!(id, b);
+    }
+
+    #[test]
+    fn slot_reuse_after_free() {
+        let mut p = BlockPool::new(4096);
+        let a = p.try_alloc(16).unwrap();
+        p.release(a);
+        let b = p.try_alloc(32).unwrap();
+        assert_eq!(a, b, "freed slot should be reused");
+        assert_eq!(p.data(b).len(), 32);
+        assert!(p.data(b).iter().all(|x| *x == 0.0), "reused slab must be zeroed");
+    }
+}

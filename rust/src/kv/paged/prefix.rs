@@ -1,0 +1,164 @@
+//! Prefix index: token-hash chains → cached/live block ids.
+//!
+//! A block's key is the FNV-1a chain hash of every token it and its
+//! predecessors cover, seeded by a per-variant namespace. Because
+//! attention is causal, the K,V rows of positions `[0, n)` are a
+//! deterministic function of tokens `[0, n)` (for CHAI, membership is a
+//! deterministic function of the probe prefix, which the first block
+//! covers — the manager gates sharing on `block_size >= probe_tokens`).
+//! Two requests whose chains agree may therefore share physical blocks.
+//!
+//! Full blocks are keyed by the chain through their last token; the
+//! partial tail of a prompt is keyed separately (salted) so it can only
+//! be adopted by a request whose prompt ends at exactly the same token.
+//! 64-bit content hashes are the same trade vLLM's prefix caching makes:
+//! collisions are possible in principle and ignored in practice.
+
+use std::collections::HashMap;
+
+use super::pool::BlockId;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+/// Salt folded into partial-tail keys so they can never alias a
+/// full-block chain key.
+const PARTIAL_SALT: u64 = 0x9e3779b97f4a7c15;
+
+fn fnv1a_step(mut h: u64, byte: u8) -> u64 {
+    h ^= byte as u64;
+    h.wrapping_mul(FNV_PRIME)
+}
+
+fn fold_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = fnv1a_step(h, b);
+    }
+    h
+}
+
+/// Seed of a chain: hashes the sharing namespace (attention variant) so
+/// e.g. online-CHAI and static-CHAI caches never alias.
+pub fn chain_seed(namespace: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in namespace.bytes() {
+        h = fnv1a_step(h, b);
+    }
+    h
+}
+
+/// Extend a chain hash over one block's tokens.
+pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = fold_u64(prev, 0x626c6f636b); // "block"
+    for t in tokens {
+        h = fold_u64(h, *t as u64);
+    }
+    h
+}
+
+/// Key for a *partial* tail block holding exactly `tokens` after the
+/// chain `prev` of full blocks.
+pub fn partial_hash(prev: u64, tokens: &[i32]) -> u64 {
+    chain_hash(prev ^ PARTIAL_SALT, tokens) ^ fold_u64(FNV_OFFSET, tokens.len() as u64)
+}
+
+/// hash → block id map. The manager keeps it consistent with block
+/// lifetimes: entries are added when a block's content is final for its
+/// key, and removed on eviction or before in-place mutation.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    map: HashMap<u64, BlockId>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    pub fn get(&self, hash: u64) -> Option<BlockId> {
+        self.map.get(&hash).copied()
+    }
+
+    /// Register `id` under `hash`. An existing entry wins: the first
+    /// publisher's block is the canonical copy and later duplicates are
+    /// simply not indexed (their owner still holds them privately).
+    pub fn insert(&mut self, hash: u64, id: BlockId) -> bool {
+        use std::collections::hash_map::Entry;
+        match self.map.entry(hash) {
+            Entry::Occupied(_) => false,
+            Entry::Vacant(v) => {
+                v.insert(id);
+                true
+            }
+        }
+    }
+
+    /// Remove `hash`, but only if it still points at `id` (a later
+    /// publisher may own the entry now).
+    pub fn remove(&mut self, hash: u64, id: BlockId) {
+        if self.map.get(&hash) == Some(&id) {
+            self.map.remove(&hash);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_is_order_and_prefix_sensitive() {
+        let s = chain_seed("chai");
+        let a = chain_hash(s, &[1, 2, 3]);
+        let b = chain_hash(s, &[3, 2, 1]);
+        assert_ne!(a, b);
+        let aa = chain_hash(a, &[4, 5]);
+        let ab = chain_hash(b, &[4, 5]);
+        assert_ne!(aa, ab, "chain must carry history");
+        // deterministic
+        assert_eq!(chain_hash(s, &[1, 2, 3]), a);
+    }
+
+    #[test]
+    fn namespaces_do_not_alias() {
+        let t = [7i32, 8, 9];
+        assert_ne!(
+            chain_hash(chain_seed("chai"), &t),
+            chain_hash(chain_seed("chai-static"), &t)
+        );
+        assert_ne!(
+            chain_hash(chain_seed("chai"), &t),
+            chain_hash(chain_seed("mha"), &t)
+        );
+    }
+
+    #[test]
+    fn partial_never_equals_full() {
+        let s = chain_seed("mha");
+        let t = [1i32, 2, 3, 4];
+        assert_ne!(partial_hash(s, &t), chain_hash(s, &t));
+        // different lengths of partial differ
+        assert_ne!(partial_hash(s, &t[..3]), partial_hash(s, &t));
+    }
+
+    #[test]
+    fn index_first_publisher_wins() {
+        let mut ix = PrefixIndex::new();
+        assert!(ix.insert(42, 1));
+        assert!(!ix.insert(42, 2));
+        assert_eq!(ix.get(42), Some(1));
+        // removing under the loser id is a no-op
+        ix.remove(42, 2);
+        assert_eq!(ix.get(42), Some(1));
+        ix.remove(42, 1);
+        assert_eq!(ix.get(42), None);
+        assert!(ix.is_empty());
+    }
+}

@@ -1,0 +1,98 @@
+//! Per-request block table: the logical → physical mapping for one
+//! sequence's K,V cache.
+//!
+//! One logical block id covers `block_size` consecutive token positions
+//! across *all* layers and both roles (K and V) — the same design vLLM
+//! uses, which makes prefix adoption atomic: adopting block `i` adopts
+//! every layer's rows for those positions at once. The CHAI-specific
+//! geometry (per-layer `k_l` K heads) lives in [`super::KvLayout`],
+//! carried here so the data plane never needs the manifest.
+
+use super::pool::BlockId;
+use super::KvLayout;
+
+#[derive(Debug)]
+pub struct BlockTable {
+    /// geometry of this sequence's rows (decides block byte size)
+    pub layout: KvLayout,
+    pub block_size: usize,
+    /// sharing namespace seed (attention variant)
+    pub seed: u64,
+    /// whether this table may adopt/publish prefix blocks
+    pub allow_share: bool,
+    /// physical block per `block_size` span of positions
+    pub blocks: Vec<BlockId>,
+    /// token ids backing the hash chain (prompt + generated)
+    pub tokens: Vec<i32>,
+    /// filled token positions (== tokens.len())
+    pub len: usize,
+    /// chain hash after each completed full block: `hash_chain[i]` keys
+    /// `blocks[i]`
+    pub hash_chain: Vec<u64>,
+    /// blocks adopted from the prefix index at admission (stats)
+    pub adopted_full: usize,
+    pub adopted_partial: bool,
+}
+
+impl BlockTable {
+    pub fn new(layout: KvLayout, block_size: usize, seed: u64, allow_share: bool) -> BlockTable {
+        BlockTable {
+            layout,
+            block_size,
+            seed,
+            allow_share,
+            blocks: Vec::new(),
+            tokens: Vec::new(),
+            len: 0,
+            hash_chain: Vec::new(),
+            adopted_full: 0,
+            adopted_partial: false,
+        }
+    }
+
+    /// Number of completely filled blocks.
+    pub fn full_blocks(&self) -> usize {
+        self.len / self.block_size
+    }
+
+    /// Tokens in the trailing partial block (0 when block-aligned).
+    pub fn tail_len(&self) -> usize {
+        self.len % self.block_size
+    }
+
+    /// Chain hash preceding block `i` (the namespace seed for i == 0).
+    pub fn chain_before(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.seed
+        } else {
+            self.hash_chain[i - 1]
+        }
+    }
+
+    /// Block index and in-block offset of a token position.
+    pub fn locate(&self, pos: usize) -> (usize, usize) {
+        (pos / self.block_size, pos % self.block_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { n_layers: 2, n_heads: 4, head_dim: 8, k_heads: vec![2, 3] }
+    }
+
+    #[test]
+    fn geometry_helpers() {
+        let mut t = BlockTable::new(layout(), 16, 7, true);
+        t.tokens = (0..40).collect();
+        t.len = 40;
+        assert_eq!(t.full_blocks(), 2);
+        assert_eq!(t.tail_len(), 8);
+        assert_eq!(t.locate(0), (0, 0));
+        assert_eq!(t.locate(16), (1, 0));
+        assert_eq!(t.locate(39), (2, 7));
+        assert_eq!(t.chain_before(0), 7);
+    }
+}

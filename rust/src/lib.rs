@@ -14,7 +14,10 @@
 //! * [`engine`] drives the probe → cluster → CHAI pipeline per request, and
 //!   the MHA / DejaVu / SpAtten / CHAI-static baselines.
 //! * [`kv`] is the clustered KV-cache manager (per-layer `k_l`-head K,
-//!   full-head V) with exact byte accounting (paper Fig 11).
+//!   full-head V) with exact byte accounting (paper Fig 11); its
+//!   [`kv::paged`] subsystem serves K,V from a refcounted block pool
+//!   with token-hash prefix sharing, copy-on-write divergence and LRU
+//!   eviction — the coordinator's default admission unit.
 //! * [`coordinator`] is the serving layer: request queue, continuous
 //!   batcher, prefill/decode scheduler; [`server`] exposes it over a TCP
 //!   line-JSON protocol.

@@ -9,6 +9,8 @@
 //!
 //! Examples:
 //!   chai serve --artifacts artifacts --bind 127.0.0.1:7777
+//!   chai serve --kv-block-size 16 --kv-capacity-mb 512   # paged KV knobs
+//!   chai serve --no-paged                                # legacy contiguous KV
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -39,6 +41,11 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         max_batch: args.usize("max-batch", 8)?,
         temperature: args.f64("temperature", 0.0)?,
         seed: args.usize("seed", 0)? as u64,
+        // paged block-pool KV is the serving default; --no-paged falls
+        // back to contiguous per-session tensors + bucket admission
+        paged_kv: !args.bool("no-paged"),
+        kv_block_size: args.usize("kv-block-size", 16)?,
+        kv_capacity_bytes: args.usize("kv-capacity-mb", 512)? * 1024 * 1024,
     })
 }
 

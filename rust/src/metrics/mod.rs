@@ -16,6 +16,8 @@ pub struct Metrics {
 struct Inner {
     counters: BTreeMap<String, u64>,
     latencies: BTreeMap<String, Histogram>,
+    /// last-write-wins values (pool occupancy, hit rates, ...)
+    gauges: BTreeMap<String, f64>,
 }
 
 impl Metrics {
@@ -39,6 +41,16 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a point-in-time gauge (overwrites the previous value).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0.0)
     }
 
     pub fn mean_ms(&self, name: &str) -> f64 {
@@ -73,7 +85,10 @@ impl Metrics {
                 })
                 .collect(),
         );
-        Json::obj(vec![("counters", counters), ("latency", lat)])
+        let gauges = Json::Obj(
+            g.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        Json::obj(vec![("counters", counters), ("latency", lat), ("gauges", gauges)])
     }
 }
 
@@ -101,6 +116,20 @@ mod tests {
         assert_eq!(
             j.get("latency").unwrap().get("ttft").unwrap().get("count").unwrap().usize().unwrap(),
             100
+        );
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("kv_used_bytes"), 0.0);
+        m.set_gauge("kv_used_bytes", 123.0);
+        m.set_gauge("kv_used_bytes", 456.0);
+        assert_eq!(m.gauge("kv_used_bytes"), 456.0);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("gauges").unwrap().get("kv_used_bytes").unwrap().usize().unwrap(),
+            456
         );
     }
 

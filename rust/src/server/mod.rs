@@ -1,7 +1,7 @@
 //! TCP line-JSON serving protocol (one JSON object per line).
 //!
 //! Request:  `{"prompt": "...", "max_new": 32, "variant": "chai"}`
-//!           `{"cmd": "stats"}`   `{"cmd": "ping"}`
+//!           `{"cmd": "stats"}`   `{"cmd": "kv"}`   `{"cmd": "ping"}`
 //! Response: `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}`
 //!           or `{"error": "..."}`.
 //!
@@ -105,6 +105,13 @@ fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
         return match cmd.str()? {
             "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
             "stats" => Ok(coord.metrics.to_json()),
+            // paged-KV occupancy + sharing view (subset of stats gauges)
+            "kv" => Ok(coord
+                .metrics
+                .to_json()
+                .opt("gauges")
+                .cloned()
+                .unwrap_or_else(|| Json::obj(vec![]))),
             other => Ok(Json::obj(vec![(
                 "error",
                 Json::Str(format!("unknown cmd {other:?}")),

@@ -1,0 +1,181 @@
+//! Integration tests for the paged KV subsystem.
+//!
+//! The store-level tests run everywhere (the block pool / prefix index /
+//! CoW machinery needs no artifacts). The coordinator-level test drives
+//! two real requests with a shared prompt prefix through the serving
+//! stack and is skipped when `rust/artifacts` is absent, like the other
+//! artifact-backed tests.
+
+use std::path::{Path, PathBuf};
+
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::Variant;
+use chai::kv::paged::{paged_cache_bytes, KvLayout, PagedKv};
+use chai::kv::CacheKind;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+fn layout() -> KvLayout {
+    // CHAI-shaped: K panels hold only each layer's k_l representative heads
+    KvLayout { n_layers: 4, n_heads: 8, head_dim: 16, k_heads: vec![3, 4, 5, 8] }
+}
+
+#[test]
+fn shared_prefix_blocks_are_adopted_and_cow_splits_on_divergence() {
+    let block = 16;
+    let mut kv = PagedKv::new(block, 64 * 1024 * 1024);
+    // 2 full blocks + a 6-token partial tail
+    let prompt: Vec<i32> = (0..38).collect();
+
+    kv.admit(1, layout(), "chai", true, &prompt).unwrap();
+    kv.commit_prefill(1).unwrap();
+    let solo_bytes = kv.snapshot().used_bytes;
+
+    // identical prompt: adopts every block, zero extra bytes
+    let report = kv.admit(2, layout(), "chai", true, &prompt).unwrap();
+    kv.commit_prefill(2).unwrap();
+    assert_eq!(report.adopted_full, 2, "both full prompt blocks adopted");
+    assert!(report.adopted_partial, "partial tail adopted");
+    assert_eq!(kv.snapshot().used_bytes, solo_bytes, "sharing must be free");
+    assert!(kv.stats.prefix_hit_rate() > 0.0);
+
+    // divergence: each sequence decodes its own continuation; the shared
+    // partial tail must copy-on-write exactly once
+    kv.ensure_append_slot(2).unwrap();
+    kv.append_committed(2, 1001).unwrap();
+    assert_eq!(kv.stats.cow_copies, 1, "CoW on first divergent append");
+    kv.ensure_append_slot(1).unwrap();
+    kv.append_committed(1, 2002).unwrap();
+    assert_eq!(kv.stats.cow_copies, 1, "sole owner appends in place");
+
+    // both sequences see their own tail
+    assert_eq!(kv.table(1).unwrap().tokens[38], 2002);
+    assert_eq!(kv.table(2).unwrap().tokens[38], 1001);
+    kv.check_consistency().unwrap();
+
+    // release: no leak — remaining bytes are all evictable cache
+    kv.release(1).unwrap();
+    kv.release(2).unwrap();
+    let snap = kv.snapshot();
+    assert_eq!(snap.live_tables, 0);
+    assert_eq!(snap.used_bytes, snap.cached_bytes, "only cached blocks remain");
+    kv.drop_cached();
+    assert_eq!(kv.snapshot().used_bytes, 0, "pool drains to zero");
+    assert_eq!(kv.snapshot().indexed_prefixes, 0, "index drains with the pool");
+}
+
+#[test]
+fn third_request_reuses_cache_after_owners_finished() {
+    let mut kv = PagedKv::new(16, 64 * 1024 * 1024);
+    let prompt: Vec<i32> = (500..540).collect();
+    kv.admit(1, layout(), "chai", true, &prompt).unwrap();
+    kv.commit_prefill(1).unwrap();
+    kv.release(1).unwrap();
+    // blocks are cached, not lost: a later identical prompt adopts them
+    let report = kv.admit(2, layout(), "chai", true, &prompt).unwrap();
+    assert_eq!(report.adopted_full, 2);
+    assert!(report.adopted_partial);
+    kv.release(2).unwrap();
+    kv.check_consistency().unwrap();
+}
+
+#[test]
+fn chai_paged_footprint_stays_below_mha() {
+    // Fig.-11 invariant at block granularity, artifact-free
+    let chai = layout();
+    let mha = KvLayout { k_heads: vec![8; 4], ..layout() };
+    for t in [1usize, 16, 100, 1000] {
+        let blocks = (t + 15) / 16;
+        assert!(
+            blocks * chai.block_bytes(16) < blocks * mha.block_bytes(16),
+            "t={t}"
+        );
+    }
+    // and against the real manifest when artifacts exist
+    if let Some(dir) = artifacts() {
+        let m = chai::config::Manifest::load(&dir).unwrap();
+        for t in [128usize, 512, 2048] {
+            let c = paged_cache_bytes(CacheKind::Chai, &m, t, 16);
+            let d = paged_cache_bytes(CacheKind::Mha, &m, t, 16);
+            assert!(c < d, "t={t}: paged chai {c} !< paged mha {d}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_shares_prefix_blocks_across_requests() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServingConfig {
+        artifacts_dir: dir,
+        max_batch: 4,
+        kv_block_size: 16,
+        ..Default::default()
+    };
+    assert!(cfg.paged_kv, "paged serving must be the default");
+    let handle = Coordinator::start(cfg).unwrap();
+    let coord = handle.coordinator.clone();
+
+    // three requests with the same prompt: the engine loads slowly, so
+    // all are queued before the first tick and admitted together; the
+    // 2nd/3rd adopt the 1st's prompt blocks (incl. the partial tail,
+    // 20 tokens = 1 full block + 4) and CoW splits the tail when the
+    // sessions decode their own continuations
+    let prompt = "the color of tom is";
+    let rxs: Vec<_> = (0..3).map(|_| coord.submit(prompt, 6, Variant::Chai)).collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.n_generated >= 1);
+    }
+
+    // gauges are published at the end of the tick that retires the last
+    // session — responses are sent slightly earlier in the same tick, so
+    // poll briefly instead of racing the engine loop
+    let m = &coord.metrics;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while (m.gauge("kv_capacity_bytes") == 0.0 || m.gauge("kv_live_tables") != 0.0)
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(
+        m.gauge("paged_prefix_hit_blocks") >= 1.0,
+        "no prefix blocks adopted: hit={} miss={}",
+        m.gauge("paged_prefix_hit_blocks"),
+        m.gauge("paged_prefix_miss_blocks"),
+    );
+    assert!(m.gauge("paged_prefix_hit_rate") > 0.0);
+    assert!(
+        m.gauge("paged_cow_copies") >= 1.0,
+        "shared tail never copy-on-wrote"
+    );
+    // all sessions finished: every block went back to the pool (what
+    // remains is evictable prefix cache, not leaked live state)
+    assert_eq!(m.gauge("kv_live_tables"), 0.0);
+    assert_eq!(m.gauge("kv_used_bytes"), m.gauge("kv_cached_bytes"));
+    assert!(m.gauge("kv_used_bytes") <= m.gauge("kv_capacity_bytes"));
+    assert_eq!(m.gauge("paged_alloc_failures"), 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn coordinator_legacy_path_still_works() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServingConfig {
+        artifacts_dir: dir,
+        max_batch: 2,
+        paged_kv: false,
+        ..Default::default()
+    };
+    let handle = Coordinator::start(cfg).unwrap();
+    let coord = handle.coordinator.clone();
+    let rx = coord.submit("the color of tom is", 4, Variant::Chai);
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(coord.metrics.gauge("kv_used_bytes"), 0.0, "no paged gauges on legacy path");
+    handle.shutdown();
+}
