@@ -9,7 +9,7 @@ use chai::bench::Table;
 use chai::clustering::{correlation, elbow};
 use chai::engine::Engine;
 use chai::model::tokenizer;
-use chai::runtime::In;
+use chai::runtime::{Backend, In};
 use chai::tensor::Tensor;
 use chai::util::args::Args;
 use chai::util::json::Json;

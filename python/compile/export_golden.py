@@ -1,0 +1,122 @@
+"""Export golden fixtures pinning the Rust reference backend to the
+pure-jnp oracles.
+
+The Rust side (``rust/src/runtime/refkernels.rs``) re-implements the
+attention kernels of ``kernels/ref.py`` and the model primitives of
+``model.py``; these fixtures are the cross-language contract. Each case is
+one ``.cbt`` file under ``rust/tests/golden/`` holding the seeded inputs
+and the jnp outputs; ``rust/tests/golden.rs`` replays the inputs through
+the Rust kernels and asserts agreement to 1e-5, and
+``python/tests/test_golden_export.py`` regenerates the cases and diffs
+them against the committed files so the contract cannot drift silently.
+
+Regenerate (from ``python/``):  python -m compile.export_golden
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tensorio
+from .kernels import ref
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+
+# (name, h, k, tq, tk, dh, q_offset, length, seed) — prefill-shaped,
+# decode-shaped (tq=1 against a longer cache) and a ragged length.
+ATTENTION_CASES = [
+    ("attn_prefill", 4, 2, 6, 6, 4, 0, 5, 0),
+    ("attn_decode", 4, 3, 1, 8, 4, 7, 8, 1),
+    ("attn_ragged", 3, 2, 5, 5, 2, 0, 3, 2),
+]
+
+
+def attention_case(name, h, k, tq, tk, dh, q_offset, length, seed):
+    rng = np.random.default_rng(seed)
+
+    def rand(*shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    q = rand(h, tq, dh)
+    kk = rand(h, tk, dh)
+    v = rand(h, tk, dh)
+    # contiguous-block membership; representative = first head per cluster
+    membership = np.array([min(i * k // h, k - 1) for i in range(h)], np.int32)
+    rep_heads = np.array(
+        [int(np.argmax(membership == j)) for j in range(k)], np.int32)
+    q_rep = q[rep_heads]
+    k_rep = kk[rep_heads]
+
+    mha_out, mha_probs = ref.mha_attention_ref(
+        jnp.asarray(q), jnp.asarray(kk), jnp.asarray(v), q_offset, length)
+    rep_scores = ref.attention_scores_ref(
+        jnp.asarray(q_rep), jnp.asarray(k_rep), q_offset, length)
+    chai_out, chai_probs = ref.clustered_attention_ref(
+        jnp.asarray(q_rep), jnp.asarray(k_rep), jnp.asarray(v),
+        jnp.asarray(membership), q_offset, length)
+    qkv_out, _ = ref.clustered_attention_qkv_ref(
+        jnp.asarray(q_rep), jnp.asarray(k_rep), jnp.asarray(v),
+        jnp.asarray(membership), jnp.asarray(rep_heads), q_offset, length)
+
+    return {
+        "q": q, "k": kk, "v": v,
+        "membership": membership, "rep_heads": rep_heads,
+        # shape [1] (tensorio's ascontiguousarray promotes 0-d anyway)
+        "q_offset": np.array([q_offset], np.int32),
+        "length": np.array([length], np.int32),
+        "mha_out": np.asarray(mha_out),
+        "mha_probs": np.asarray(mha_probs),
+        "rep_scores": np.asarray(rep_scores),
+        "chai_out": np.asarray(chai_out),
+        "chai_probs": np.asarray(chai_probs),
+        "qkv_out": np.asarray(qkv_out),
+    }
+
+
+def primitives_case(seed=7):
+    """rmsnorm / rope / swiglu from model.py — the non-attention pieces
+    the Rust interpreter re-implements."""
+    rng = np.random.default_rng(seed)
+
+    def rand(*shape):
+        return rng.standard_normal(shape).astype(np.float32)
+
+    t, d, f = 5, 8, 12
+    x = rand(t, d)
+    norm_w = (1.0 + 0.1 * rand(d)).astype(np.float32)
+    g, tr, dh = 2, 4, 6
+    rx = rand(g, tr, dh)
+    positions = np.arange(3, 3 + tr, dtype=np.int32)
+    wg, wu, wd = rand(d, f), rand(d, f), rand(f, d)
+    return {
+        "x": x,
+        "norm_w": norm_w,
+        "rmsnorm_out": np.asarray(M.rmsnorm(jnp.asarray(x), jnp.asarray(norm_w))),
+        "rope_x": rx,
+        "positions": positions,
+        "rope_out": np.asarray(M.rope(jnp.asarray(rx), jnp.asarray(positions))),
+        "wg": wg, "wu": wu, "wd": wd,
+        "swiglu_out": np.asarray(M.swiglu(jnp.asarray(x), jnp.asarray(wg),
+                                          jnp.asarray(wu), jnp.asarray(wd))),
+    }
+
+
+def all_cases():
+    cases = {name: attention_case(name, *rest)
+             for name, *rest in ATTENTION_CASES}
+    cases["primitives"] = primitives_case()
+    return cases
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name, tensors in all_cases().items():
+        path = os.path.join(OUT_DIR, f"{name}.cbt")
+        tensorio.save(path, tensors)
+        print(f"wrote {path} ({len(tensors)} tensors)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""The committed golden fixtures must match a fresh regeneration.
+
+``rust/tests/golden/*.cbt`` pin the Rust reference backend to the jnp
+oracles; this test regenerates every case from its seed and diffs it
+against the committed file, so neither side of the cross-language
+contract can drift without the other noticing.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import export_golden, tensorio
+
+GOLDEN_DIR = export_golden.OUT_DIR
+
+
+def test_golden_dir_is_committed():
+    assert os.path.isdir(GOLDEN_DIR), (
+        f"{GOLDEN_DIR} missing — run `python -m compile.export_golden`")
+
+
+@pytest.mark.parametrize("name", [c[0] for c in export_golden.ATTENTION_CASES]
+                         + ["primitives"])
+def test_committed_fixture_matches_regeneration(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.cbt")
+    assert os.path.exists(path), (
+        f"{path} missing — run `python -m compile.export_golden`")
+    committed = tensorio.load(path)
+    fresh = export_golden.all_cases()[name]
+    assert set(committed) == set(fresh), (
+        f"{name}: tensor set changed: {sorted(committed)} vs {sorted(fresh)}")
+    for key, want in fresh.items():
+        got = committed[key]
+        assert got.shape == tuple(np.shape(want)), f"{name}/{key} shape"
+        if got.dtype == np.int32:
+            np.testing.assert_array_equal(got, want, err_msg=f"{name}/{key}")
+        else:
+            # float ops may differ in the last ulp across BLAS builds
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"{name}/{key}")
+
+
+def test_attention_goldens_are_row_stochastic():
+    # sanity on the committed artifacts themselves (independent of jax)
+    for name, h, k, tq, tk, dh, q_offset, length, _ in \
+            export_golden.ATTENTION_CASES:
+        case = tensorio.load(os.path.join(GOLDEN_DIR, f"{name}.cbt"))
+        probs = case["mha_probs"]
+        assert probs.shape == (h, tq, tk)
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-4)
+        # causality: no mass beyond the query position or the length
+        for qi in range(tq):
+            limit = min(q_offset + qi + 1, length)
+            assert probs[:, qi, limit:].sum() == pytest.approx(0.0, abs=1e-6)

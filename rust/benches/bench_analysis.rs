@@ -15,7 +15,7 @@ use chai::bench::Table;
 use chai::clustering::{correlation, elbow, membership};
 use chai::engine::Engine;
 use chai::model::tokenizer;
-use chai::runtime::In;
+use chai::runtime::{Backend, In};
 use chai::tensor::Tensor;
 use chai::util::json::Json;
 

@@ -9,7 +9,7 @@ mod common;
 use chai::bench::{fmt_ms, Table};
 use chai::engine::{Engine, Variant};
 use chai::model::tokenizer;
-use chai::runtime::In;
+use chai::runtime::{Backend, In};
 use chai::tensor::Tensor;
 use chai::util::json::Json;
 use chai::util::stats::{median, time_ms};

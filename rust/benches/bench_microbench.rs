@@ -4,21 +4,22 @@
 //! optimization iteration.
 //!
 //! Run:  cargo bench --bench bench_microbench [-- --iters 10]
+//!       cargo bench --bench bench_microbench -- --backend ref   # no artifacts needed
 
 mod common;
 
 use chai::bench::{fmt_ms, Table};
 use chai::engine::Engine;
 use chai::model::tokenizer;
-use chai::runtime::In;
+use chai::runtime::{Backend, In};
 use chai::tensor::Tensor;
 use chai::util::json::Json;
 use chai::util::stats::{median, time_ms};
 
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
-    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
-    let engine = Engine::from_dir(&dir)?;
+    let Some(cfg) = common::serving_config(&args) else { return Ok(()) };
+    let engine = Engine::load(cfg)?;
     let m = engine.manifest().clone();
     let iters = args.usize("iters", 6)?;
     let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
@@ -64,20 +65,25 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    // ---- transfer cost ----------------------------------------------------
-    let mut xfer = Table::new("Host->device upload cost", &["tensor", "MiB", "median ms"]);
-    for &t in &[128usize, 2048] {
-        let kc = Tensor::zeros_f32(&[l, h, t, dh]);
-        let ms = median(&time_ms(2, iters, || {
-            engine.rt.upload(&kc).unwrap();
-        }));
-        xfer.row(vec![
-            format!("kv cache T={t}"),
-            format!("{:.1}", kc.nbytes() as f64 / 1048576.0),
-            fmt_ms(ms),
-        ]);
+    // ---- transfer cost (PJRT-only: host->device upload) ------------------
+    if engine.backend_name() == "xla" {
+        // a bare client is enough to time uploads — no second Runtime
+        // (and no duplicate device-resident weights)
+        let client = xla::PjRtClient::cpu()?;
+        let mut xfer = Table::new("Host->device upload cost", &["tensor", "MiB", "median ms"]);
+        for &t in &[128usize, 2048] {
+            let kc = Tensor::zeros_f32(&[l, h, t, dh]);
+            let ms = median(&time_ms(2, iters, || {
+                chai::runtime::upload(&client, &kc).unwrap();
+            }));
+            xfer.row(vec![
+                format!("kv cache T={t}"),
+                format!("{:.1}", kc.nbytes() as f64 / 1048576.0),
+                fmt_ms(ms),
+            ]);
+        }
+        xfer.print();
     }
-    xfer.print();
 
     // ---- clustering cost ---------------------------------------------------
     let toks = tokenizer::encode("the color of tom is red .", true, false);

@@ -3,6 +3,7 @@
 //! the system-level counterpart of Figure 12.
 //!
 //! Run:  cargo bench --bench bench_serving [-- --requests 16]
+//!       cargo bench --bench bench_serving -- --backend ref   # no artifacts needed
 
 mod common;
 
@@ -16,7 +17,7 @@ use chai::util::stats::{mean, percentile};
 
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
-    let Some(dir) = common::require_artifacts(&args) else { return Ok(()) };
+    let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;
 
@@ -28,11 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     for variant_name in ["mha", "chai"] {
         for rate in [2.0f64, 8.0] {
-            let cfg = ServingConfig {
-                artifacts_dir: dir.clone(),
-                max_batch: 8,
-                ..Default::default()
-            };
+            let cfg = ServingConfig { max_batch: 8, ..base_cfg.clone() };
             let handle = Coordinator::start(cfg)?;
             let coord = handle.coordinator.clone();
             let variant = Variant::parse(variant_name)?;

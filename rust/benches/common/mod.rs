@@ -5,6 +5,7 @@
 
 use std::path::PathBuf;
 
+use chai::config::ServingConfig;
 use chai::util::args::Args;
 use chai::util::json::Json;
 
@@ -42,4 +43,21 @@ pub fn require_artifacts(args: &Args) -> Option<PathBuf> {
         eprintln!("[bench] artifacts missing — run `make artifacts` first; skipping");
         None
     }
+}
+
+/// Backend-aware serving config: honors `--backend ref|xla|auto`. The
+/// reference backend runs without artifacts (seeded toy model), so
+/// `--backend ref` un-gates a bench on a fresh checkout; otherwise the
+/// artifacts requirement applies as before.
+#[allow(dead_code)] // each bench binary compiles its own copy of this module
+pub fn serving_config(args: &Args) -> Option<ServingConfig> {
+    let d = artifacts_dir(args);
+    let backend = args.str("backend", "auto");
+    if backend != "ref" && !d.join("manifest.json").exists() {
+        eprintln!(
+            "[bench] artifacts missing — run `make artifacts` or pass --backend ref; skipping"
+        );
+        return None;
+    }
+    Some(ServingConfig { artifacts_dir: d, backend, ..Default::default() })
 }

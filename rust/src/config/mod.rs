@@ -22,6 +22,10 @@ pub struct ModelConfig {
     pub d_ff: usize,
     pub max_seq: usize,
     pub n_params: usize,
+    /// RoPE base (the reference backend computes the forward itself;
+    /// the AOT path has these baked into the lowered HLO)
+    pub rope_theta: f64,
+    pub rms_eps: f64,
 }
 
 /// One AOT-compiled executable: shapes of its runtime inputs/outputs.
@@ -67,6 +71,10 @@ pub struct Manifest {
     pub k_list: Vec<usize>,
     pub k_max: usize,
     pub attn_impl: String,
+    /// In-memory offline clusters `(membership, reps)` — set by backends
+    /// whose manifest is synthesized (no clusters.json on disk); when
+    /// `None`, [`Manifest::static_clusters`] reads the file.
+    pub clusters: Option<(Vec<Vec<usize>>, Vec<Vec<usize>>)>,
 }
 
 fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
@@ -96,6 +104,9 @@ impl Manifest {
             d_ff: m.get("d_ff")?.usize()?,
             max_seq: m.get("max_seq")?.usize()?,
             n_params: j.get("n_params")?.usize()?,
+            // older manifests predate these keys; the python defaults apply
+            rope_theta: m.opt("rope_theta").map(|v| v.num()).transpose()?.unwrap_or(10000.0),
+            rms_eps: m.opt("rms_eps").map(|v| v.num()).transpose()?.unwrap_or(1e-5),
         };
         let mut artifacts = BTreeMap::new();
         for a in j.get("artifacts")?.arr()? {
@@ -129,6 +140,7 @@ impl Manifest {
             k_max: j.get("k_max")?.usize()?,
             k_list,
             attn_impl: j.get("attn_impl")?.str()?.to_string(),
+            clusters: None,
         })
     }
 
@@ -148,8 +160,12 @@ impl Manifest {
         buckets.iter().copied().filter(|b| *b >= len).min()
     }
 
-    /// The CHAI-static membership/reps from clusters.json (offline phase).
+    /// The CHAI-static membership/reps from the offline phase: the
+    /// in-memory clusters of a synthesized manifest, or clusters.json.
     pub fn static_clusters(&self) -> Result<(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+        if let Some(c) = &self.clusters {
+            return Ok(c.clone());
+        }
         let j = Json::parse_file(&self.dir.join("clusters.json"))?;
         let mut membership = Vec::new();
         let mut reps = Vec::new();
@@ -171,6 +187,10 @@ impl Manifest {
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     pub artifacts_dir: PathBuf,
+    /// compute backend: "xla" (AOT artifacts), "ref" (pure-rust
+    /// interpreter, no artifacts needed), or "auto" (xla when
+    /// `artifacts_dir` holds a manifest, else ref)
+    pub backend: String,
     /// attention variant the engine serves with
     pub variant: String,
     /// max new tokens per request default
@@ -195,6 +215,7 @@ impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig {
             artifacts_dir: PathBuf::from("artifacts"),
+            backend: "auto".into(),
             variant: "chai".into(),
             max_new_tokens: 32,
             max_batch: 8,

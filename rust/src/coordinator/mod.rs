@@ -187,6 +187,10 @@ struct Live {
 /// the legacy contiguous [`KvPool`] worst-case bucket accounting is
 /// used instead.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
+    // surface which compute backend this engine serves with (the server's
+    // `stats` command and benches read these back)
+    metrics.set_info("backend", engine.backend_name());
+    metrics.set_info("model", &engine.manifest().model.name);
     let paged = engine.paged_enabled();
     // legacy bucket-accounting pool (only consulted when !paged)
     let mut pool = KvPool::new(cfg.kv_capacity_bytes);

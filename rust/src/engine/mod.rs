@@ -1,5 +1,8 @@
 //! Generation engine: drives the paper's probe → cluster → CHAI pipeline
-//! (Figure 10) plus every baseline, on top of the PJRT runtime.
+//! (Figure 10) plus every baseline, on top of a pluggable compute
+//! backend ([`crate::runtime::Backend`]: the AOT/PJRT runtime or the
+//! pure-rust reference interpreter — selected by
+//! [`ServingConfig::backend`]).
 //!
 //! Request flow for CHAI (Figure 10b/c):
 //!   1. dense-MHA **probe** over the first 5 tokens (`probe_mha` artifact)
@@ -23,7 +26,7 @@ use crate::config::{Manifest, ServingConfig};
 use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot};
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
-use crate::runtime::{In, Runtime};
+use crate::runtime::{backend_for, Backend, In};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -116,7 +119,10 @@ pub struct Generation {
 }
 
 pub struct Engine {
-    pub rt: Runtime,
+    /// Compute backend behind the [`Backend`] seam: the AOT/XLA runtime
+    /// or the pure-rust reference interpreter — the engine drives both
+    /// through the same artifact-name contract.
+    pub rt: Box<dyn Backend>,
     pub cfg: ServingConfig,
     static_membership: Vec<Vec<usize>>,
     static_reps: Vec<Vec<usize>>,
@@ -137,8 +143,8 @@ pub struct Engine {
 
 impl Engine {
     pub fn load(cfg: ServingConfig) -> Result<Engine> {
-        let rt = Runtime::load(&cfg.artifacts_dir)?;
-        let (static_membership, static_reps) = rt.manifest.static_clusters()?;
+        let rt = backend_for(&cfg)?;
+        let (static_membership, static_reps) = rt.manifest().static_clusters()?;
         let seed = cfg.seed;
         let paged = cfg.paged_kv.then(|| {
             std::cell::RefCell::new(PagedKv::new(
@@ -163,7 +169,12 @@ impl Engine {
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.rt.manifest
+        self.rt.manifest()
+    }
+
+    /// Short name of the active compute backend ("xla" | "ref").
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.name()
     }
 
     // ------------------------------------------------------------------

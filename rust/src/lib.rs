@@ -4,10 +4,15 @@
 //! This crate is the Layer-3 serving coordinator of the three-layer stack
 //! described in `DESIGN.md`:
 //!
-//! * [`runtime`] loads AOT-compiled HLO artifacts (produced by the python
-//!   compile path in `python/compile/`) onto a PJRT CPU client and executes
-//!   them with persistent device buffers — python is never on the request
-//!   path.
+//! * [`runtime`] is the pluggable compute seam ([`runtime::Backend`]):
+//!   the XLA path loads AOT-compiled HLO artifacts (produced by the
+//!   python compile path in `python/compile/`) onto a PJRT CPU client
+//!   and executes them with persistent device buffers — python is never
+//!   on the request path; the pure-rust reference path
+//!   ([`runtime::reference::RefBackend`]) interprets the same artifact
+//!   contract over host tensors (seeded toy model when no artifacts
+//!   exist), so the whole serving stack runs under `cargo test` on a
+//!   fresh checkout.
 //! * [`clustering`] implements the paper's offline elbow analysis and the
 //!   online 5-token cluster-membership identification (k-means++ over
 //!   per-head attention features).

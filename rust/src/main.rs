@@ -9,6 +9,7 @@
 //!
 //! Examples:
 //!   chai serve --artifacts artifacts --bind 127.0.0.1:7777
+//!   chai serve --backend ref                             # pure-rust backend (no artifacts needed)
 //!   chai serve --kv-block-size 16 --kv-capacity-mb 512   # paged KV knobs
 //!   chai serve --no-paged                                # legacy contiguous KV
 //!   chai generate --prompt "the color of tom is" --variant chai
@@ -27,7 +28,7 @@ use chai::coordinator::Coordinator;
 use chai::engine::{Engine, Variant};
 use chai::eval;
 use chai::kv;
-use chai::runtime::In;
+use chai::runtime::{Backend, In};
 use chai::server::Server;
 use chai::tensor::Tensor;
 use chai::util::args::Args;
@@ -36,6 +37,9 @@ use chai::util::json::Json;
 fn serving_config(args: &Args) -> Result<ServingConfig> {
     Ok(ServingConfig {
         artifacts_dir: PathBuf::from(args.str("artifacts", "artifacts")),
+        // xla | ref | auto (auto = xla when artifacts exist, else the
+        // pure-rust reference backend with a seeded toy model)
+        backend: args.str("backend", "auto"),
         variant: args.str("variant", "chai"),
         max_new_tokens: args.usize("max-new", 32)?,
         max_batch: args.usize("max-batch", 8)?,
@@ -183,8 +187,17 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
-    let m = chai::config::Manifest::load(&dir)?;
+    let cfg = serving_config(args)?;
+    // static facts only: read the manifest (or synthesize the toy one)
+    // without building an engine or loading/uploading weights; backend
+    // resolution/validation is shared with the engine path
+    let backend = chai::runtime::resolve_backend(&cfg)?;
+    let m = if cfg.artifacts_dir.join("manifest.json").exists() {
+        chai::config::Manifest::load(&cfg.artifacts_dir)?
+    } else {
+        chai::runtime::reference::RefBackend::toy(cfg.seed).manifest().clone()
+    };
+    println!("backend:     {backend}");
     println!("model:       {} ({} params)", m.model.name, m.model.n_params);
     println!(
         "dims:        L={} H={} d={} dh={} ff={} vocab={}",

@@ -18,6 +18,8 @@ struct Inner {
     latencies: BTreeMap<String, Histogram>,
     /// last-write-wins values (pool occupancy, hit rates, ...)
     gauges: BTreeMap<String, f64>,
+    /// static string facts (backend name, model name, ...)
+    infos: BTreeMap<String, String>,
 }
 
 impl Metrics {
@@ -51,6 +53,16 @@ impl Metrics {
 
     pub fn gauge(&self, name: &str) -> f64 {
         self.inner.lock().unwrap().gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Record a static string fact (e.g. `backend` = "ref").
+    pub fn set_info(&self, name: &str, value: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.infos.insert(name.to_string(), value.to_string());
+    }
+
+    pub fn info(&self, name: &str) -> Option<String> {
+        self.inner.lock().unwrap().infos.get(name).cloned()
     }
 
     pub fn mean_ms(&self, name: &str) -> f64 {
@@ -88,7 +100,15 @@ impl Metrics {
         let gauges = Json::Obj(
             g.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
         );
-        Json::obj(vec![("counters", counters), ("latency", lat), ("gauges", gauges)])
+        let infos = Json::Obj(
+            g.infos.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("latency", lat),
+            ("gauges", gauges),
+            ("info", infos),
+        ])
     }
 }
 
@@ -131,6 +151,16 @@ mod tests {
             j.get("gauges").unwrap().get("kv_used_bytes").unwrap().usize().unwrap(),
             456
         );
+    }
+
+    #[test]
+    fn infos_surface_in_json() {
+        let m = Metrics::new();
+        assert_eq!(m.info("backend"), None);
+        m.set_info("backend", "ref");
+        assert_eq!(m.info("backend").as_deref(), Some("ref"));
+        let j = m.to_json();
+        assert_eq!(j.get("info").unwrap().get("backend").unwrap().str().unwrap(), "ref");
     }
 
     #[test]

@@ -1,7 +1,19 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute with
-//! persistent device buffers.
+//! Compute backends: the [`Backend`] seam the engine drives, with two
+//! implementations.
 //!
-//! Design notes:
+//! * [`Runtime`] (alias [`XlaBackend`]) — PJRT runtime: load AOT HLO-text
+//!   artifacts, compile once, execute with persistent device buffers.
+//! * [`reference::RefBackend`] — pure-Rust interpreter with the exact
+//!   masking/softmax/cluster-gather semantics of
+//!   `python/compile/kernels/ref.py`; needs no artifacts (it can
+//!   synthesize a seeded toy model), so the full serving stack is
+//!   testable by `cargo test` on a fresh checkout.
+//!
+//! [`backend_for`] selects by [`crate::config::ServingConfig::backend`]
+//! (`xla` | `ref` | `auto`); `auto` falls back to the reference backend
+//! when no artifacts are present.
+//!
+//! PJRT design notes:
 //! * HLO **text** is the interchange format (`HloModuleProto::from_text_file`
 //!   reassigns instruction ids; serialized jax≥0.5 protos are rejected by
 //!   xla_extension 0.5.1).
@@ -14,6 +26,9 @@
 //!   result arrives either as one tuple buffer or already untupled —
 //!   [`Executable::run`] normalizes both cases.
 
+pub mod refkernels;
+pub mod reference;
+
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -21,8 +36,88 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ArtifactSpec, Manifest};
+use crate::config::{ArtifactSpec, Manifest, ServingConfig};
 use crate::tensor::{Data, Tensor};
+
+/// The compute seam between the engine and whatever executes the model
+/// graphs. Implementations take the artifact-call contract of the AOT
+/// manifest (`run("decode_mha_t32", inputs)` → outputs) so sessions,
+/// paged gather/scatter, CHAI membership probing and admission behave
+/// identically on every backend.
+pub trait Backend {
+    /// Shape/bucket/cluster source of truth for this backend.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute one artifact by manifest name.
+    fn run(&self, name: &str, extras: &[In]) -> Result<Vec<Out>>;
+
+    /// Precompile/prepare artifacts (no-op where compilation is free).
+    fn warmup(&self, _names: &[&str]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Short identifier for logs/metrics ("xla" | "ref").
+    fn name(&self) -> &'static str;
+}
+
+/// The AOT/PJRT implementation of [`Backend`].
+pub type XlaBackend = Runtime;
+
+impl Backend for Runtime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, extras: &[In]) -> Result<Vec<Out>> {
+        Runtime::run(self, name, extras)
+    }
+
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        Runtime::warmup(self, names)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Resolve (and validate) which backend a serving config selects,
+/// without constructing it: `auto` resolves by artifact presence, an
+/// explicit `xla` without artifacts is an error. The single source of
+/// truth for backend names — `backend_for` and `chai info` both use it.
+pub fn resolve_backend(cfg: &ServingConfig) -> Result<&'static str> {
+    let have_artifacts = cfg.artifacts_dir.join("manifest.json").exists();
+    match cfg.backend.as_str() {
+        "xla" if have_artifacts => Ok("xla"),
+        "xla" => bail!(
+            "backend xla needs artifacts at {} (run `make artifacts`, or use --backend ref)",
+            cfg.artifacts_dir.display()
+        ),
+        "ref" => Ok("ref"),
+        "auto" | "" => Ok(if have_artifacts { "xla" } else { "ref" }),
+        other => bail!("unknown backend {other:?} (expected ref|xla|auto)"),
+    }
+}
+
+/// Build the backend a serving config asks for. `auto` (the default)
+/// uses the AOT/XLA path when `artifacts_dir` holds a manifest and
+/// falls back to the pure-Rust reference backend (seeded toy model)
+/// otherwise, so the stack always comes up.
+pub fn backend_for(cfg: &ServingConfig) -> Result<Box<dyn Backend>> {
+    match resolve_backend(cfg)? {
+        "xla" => Ok(Box::new(Runtime::load(&cfg.artifacts_dir)?)),
+        _ => {
+            if !cfg.artifacts_dir.join("manifest.json").exists() {
+                eprintln!(
+                    "[runtime] no artifacts at {}; serving with the pure-rust \
+                     reference backend (seeded toy model)",
+                    cfg.artifacts_dir.display()
+                );
+            }
+            Ok(Box::new(reference::RefBackend::load_or_toy(&cfg.artifacts_dir, cfg.seed)?))
+        }
+    }
+}
 
 /// Output of an execution: either still on device or already on host.
 pub enum Out {

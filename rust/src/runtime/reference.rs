@@ -1,0 +1,1188 @@
+//! `RefBackend` — the pure-Rust reference implementation of [`Backend`].
+//!
+//! Interprets every artifact family the engine calls (`probe_mha`,
+//! `analyze`, `logprob_*`, `prefill_{mha,chai}_t*`, `decode_{mha,chai}_t*`)
+//! over host [`Tensor`]s using the [`super::refkernels`] oracles, with the
+//! exact masking/softmax/cluster-gather semantics of
+//! `python/compile/kernels/ref.py` / `model.py`.
+//!
+//! Two ways to get one:
+//!
+//! * [`RefBackend::load`] — real trained weights: reads `manifest.json`,
+//!   `weights.cbt` and `clusters.json` from an artifacts dir. No HLO
+//!   files or XLA toolchain needed, so this doubles as the correctness
+//!   oracle for the AOT path once artifacts exist.
+//! * [`RefBackend::toy`] — no artifacts at all: synthesizes a small
+//!   deterministic toy model (seeded xoshiro weights, head-group
+//!   redundancy induced like `model.init_params`) plus a matching
+//!   in-memory manifest. This is what un-gates the engine, coordinator
+//!   and server integration tests on a fresh checkout.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::refkernels as rk;
+use super::{Backend, In, Out};
+use crate::config::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
+use crate::tensor::{io, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub struct RefBackend {
+    manifest: Manifest,
+    weights: BTreeMap<String, Tensor>,
+    /// cumulative executions per artifact (parity with `Runtime`)
+    pub exec_counts: RefCell<BTreeMap<String, u64>>,
+}
+
+// ---------------------------------------------------------------------------
+// Construction
+// ---------------------------------------------------------------------------
+
+impl RefBackend {
+    /// Real weights when the dir holds a manifest, toy model otherwise.
+    pub fn load_or_toy(dir: &Path, seed: u64) -> Result<RefBackend> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::toy(seed))
+        }
+    }
+
+    /// Interpret the real artifact set: manifest + weights.cbt (the HLO
+    /// files are not needed — that is the point).
+    pub fn load(dir: &Path) -> Result<RefBackend> {
+        let manifest = Manifest::load(dir)?;
+        let weights = io::load(&dir.join("weights.cbt"))
+            .context("ref backend needs weights.cbt next to manifest.json")?;
+        Self::new(manifest, weights)
+    }
+
+    /// Deterministic toy model (no filesystem access).
+    pub fn toy(seed: u64) -> RefBackend {
+        Self::toy_custom(seed, vec![2, 3])
+    }
+
+    /// Toy model with an explicit per-layer cluster count. Tests use
+    /// `k_list = [H; L]` for the singleton-cluster == MHA identity on
+    /// the prefill/decode artifacts (which bake `k_list` statically).
+    pub fn toy_custom(seed: u64, k_list: Vec<usize>) -> RefBackend {
+        let model = toy_model_config(k_list.len());
+        let weights = toy_weights(&model, &k_list, seed);
+        let manifest = toy_manifest(model, k_list, weights.keys().cloned().collect());
+        Self::new(manifest, weights).expect("toy backend is self-consistent")
+    }
+
+    fn new(manifest: Manifest, weights: BTreeMap<String, Tensor>) -> Result<RefBackend> {
+        let m = &manifest.model;
+        let hd = m.n_heads * m.head_dim;
+        let mut expect = vec![
+            ("emb".to_string(), vec![m.vocab_size, m.d_model]),
+            ("final_norm".to_string(), vec![m.d_model]),
+            ("lm_head".to_string(), vec![m.d_model, m.vocab_size]),
+        ];
+        for i in 0..m.n_layers {
+            expect.push((format!("l{i}.attn_norm"), vec![m.d_model]));
+            expect.push((format!("l{i}.wq"), vec![m.d_model, hd]));
+            expect.push((format!("l{i}.wk"), vec![m.d_model, hd]));
+            expect.push((format!("l{i}.wv"), vec![m.d_model, hd]));
+            expect.push((format!("l{i}.wo"), vec![hd, m.d_model]));
+            expect.push((format!("l{i}.mlp_norm"), vec![m.d_model]));
+            expect.push((format!("l{i}.wg"), vec![m.d_model, m.d_ff]));
+            expect.push((format!("l{i}.wu"), vec![m.d_model, m.d_ff]));
+            expect.push((format!("l{i}.wd"), vec![m.d_ff, m.d_model]));
+        }
+        for (name, shape) in expect {
+            let t = weights
+                .get(&name)
+                .ok_or_else(|| anyhow!("weight {name} missing"))?;
+            if t.shape != shape {
+                bail!("weight {name}: shape {:?}, expected {:?}", t.shape, shape);
+            }
+            t.as_f32().with_context(|| format!("weight {name} must be f32"))?;
+        }
+        if manifest.k_list.iter().any(|&k| k == 0 || k > m.n_heads) {
+            bail!("manifest k_list {:?} invalid for H={}", manifest.k_list, m.n_heads);
+        }
+        Ok(RefBackend { manifest, weights, exec_counts: RefCell::new(BTreeMap::new()) })
+    }
+
+    fn w(&self, name: &str) -> Result<&[f32]> {
+        self.weights
+            .get(name)
+            .ok_or_else(|| anyhow!("weight {name} missing"))?
+            .as_f32()
+    }
+}
+
+impl Backend for RefBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, extras: &[In]) -> Result<Vec<Out>> {
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        self.dispatch(name, extras)
+            .with_context(|| format!("ref backend executing {name}"))
+    }
+
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Input plumbing
+// ---------------------------------------------------------------------------
+
+fn hosts<'a>(extras: &'a [In]) -> Result<Vec<&'a Tensor>> {
+    extras
+        .iter()
+        .map(|e| match e {
+            In::Host(t) => Ok(*t),
+            In::Buf(_) => bail!("reference backend accepts host tensors only"),
+        })
+        .collect()
+}
+
+fn arity(ins: &[&Tensor], n: usize, name: &str) -> Result<()> {
+    if ins.len() != n {
+        bail!("{name}: expected {n} runtime inputs, got {}", ins.len());
+    }
+    Ok(())
+}
+
+fn i32s<'a>(t: &'a Tensor, shape: &[usize], what: &str) -> Result<&'a [i32]> {
+    if t.shape != shape {
+        bail!("{what}: shape {:?}, expected {:?}", t.shape, shape);
+    }
+    t.as_i32().with_context(|| format!("{what} must be i32"))
+}
+
+fn f32s<'a>(t: &'a Tensor, shape: &[usize], what: &str) -> Result<&'a [f32]> {
+    if t.shape != shape {
+        bail!("{what}: shape {:?}, expected {:?}", t.shape, shape);
+    }
+    t.as_f32().with_context(|| format!("{what} must be f32"))
+}
+
+fn scalar(t: &Tensor, what: &str) -> Result<i32> {
+    if t.len() != 1 {
+        bail!("{what}: expected a scalar, got shape {:?}", t.shape);
+    }
+    Ok(t.as_i32().with_context(|| format!("{what} must be i32"))?[0])
+}
+
+/// membership [L, H] → per-layer head→cluster vectors, bounds-checked.
+fn parse_membership(t: &Tensor, l: usize, h: usize, k_list: &[usize]) -> Result<Vec<Vec<usize>>> {
+    let v = i32s(t, &[l, h], "membership")?;
+    let mut out = Vec::with_capacity(l);
+    for (li, &kl) in k_list.iter().enumerate() {
+        let row: Vec<usize> = v[li * h..(li + 1) * h]
+            .iter()
+            .map(|&x| {
+                let x = x.max(0) as usize;
+                if x >= kl {
+                    bail!("membership {x} >= k {kl} in layer {li}");
+                }
+                Ok(x)
+            })
+            .collect::<Result<_>>()?;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// reps [L, k_cols] → per-layer representative-head lists of length
+/// `k_list[l]` (extra columns are lowering padding, ignored).
+fn parse_reps(t: &Tensor, l: usize, h: usize, k_list: &[usize]) -> Result<Vec<Vec<usize>>> {
+    if t.shape.len() != 2 || t.shape[0] != l {
+        bail!("reps: shape {:?}, expected [{l}, k_max]", t.shape);
+    }
+    let cols = t.shape[1];
+    let v = t.as_i32().context("reps must be i32")?;
+    let mut out = Vec::with_capacity(l);
+    for (li, &kl) in k_list.iter().enumerate() {
+        if kl > cols {
+            bail!("reps: layer {li} needs {kl} entries, tensor has {cols}");
+        }
+        let row: Vec<usize> = v[li * cols..li * cols + kl]
+            .iter()
+            .map(|&x| {
+                let x = x.max(0) as usize;
+                if x >= h {
+                    bail!("rep head {x} >= H {h} in layer {li}");
+                }
+                Ok(x)
+            })
+            .collect::<Result<_>>()?;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Graph interpreters
+// ---------------------------------------------------------------------------
+
+/// Per-layer weight handles + dims, resolved once per run.
+struct Ctx<'a> {
+    be: &'a RefBackend,
+    l: usize,
+    h: usize,
+    dh: usize,
+    d: usize,
+    f: usize,
+    v: usize,
+    theta: f32,
+    eps: f32,
+}
+
+/// What a dense layer pass should also return.
+struct MhaCapture {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(be: &'a RefBackend) -> Ctx<'a> {
+        let m = &be.manifest.model;
+        Ctx {
+            be,
+            l: m.n_layers,
+            h: m.n_heads,
+            dh: m.head_dim,
+            d: m.d_model,
+            f: m.d_ff,
+            v: m.vocab_size,
+            theta: m.rope_theta as f32,
+            eps: m.rms_eps as f32,
+        }
+    }
+
+    fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let emb = self.be.w("emb")?;
+        let mut x = vec![0.0f32; tokens.len() * self.d];
+        for (ti, &tok) in tokens.iter().enumerate() {
+            // out-of-range ids clamp (jnp.take clips)
+            let row = (tok.max(0) as usize).min(self.v - 1);
+            x[ti * self.d..(ti + 1) * self.d]
+                .copy_from_slice(&emb[row * self.d..(row + 1) * self.d]);
+        }
+        Ok(x)
+    }
+
+    fn unembed(&self, x: &[f32], t: usize) -> Result<Vec<f32>> {
+        let xn = rk::rmsnorm(x, self.be.w("final_norm")?, t, self.d, self.eps);
+        Ok(rk::matmul(&xn, self.be.w("lm_head")?, t, self.d, self.v))
+    }
+
+    fn residual_mlp(&self, x: &mut [f32], i: usize, t: usize) -> Result<()> {
+        let xn2 = rk::rmsnorm(x, self.be.w(&format!("l{i}.mlp_norm"))?, t, self.d, self.eps);
+        let mlp = rk::swiglu(
+            &xn2,
+            self.be.w(&format!("l{i}.wg"))?,
+            self.be.w(&format!("l{i}.wu"))?,
+            self.be.w(&format!("l{i}.wd"))?,
+            t,
+            self.d,
+            self.f,
+        );
+        for (xe, me) in x.iter_mut().zip(&mlp) {
+            *xe += me;
+        }
+        Ok(())
+    }
+
+    fn add_attn_out(&self, x: &mut [f32], i: usize, out: &[f32], g: usize, t: usize) -> Result<()> {
+        debug_assert_eq!(g, self.h);
+        let proj = rk::matmul(
+            &rk::unheads(out, g, t, self.dh),
+            self.be.w(&format!("l{i}.wo"))?,
+            t,
+            g * self.dh,
+            self.d,
+        );
+        for (xe, pe) in x.iter_mut().zip(&proj) {
+            *xe += pe;
+        }
+        Ok(())
+    }
+
+    /// One dense-MHA decoder layer over the sequence itself (prefill /
+    /// scoring / probe). `head_scale`/`key_mask` are the SpAtten hooks.
+    #[allow(clippy::too_many_arguments)]
+    fn mha_block(
+        &self,
+        x: &mut [f32],
+        i: usize,
+        t: usize,
+        positions: &[usize],
+        length: usize,
+        key_mask: Option<&[f32]>,
+        head_scale: Option<&[f32]>,
+    ) -> Result<MhaCapture> {
+        let (h, dh, d) = (self.h, self.dh, self.d);
+        let xn = rk::rmsnorm(x, self.be.w(&format!("l{i}.attn_norm"))?, t, d, self.eps);
+        let all: Vec<usize> = (0..h).collect();
+        let mut q = rk::project_heads(&xn, self.be.w(&format!("l{i}.wq"))?, &all, t, d, h, dh);
+        rk::rope(&mut q, positions, h, t, dh, self.theta);
+        let mut k = rk::project_heads(&xn, self.be.w(&format!("l{i}.wk"))?, &all, t, d, h, dh);
+        rk::rope(&mut k, positions, h, t, dh, self.theta);
+        let v = rk::project_heads(&xn, self.be.w(&format!("l{i}.wv"))?, &all, t, d, h, dh);
+        let (mut out, probs) = rk::mha_attention(&q, &k, &v, h, t, t, dh, 0, length, key_mask);
+        if let Some(hs) = head_scale {
+            for hh in 0..h {
+                for e in &mut out[hh * t * dh..(hh + 1) * t * dh] {
+                    *e *= hs[hh];
+                }
+            }
+        }
+        self.add_attn_out(x, i, &out, h, t)?;
+        self.residual_mlp(x, i, t)?;
+        Ok(MhaCapture { k, v, probs })
+    }
+
+    /// One clustered-head decoder layer (CHAI). Returns (k_rep, v).
+    #[allow(clippy::too_many_arguments)]
+    fn chai_block(
+        &self,
+        x: &mut [f32],
+        i: usize,
+        t: usize,
+        positions: &[usize],
+        length: usize,
+        membership: &[usize],
+        reps: &[usize],
+        qkv: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (h, dh, d) = (self.h, self.dh, self.d);
+        let kc = reps.len();
+        let xn = rk::rmsnorm(x, self.be.w(&format!("l{i}.attn_norm"))?, t, d, self.eps);
+        let mut q_rep = rk::project_heads(&xn, self.be.w(&format!("l{i}.wq"))?, reps, t, d, h, dh);
+        rk::rope(&mut q_rep, positions, kc, t, dh, self.theta);
+        let mut k_rep = rk::project_heads(&xn, self.be.w(&format!("l{i}.wk"))?, reps, t, d, h, dh);
+        rk::rope(&mut k_rep, positions, kc, t, dh, self.theta);
+        let all: Vec<usize> = (0..h).collect();
+        let v = rk::project_heads(&xn, self.be.w(&format!("l{i}.wv"))?, &all, t, d, h, dh);
+        let (out, _) = if qkv {
+            rk::clustered_attention_qkv(
+                &q_rep, &k_rep, &v, membership, reps, kc, h, t, t, dh, 0, length,
+            )
+        } else {
+            rk::clustered_attention(&q_rep, &k_rep, &v, membership, kc, h, t, t, dh, 0, length)
+        };
+        self.add_attn_out(x, i, &out, h, t)?;
+        self.residual_mlp(x, i, t)?;
+        Ok((k_rep, v))
+    }
+}
+
+impl RefBackend {
+    fn dispatch(&self, name: &str, extras: &[In]) -> Result<Vec<Out>> {
+        // the manifest is the artifact namespace on every backend
+        let spec = self.manifest.artifact(name)?;
+        let ins = hosts(extras)?;
+        let m = &self.manifest;
+        match name {
+            "probe_mha" => return self.run_probe(&ins, m.probe_bucket),
+            "analyze" => return self.run_probe(&ins, m.analyze_bucket),
+            "logprob_mha" => return self.run_logprob_mha(&ins),
+            "logprob_spatten" => return self.run_logprob_spatten(&ins, spec),
+            "logprob_chai" => return self.run_logprob_chai(&ins, &m.k_list, false),
+            "logprob_chai_qkv" => return self.run_logprob_chai(&ins, &m.k_list, true),
+            _ => {}
+        }
+        if let Some(kstr) = name.strip_prefix("logprob_chai_k") {
+            let k: usize = kstr.parse().with_context(|| format!("bad artifact name {name}"))?;
+            return self.run_logprob_chai(&ins, &vec![k; m.model.n_layers], false);
+        }
+        if name.starts_with("logprob_dejavu_s") {
+            let n_keep = spec.meta.get("n_keep")?.usize()?;
+            return self.run_logprob_dejavu(&ins, n_keep);
+        }
+        if let Some(tstr) = name.strip_prefix("prefill_mha_t") {
+            return self.run_prefill_mha(&ins, tstr.parse()?);
+        }
+        if let Some(tstr) = name.strip_prefix("prefill_chai_t") {
+            return self.run_prefill_chai(&ins, tstr.parse()?);
+        }
+        if let Some(tstr) = name.strip_prefix("decode_mha_t") {
+            return self.run_decode_mha(&ins, tstr.parse()?);
+        }
+        if let Some(tstr) = name.strip_prefix("decode_chai_t") {
+            return self.run_decode_chai(&ins, tstr.parse()?);
+        }
+        bail!("artifact {name:?} not implemented by the reference backend")
+    }
+
+    /// Dense probe: per-layer attention maps `[L, H, T, T]`.
+    fn run_probe(&self, ins: &[&Tensor], t: usize) -> Result<Vec<Out>> {
+        arity(ins, 2, "probe")?;
+        let c = Ctx::new(self);
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = (scalar(ins[1], "length")?.max(0) as usize).min(t);
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        let mut maps = Vec::with_capacity(c.l * c.h * t * t);
+        for i in 0..c.l {
+            let cap = c.mha_block(&mut x, i, t, &positions, length, None, None)?;
+            maps.extend_from_slice(&cap.probs);
+        }
+        Ok(vec![Out::Host(Tensor::f32(vec![c.l, c.h, t, t], maps))])
+    }
+
+    /// Full-sequence logits `[T, V]` (MHA scoring path).
+    fn run_logprob_mha(&self, ins: &[&Tensor]) -> Result<Vec<Out>> {
+        arity(ins, 2, "logprob_mha")?;
+        let c = Ctx::new(self);
+        let t = self.manifest.logprob_bucket;
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = (scalar(ins[1], "length")?.max(0) as usize).min(t);
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        for i in 0..c.l {
+            c.mha_block(&mut x, i, t, &positions, length, None, None)?;
+        }
+        Ok(vec![Out::Host(Tensor::f32(vec![t, c.v], c.unembed(&x, t)?))])
+    }
+
+    /// CHAI scoring path (`qkv` = Table-4 ablation).
+    fn run_logprob_chai(&self, ins: &[&Tensor], k_list: &[usize], qkv: bool) -> Result<Vec<Out>> {
+        arity(ins, 4, "logprob_chai")?;
+        let c = Ctx::new(self);
+        let t = self.manifest.logprob_bucket;
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = (scalar(ins[1], "length")?.max(0) as usize).min(t);
+        let mem = parse_membership(ins[2], c.l, c.h, k_list)?;
+        let reps = parse_reps(ins[3], c.l, c.h, k_list)?;
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        for i in 0..c.l {
+            c.chai_block(&mut x, i, t, &positions, length, &mem[i], &reps[i], qkv)?;
+        }
+        Ok(vec![Out::Host(Tensor::f32(vec![t, c.v], c.unembed(&x, t)?))])
+    }
+
+    /// DejaVu head sparsity: only `kept [L, n_keep]` heads are computed;
+    /// pruned heads contribute zero to the output projection.
+    fn run_logprob_dejavu(&self, ins: &[&Tensor], n_keep: usize) -> Result<Vec<Out>> {
+        arity(ins, 3, "logprob_dejavu")?;
+        let c = Ctx::new(self);
+        let t = self.manifest.logprob_bucket;
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = (scalar(ins[1], "length")?.max(0) as usize).min(t);
+        let kept_t = i32s(ins[2], &[c.l, n_keep], "kept")?;
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        for i in 0..c.l {
+            let kept: Vec<usize> = kept_t[i * n_keep..(i + 1) * n_keep]
+                .iter()
+                .map(|&hh| {
+                    let hh = hh.max(0) as usize;
+                    if hh >= c.h {
+                        bail!("kept head {hh} >= H {} in layer {i}", c.h);
+                    }
+                    Ok(hh)
+                })
+                .collect::<Result<_>>()?;
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, t, d, c.eps);
+            let mut q = rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, &kept, t, d, h, dh);
+            rk::rope(&mut q, &positions, kept.len(), t, dh, c.theta);
+            let mut k = rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, &kept, t, d, h, dh);
+            rk::rope(&mut k, &positions, kept.len(), t, dh, c.theta);
+            let v = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &kept, t, d, h, dh);
+            let (out, _) =
+                rk::mha_attention(&q, &k, &v, kept.len(), t, t, dh, 0, length, None);
+            // scatter kept-head outputs into the full head layout
+            let mut full = vec![0.0f32; h * t * dh];
+            for (gi, &hh) in kept.iter().enumerate() {
+                full[hh * t * dh..(hh + 1) * t * dh]
+                    .copy_from_slice(&out[gi * t * dh..(gi + 1) * t * dh]);
+            }
+            c.add_attn_out(&mut x, i, &full, h, t)?;
+            c.residual_mlp(&mut x, i, t)?;
+        }
+        Ok(vec![Out::Host(Tensor::f32(vec![t, c.v], c.unembed(&x, t)?))])
+    }
+
+    /// SpAtten cascade token + head pruning (accuracy-only baseline);
+    /// mirror of `logprob_spatten_graph` with the schedule read from the
+    /// artifact's meta.
+    fn run_logprob_spatten(&self, ins: &[&Tensor], spec: &ArtifactSpec) -> Result<Vec<Out>> {
+        arity(ins, 2, "logprob_spatten")?;
+        let c = Ctx::new(self);
+        let t = self.manifest.logprob_bucket;
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = (scalar(ins[1], "length")?.max(0) as usize).min(t);
+        let token_keep = spec.meta.get("token_keep")?.f64_vec()?;
+        let head_keep = spec.meta.get("head_keep")?.num()?;
+        if token_keep.len() != c.l {
+            bail!("token_keep length {} != n_layers {}", token_keep.len(), c.l);
+        }
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        let mut token_imp = vec![0.0f32; t];
+        let mut head_imp = vec![0.0f32; c.h];
+        let mut key_mask = vec![0.0f32; t];
+        let mut head_scale = vec![1.0f32; c.h];
+        for i in 0..c.l {
+            let n_keep_tok = ((token_keep[i] * t as f64) as usize).max(1);
+            if n_keep_tok < t {
+                let keep = rk::top_mask(&token_imp, n_keep_tok);
+                for (mk, kp) in key_mask.iter_mut().zip(&keep) {
+                    *mk = if *kp { 0.0 } else { rk::NEG_INF };
+                }
+            }
+            if i >= 2 && head_keep < 1.0 {
+                let n_keep_h = ((head_keep * c.h as f64) as usize).max(1);
+                let keep = rk::top_mask(&head_imp, n_keep_h);
+                for (hs, kp) in head_scale.iter_mut().zip(&keep) {
+                    *hs = if *kp { 1.0 } else { 0.0 };
+                }
+            }
+            let cap = c.mha_block(
+                &mut x,
+                i,
+                t,
+                &positions,
+                length,
+                Some(&key_mask),
+                Some(&head_scale),
+            )?;
+            // cumulative token importance: attention mass received
+            for hh in 0..c.h {
+                for qi in 0..t {
+                    let row = &cap.probs[(hh * t + qi) * t..(hh * t + qi) * t + t];
+                    for (ki, &p) in row.iter().enumerate() {
+                        token_imp[ki] += p;
+                    }
+                }
+            }
+            // cumulative head importance: ‖A·V‖ per head (pre-gating)
+            let av = rk::attn_av(&cap.probs, &cap.v, c.h, t, t, c.dh);
+            for hh in 0..c.h {
+                let s: f32 = av[hh * t * c.dh..(hh + 1) * t * c.dh]
+                    .iter()
+                    .map(|e| e * e)
+                    .sum();
+                head_imp[hh] += s.sqrt();
+            }
+        }
+        Ok(vec![Out::Host(Tensor::f32(vec![t, c.v], c.unembed(&x, t)?))])
+    }
+
+    /// MHA prefill: (last-position logits [V], K cache [L,H,T,dh], V
+    /// cache [L,H,T,dh]).
+    fn run_prefill_mha(&self, ins: &[&Tensor], t: usize) -> Result<Vec<Out>> {
+        arity(ins, 2, "prefill_mha")?;
+        let c = Ctx::new(self);
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = scalar(ins[1], "length")?.max(1) as usize;
+        if length > t {
+            bail!("length {length} exceeds bucket {t}");
+        }
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        let mut ks = Vec::with_capacity(c.l * c.h * t * c.dh);
+        let mut vs = Vec::with_capacity(c.l * c.h * t * c.dh);
+        for i in 0..c.l {
+            let cap = c.mha_block(&mut x, i, t, &positions, length, None, None)?;
+            ks.extend_from_slice(&cap.k);
+            vs.extend_from_slice(&cap.v);
+        }
+        let last = &x[(length - 1) * c.d..length * c.d];
+        let logits = c.unembed(last, 1)?;
+        let shape = vec![c.l, c.h, t, c.dh];
+        Ok(vec![
+            Out::Host(Tensor::f32(vec![c.v], logits)),
+            Out::Host(Tensor::f32(shape.clone(), ks)),
+            Out::Host(Tensor::f32(shape, vs)),
+        ])
+    }
+
+    /// CHAI prefill: (last logits [V], per-layer clustered K caches
+    /// [k_l,T,dh], V cache [L,H,T,dh]).
+    fn run_prefill_chai(&self, ins: &[&Tensor], t: usize) -> Result<Vec<Out>> {
+        arity(ins, 4, "prefill_chai")?;
+        let c = Ctx::new(self);
+        let k_list = self.manifest.k_list.clone();
+        let tokens = i32s(ins[0], &[t], "tokens")?;
+        let length = scalar(ins[1], "length")?.max(1) as usize;
+        if length > t {
+            bail!("length {length} exceeds bucket {t}");
+        }
+        let mem = parse_membership(ins[2], c.l, c.h, &k_list)?;
+        let reps = parse_reps(ins[3], c.l, c.h, &k_list)?;
+        let positions: Vec<usize> = (0..t).collect();
+        let mut x = c.embed(tokens)?;
+        let mut kreps = Vec::with_capacity(c.l);
+        let mut vs = Vec::with_capacity(c.l * c.h * t * c.dh);
+        for i in 0..c.l {
+            let (k_rep, v) =
+                c.chai_block(&mut x, i, t, &positions, length, &mem[i], &reps[i], false)?;
+            kreps.push(Tensor::f32(vec![k_list[i], t, c.dh], k_rep));
+            vs.extend_from_slice(&v);
+        }
+        let last = &x[(length - 1) * c.d..length * c.d];
+        let logits = c.unembed(last, 1)?;
+        let mut outs = vec![Out::Host(Tensor::f32(vec![c.v], logits))];
+        outs.extend(kreps.into_iter().map(Out::Host));
+        outs.push(Out::Host(Tensor::f32(vec![c.l, c.h, t, c.dh], vs)));
+        Ok(outs)
+    }
+
+    /// Single-token MHA decode over bucket-shaped caches (functional
+    /// update at `pos`, exactly like the lowered graph).
+    fn run_decode_mha(&self, ins: &[&Tensor], t: usize) -> Result<Vec<Out>> {
+        arity(ins, 4, "decode_mha")?;
+        let c = Ctx::new(self);
+        let token = scalar(ins[0], "token")?;
+        let pos = scalar(ins[1], "pos")?.max(0) as usize;
+        if pos >= t {
+            bail!("pos {pos} outside bucket {t}");
+        }
+        let shape = [c.l, c.h, t, c.dh];
+        let mut kc = f32s(ins[2], &shape, "kcache")?.to_vec();
+        let mut vc = f32s(ins[3], &shape, "vcache")?.to_vec();
+        let positions = [pos];
+        let length = pos + 1;
+        let mut x = c.embed(&[token])?;
+        let layer = c.h * t * c.dh;
+        for i in 0..c.l {
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, 1, d, c.eps);
+            let all: Vec<usize> = (0..h).collect();
+            let mut q = rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, &all, 1, d, h, dh);
+            rk::rope(&mut q, &positions, h, 1, dh, c.theta);
+            let mut k_new = rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, &all, 1, d, h, dh);
+            rk::rope(&mut k_new, &positions, h, 1, dh, c.theta);
+            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, 1, d, h, dh);
+            for hh in 0..h {
+                let dst = i * layer + (hh * t + pos) * dh;
+                kc[dst..dst + dh].copy_from_slice(&k_new[hh * dh..(hh + 1) * dh]);
+                vc[dst..dst + dh].copy_from_slice(&v_new[hh * dh..(hh + 1) * dh]);
+            }
+            let (out, _) = rk::mha_attention(
+                &q,
+                &kc[i * layer..(i + 1) * layer],
+                &vc[i * layer..(i + 1) * layer],
+                h,
+                1,
+                t,
+                dh,
+                pos,
+                length,
+                None,
+            );
+            c.add_attn_out(&mut x, i, &out, h, 1)?;
+            c.residual_mlp(&mut x, i, 1)?;
+        }
+        let logits = c.unembed(&x, 1)?;
+        Ok(vec![
+            Out::Host(Tensor::f32(vec![c.v], logits)),
+            Out::Host(Tensor::f32(shape.to_vec(), kc)),
+            Out::Host(Tensor::f32(shape.to_vec(), vc)),
+        ])
+    }
+
+    /// Single-token CHAI decode: clustered K caches per layer + dense V.
+    fn run_decode_chai(&self, ins: &[&Tensor], t: usize) -> Result<Vec<Out>> {
+        let c = Ctx::new(self);
+        let k_list = self.manifest.k_list.clone();
+        arity(ins, 2 + c.l + 3, "decode_chai")?;
+        let token = scalar(ins[0], "token")?;
+        let pos = scalar(ins[1], "pos")?.max(0) as usize;
+        if pos >= t {
+            bail!("pos {pos} outside bucket {t}");
+        }
+        let mut kreps: Vec<Vec<f32>> = Vec::with_capacity(c.l);
+        for i in 0..c.l {
+            kreps.push(
+                f32s(ins[2 + i], &[k_list[i], t, c.dh], &format!("krep{i}"))?.to_vec(),
+            );
+        }
+        let vshape = [c.l, c.h, t, c.dh];
+        let mut vc = f32s(ins[2 + c.l], &vshape, "vcache")?.to_vec();
+        let mem = parse_membership(ins[3 + c.l], c.l, c.h, &k_list)?;
+        let reps = parse_reps(ins[4 + c.l], c.l, c.h, &k_list)?;
+        let positions = [pos];
+        let length = pos + 1;
+        let mut x = c.embed(&[token])?;
+        let layer = c.h * t * c.dh;
+        for i in 0..c.l {
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let kl = k_list[i];
+            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, 1, d, c.eps);
+            let mut q_rep =
+                rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, &reps[i], 1, d, h, dh);
+            rk::rope(&mut q_rep, &positions, kl, 1, dh, c.theta);
+            let mut k_new =
+                rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, &reps[i], 1, d, h, dh);
+            rk::rope(&mut k_new, &positions, kl, 1, dh, c.theta);
+            let all: Vec<usize> = (0..h).collect();
+            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, 1, d, h, dh);
+            for r in 0..kl {
+                let dst = (r * t + pos) * dh;
+                kreps[i][dst..dst + dh].copy_from_slice(&k_new[r * dh..(r + 1) * dh]);
+            }
+            for hh in 0..h {
+                let dst = i * layer + (hh * t + pos) * dh;
+                vc[dst..dst + dh].copy_from_slice(&v_new[hh * dh..(hh + 1) * dh]);
+            }
+            let (out, _) = rk::clustered_attention(
+                &q_rep,
+                &kreps[i],
+                &vc[i * layer..(i + 1) * layer],
+                &mem[i],
+                kl,
+                h,
+                1,
+                t,
+                dh,
+                pos,
+                length,
+            );
+            c.add_attn_out(&mut x, i, &out, h, 1)?;
+            c.residual_mlp(&mut x, i, 1)?;
+        }
+        let logits = c.unembed(&x, 1)?;
+        let mut outs = vec![Out::Host(Tensor::f32(vec![c.v], logits))];
+        for (i, kr) in kreps.into_iter().enumerate() {
+            outs.push(Out::Host(Tensor::f32(vec![k_list[i], t, c.dh], kr)));
+        }
+        outs.push(Out::Host(Tensor::f32(vshape.to_vec(), vc)));
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Toy model synthesis
+// ---------------------------------------------------------------------------
+
+/// Contiguous-block head→group assignment (mirror of
+/// `model.head_group_of`).
+fn head_group_of(h_idx: usize, n_heads: usize, n_groups: usize) -> usize {
+    (h_idx * n_groups / n_heads).min(n_groups - 1)
+}
+
+fn toy_model_config(n_layers: usize) -> ModelConfig {
+    let (v, d, h, dh, f) = (260usize, 16usize, 4usize, 4usize, 32usize);
+    let hd = h * dh;
+    let per_layer = 3 * d * hd + hd * d + 3 * d * f + 2 * d;
+    ModelConfig {
+        name: "toy-ref".into(),
+        vocab_size: v,
+        n_layers,
+        n_heads: h,
+        d_model: d,
+        head_dim: dh,
+        d_ff: f,
+        max_seq: 64,
+        n_params: v * d + n_layers * per_layer + d + d * v,
+        rope_theta: 10000.0,
+        rms_eps: 1e-5,
+    }
+}
+
+/// `n` seeded normals at `scale` (He-style when `scale = 1/sqrt(fan_in)`).
+fn normals(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// `[d, h*dh]` Q/K projection where same-group heads share a base matrix
+/// plus small noise — the redundancy structure CHAI's clustering
+/// exploits (mirror of `model.init_params`'s `grouped_qk`).
+fn grouped_qk(rng: &mut Rng, d: usize, h: usize, dh: usize, groups: usize) -> Vec<f32> {
+    let hd = h * dh;
+    let scale = 1.0 / (d as f32).sqrt();
+    let bases: Vec<Vec<f32>> = (0..groups).map(|_| normals(rng, d * dh, scale)).collect();
+    let mut out = vec![0.0f32; d * hd];
+    for hh in 0..h {
+        let base = &bases[head_group_of(hh, h, groups)];
+        for j in 0..d {
+            for dd in 0..dh {
+                let noise = rng.normal() as f32 * scale * 0.05;
+                out[j * hd + hh * dh + dd] = base[j * dh + dd] + noise;
+            }
+        }
+    }
+    out
+}
+
+/// Seeded He-style init with the same head-group redundancy induction as
+/// `model.init_params`, so the online k-means finds real structure.
+fn toy_weights(m: &ModelConfig, k_list: &[usize], seed: u64) -> BTreeMap<String, Tensor> {
+    let (v, d, h, dh, f) = (m.vocab_size, m.d_model, m.n_heads, m.head_dim, m.d_ff);
+    let hd = h * dh;
+    let mut rng = Rng::new(seed.wrapping_add(0x70f0_5eed));
+    let mut w = BTreeMap::new();
+    w.insert("emb".to_string(), Tensor::f32(vec![v, d], normals(&mut rng, v * d, 0.02)));
+    w.insert("final_norm".to_string(), Tensor::f32(vec![d], vec![1.0; d]));
+    w.insert(
+        "lm_head".to_string(),
+        Tensor::f32(vec![d, v], normals(&mut rng, d * v, 1.0 / (d as f32).sqrt())),
+    );
+    for (i, &kl) in k_list.iter().enumerate() {
+        let groups = kl.clamp(1, h);
+        let wq = grouped_qk(&mut rng, d, h, dh, groups);
+        let wk = grouped_qk(&mut rng, d, h, dh, groups);
+        w.insert(format!("l{i}.attn_norm"), Tensor::f32(vec![d], vec![1.0; d]));
+        w.insert(format!("l{i}.wq"), Tensor::f32(vec![d, hd], wq));
+        w.insert(format!("l{i}.wk"), Tensor::f32(vec![d, hd], wk));
+        w.insert(
+            format!("l{i}.wv"),
+            Tensor::f32(vec![d, hd], normals(&mut rng, d * hd, 1.0 / (d as f32).sqrt())),
+        );
+        w.insert(
+            format!("l{i}.wo"),
+            Tensor::f32(vec![hd, d], normals(&mut rng, hd * d, 1.0 / (hd as f32).sqrt())),
+        );
+        w.insert(format!("l{i}.mlp_norm"), Tensor::f32(vec![d], vec![1.0; d]));
+        w.insert(
+            format!("l{i}.wg"),
+            Tensor::f32(vec![d, f], normals(&mut rng, d * f, 1.0 / (d as f32).sqrt())),
+        );
+        w.insert(
+            format!("l{i}.wu"),
+            Tensor::f32(vec![d, f], normals(&mut rng, d * f, 1.0 / (d as f32).sqrt())),
+        );
+        w.insert(
+            format!("l{i}.wd"),
+            Tensor::f32(vec![f, d], normals(&mut rng, f * d, 1.0 / (f as f32).sqrt())),
+        );
+    }
+    w
+}
+
+fn ts(name: &str, dtype: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), dtype: dtype.to_string(), shape: shape.to_vec() }
+}
+
+fn spec(
+    name: &str,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+    meta: Vec<(&str, Json)>,
+) -> ArtifactSpec {
+    ArtifactSpec {
+        name: name.to_string(),
+        path: format!("<builtin:{name}>"),
+        impl_name: "ref".to_string(),
+        inputs,
+        outputs,
+        meta: Json::obj(meta),
+    }
+}
+
+/// In-memory manifest for the toy model: same schema the AOT pipeline
+/// writes, including per-artifact meta, so every manifest consumer
+/// (engine, admission, benches, `info`) works unchanged.
+fn toy_manifest(model: ModelConfig, k_list: Vec<usize>, weight_order: Vec<String>) -> Manifest {
+    let (l, h, dh, v) = (model.n_layers, model.n_heads, model.head_dim, model.vocab_size);
+    let k_max = k_list.iter().copied().max().unwrap_or(1);
+    let probe_bucket = 8;
+    let analyze_bucket = 32;
+    let logprob_bucket = 64;
+    let buckets = vec![32usize, 64];
+    let dejavu_sparsities = vec![50usize];
+    let uniform_k_sweep = vec![2usize, h];
+    // token-keep schedule stretched over this depth (cascade: monotone
+    // non-increasing), head_keep as in configs.SPATTEN_HEAD_KEEP
+    let sched = [1.0f64, 0.625];
+    let token_keep: Vec<f64> = (0..l).map(|i| sched[i.min(sched.len() - 1)]).collect();
+    let head_keep = 0.75f64;
+    let k_list_json = Json::from_usizes(&k_list);
+
+    let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+    let mut add = |s: ArtifactSpec| {
+        artifacts.insert(s.name.clone(), s);
+    };
+    add(spec(
+        "probe_mha",
+        vec![ts("tokens", "int32", &[probe_bucket]), ts("length", "int32", &[])],
+        vec![ts("probe_maps", "float32", &[l, h, probe_bucket, probe_bucket])],
+        vec![("bucket", Json::Num(probe_bucket as f64))],
+    ));
+    add(spec(
+        "analyze",
+        vec![ts("tokens", "int32", &[analyze_bucket]), ts("length", "int32", &[])],
+        vec![ts("attn_maps", "float32", &[l, h, analyze_bucket, analyze_bucket])],
+        vec![("bucket", Json::Num(analyze_bucket as f64))],
+    ));
+    let t = logprob_bucket;
+    add(spec(
+        "logprob_mha",
+        vec![ts("tokens", "int32", &[t]), ts("length", "int32", &[])],
+        vec![ts("logits", "float32", &[t, v])],
+        vec![("bucket", Json::Num(t as f64))],
+    ));
+    for (name, qkv) in [("logprob_chai", false), ("logprob_chai_qkv", true)] {
+        add(spec(
+            name,
+            vec![
+                ts("tokens", "int32", &[t]),
+                ts("length", "int32", &[]),
+                ts("membership", "int32", &[l, h]),
+                ts("reps", "int32", &[l, k_max]),
+            ],
+            vec![ts("logits", "float32", &[t, v])],
+            vec![
+                ("bucket", Json::Num(t as f64)),
+                ("k_list", k_list_json.clone()),
+                ("qkv", Json::Bool(qkv)),
+            ],
+        ));
+    }
+    for &k in &uniform_k_sweep {
+        add(spec(
+            &format!("logprob_chai_k{k}"),
+            vec![
+                ts("tokens", "int32", &[t]),
+                ts("length", "int32", &[]),
+                ts("membership", "int32", &[l, h]),
+                ts("reps", "int32", &[l, k]),
+            ],
+            vec![ts("logits", "float32", &[t, v])],
+            vec![
+                ("bucket", Json::Num(t as f64)),
+                ("k_list", Json::from_usizes(&vec![k; l])),
+                ("uniform_k", Json::Num(k as f64)),
+            ],
+        ));
+    }
+    for &sp in &dejavu_sparsities {
+        let n_keep = ((h * (100 - sp)) as f64 / 100.0).round().max(1.0) as usize;
+        add(spec(
+            &format!("logprob_dejavu_s{sp}"),
+            vec![
+                ts("tokens", "int32", &[t]),
+                ts("length", "int32", &[]),
+                ts("kept", "int32", &[l, n_keep]),
+            ],
+            vec![ts("logits", "float32", &[t, v])],
+            vec![
+                ("bucket", Json::Num(t as f64)),
+                ("sparsity", Json::Num(sp as f64)),
+                ("n_keep", Json::Num(n_keep as f64)),
+            ],
+        ));
+    }
+    add(spec(
+        "logprob_spatten",
+        vec![ts("tokens", "int32", &[t]), ts("length", "int32", &[])],
+        vec![ts("logits", "float32", &[t, v])],
+        vec![
+            ("bucket", Json::Num(t as f64)),
+            ("token_keep", Json::from_f64s(&token_keep)),
+            ("head_keep", Json::Num(head_keep)),
+        ],
+    ));
+    for &t in &buckets {
+        let cache = [l, h, t, dh];
+        add(spec(
+            &format!("prefill_mha_t{t}"),
+            vec![ts("tokens", "int32", &[t]), ts("length", "int32", &[])],
+            vec![
+                ts("logits", "float32", &[v]),
+                ts("kcache", "float32", &cache),
+                ts("vcache", "float32", &cache),
+            ],
+            vec![("bucket", Json::Num(t as f64))],
+        ));
+        let mut chai_outs = vec![ts("logits", "float32", &[v])];
+        for (i, &kl) in k_list.iter().enumerate() {
+            chai_outs.push(ts(&format!("krep{i}"), "float32", &[kl, t, dh]));
+        }
+        chai_outs.push(ts("vcache", "float32", &cache));
+        add(spec(
+            &format!("prefill_chai_t{t}"),
+            vec![
+                ts("tokens", "int32", &[t]),
+                ts("length", "int32", &[]),
+                ts("membership", "int32", &[l, h]),
+                ts("reps", "int32", &[l, k_max]),
+            ],
+            chai_outs.clone(),
+            vec![("bucket", Json::Num(t as f64)), ("k_list", k_list_json.clone())],
+        ));
+        add(spec(
+            &format!("decode_mha_t{t}"),
+            vec![
+                ts("token", "int32", &[]),
+                ts("pos", "int32", &[]),
+                ts("kcache", "float32", &cache),
+                ts("vcache", "float32", &cache),
+            ],
+            vec![
+                ts("logits", "float32", &[v]),
+                ts("kcache", "float32", &cache),
+                ts("vcache", "float32", &cache),
+            ],
+            vec![("bucket", Json::Num(t as f64))],
+        ));
+        let mut chai_ins = vec![ts("token", "int32", &[]), ts("pos", "int32", &[])];
+        for (i, &kl) in k_list.iter().enumerate() {
+            chai_ins.push(ts(&format!("krep{i}"), "float32", &[kl, t, dh]));
+        }
+        chai_ins.push(ts("vcache", "float32", &cache));
+        chai_ins.push(ts("membership", "int32", &[l, h]));
+        chai_ins.push(ts("reps", "int32", &[l, k_max]));
+        add(spec(
+            &format!("decode_chai_t{t}"),
+            chai_ins,
+            chai_outs,
+            vec![("bucket", Json::Num(t as f64)), ("k_list", k_list_json.clone())],
+        ));
+    }
+
+    // offline clusters: contiguous head blocks per layer, reps = first
+    // head of each block (canonical: sorted)
+    let mut membership = Vec::with_capacity(l);
+    let mut reps = Vec::with_capacity(l);
+    for &kl in &k_list {
+        let mem: Vec<usize> = (0..h).map(|hh| head_group_of(hh, h, kl)).collect();
+        let rep: Vec<usize> = (0..kl).map(|g| mem.iter().position(|&x| x == g).unwrap()).collect();
+        membership.push(mem);
+        reps.push(rep);
+    }
+
+    Manifest {
+        dir: PathBuf::from("<toy>"),
+        model,
+        weight_order,
+        artifacts,
+        probe_tokens: 5,
+        probe_bucket,
+        analyze_bucket,
+        logprob_bucket,
+        prefill_buckets: buckets.clone(),
+        decode_buckets: buckets,
+        dejavu_sparsities,
+        uniform_k_sweep,
+        k_max,
+        k_list,
+        attn_impl: "ref".to_string(),
+        clusters: Some((membership, reps)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_backend_is_deterministic() {
+        let a = RefBackend::toy(3);
+        let b = RefBackend::toy(3);
+        let m = a.manifest.clone();
+        let tokens = Tensor::i32(vec![m.probe_bucket], vec![65, 66, 67, 68, 69, 258, 258, 258]);
+        let len = Tensor::scalar_i32(5);
+        let oa = a.run("probe_mha", &[In::Host(&tokens), In::Host(&len)]).unwrap();
+        let ob = b.run("probe_mha", &[In::Host(&tokens), In::Host(&len)]).unwrap();
+        assert_eq!(oa[0].to_tensor().unwrap(), ob[0].to_tensor().unwrap());
+        // different seeds give different weights
+        let c = RefBackend::toy(4);
+        let oc = c.run("probe_mha", &[In::Host(&tokens), In::Host(&len)]).unwrap();
+        assert_ne!(oa[0].to_tensor().unwrap(), oc[0].to_tensor().unwrap());
+    }
+
+    #[test]
+    fn probe_rows_are_causal_distributions() {
+        let be = RefBackend::toy(0);
+        let m = be.manifest.clone();
+        let p = m.probe_bucket;
+        let tokens = Tensor::i32(vec![p], (0..p as i32).map(|i| i % 250).collect());
+        let len = Tensor::scalar_i32(p as i32);
+        let outs = be.run("probe_mha", &[In::Host(&tokens), In::Host(&len)]).unwrap();
+        let maps = outs[0].to_tensor().unwrap();
+        assert_eq!(maps.shape, vec![m.model.n_layers, m.model.n_heads, p, p]);
+        let v = maps.as_f32().unwrap();
+        for row in v.chunks(p) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+        }
+        // causal: first row attends only to position 0
+        assert!((v[0] - 1.0).abs() < 1e-5);
+        assert_eq!(*be.exec_counts.borrow().get("probe_mha").unwrap(), 1);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity_and_unknown_artifacts() {
+        let be = RefBackend::toy(0);
+        let tokens = Tensor::i32(vec![8], vec![0; 8]);
+        assert!(be.run("probe_mha", &[In::Host(&tokens)]).is_err());
+        assert!(be.run("decode_mha_t9999", &[]).is_err());
+    }
+
+    #[test]
+    fn logprob_logits_are_finite() {
+        let be = RefBackend::toy(1);
+        let m = be.manifest.clone();
+        let t = m.logprob_bucket;
+        let mut toks = vec![258i32; t];
+        for (i, b) in "the color of tom is".bytes().enumerate() {
+            toks[i] = b as i32;
+        }
+        let tokens = Tensor::i32(vec![t], toks);
+        let len = Tensor::scalar_i32(19);
+        let outs = be.run("logprob_mha", &[In::Host(&tokens), In::Host(&len)]).unwrap();
+        let lg = outs[0].to_tensor().unwrap();
+        assert_eq!(lg.shape, vec![t, m.model.vocab_size]);
+        assert!(lg.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_updates_cache_functionally() {
+        let be = RefBackend::toy(2);
+        let m = be.manifest.clone();
+        let (l, h, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+        let t = m.decode_buckets[0];
+        let kc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let vc = Tensor::zeros_f32(&[l, h, t, dh]);
+        let outs = be
+            .run(
+                &format!("decode_mha_t{t}"),
+                &[
+                    In::Host(&Tensor::scalar_i32(5)),
+                    In::Host(&Tensor::scalar_i32(0)),
+                    In::Host(&kc),
+                    In::Host(&vc),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 3);
+        let logits = outs[0].to_tensor().unwrap();
+        assert_eq!(logits.shape, vec![m.model.vocab_size]);
+        assert!(logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        let kc2 = outs[1].to_tensor().unwrap();
+        // row 0 written, inputs untouched
+        assert!(kc2.as_f32().unwrap().iter().any(|&x| x != 0.0));
+        assert!(kc.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn toy_manifest_is_self_consistent() {
+        let be = RefBackend::toy(0);
+        let m = be.manifest.clone();
+        assert_eq!(m.k_list.len(), m.model.n_layers);
+        assert!(m.artifacts.contains_key("logprob_mha"));
+        assert!(m.artifacts.contains_key("decode_chai_t32"));
+        let (mem, reps) = m.static_clusters().unwrap();
+        assert_eq!(mem.len(), m.model.n_layers);
+        for li in 0..m.model.n_layers {
+            assert_eq!(reps[li].len(), m.k_list[li]);
+            assert!(mem[li].iter().all(|&x| x < m.k_list[li]));
+            for (j, &r) in reps[li].iter().enumerate() {
+                assert_eq!(mem[li][r], j, "rep must sit in its own cluster");
+            }
+        }
+        let a = m.artifact("logprob_dejavu_s50").unwrap();
+        assert_eq!(a.meta.get("n_keep").unwrap().usize().unwrap(), 2);
+    }
+}

@@ -1,0 +1,452 @@
+//! Pure-Rust reference kernels — the Rust mirror of
+//! `python/compile/kernels/ref.py` plus the model primitives from
+//! `python/compile/model.py` (rmsnorm, rope, swiglu).
+//!
+//! These are the numeric core of [`super::reference::RefBackend`] and the
+//! correctness oracle for everything the serving stack executes without
+//! artifacts. Semantics are pinned to the python side by committed golden
+//! fixtures (`rust/tests/golden/*.cbt`, regenerated and diffed by
+//! `python/tests/test_golden_export.py`) at 1e-5 tolerance.
+//!
+//! Shapes (unbatched, row-major f32 slices with explicit dims; the
+//! serving path is B=1):
+//!   q:   [G, Tq, dh]   queries for G heads (or G = K cluster reps)
+//!   k:   [G, Tk, dh]
+//!   v:   [H, Tk, dh]
+//!   membership: [H] in [0, K)  — cluster id of each head
+//!
+//! Masking: query i sits at absolute position `q_offset + i`; key j at
+//! position j. Allowed iff `j <= q_offset + i && j < length`.
+
+/// Additive mask value (mirrors `ref.NEG_INF`).
+pub const NEG_INF: f32 = -1e9;
+
+/// `softmax(q kᵀ / sqrt(dh))` with causal + length masking.
+///
+/// q: `[g, tq, dh]`, k: `[g, tk, dh]` → `[g, tq, tk]` row-stochastic.
+/// `key_mask` (additive, `[tk]`) is the SpAtten token-pruning hook and
+/// is applied after the causal/length mask, exactly like the jnp path.
+pub fn attention_scores(
+    q: &[f32],
+    k: &[f32],
+    g: usize,
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    q_offset: usize,
+    length: usize,
+    key_mask: Option<&[f32]>,
+) -> Vec<f32> {
+    assert_eq!(q.len(), g * tq * dh, "q shape");
+    assert_eq!(k.len(), g * tk * dh, "k shape");
+    let scale = (dh as f32).sqrt();
+    let mut out = vec![0.0f32; g * tq * tk];
+    for gi in 0..g {
+        for qi in 0..tq {
+            let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            let orow = &mut out[(gi * tq + qi) * tk..(gi * tq + qi) * tk + tk];
+            let qpos = q_offset + qi;
+            for (kj, slot) in orow.iter_mut().enumerate() {
+                let mut s = if kj <= qpos && kj < length {
+                    let krow = &k[(gi * tk + kj) * dh..(gi * tk + kj) * dh + dh];
+                    let mut acc = 0.0f32;
+                    for d in 0..dh {
+                        acc += qrow[d] * krow[d];
+                    }
+                    acc / scale
+                } else {
+                    NEG_INF
+                };
+                if let Some(m) = key_mask {
+                    s += m[kj];
+                }
+                *slot = s;
+            }
+            // stable softmax (subtract row max, exp, normalize)
+            let mx = orow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in orow.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            for x in orow.iter_mut() {
+                *x /= sum;
+            }
+        }
+    }
+    out
+}
+
+/// `probs [g,tq,tk] × v [g,tk,dh] → [g,tq,dh]`.
+pub fn attn_av(probs: &[f32], v: &[f32], g: usize, tq: usize, tk: usize, dh: usize) -> Vec<f32> {
+    assert_eq!(probs.len(), g * tq * tk, "probs shape");
+    assert_eq!(v.len(), g * tk * dh, "v shape");
+    let mut out = vec![0.0f32; g * tq * dh];
+    for gi in 0..g {
+        for qi in 0..tq {
+            let prow = &probs[(gi * tq + qi) * tk..(gi * tq + qi) * tk + tk];
+            let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            for (kj, &p) in prow.iter().enumerate() {
+                let vrow = &v[(gi * tk + kj) * dh..(gi * tk + kj) * dh + dh];
+                for d in 0..dh {
+                    orow[d] += p * vrow[d];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense multi-head attention. Returns `(out [h,tq,dh], probs [h,tq,tk])`.
+pub fn mha_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    q_offset: usize,
+    length: usize,
+    key_mask: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>) {
+    let probs = attention_scores(q, k, h, tq, tk, dh, q_offset, length, key_mask);
+    let out = attn_av(&probs, v, h, tq, tk, dh);
+    (out, probs)
+}
+
+/// CHAI clustered-head attention (paper §3.4): scores once per cluster
+/// representative (`q_rep`/`k_rep`: `[kc, tq, dh]`), broadcast to every
+/// member head via `membership`, applied to each head's own V (all V
+/// kept, per Table 4).
+///
+/// Returns `(out [h,tq,dh], probs_rep [kc,tq,tk])`.
+pub fn clustered_attention(
+    q_rep: &[f32],
+    k_rep: &[f32],
+    v: &[f32],
+    membership: &[usize],
+    kc: usize,
+    h: usize,
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    q_offset: usize,
+    length: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(membership.len(), h, "membership shape");
+    let probs = attention_scores(q_rep, k_rep, kc, tq, tk, dh, q_offset, length, None);
+    // broadcast rep probabilities to member heads, then the same AV loop
+    // as the dense path — with singleton clusters this is bit-for-bit MHA
+    let mut probs_full = vec![0.0f32; h * tq * tk];
+    for (hh, &m) in membership.iter().enumerate() {
+        assert!(m < kc, "membership {m} out of range (k={kc})");
+        probs_full[hh * tq * tk..(hh + 1) * tq * tk]
+            .copy_from_slice(&probs[m * tq * tk..(m + 1) * tq * tk]);
+    }
+    let out = attn_av(&probs_full, v, h, tq, tk, dh);
+    (out, probs)
+}
+
+/// Table-4 ablation (CHAI-QKV): V is also taken from the representative
+/// head, i.e. the whole head is pruned. `rep_heads [kc]` indexes into v.
+/// Returns `(out [h,tq,dh], probs_rep [kc,tq,tk])`.
+pub fn clustered_attention_qkv(
+    q_rep: &[f32],
+    k_rep: &[f32],
+    v: &[f32],
+    membership: &[usize],
+    rep_heads: &[usize],
+    kc: usize,
+    h: usize,
+    tq: usize,
+    tk: usize,
+    dh: usize,
+    q_offset: usize,
+    length: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(rep_heads.len(), kc, "rep_heads shape");
+    let probs = attention_scores(q_rep, k_rep, kc, tq, tk, dh, q_offset, length, None);
+    let mut v_rep = vec![0.0f32; kc * tk * dh];
+    for (ci, &rh) in rep_heads.iter().enumerate() {
+        assert!(rh < h, "rep head {rh} out of range (h={h})");
+        v_rep[ci * tk * dh..(ci + 1) * tk * dh]
+            .copy_from_slice(&v[rh * tk * dh..(rh + 1) * tk * dh]);
+    }
+    let out_rep = attn_av(&probs, &v_rep, kc, tq, tk, dh);
+    let mut out = vec![0.0f32; h * tq * dh];
+    for (hh, &m) in membership.iter().enumerate() {
+        out[hh * tq * dh..(hh + 1) * tq * dh]
+            .copy_from_slice(&out_rep[m * tq * dh..(m + 1) * tq * dh]);
+    }
+    (out, probs)
+}
+
+// ---------------------------------------------------------------------------
+// Model primitives (mirror of python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+/// RMSNorm over the last axis: `x [t, d] * rsqrt(mean(x²) + eps) * w [d]`.
+pub fn rmsnorm(x: &[f32], w: &[f32], t: usize, d: usize, eps: f32) -> Vec<f32> {
+    assert_eq!(x.len(), t * d, "x shape");
+    assert_eq!(w.len(), d, "w shape");
+    let mut out = vec![0.0f32; t * d];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let mut var = 0.0f32;
+        for v in row {
+            var += v * v;
+        }
+        var /= d as f32;
+        let r = 1.0 / (var + eps).sqrt();
+        let orow = &mut out[ti * d..(ti + 1) * d];
+        for i in 0..d {
+            orow[i] = row[i] * r * w[i];
+        }
+    }
+    out
+}
+
+/// Rotary embedding, in place. x: `[g, t, dh]`; `positions [t]` are the
+/// absolute positions of the t rows; `dh` must be even.
+pub fn rope(x: &mut [f32], positions: &[usize], g: usize, t: usize, dh: usize, theta: f32) {
+    assert_eq!(x.len(), g * t * dh, "x shape");
+    assert_eq!(positions.len(), t, "positions shape");
+    assert_eq!(dh % 2, 0, "head_dim must be even for rope");
+    let half = dh / 2;
+    // frequencies depend only on the channel — hoist out of the hot loop
+    let freqs: Vec<f32> =
+        (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect();
+    for gi in 0..g {
+        for ti in 0..t {
+            let row = &mut x[(gi * t + ti) * dh..(gi * t + ti) * dh + dh];
+            let pos = positions[ti] as f32;
+            for (i, &freq) in freqs.iter().enumerate() {
+                let angle = pos * freq;
+                let (sin, cos) = (angle.sin(), angle.cos());
+                let (x1, x2) = (row[i], row[half + i]);
+                row[i] = x1 * cos - x2 * sin;
+                row[half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+/// `a [m, kk] @ b [kk, n] → [m, n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * kk, "a shape");
+    assert_eq!(b.len(), kk * n, "b shape");
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let arow = &a[mi * kk..(mi + 1) * kk];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for (ki, &av) in arow.iter().enumerate() {
+            let brow = &b[ki * n..(ki + 1) * n];
+            for ni in 0..n {
+                orow[ni] += av * brow[ni];
+            }
+        }
+    }
+    out
+}
+
+/// SwiGLU MLP: `(silu(x@wg) * (x@wu)) @ wd` with x `[t, d]`,
+/// wg/wu `[d, f]`, wd `[f, d]`.
+pub fn swiglu(x: &[f32], wg: &[f32], wu: &[f32], wd: &[f32], t: usize, d: usize, f: usize) -> Vec<f32> {
+    let mut gate = matmul(x, wg, t, d, f);
+    let up = matmul(x, wu, t, d, f);
+    for (g, u) in gate.iter_mut().zip(&up) {
+        // silu(g) * u; silu(x) = x * sigmoid(x)
+        *g = *g / (1.0 + (-*g).exp()) * u;
+    }
+    matmul(&gate, wd, t, f, d)
+}
+
+/// Per-head Q/K/V projection: gather head columns of `w [d, h*dh]` for
+/// `heads` and project `xn [t, d]` → `[len(heads), t, dh]`. Both the
+/// dense path (`heads = 0..h`) and the clustered path (representatives
+/// only — the FLOP saving) use this, so CHAI with singleton clusters is
+/// bitwise-identical to MHA.
+pub fn project_heads(
+    xn: &[f32],
+    w: &[f32],
+    heads: &[usize],
+    t: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+) -> Vec<f32> {
+    assert_eq!(xn.len(), t * d, "xn shape");
+    assert_eq!(w.len(), d * h * dh, "w shape");
+    let hd = h * dh;
+    let mut out = vec![0.0f32; heads.len() * t * dh];
+    for (gi, &hh) in heads.iter().enumerate() {
+        assert!(hh < h, "head {hh} out of range (h={h})");
+        for ti in 0..t {
+            let xrow = &xn[ti * d..(ti + 1) * d];
+            let orow = &mut out[(gi * t + ti) * dh..(gi * t + ti) * dh + dh];
+            for (j, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[j * hd + hh * dh..j * hd + hh * dh + dh];
+                for dd in 0..dh {
+                    orow[dd] += xv * wrow[dd];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `[h, t, dh] → [t, h*dh]` (the `_unheads` transpose).
+pub fn unheads(x: &[f32], h: usize, t: usize, dh: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * t * dh, "x shape");
+    let mut out = vec![0.0f32; t * h * dh];
+    for hh in 0..h {
+        for ti in 0..t {
+            let src = &x[(hh * t + ti) * dh..(hh * t + ti) * dh + dh];
+            out[ti * h * dh + hh * dh..ti * h * dh + hh * dh + dh].copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// Boolean mask of the `n_keep` largest entries by rank counting
+/// (`rank_i = #{j : s_j > s_i}`, keep `rank < n_keep`) — the SpAtten
+/// selection from `logprob_spatten_graph` (ties keep everything tied).
+pub fn top_mask(scores: &[f32], n_keep: usize) -> Vec<bool> {
+    scores
+        .iter()
+        .map(|&si| scores.iter().filter(|&&sj| sj > si).count() < n_keep)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn scores_rows_are_causal_distributions() {
+        let (g, tq, tk, dh) = (2, 5, 5, 4);
+        let q = fill(g * tq * dh, 1);
+        let k = fill(g * tk * dh, 2);
+        let probs = attention_scores(&q, &k, g, tq, tk, dh, 0, 4, None);
+        for gi in 0..g {
+            for qi in 0..tq {
+                let row = &probs[(gi * tq + qi) * tk..(gi * tq + qi) * tk + tk];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5, "row sum {sum}");
+                for (kj, &p) in row.iter().enumerate() {
+                    if kj > qi || kj >= 4 {
+                        assert_eq!(p, 0.0, "masked g{gi} q{qi} k{kj}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_clusters_equal_mha_bitwise() {
+        let (h, tq, tk, dh) = (4, 6, 6, 4);
+        let q = fill(h * tq * dh, 3);
+        let k = fill(h * tk * dh, 4);
+        let v = fill(h * tk * dh, 5);
+        let membership: Vec<usize> = (0..h).collect();
+        let (mo, mp) = mha_attention(&q, &k, &v, h, tq, tk, dh, 0, tk, None);
+        let (co, cp) = clustered_attention(&q, &k, &v, &membership, h, h, tq, tk, dh, 0, tk);
+        assert_eq!(mo, co, "outputs must be bit-for-bit identical");
+        assert_eq!(mp, cp);
+    }
+
+    #[test]
+    fn clustered_broadcasts_rep_scores() {
+        let (h, kc, tq, tk, dh) = (4, 2, 3, 3, 2);
+        let q_rep = fill(kc * tq * dh, 6);
+        let k_rep = fill(kc * tk * dh, 7);
+        let v = fill(h * tk * dh, 8);
+        let membership = vec![0, 0, 1, 1];
+        let (out, probs) =
+            clustered_attention(&q_rep, &k_rep, &v, &membership, kc, h, tq, tk, dh, 0, tk);
+        assert_eq!(out.len(), h * tq * dh);
+        assert_eq!(probs.len(), kc * tq * tk);
+        // heads sharing a cluster and identical V rows would agree; here
+        // V differs so outputs differ, but both derive from rep 0/1 rows
+        let manual0 = attn_av(&probs[..tq * tk], &v[..tk * dh], 1, tq, tk, dh);
+        assert_eq!(&out[..tq * dh], &manual0[..]);
+    }
+
+    #[test]
+    fn qkv_ablation_reuses_rep_v() {
+        let (h, kc, tq, tk, dh) = (4, 2, 3, 3, 2);
+        let q_rep = fill(kc * tq * dh, 9);
+        let k_rep = fill(kc * tk * dh, 10);
+        let v = fill(h * tk * dh, 11);
+        let membership = vec![0, 0, 1, 1];
+        let rep_heads = vec![0, 2];
+        let (out, _) = clustered_attention_qkv(
+            &q_rep, &k_rep, &v, &membership, &rep_heads, kc, h, tq, tk, dh, 0, tk,
+        );
+        // member heads copy their representative's output exactly
+        assert_eq!(out[..tq * dh], out[tq * dh..2 * tq * dh]);
+        assert_eq!(out[2 * tq * dh..3 * tq * dh], out[3 * tq * dh..]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let d = 8;
+        let x = vec![2.0f32; d];
+        let w = vec![1.0f32; d];
+        let out = rmsnorm(&x, &w, 1, d, 1e-5);
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let (g, t, dh) = (2, 1, 6);
+        let x0 = fill(g * t * dh, 12);
+        let mut x = x0.clone();
+        rope(&mut x, &[0], g, t, dh, 10000.0);
+        assert_eq!(x, x0);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let (g, t, dh) = (1, 3, 8);
+        let x0 = fill(g * t * dh, 13);
+        let mut x = x0.clone();
+        rope(&mut x, &[3, 4, 5], g, t, dh, 10000.0);
+        for ti in 0..t {
+            let n0: f32 = x0[ti * dh..(ti + 1) * dh].iter().map(|v| v * v).sum();
+            let n1: f32 = x[ti * dh..(ti + 1) * dh].iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-4, "t{ti}: {n0} vs {n1}");
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = fill(6, 14);
+        let eye = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 3, 3), a);
+    }
+
+    #[test]
+    fn unheads_transposes() {
+        // [h=2, t=2, dh=1]: rows h0t0,h0t1,h1t0,h1t1 -> t0:[h0,h1], t1:[h0,h1]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(unheads(&x, 2, 2, 1), vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn top_mask_keeps_largest() {
+        let m = top_mask(&[0.5, 2.0, 1.0, -1.0], 2);
+        assert_eq!(m, vec![false, true, true, false]);
+        // ties: everything tied at the boundary stays
+        let m = top_mask(&[1.0, 1.0, 0.0], 1);
+        assert_eq!(m, vec![true, true, false]);
+    }
+}

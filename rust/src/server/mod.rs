@@ -1,7 +1,7 @@
 //! TCP line-JSON serving protocol (one JSON object per line).
 //!
 //! Request:  `{"prompt": "...", "max_new": 32, "variant": "chai"}`
-//!           `{"cmd": "stats"}`   `{"cmd": "kv"}`   `{"cmd": "ping"}`
+//!           `{"cmd": "stats"}` `{"cmd": "kv"}` `{"cmd": "info"}` `{"cmd": "ping"}`
 //! Response: `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}`
 //!           or `{"error": "..."}`.
 //!
@@ -112,6 +112,13 @@ fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
                 .opt("gauges")
                 .cloned()
                 .unwrap_or_else(|| Json::obj(vec![]))),
+            // static serving facts: compute backend, model name
+            "info" => Ok(coord
+                .metrics
+                .to_json()
+                .opt("info")
+                .cloned()
+                .unwrap_or_else(|| Json::obj(vec![]))),
             other => Ok(Json::obj(vec![(
                 "error",
                 Json::Str(format!("unknown cmd {other:?}")),
@@ -172,5 +179,9 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.call(&Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+
+    pub fn info(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::Str("info".into()))]))
     }
 }

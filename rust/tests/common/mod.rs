@@ -1,0 +1,27 @@
+//! Shared config plumbing for the integration suites: which backends
+//! to drive the full stack with.
+
+use std::path::{Path, PathBuf};
+
+use chai::config::ServingConfig;
+
+/// The AOT artifacts dir, when `make artifacts` has produced one.
+pub fn artifacts() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+/// Configs to drive the full stack with: the reference backend always
+/// (toy model when artifacts are absent, real weights when present),
+/// plus the XLA backend when artifacts exist.
+pub fn stack_cfgs() -> Vec<ServingConfig> {
+    let mut cfgs = vec![ServingConfig {
+        artifacts_dir: artifacts().unwrap_or_else(|| PathBuf::from("no-artifacts")),
+        backend: "ref".into(),
+        ..Default::default()
+    }];
+    if let Some(dir) = artifacts() {
+        cfgs.push(ServingConfig { artifacts_dir: dir, backend: "xla".into(), ..Default::default() });
+    }
+    cfgs
+}
