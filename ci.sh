@@ -33,6 +33,12 @@ echo "== cargo test -q =="
 # checkout the full engine/coordinator/server stack executes here
 cargo test -q
 
+echo "== serving smoke: batched block-native vs sequential bucket decode (ref backend) =="
+# smoke (no absolute-perf thresholds): asserts identical token streams,
+# zero decode-path bucket copies, and batched tok/s strictly above the
+# sequential path; writes bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --smoke
+
 echo "== golden fixtures match the python oracles (when jax is available) =="
 if python3 -c "import jax" >/dev/null 2>&1; then
   (cd ../python && python3 -m pytest -q tests/test_golden_export.py)

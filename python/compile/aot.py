@@ -263,6 +263,61 @@ def export_all(cfg, params, clusters, out_dir, impl, buckets=None,
     return ex
 
 
+def export_paged_stubs(ex, cfg, buckets, block_size=16, pool_blocks_per_bucket=4):
+    """Block-table decode artifacts — **lowering stubs**, gated behind
+    ``--paged-artifacts``.
+
+    The rust reference backend already serves block-table-native decode
+    end to end (``runtime::Backend::{decode_paged, prefill_paged}``:
+    K,V read and appended in place against the block pool, ragged
+    cross-request batching, zero bucket-shaped copies). The XLA path
+    still executes the bucket-shaped ``decode_*_t{T}`` artifacts, so the
+    rust ``XlaBackend`` keeps ``supports_paged() == false`` until fused
+    ``decode_{mha,chai}_paged_t*`` graphs exist.
+
+    This lowers the *gather stage* of that future artifact — block table
+    → contiguous cache, i.e. the per-step copy the engine currently does
+    on the host, moved on-device — so the fused kernel can land
+    incrementally on top of it. On a real TPU the block gather would
+    ride scalar-prefetch (``pltpu.PrefetchScalarGridSpec``, see
+    ``kernels/chai.py``) so the DMA engine schedules block fetches;
+    under ``interpret=True``/CPU it lowers to plain dynamic-gather HLO,
+    which is what we export here.
+
+    Pool shape is static per bucket (XLA needs fixed shapes):
+    ``[pool_max, L, H, B, dh]`` with ``pool_max = (T/B) *
+    pool_blocks_per_bucket`` — enough for a ``pool_blocks_per_bucket``-
+    deep batch sharing one pool tensor.
+    """
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    B = block_size
+    for T in buckets:
+        nb = T // B
+        if nb == 0 or T % B != 0:
+            # the gather reshapes [nb, ..., B, dh] -> [..., nb*B, dh],
+            # which only covers T when the bucket is block-aligned
+            print(f"  skipping paged stub for bucket {T} "
+                  f"(not a multiple of block_size {B})")
+            continue
+        pool_max = nb * pool_blocks_per_bucket
+
+        def gather(wlist, pool_k, pool_v, table, T=T, nb=nb):
+            # pool_*: [pool_max, L, H, B, dh]; table: [nb] block ids
+            k = jnp.take(pool_k, table, axis=0)   # [nb, L, H, B, dh]
+            v = jnp.take(pool_v, table, axis=0)
+            k = jnp.transpose(k, (1, 2, 0, 3, 4)).reshape(L, H, T, dh)
+            v = jnp.transpose(v, (1, 2, 0, 3, 4)).reshape(L, H, T, dh)
+            return k, v
+
+        pool0 = np.zeros((pool_max, L, H, B, dh), np.float32)
+        ex.lower(f"paged_gather_mha_t{T}", gather,
+                 [("pool_k", pool0), ("pool_v", pool0),
+                  ("block_table", np.zeros(nb, np.int32))],
+                 ["kcache", "vcache"],
+                 {"bucket": T, "block_size": B, "pool_max": pool_max,
+                  "stub": True}, impl="jnp")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
@@ -273,6 +328,10 @@ def main():
     ap.add_argument("--cluster-samples", type=int, default=96)
     ap.add_argument("--buckets", type=int, nargs="*", default=None)
     ap.add_argument("--logprob-only", action="store_true")
+    ap.add_argument("--paged-artifacts", action="store_true",
+                    help="also lower the block-table decode artifact stubs "
+                         "(gather stage; the rust XLA backend does not "
+                         "consume them yet — see export_paged_stubs)")
     args = ap.parse_args()
     out = args.out
     os.makedirs(out, exist_ok=True)
@@ -296,6 +355,8 @@ def main():
 
     ex = export_all(cfg, params, clusters, out, args.impl,
                     buckets=args.buckets, logprob_only=args.logprob_only)
+    if args.paged_artifacts and not args.logprob_only:
+        export_paged_stubs(ex, cfg, args.buckets or PREFILL_BUCKETS)
 
     # eval suites + analysis samples + tokenizer fixture for rust
     w = data.build_world()

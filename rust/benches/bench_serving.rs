@@ -4,6 +4,13 @@
 //!
 //! Run:  cargo bench --bench bench_serving [-- --requests 16]
 //!       cargo bench --bench bench_serving -- --backend ref   # no artifacts needed
+//!       cargo bench --bench bench_serving -- --backend ref --smoke
+//!           # CI smoke: batched (block-table-native fused ticks) vs
+//!           # --no-batched-decode sequential bucket path on one burst;
+//!           # asserts identical token streams, zero decode-path bucket
+//!           # copies, and batched tok/s strictly above sequential;
+//!           # emits bench_results/BENCH_serving.json with tokens/s +
+//!           # per-tick batch occupancy (no absolute-perf thresholds)
 
 mod common;
 
@@ -15,9 +22,135 @@ use chai::util::json::Json;
 use chai::util::now_ms;
 use chai::util::stats::{mean, percentile};
 
+/// Batched vs sequential decode on one same-instant burst of requests
+/// with partially shared prompts: the block-table-native fused tick
+/// must produce the exact same token streams with zero bucket-shaped
+/// decode copies, and report its throughput next to the sequential
+/// path's. Writes `bench_results/BENCH_serving.json`.
+fn smoke(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    let n = args.usize("requests", 8)?.max(4);
+    let max_new = args.usize("max-new", 8)?;
+    let prompts: Vec<String> = (0..n)
+        .map(|i| format!("the color of tom is case {}", i % 3)) // shared prefixes
+        .collect();
+
+    let mut table = Table::new(
+        "Serving smoke: batched block-native ticks vs sequential bucket decode",
+        &["mode", "ok", "tok/s", "mean batch", "decode gathers", "prefill skipped"],
+    );
+    let mut json_rows = Vec::new();
+    let mut streams: Vec<Vec<String>> = Vec::new();
+    let mut tok_s_by_mode = Vec::new();
+
+    for (mode, batched) in [("batched", true), ("sequential", false)] {
+        let cfg = ServingConfig {
+            max_batch: n,
+            batched_decode: batched,
+            ..base_cfg.clone()
+        };
+        let handle = Coordinator::start(cfg)?;
+        let coord = handle.coordinator.clone();
+        // warm the executables out of the measurement
+        coord.submit("warm up please", 2, Variant::Chai).recv().unwrap();
+
+        // best-of-3 bursts: a single wall-clock sample on a shared CI
+        // runner can be skewed by one scheduler preemption; the max
+        // reflects what the path can actually sustain
+        let mut texts = Vec::new();
+        let mut ok = 0usize;
+        let mut tok_s = 0.0f64;
+        for rep in 0..3 {
+            let t0 = now_ms();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| coord.submit(p, max_new, Variant::Chai))
+                .collect();
+            let mut rep_texts = Vec::new();
+            let mut tokens = 0usize;
+            let mut rep_ok = 0usize;
+            for rx in rxs {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+                if r.error.is_none() {
+                    rep_ok += 1;
+                    tokens += r.n_generated;
+                }
+                rep_texts.push(r.text);
+            }
+            let span_s = ((now_ms() - t0) / 1e3).max(1e-9);
+            tok_s = tok_s.max(tokens as f64 / span_s);
+            if rep == 0 {
+                texts = rep_texts;
+                ok = rep_ok;
+            } else {
+                // greedy decoding is deterministic: repeats must agree
+                assert_eq!(texts, rep_texts, "[{mode}] rep {rep} diverged");
+            }
+        }
+        let occupancy = coord.metrics.mean_ms("decode_batch");
+        let gathers = coord.metrics.gauge("paged_decode_gather_copies");
+        let scatters = coord.metrics.gauge("paged_decode_scatter_copies");
+        let skipped = coord.metrics.gauge("paged_prefill_skipped_tokens");
+        handle.shutdown();
+
+        assert_eq!(ok, n, "[{mode}] all requests must succeed");
+        if batched {
+            assert_eq!(
+                gathers + scatters,
+                0.0,
+                "batched decode must perform zero bucket-shaped K,V copies"
+            );
+        }
+        table.row(vec![
+            mode.to_string(),
+            format!("{ok}/{n}"),
+            format!("{tok_s:.1}"),
+            format!("{occupancy:.2}"),
+            format!("{gathers:.0}"),
+            format!("{skipped:.0}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("requests", Json::Num(n as f64)),
+            ("throughput_tok_s", Json::Num(tok_s)),
+            ("mean_batch_occupancy", Json::Num(occupancy)),
+            ("decode_gather_copies", Json::Num(gathers)),
+            ("decode_scatter_copies", Json::Num(scatters)),
+            ("prefill_skipped_tokens", Json::Num(skipped)),
+        ]));
+        streams.push(texts);
+        tok_s_by_mode.push(tok_s);
+    }
+
+    assert_eq!(
+        streams[0], streams[1],
+        "batched and sequential decode must produce identical token streams"
+    );
+    table.print();
+    // no absolute-throughput thresholds, but the ordering is the PR's
+    // acceptance criterion: block-native fused ticks must beat the
+    // bucket gather/scatter path at batch >= 4
+    assert!(
+        tok_s_by_mode[0] > tok_s_by_mode[1],
+        "batched {:.1} tok/s must be strictly above sequential {:.1} tok/s at batch {n}",
+        tok_s_by_mode[0],
+        tok_s_by_mode[1]
+    );
+    common::write_results(
+        "BENCH_serving",
+        Json::obj(vec![
+            ("rows", Json::Arr(json_rows)),
+            ("identical_streams", Json::Bool(true)),
+        ]),
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
+    if args.bool("smoke") {
+        return smoke(&args, &base_cfg);
+    }
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;
 

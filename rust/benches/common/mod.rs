@@ -59,5 +59,10 @@ pub fn serving_config(args: &Args) -> Option<ServingConfig> {
         );
         return None;
     }
-    Some(ServingConfig { artifacts_dir: d, backend, ..Default::default() })
+    Some(ServingConfig {
+        artifacts_dir: d,
+        backend,
+        batched_decode: !args.bool("no-batched-decode"),
+        ..Default::default()
+    })
 }

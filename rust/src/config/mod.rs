@@ -204,6 +204,12 @@ pub struct ServingConfig {
     /// `false` falls back to contiguous per-session tensors + `KvPool`
     /// bucket accounting
     pub paged_kv: bool,
+    /// block-table-native serving on paged-capable backends: fuse all
+    /// live paged sessions into one ragged `decode_paged` call per tick
+    /// and skip prefill compute for adopted prefix blocks; `false`
+    /// (`--no-batched-decode`) restores the per-session bucket
+    /// gather/scatter path for comparison
+    pub batched_decode: bool,
     /// token positions per KV block (paged path)
     pub kv_block_size: usize,
     /// total K,V block pool budget in bytes (paged path; the legacy
@@ -222,6 +228,7 @@ impl Default for ServingConfig {
             temperature: 0.0,
             seed: 0,
             paged_kv: true,
+            batched_decode: true,
             kv_block_size: 16,
             kv_capacity_bytes: 512 * 1024 * 1024,
         }

@@ -7,10 +7,13 @@
 //!
 //! Scheduling policy (see [`batcher`]): token-level continuous batching —
 //! every tick the loop (1) admits waiting requests up to `max_batch` live
-//! sessions, subject to KV-pool admission control, (2) runs ONE decode
-//! step for every live session (round-robin), (3) retires finished
-//! sessions. Prefill happens at admission (prefill-prioritized, like
-//! vLLM's default).
+//! sessions, subject to KV-pool admission control, (2) runs ONE fused
+//! decode tick over every live session ([`Engine::decode_tick`]: all
+//! paged sessions of a variant go through a single ragged
+//! block-table-native backend call), (3) retires finished sessions.
+//! Prefill happens at admission (prefill-prioritized, like vLLM's
+//! default) and skips compute for prompt blocks adopted from the prefix
+//! index.
 
 pub mod batcher;
 
@@ -287,29 +290,43 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
             }
         }
 
-        // --- decode tick: one token for every live session ----------------
+        // --- decode tick: one fused token step across live sessions ------
+        // `decode_tick` batches every paged session of a variant into a
+        // single ragged block-table-native backend call: one dispatch
+        // per tick, zero bucket copies per row (the ref backend still
+        // computes rows sequentially inside the call; a device backend
+        // would vectorize them)
         let mut finished: Vec<usize> = Vec::new();
-        for (i, l) in live.iter_mut().enumerate() {
+        if !live.is_empty() {
             if !paged {
-                pool.touch(l.req.id);
+                for l in &live {
+                    pool.touch(l.req.id);
+                }
             }
-            match engine.step_session(&mut l.session) {
-                Ok(more) => {
-                    metrics.inc("tokens");
-                    if let Some(ms) = l.session.timing.decode_ms.last() {
-                        metrics.observe_ms("decode_step", *ms);
+            metrics.observe("decode_batch", live.len() as f64);
+            let mut sessions: Vec<&mut Session> =
+                live.iter_mut().map(|l| &mut l.session).collect();
+            let outcomes = engine.decode_tick(&mut sessions);
+            drop(sessions);
+            for (i, outcome) in outcomes.into_iter().enumerate() {
+                match outcome {
+                    Ok(more) => {
+                        metrics.inc("tokens");
+                        if let Some(ms) = live[i].session.timing.decode_ms.last() {
+                            metrics.observe_ms("decode_step", *ms);
+                        }
+                        if !more {
+                            finished.push(i);
+                        }
                     }
-                    if !more {
+                    Err(e) => {
+                        metrics.inc("errors");
+                        let _ = live[i]
+                            .req
+                            .resp_tx
+                            .send(Response::error(live[i].req.id, format!("{e:#}")));
                         finished.push(i);
                     }
-                }
-                Err(e) => {
-                    metrics.inc("errors");
-                    let _ = l
-                        .req
-                        .resp_tx
-                        .send(Response::error(l.req.id, format!("{e:#}")));
-                    finished.push(i);
                 }
             }
         }
@@ -359,6 +376,20 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
             metrics.set_gauge("paged_cow_copies", snap.stats.cow_copies as f64);
             metrics.set_gauge("paged_evictions", snap.stats.evictions as f64);
             metrics.set_gauge("paged_alloc_failures", snap.stats.alloc_failures as f64);
+            // block-native hot-path accounting: bucket-shaped copies on
+            // the decode path must stay 0 while batched decode is on
+            metrics.set_gauge(
+                "paged_decode_gather_copies",
+                snap.stats.decode_gather_copies as f64,
+            );
+            metrics.set_gauge(
+                "paged_decode_scatter_copies",
+                snap.stats.decode_scatter_copies as f64,
+            );
+            metrics.set_gauge(
+                "paged_prefill_skipped_tokens",
+                snap.stats.prefill_skipped_tokens as f64,
+            );
         }
     }
 }

@@ -15,6 +15,16 @@
 //! different artifacts + selector inputs. All timings are measured here
 //! and surfaced per phase (Figure 12 needs probe+cluster overhead included
 //! in time-to-first-token).
+//!
+//! The serving hot path is **block-table-native** on backends with paged
+//! kernels (the ref backend today): prefill computes only the non-adopted
+//! prompt suffix and writes K,V rows straight into the paged blocks, and
+//! [`Engine::decode_tick`] fuses all live paged sessions of a variant
+//! into one ragged batched `decode_paged` call that reads/appends
+//! block-resident K,V in place — zero bucket-shaped gather/scatter
+//! copies (asserted via `PagedStats::decode_{gather,scatter}_copies`).
+//! `--no-batched-decode` restores the per-session bucket path, which the
+//! XLA backend still uses until paged artifacts are re-lowered.
 
 use std::path::Path;
 use std::time::Instant;
@@ -26,7 +36,7 @@ use crate::config::{Manifest, ServingConfig};
 use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot};
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
-use crate::runtime::{backend_for, Backend, In};
+use crate::runtime::{backend_for, Backend, ClusterAssignment, In, PagedDecodeRow};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -533,10 +543,12 @@ impl Engine {
     fn sample(&self, logits: &Tensor) -> i32 {
         let v = logits.as_f32().unwrap();
         if self.cfg.temperature <= 0.0 {
+            // total_cmp: NaN logits (a poisoned forward) must pick a
+            // deterministic index, not panic the engine thread
             return v
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0 as i32;
         }
@@ -574,6 +586,14 @@ impl Engine {
         }
     }
 
+    /// Whether the serving hot path runs block-table-native: the
+    /// backend brings paged kernels and `--no-batched-decode` has not
+    /// forced the legacy bucket gather/scatter path. (The session must
+    /// additionally hold `Caches::Paged` storage.)
+    fn paged_native(&self) -> bool {
+        self.cfg.batched_decode && self.rt.supports_paged()
+    }
+
     fn start_session_inner(
         &self,
         prompt_tokens: Vec<i32>,
@@ -585,11 +605,82 @@ impl Engine {
         let total = prompt_tokens.len() + max_new;
         let bucket = crate::config::Manifest::bucket_for(&m.decode_buckets, total)
             .with_context(|| format!("sequence {total} exceeds max bucket"))?;
+        let l = m.model.n_layers;
+
+        // membership identification runs up front (Figure 10 steps 1-2);
+        // both prefill paths — bucket artifact and block-native — consume
+        // the same assignment
+        let (clusters, probe_ms, cluster_ms) = match variant {
+            Variant::Mha => (None, 0.0, 0.0),
+            Variant::Chai => {
+                let (ms, p, c) = self.online_membership(&prompt_tokens)?;
+                (
+                    Some(ClusterAssignment {
+                        membership: ms.iter().map(|x| x.membership.clone()).collect(),
+                        reps: ms.iter().map(|x| x.reps.clone()).collect(),
+                    }),
+                    p,
+                    c,
+                )
+            }
+            Variant::ChaiStatic => {
+                let (membership, reps) = self.static_membership();
+                (Some(ClusterAssignment { membership, reps }), 0.0, 0.0)
+            }
+            _ => bail!(
+                "serving path supports mha|chai|chai-static (got {}); other variants are accuracy-only",
+                variant.name()
+            ),
+        };
+
+        // Block-table-native prefill (paged store + paged-capable
+        // backend): compute only the non-adopted prompt suffix and write
+        // K,V rows straight into the owned blocks — no bucket-shaped
+        // caches exist at any point, and prefill *compute* (not just the
+        // KV writes) is skipped for prefix blocks adopted via the
+        // hash-chain index.
+        if let Some(seq) = paged_seq {
+            if self.paged_native() {
+                let store = self.paged.as_ref().expect("paged seq without store");
+                let mut st = store.borrow_mut();
+                let shared = st.adopted_prefix_len(seq)?;
+                st.stats.prefill_skipped_tokens += shared as u64;
+                let t0 = Instant::now();
+                let logits = self.rt.prefill_paged(seq, shared, clusters.as_ref(), &mut st)?;
+                let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+                st.commit_prefill(seq)?;
+                drop(st);
+                let prompt_len = prompt_tokens.len();
+                let mut tokens = prompt_tokens;
+                tokens.push(self.sample(&logits));
+                return Ok(Session {
+                    variant: variant.clone(),
+                    tokens,
+                    prompt_len,
+                    max_new,
+                    bucket,
+                    caches: Caches::Paged { seq: Some(seq), kind: variant.cache_kind() },
+                    membership_tensors: None,
+                    clusters,
+                    timing: Timing {
+                        probe_ms,
+                        cluster_ms,
+                        prefill_ms,
+                        ttft_ms: probe_ms + cluster_ms + prefill_ms,
+                        ..Default::default()
+                    },
+                    done: false,
+                });
+            }
+        }
+
+        // legacy bucket-artifact prefill (XLA backend until paged
+        // artifacts are re-lowered, `--no-batched-decode`, or the
+        // `--no-paged` contiguous path)
         let mut padded = vec![tokenizer::PAD; bucket];
         padded[..prompt_tokens.len()].copy_from_slice(&prompt_tokens);
         let toks = Tensor::i32(vec![bucket], padded);
         let ln = Tensor::scalar_i32(prompt_tokens.len() as i32);
-        let l = m.model.n_layers;
 
         let (caches, logits, timing, mts) = match variant {
             Variant::Mha => {
@@ -609,19 +700,8 @@ impl Engine {
                 )
             }
             Variant::Chai | Variant::ChaiStatic => {
-                let (mem, reps, probe_ms, cluster_ms) = if *variant == Variant::Chai {
-                    let (ms, p, c) = self.online_membership(&prompt_tokens)?;
-                    (
-                        ms.iter().map(|x| x.membership.clone()).collect::<Vec<_>>(),
-                        ms.iter().map(|x| x.reps.clone()).collect::<Vec<_>>(),
-                        p,
-                        c,
-                    )
-                } else {
-                    let (mem, reps) = self.static_membership();
-                    (mem, reps, 0.0, 0.0)
-                };
-                let (mt, rt_) = self.membership_tensors(&mem, &reps, m.k_max);
+                let cl = clusters.as_ref().expect("chai prefill without clusters");
+                let (mt, rt_) = self.membership_tensors(&cl.membership, &cl.reps, m.k_max);
                 let t0 = Instant::now();
                 let outs = self.rt.run(
                     &format!("prefill_chai_t{bucket}"),
@@ -645,10 +725,7 @@ impl Engine {
                     Some((mt, rt_)),
                 )
             }
-            _ => bail!(
-                "serving path supports mha|chai|chai-static (got {}); other variants are accuracy-only",
-                variant.name()
-            ),
+            _ => unreachable!("non-serving variants rejected above"),
         };
 
         // migrate the prefill caches into the block store and drop the
@@ -683,19 +760,148 @@ impl Engine {
             bucket,
             caches,
             membership_tensors: mts,
+            clusters,
             timing,
             done: false,
         })
     }
 
     /// One decode step. Returns false when the session is finished.
+    ///
+    /// Paged-native sessions route through [`Self::decode_tick`] as a
+    /// batch of one (block-table-native kernels, zero bucket copies);
+    /// everything else takes the legacy bucket-artifact path.
     pub fn step_session(&self, s: &mut Session) -> Result<bool> {
-        if s.done {
-            return Ok(false);
+        if self.paged_native() && matches!(s.caches, Caches::Paged { seq: Some(_), .. }) {
+            return self
+                .decode_tick(&mut [s])
+                .pop()
+                .expect("one outcome per session");
         }
-        let generated = s.tokens.len() - s.prompt_len;
-        if generated >= s.max_new || *s.tokens.last().unwrap() == tokenizer::EOS {
-            s.done = true;
+        self.step_session_bucket(s)
+    }
+
+    /// Advance every live session by one token in a single fused tick.
+    ///
+    /// Paged-native sessions (block-table storage + a backend with
+    /// paged kernels) are grouped per attention variant and dispatched
+    /// as ONE ragged batched [`Backend::decode_paged`] call: each row's
+    /// K,V is appended into its own tail block and attention reads the
+    /// block-resident cache in place, so the tick performs zero
+    /// bucket-shaped gather/scatter copies and pays one backend
+    /// dispatch regardless of occupancy. (The ref backend still
+    /// computes rows sequentially inside the call — its win is the
+    /// copy elimination and per-row `len`-bounded attention; a device
+    /// backend would additionally vectorize across rows.) Sessions the
+    /// native path cannot serve (legacy contiguous caches, XLA bucket
+    /// artifacts, `--no-batched-decode`) fall back to their per-session
+    /// bucket step within the same tick.
+    ///
+    /// Returns one outcome per session, in order: `Ok(true)` = more to
+    /// generate, `Ok(false)` = finished. Rows are mathematically
+    /// independent, so token streams are identical to stepping each
+    /// session alone.
+    pub fn decode_tick(&self, sessions: &mut [&mut Session]) -> Vec<Result<bool>> {
+        let n = sessions.len();
+        let mut results: Vec<Option<Result<bool>>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        let mut batch: Vec<usize> = Vec::new();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if session_finished(s) {
+                results[i] = Some(Ok(false));
+                continue;
+            }
+            if self.paged_native() && matches!(s.caches, Caches::Paged { seq: Some(_), .. }) {
+                batch.push(i);
+            } else {
+                results[i] = Some(self.step_session_bucket(&mut **s));
+            }
+        }
+        for kind in [CacheKind::Mha, CacheKind::Chai] {
+            let group: Vec<usize> = batch
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    matches!(&sessions[i].caches, Caches::Paged { kind: k, .. } if *k == kind)
+                })
+                .collect();
+            if !group.is_empty() {
+                self.decode_group(sessions, &group, &mut results);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every session resolved"))
+            .collect()
+    }
+
+    /// One fused `decode_paged` call over `group` (indices into
+    /// `sessions`; all paged-native, same cache kind).
+    fn decode_group(
+        &self,
+        sessions: &mut [&mut Session],
+        group: &[usize],
+        results: &mut [Option<Result<bool>>],
+    ) {
+        let store = self.paged.as_ref().expect("paged sessions without store");
+        let mut st = store.borrow_mut();
+        // make every row's tail writable first (CoW / fresh block) so
+        // allocation failures surface per-session before any compute
+        let mut ready: Vec<usize> = Vec::new();
+        for &i in group {
+            let seq = paged_seq_of(&sessions[i]).expect("native session without seq");
+            match st.ensure_append_slot(seq) {
+                Ok(()) => ready.push(i),
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        if ready.is_empty() {
+            return;
+        }
+        let rows: Vec<PagedDecodeRow> = ready
+            .iter()
+            .map(|&i| {
+                let s = &sessions[i];
+                PagedDecodeRow {
+                    seq: paged_seq_of(s).expect("native session without seq"),
+                    token: *s.tokens.last().unwrap(),
+                    pos: s.tokens.len() - 1,
+                    clusters: s.clusters.as_ref(),
+                }
+            })
+            .collect();
+        let t0 = Instant::now();
+        let outs = self.rt.decode_paged(&rows, &mut st);
+        // one fused call serves the whole batch; attribute wall time
+        // evenly for the per-session Figure-12 decomposition
+        let per_row_ms = t0.elapsed().as_secs_f64() * 1e3 / ready.len() as f64;
+        drop(rows);
+        debug_assert_eq!(outs.len(), ready.len(), "one outcome per decode row");
+        for (out, &i) in outs.into_iter().zip(ready.iter()) {
+            let s: &mut Session = &mut *sessions[i];
+            let seq = paged_seq_of(s).expect("native session without seq");
+            let outcome = match out {
+                Ok(logits) => (|| -> Result<bool> {
+                    st.append_committed(seq, *s.tokens.last().unwrap())?;
+                    let next = self.sample(&logits);
+                    s.timing.decode_ms.push(per_row_ms);
+                    s.tokens.push(next);
+                    Ok(!session_finished(s))
+                })(),
+                // rows are independent: only this session fails
+                Err(e) => Err(e.context("batched paged decode")),
+            };
+            results[i] = Some(outcome);
+        }
+    }
+
+    /// Legacy per-session decode step over bucket-shaped caches: gather
+    /// the session's K,V into contiguous tensors, run the bucket decode
+    /// artifact, scatter the new row back. Kept for the XLA backend
+    /// (until paged artifacts are re-lowered), `--no-batched-decode`
+    /// comparisons, and the `--no-paged` contiguous path.
+    fn step_session_bucket(&self, s: &mut Session) -> Result<bool> {
+        if session_finished(s) {
             return Ok(false);
         }
         let l = self.manifest().model.n_layers;
@@ -778,10 +984,7 @@ impl Engine {
         };
         s.timing.decode_ms.push(td.elapsed().as_secs_f64() * 1e3);
         s.tokens.push(next);
-        if next == tokenizer::EOS || s.tokens.len() - s.prompt_len >= s.max_new {
-            s.done = true;
-        }
-        Ok(!s.done)
+        Ok(!session_finished(s))
     }
 
     pub fn finish_session(&self, mut s: Session) -> Generation {
@@ -794,10 +997,11 @@ impl Engine {
 /// KV caches of a live session. The legacy variants hold monolithic
 /// host tensors (the CPU PJRT device memory *is* host memory, so this
 /// stages without extra copies of consequence); the default `Paged`
-/// variant holds only a sequence id into the engine's block store —
-/// rows are gathered per step and the new row scattered back, so
-/// physical memory is block-granular and prefix blocks are shared
-/// across sessions.
+/// variant holds only a sequence id into the engine's block store.
+/// Paged-capable backends read and append block-resident K,V in place
+/// (zero bucket copies); the bucket fallback gathers per step and
+/// scatters the new row back. Either way physical memory is
+/// block-granular and prefix blocks are shared across sessions.
 pub enum Caches {
     Mha { kc: Tensor, vc: Tensor },
     Chai { kreps: Vec<Tensor>, vc: Tensor },
@@ -812,7 +1016,11 @@ pub struct Session {
     pub max_new: usize,
     pub bucket: usize,
     caches: Caches,
+    /// membership/reps tensors for the bucket CHAI artifacts (legacy
+    /// decode path only; paged-native sessions carry `clusters` instead)
     membership_tensors: Option<(Tensor, Tensor)>,
+    /// parsed cluster assignment for the block-table-native kernels
+    clusters: Option<ClusterAssignment>,
     pub timing: Timing,
     pub done: bool,
 }
@@ -821,6 +1029,28 @@ impl Session {
     pub fn generated(&self) -> usize {
         self.tokens.len() - self.prompt_len
     }
+}
+
+/// Paged-store sequence id of a session, if it has block-table storage.
+fn paged_seq_of(s: &Session) -> Option<u64> {
+    match &s.caches {
+        Caches::Paged { seq, .. } => *seq,
+        _ => None,
+    }
+}
+
+/// The single source of truth for session termination, shared by the
+/// batched tick and the bucket step (so the paths cannot diverge):
+/// a session is finished once it is marked done, its generation budget
+/// is spent, or its last token was EOS. Marks `done` as a side effect.
+fn session_finished(s: &mut Session) -> bool {
+    if !s.done
+        && (s.tokens.len() - s.prompt_len >= s.max_new
+            || *s.tokens.last().unwrap() == tokenizer::EOS)
+    {
+        s.done = true;
+    }
+    s.done
 }
 
 #[cfg(test)]
@@ -841,5 +1071,62 @@ mod tests {
         assert_eq!(Variant::Mha.cache_kind(), CacheKind::Mha);
         assert_eq!(Variant::Chai.cache_kind(), CacheKind::Chai);
         assert_eq!(Variant::Dejavu(50).cache_kind(), CacheKind::Mha);
+    }
+
+    fn toy_engine(seed: u64) -> Engine {
+        Engine::load(ServingConfig {
+            artifacts_dir: std::path::PathBuf::from("definitely-no-artifacts-here"),
+            backend: "ref".into(),
+            seed,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn sample_is_nan_safe() {
+        let e = toy_engine(0);
+        assert_eq!(e.sample(&Tensor::f32(vec![4], vec![0.25, 0.5, 0.75, -1.0])), 2);
+        // a NaN logit must yield a deterministic index, not panic the
+        // engine thread (total_cmp orders +NaN greatest)
+        let idx = e.sample(&Tensor::f32(vec![4], vec![0.25, f32::NAN, 0.75, -1.0]));
+        assert_eq!(idx, 1);
+        // all-NaN still terminates deterministically
+        let idx = e.sample(&Tensor::f32(vec![2], vec![f32::NAN, f32::NAN]));
+        assert!(idx == 0 || idx == 1);
+    }
+
+    #[test]
+    fn decode_tick_matches_per_session_steps() {
+        // one decode_tick over three live sessions advances each by one
+        // token, identically to stepping a fresh engine session-by-session
+        let e = toy_engine(1);
+        let prompts = ["the color of tom is", "tom keeps the hat", "the color of tom is"];
+        let mut sessions: Vec<Session> = prompts
+            .iter()
+            .map(|p| e.start_session(p, 4, &Variant::Chai).unwrap())
+            .collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let outcomes = e.decode_tick(&mut refs);
+        assert_eq!(outcomes.len(), 3);
+        for o in &outcomes {
+            assert!(o.is_ok(), "tick must succeed: {o:?}");
+        }
+        let streams: Vec<Vec<i32>> = sessions.iter().map(|s| s.tokens.clone()).collect();
+        for mut s in sessions {
+            e.release_session(&mut s);
+        }
+
+        let e2 = toy_engine(1);
+        for (p, want) in prompts.iter().zip(&streams) {
+            let mut s = e2.start_session(p, 4, &Variant::Chai).unwrap();
+            e2.step_session(&mut s).unwrap();
+            assert_eq!(&s.tokens, want, "batched tick == sequential step for {p:?}");
+            e2.release_session(&mut s);
+        }
+        // the native path never materialized bucket-shaped caches
+        let snap = e2.paged_snapshot().unwrap();
+        assert_eq!(snap.stats.decode_gather_copies, 0);
+        assert_eq!(snap.stats.decode_scatter_copies, 0);
     }
 }

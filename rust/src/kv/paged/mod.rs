@@ -137,6 +137,15 @@ pub struct PagedStats {
     pub evictions: u64,
     pub alloc_failures: u64,
     pub appended_tokens: u64,
+    /// bucket-shaped gather copies on the decode path (`gather_mha` /
+    /// `gather_chai` calls) — must stay 0 on the block-table-native path
+    pub decode_gather_copies: u64,
+    /// bucket-shaped scatter copies on the decode path
+    /// (`write_decode_row` calls) — must stay 0 on the native path
+    pub decode_scatter_copies: u64,
+    /// prompt positions whose prefill *compute* was skipped because
+    /// their blocks were adopted from the prefix index
+    pub prefill_skipped_tokens: u64,
 }
 
 impl PagedStats {
@@ -504,6 +513,59 @@ impl PagedKv {
     }
 
     // ------------------------------------------------------------------
+    // Block-native data plane (kernel-facing)
+    //
+    // Block-table-native kernels (`runtime::Backend::{decode_paged,
+    // prefill_paged}`) read K,V rows in place out of block slabs and
+    // append new rows directly — no bucket-shaped intermediate tensors.
+    // These accessors are the whole surface they need beyond `table()`.
+    // ------------------------------------------------------------------
+
+    /// Read-only view of a block's f32 slab (layout per [`KvLayout`]).
+    pub fn block_data(&self, id: BlockId) -> &[f32] {
+        self.pool.data(id)
+    }
+
+    /// Mutable view of a block's slab. The caller must hold the only
+    /// reference (decode tails after [`Self::ensure_append_slot`], or
+    /// freshly allocated prefill blocks).
+    pub fn block_data_mut(&mut self, id: BlockId) -> &mut [f32] {
+        self.pool.data_mut(id)
+    }
+
+    /// Token slots written in a block.
+    pub fn block_filled(&self, id: BlockId) -> usize {
+        self.pool.block(id).filled
+    }
+
+    /// Prefix-index hash a block is published under (`Some` means the
+    /// block was adopted or published — never write to it in place).
+    pub fn block_hash(&self, id: BlockId) -> Option<u64> {
+        self.pool.block(id).hash
+    }
+
+    /// Number of leading token positions of sequence `id` whose blocks
+    /// were adopted from the prefix index at admission (their K,V rows
+    /// are already resident, so prefill compute can skip them). Computed
+    /// between `admit` and prefill: at that point adopted blocks carry a
+    /// prefix hash and fresh allocations do not.
+    pub fn adopted_prefix_len(&self, id: u64) -> Result<usize> {
+        let t = self.table_ref(id)?;
+        let mut n = 0usize;
+        for &bid in &t.blocks {
+            let b = self.pool.block(bid);
+            if b.hash.is_none() {
+                break;
+            }
+            n += b.filled;
+            if n >= t.len {
+                break;
+            }
+        }
+        Ok(n.min(t.len))
+    }
+
+    // ------------------------------------------------------------------
     // Tensor data plane (engine-facing)
     // ------------------------------------------------------------------
 
@@ -513,7 +575,10 @@ impl PagedKv {
 
     /// Gather a sequence's K,V into dense MHA-shaped tensors
     /// (`[L, H, bucket, dh]` each); positions past `len` stay zero.
-    pub fn gather_mha(&self, id: u64, bucket: usize) -> Result<(Tensor, Tensor)> {
+    /// Legacy bucket data plane — the block-native path never calls it
+    /// (tracked by `stats.decode_gather_copies`).
+    pub fn gather_mha(&mut self, id: u64, bucket: usize) -> Result<(Tensor, Tensor)> {
+        self.stats.decode_gather_copies += 1;
         let t = self.table_ref(id)?;
         let lay = &t.layout;
         let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
@@ -547,8 +612,9 @@ impl PagedKv {
     }
 
     /// Gather a CHAI sequence: per-layer K panels `[k_l, bucket, dh]`
-    /// plus the dense V `[L, H, bucket, dh]`.
-    pub fn gather_chai(&self, id: u64, bucket: usize) -> Result<(Vec<Tensor>, Tensor)> {
+    /// plus the dense V `[L, H, bucket, dh]`. Legacy bucket data plane.
+    pub fn gather_chai(&mut self, id: u64, bucket: usize) -> Result<(Vec<Tensor>, Tensor)> {
+        self.stats.decode_gather_copies += 1;
         let t = self.table_ref(id)?;
         let lay = &t.layout;
         let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
@@ -700,6 +766,7 @@ impl PagedKv {
         vc: &Tensor,
         pos: usize,
     ) -> Result<()> {
+        self.stats.decode_scatter_copies += 1;
         let t = self.tables.get(&id).ok_or_else(|| anyhow!("unknown sequence {id}"))?;
         let lay = t.layout.clone();
         let (l_n, h_n, dh, b) = (lay.n_layers, lay.n_heads, lay.head_dim, t.block_size);
@@ -790,6 +857,27 @@ mod tests {
         // full sharing: no extra bytes for the second identical prompt
         assert_eq!(kv.snapshot().used_bytes, used_one);
         assert_eq!(kv.stats.prefix_hit_blocks, 3);
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn adopted_prefix_len_counts_leading_adopted_positions() {
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let tokens: Vec<i32> = (0..10).collect(); // 2 full + rem 2
+        kv.admit(1, chai_layout(), "chai", true, &tokens).unwrap();
+        // fresh admission: nothing adopted, nothing skippable
+        assert_eq!(kv.adopted_prefix_len(1).unwrap(), 0);
+        kv.commit_prefill(1).unwrap();
+
+        // identical prompt adopts everything including the partial tail
+        kv.admit(2, chai_layout(), "chai", true, &tokens).unwrap();
+        assert_eq!(kv.adopted_prefix_len(2).unwrap(), 10);
+
+        // divergence inside block 1: only block 0 counts toward the skip
+        let mut other = tokens.clone();
+        other[6] = 99;
+        kv.admit(3, chai_layout(), "chai", true, &other).unwrap();
+        assert_eq!(kv.adopted_prefix_len(3).unwrap(), 4);
         kv.check_consistency().unwrap();
     }
 

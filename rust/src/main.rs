@@ -12,6 +12,7 @@
 //!   chai serve --backend ref                             # pure-rust backend (no artifacts needed)
 //!   chai serve --kv-block-size 16 --kv-capacity-mb 512   # paged KV knobs
 //!   chai serve --no-paged                                # legacy contiguous KV
+//!   chai serve --no-batched-decode                       # per-session bucket decode (no fused block-native ticks)
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -48,6 +49,10 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // paged block-pool KV is the serving default; --no-paged falls
         // back to contiguous per-session tensors + bucket admission
         paged_kv: !args.bool("no-paged"),
+        // fused block-table-native decode ticks are the default on
+        // paged-capable backends; --no-batched-decode restores the
+        // per-session bucket gather/scatter path
+        batched_decode: !args.bool("no-batched-decode"),
         kv_block_size: args.usize("kv-block-size", 16)?,
         kv_capacity_bytes: args.usize("kv-capacity-mb", 512)? * 1024 * 1024,
     })

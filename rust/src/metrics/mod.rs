@@ -37,8 +37,15 @@ impl Metrics {
     }
 
     pub fn observe_ms(&self, name: &str, ms: f64) {
+        self.observe(name, ms);
+    }
+
+    /// Record a unitless histogram observation (e.g. per-tick decode
+    /// batch occupancy). Shares the latency histogram machinery; the
+    /// `_ms` suffix in the JSON summary is cosmetic.
+    pub fn observe(&self, name: &str, value: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies.entry(name.to_string()).or_default().record(ms);
+        g.latencies.entry(name.to_string()).or_default().record(value);
     }
 
     pub fn counter(&self, name: &str) -> u64 {

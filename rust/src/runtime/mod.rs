@@ -37,13 +37,48 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ArtifactSpec, Manifest, ServingConfig};
+use crate::kv::paged::PagedKv;
 use crate::tensor::{Data, Tensor};
+
+/// Parsed per-layer cluster assignment for CHAI kernels:
+/// `membership[l][h]` is head `h`'s cluster id in layer `l`,
+/// `reps[l]` lists the representative head per cluster (slot order ==
+/// cluster id == K panel order in the paged block layout).
+#[derive(Debug, Clone)]
+pub struct ClusterAssignment {
+    pub membership: Vec<Vec<usize>>,
+    pub reps: Vec<Vec<usize>>,
+}
+
+/// One row of a batched block-table-native decode call
+/// ([`Backend::decode_paged`]): the next token of one live sequence.
+/// The block table itself is resolved through the store by `seq`; rows
+/// are ragged — every sequence brings its own length and, for CHAI, its
+/// own cluster assignment.
+pub struct PagedDecodeRow<'a> {
+    /// sequence id in the paged store
+    pub seq: u64,
+    /// token whose K,V row this step appends (the previous sample)
+    pub token: i32,
+    /// absolute position of `token` (== the sequence's current length)
+    pub pos: usize,
+    /// CHAI membership/reps; `None` selects the dense MHA kernel
+    pub clusters: Option<&'a ClusterAssignment>,
+}
 
 /// The compute seam between the engine and whatever executes the model
 /// graphs. Implementations take the artifact-call contract of the AOT
 /// manifest (`run("decode_mha_t32", inputs)` → outputs) so sessions,
 /// paged gather/scatter, CHAI membership probing and admission behave
 /// identically on every backend.
+///
+/// Backends with block-table-native kernels additionally implement the
+/// `*_paged` entry points: they read K,V in place from the paged block
+/// pool and append new rows directly, so the decode hot path performs
+/// zero bucket-shaped gather/scatter copies. The reference backend
+/// implements them; the XLA backend keeps the bucket artifacts until
+/// paged artifacts are re-lowered (`python/compile/aot.py
+/// --paged-artifacts` holds the lowering stubs).
 pub trait Backend {
     /// Shape/bucket/cluster source of truth for this backend.
     fn manifest(&self) -> &Manifest;
@@ -54,6 +89,51 @@ pub trait Backend {
     /// Precompile/prepare artifacts (no-op where compilation is free).
     fn warmup(&self, _names: &[&str]) -> Result<()> {
         Ok(())
+    }
+
+    /// Whether this backend implements the block-table-native
+    /// [`Self::decode_paged`] / [`Self::prefill_paged`] entry points.
+    fn supports_paged(&self) -> bool {
+        false
+    }
+
+    /// Batched block-table-native decode: advance every row by one
+    /// token in a single call. For each row the backend computes the
+    /// token's K,V, appends it into the sequence's tail block (made
+    /// writable by the engine via `ensure_append_slot`), and attends
+    /// over the block-resident cache in place. Rows are independent and
+    /// ragged; the result is per-row (logits `[V]` or that row's error)
+    /// in row order, so one bad session cannot fail its batchmates.
+    fn decode_paged(&self, rows: &[PagedDecodeRow], _store: &mut PagedKv) -> Vec<Result<Tensor>> {
+        rows.iter()
+            .map(|_| {
+                Err(anyhow::anyhow!(
+                    "backend {:?} has no block-table decode kernels (re-lower paged \
+                     artifacts or serve with --backend ref)",
+                    self.name()
+                ))
+            })
+            .collect()
+    }
+
+    /// Prefix-skipping block-native prefill: run the forward only for
+    /// positions `[start, len)` of sequence `seq`'s prompt (tokens are
+    /// read from its block table), writing suffix K,V rows into owned
+    /// blocks and reading `[0, start)` from block-resident (adopted)
+    /// rows. `start == len` computes logits-only for the last position
+    /// without touching storage. Returns last-position logits `[V]`.
+    fn prefill_paged(
+        &self,
+        _seq: u64,
+        _start: usize,
+        _clusters: Option<&ClusterAssignment>,
+        _store: &mut PagedKv,
+    ) -> Result<Tensor> {
+        bail!(
+            "backend {:?} has no block-table prefill kernels (re-lower paged artifacts \
+             or serve with --backend ref)",
+            self.name()
+        )
     }
 
     /// Short identifier for logs/metrics ("xla" | "ref").

@@ -25,8 +25,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::refkernels as rk;
-use super::{Backend, In, Out};
+use super::{Backend, ClusterAssignment, In, Out, PagedDecodeRow};
 use crate::config::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
+use crate::kv::paged::PagedKv;
 use crate::tensor::{io, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -127,6 +128,80 @@ impl Backend for RefBackend {
         *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
         self.dispatch(name, extras)
             .with_context(|| format!("ref backend executing {name}"))
+    }
+
+    fn supports_paged(&self) -> bool {
+        true
+    }
+
+    /// Batched ragged decode against block-resident K,V: every row
+    /// appends its token's rows into its own (pre-CoW'd) tail block and
+    /// attends in place — zero bucket-shaped copies. Rows are
+    /// independent, so batching is a dispatch fusion, not a numeric
+    /// change: per-row logits are bit-for-bit the single-row result,
+    /// and one row's failure never poisons its batchmates.
+    fn decode_paged(&self, rows: &[PagedDecodeRow], store: &mut PagedKv) -> Vec<Result<Tensor>> {
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry("decode_paged".to_string())
+            .or_insert(0) += rows.len() as u64;
+        let v = self.manifest.model.vocab_size;
+        rows.iter()
+            .map(|r| {
+                let len_now = store
+                    .table(r.seq)
+                    .ok_or_else(|| anyhow!("unknown paged sequence {}", r.seq))?
+                    .len;
+                if r.pos != len_now {
+                    bail!(
+                        "decode row at position {} but sequence {} has length {len_now}",
+                        r.pos,
+                        r.seq
+                    );
+                }
+                let logits = self
+                    .paged_forward(store, r.seq, &[r.token], r.pos, r.pos + 1, r.clusters, true)
+                    .with_context(|| format!("paged decode of sequence {}", r.seq))?;
+                Ok(Tensor::f32(vec![v], logits))
+            })
+            .collect()
+    }
+
+    /// Prefix-skipping prefill: forward only positions `[start, len)`,
+    /// reading the adopted prefix from block-resident rows. `start ==
+    /// len` (whole prompt adopted) recomputes the last position's
+    /// hidden state read-only, just for its logits.
+    fn prefill_paged(
+        &self,
+        seq: u64,
+        start: usize,
+        clusters: Option<&ClusterAssignment>,
+        store: &mut PagedKv,
+    ) -> Result<Tensor> {
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry("prefill_paged".to_string())
+            .or_insert(0) += 1;
+        let (tokens, len) = {
+            let t = store
+                .table(seq)
+                .ok_or_else(|| anyhow!("unknown paged sequence {seq}"))?;
+            (t.tokens.clone(), t.len)
+        };
+        if len == 0 {
+            bail!("paged prefill of an empty sequence {seq}");
+        }
+        if start > len {
+            bail!("prefill start {start} beyond prompt length {len}");
+        }
+        let logits = if start == len {
+            self.paged_forward(store, seq, &tokens[len - 1..], len - 1, len, clusters, false)?
+        } else {
+            self.paged_forward(store, seq, &tokens[start..], start, len, clusters, true)?
+        };
+        Ok(Tensor::f32(vec![self.manifest.model.vocab_size], logits))
     }
 
     fn name(&self) -> &'static str {
@@ -759,6 +834,137 @@ impl RefBackend {
         outs.push(Out::Host(Tensor::f32(vshape.to_vec(), vc)));
         Ok(outs)
     }
+
+    /// Block-table-native forward for positions `[p0, p0+tokens.len())`
+    /// of paged sequence `seq`, with `len == p0 + tokens.len()` the
+    /// total covered sequence length. Shared by `decode_paged` (tq = 1)
+    /// and `prefill_paged` (the non-adopted prompt suffix).
+    ///
+    /// Per layer: project Q (and the new K,V rows) for the computed
+    /// positions only, scatter the new rows straight into their blocks
+    /// (skipping hash-bearing blocks — adopted/published content is
+    /// identical by construction and must not be touched), then attend
+    /// against the block-resident cache in place via the paged kernels.
+    /// With `write_rows = false` nothing is written (logits-only pass
+    /// over an already fully-resident sequence).
+    ///
+    /// Numerically bit-for-bit with the bucket artifacts: every op is
+    /// row-independent except attention, and the paged kernels preserve
+    /// the bucket kernels' accumulation order (see `refkernels`).
+    fn paged_forward(
+        &self,
+        store: &mut PagedKv,
+        seq: u64,
+        tokens: &[i32],
+        p0: usize,
+        len: usize,
+        clusters: Option<&ClusterAssignment>,
+        write_rows: bool,
+    ) -> Result<Vec<f32>> {
+        let c = Ctx::new(self);
+        let (layout, b, blocks) = {
+            let t = store
+                .table(seq)
+                .ok_or_else(|| anyhow!("unknown paged sequence {seq}"))?;
+            (t.layout.clone(), t.block_size, t.blocks.clone())
+        };
+        let tq = tokens.len();
+        if tq == 0 || p0 + tq != len {
+            bail!("paged forward spans [{p0}, {}) but len is {len}", p0 + tq);
+        }
+        if blocks.len() * b < len {
+            bail!("block table covers {} positions, need {len}", blocks.len() * b);
+        }
+        if layout.n_layers != c.l || layout.n_heads != c.h || layout.head_dim != c.dh {
+            bail!("table layout does not match the model: {layout:?}");
+        }
+        match clusters {
+            Some(cl) => {
+                for (i, r) in cl.reps.iter().enumerate() {
+                    if r.len() != layout.k_heads[i] {
+                        bail!(
+                            "layer {i}: {} representatives for a {}-panel table",
+                            r.len(),
+                            layout.k_heads[i]
+                        );
+                    }
+                }
+            }
+            None => {
+                if layout.k_heads.iter().any(|&k| k != c.h) {
+                    bail!("dense paged kernel on a clustered table");
+                }
+            }
+        }
+        let positions: Vec<usize> = (p0..len).collect();
+        let all: Vec<usize> = (0..c.h).collect();
+        let mut x = c.embed(tokens)?;
+        for i in 0..c.l {
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, tq, d, c.eps);
+            let k_heads: &[usize] = match clusters {
+                Some(cl) => &cl.reps[i],
+                None => &all,
+            };
+            let gk = k_heads.len();
+            let mut q =
+                rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, k_heads, tq, d, h, dh);
+            rk::rope(&mut q, &positions, gk, tq, dh, c.theta);
+            let mut k_new =
+                rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, k_heads, tq, d, h, dh);
+            rk::rope(&mut k_new, &positions, gk, tq, dh, c.theta);
+            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, tq, d, h, dh);
+            let k_base = layout.k_layer_offset(i, b);
+            let v_base = layout.v_layer_offset(i, b);
+            if write_rows {
+                for qi in 0..tq {
+                    let p = p0 + qi;
+                    let bid = blocks[p / b];
+                    if store.block_hash(bid).is_some() {
+                        continue;
+                    }
+                    let off = p % b;
+                    let slab = store.block_data_mut(bid);
+                    for gi in 0..gk {
+                        let dst = k_base + (gi * b + off) * dh;
+                        slab[dst..dst + dh].copy_from_slice(
+                            &k_new[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh],
+                        );
+                    }
+                    for hh in 0..h {
+                        let dst = v_base + (hh * b + off) * dh;
+                        slab[dst..dst + dh].copy_from_slice(
+                            &v_new[(hh * tq + qi) * dh..(hh * tq + qi) * dh + dh],
+                        );
+                    }
+                }
+            }
+            let slabs: Vec<&[f32]> = blocks.iter().map(|&bid| store.block_data(bid)).collect();
+            let out = match clusters {
+                None => {
+                    rk::paged_mha_attention(&q, &slabs, k_base, v_base, h, tq, dh, b, p0, len)
+                }
+                Some(cl) => rk::paged_clustered_attention(
+                    &q,
+                    &slabs,
+                    k_base,
+                    v_base,
+                    &cl.membership[i],
+                    gk,
+                    h,
+                    tq,
+                    dh,
+                    b,
+                    p0,
+                    len,
+                ),
+            };
+            drop(slabs);
+            c.add_attn_out(&mut x, i, &out, h, tq)?;
+            c.residual_mlp(&mut x, i, tq)?;
+        }
+        c.unembed(&x[(tq - 1) * c.d..], 1)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1164,6 +1370,184 @@ mod tests {
         // row 0 written, inputs untouched
         assert!(kc2.as_f32().unwrap().iter().any(|&x| x != 0.0));
         assert!(kc.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.as_f32().unwrap().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn paged_prefill_and_decode_match_bucket_artifacts_bitwise() {
+        use crate::kv::paged::KvLayout;
+        use crate::kv::CacheKind;
+        let be = RefBackend::toy(5);
+        let m = be.manifest().clone();
+        let t = m.decode_buckets[0];
+        let (l_n, h_n, dh) = (m.model.n_layers, m.model.n_heads, m.model.head_dim);
+        let layout = KvLayout::from_manifest(&m, CacheKind::Mha);
+        let mut kv = PagedKv::new(4, 1 << 24);
+        let tokens: Vec<i32> = vec![65, 101, 109, 32, 99, 111];
+        let n = tokens.len();
+        kv.admit(1, layout, "mha", true, &tokens).unwrap();
+
+        // bucket path: padded prefill artifact
+        let mut padded = vec![258i32; t];
+        padded[..n].copy_from_slice(&tokens);
+        let toks = Tensor::i32(vec![t], padded);
+        let ln = Tensor::scalar_i32(n as i32);
+        let outs = be
+            .run(&format!("prefill_mha_t{t}"), &[In::Host(&toks), In::Host(&ln)])
+            .unwrap();
+        let want = outs[0].to_tensor().unwrap();
+
+        // block-native path writes straight into the blocks
+        let got = be.prefill_paged(1, 0, None, &mut kv).unwrap();
+        assert_eq!(bits(&want), bits(&got), "paged prefill logits");
+        kv.commit_prefill(1).unwrap();
+
+        // block-resident K,V rows equal the bucket caches for real rows
+        let kc = outs[1].to_tensor().unwrap();
+        let vc = outs[2].to_tensor().unwrap();
+        let (gk, gv) = kv.gather_mha(1, t).unwrap();
+        let (kf, vf) = (kc.as_f32().unwrap(), vc.as_f32().unwrap());
+        let (gkf, gvf) = (gk.as_f32().unwrap(), gv.as_f32().unwrap());
+        for li in 0..l_n {
+            for hh in 0..h_n {
+                for p in 0..n {
+                    for d in 0..dh {
+                        let o = ((li * h_n + hh) * t + p) * dh + d;
+                        assert_eq!(kf[o].to_bits(), gkf[o].to_bits(), "K l{li} h{hh} p{p}");
+                        assert_eq!(vf[o].to_bits(), gvf[o].to_bits(), "V l{li} h{hh} p{p}");
+                    }
+                }
+            }
+        }
+
+        // one decode step: bucket artifact vs block-native row
+        let tok = 107i32;
+        let douts = be
+            .run(
+                &format!("decode_mha_t{t}"),
+                &[
+                    In::Host(&Tensor::scalar_i32(tok)),
+                    In::Host(&Tensor::scalar_i32(n as i32)),
+                    In::Host(&kc),
+                    In::Host(&vc),
+                ],
+            )
+            .unwrap();
+        kv.ensure_append_slot(1).unwrap();
+        let rows = [PagedDecodeRow { seq: 1, token: tok, pos: n, clusters: None }];
+        let dgot = be.decode_paged(&rows, &mut kv).unwrap();
+        assert_eq!(
+            bits(&douts[0].to_tensor().unwrap()),
+            bits(&dgot[0]),
+            "paged decode logits"
+        );
+        kv.append_committed(1, tok).unwrap();
+    }
+
+    #[test]
+    fn paged_chai_matches_bucket_artifacts_bitwise() {
+        use crate::kv::paged::KvLayout;
+        use crate::kv::CacheKind;
+        let be = RefBackend::toy(6);
+        let m = be.manifest().clone();
+        let t = m.decode_buckets[0];
+        let (l, h, k_max) = (m.model.n_layers, m.model.n_heads, m.k_max);
+        let (mem, reps) = m.static_clusters().unwrap();
+        let cl = ClusterAssignment { membership: mem.clone(), reps: reps.clone() };
+        let layout = KvLayout::from_manifest(&m, CacheKind::Chai);
+        let mut kv = PagedKv::new(8, 1 << 24);
+        let tokens: Vec<i32> = vec![66, 67, 68, 69, 70, 71, 72];
+        let n = tokens.len();
+        kv.admit(9, layout, "chai-static", true, &tokens).unwrap();
+
+        let mut mv = Vec::new();
+        for row in &mem {
+            mv.extend(row.iter().map(|x| *x as i32));
+        }
+        let mut rv = vec![0i32; l * k_max];
+        for (li, row) in reps.iter().enumerate() {
+            for (j, r) in row.iter().enumerate() {
+                rv[li * k_max + j] = *r as i32;
+            }
+        }
+        let mt = Tensor::i32(vec![l, h], mv);
+        let rt_ = Tensor::i32(vec![l, k_max], rv);
+        let mut padded = vec![258i32; t];
+        padded[..n].copy_from_slice(&tokens);
+        let toks = Tensor::i32(vec![t], padded);
+        let ln = Tensor::scalar_i32(n as i32);
+        let outs = be
+            .run(
+                &format!("prefill_chai_t{t}"),
+                &[In::Host(&toks), In::Host(&ln), In::Host(&mt), In::Host(&rt_)],
+            )
+            .unwrap();
+        let want = outs[0].to_tensor().unwrap();
+        let got = be.prefill_paged(9, 0, Some(&cl), &mut kv).unwrap();
+        assert_eq!(bits(&want), bits(&got), "paged CHAI prefill logits");
+        kv.commit_prefill(9).unwrap();
+
+        // one CHAI decode step
+        let kreps: Vec<Tensor> = (1..=l).map(|i| outs[i].to_tensor().unwrap()).collect();
+        let vc = outs[l + 1].to_tensor().unwrap();
+        let tok_t = Tensor::scalar_i32(80);
+        let pos_t = Tensor::scalar_i32(n as i32);
+        let mut ins: Vec<In> = vec![In::Host(&tok_t), In::Host(&pos_t)];
+        for kr in &kreps {
+            ins.push(In::Host(kr));
+        }
+        ins.push(In::Host(&vc));
+        ins.push(In::Host(&mt));
+        ins.push(In::Host(&rt_));
+        let douts = be.run(&format!("decode_chai_t{t}"), &ins).unwrap();
+        kv.ensure_append_slot(9).unwrap();
+        let rows = [PagedDecodeRow { seq: 9, token: 80, pos: n, clusters: Some(&cl) }];
+        let dgot = be.decode_paged(&rows, &mut kv).unwrap();
+        assert_eq!(
+            bits(&douts[0].to_tensor().unwrap()),
+            bits(&dgot[0]),
+            "paged CHAI decode logits"
+        );
+    }
+
+    #[test]
+    fn prefill_paged_skips_adopted_prefix() {
+        use crate::kv::paged::KvLayout;
+        use crate::kv::CacheKind;
+        let be = RefBackend::toy(7);
+        let m = be.manifest().clone();
+        let layout = KvLayout::from_manifest(&m, CacheKind::Mha);
+        let mut kv = PagedKv::new(4, 1 << 24);
+        let tokens: Vec<i32> = (40..50).collect(); // 2 full blocks + tail 2
+        kv.admit(1, layout.clone(), "mha", true, &tokens).unwrap();
+        let full = be.prefill_paged(1, 0, None, &mut kv).unwrap();
+        kv.commit_prefill(1).unwrap();
+
+        // identical prompt adopts everything: logits-only pass (start == len)
+        kv.admit(2, layout.clone(), "mha", true, &tokens).unwrap();
+        let start = kv.adopted_prefix_len(2).unwrap();
+        assert_eq!(start, tokens.len());
+        let skipped = be.prefill_paged(2, start, None, &mut kv).unwrap();
+        assert_eq!(bits(&full), bits(&skipped), "fully-adopted prefill logits");
+        kv.commit_prefill(2).unwrap();
+
+        // divergent suffix: only the shared leading block is skipped
+        let mut other = tokens.clone();
+        other[5] = 99; // diverges inside block 1
+        kv.admit(3, layout, "mha", true, &other).unwrap();
+        let start = kv.adopted_prefix_len(3).unwrap();
+        assert_eq!(start, 4, "one leading block adopted");
+        let suffix = be.prefill_paged(3, start, None, &mut kv).unwrap();
+        kv.commit_prefill(3).unwrap();
+        // oracle: the same divergent prompt prefilled from scratch
+        let mut kv2 = PagedKv::new(4, 1 << 24);
+        kv2.admit(7, KvLayout::from_manifest(&m, CacheKind::Mha), "mha", true, &other)
+            .unwrap();
+        let scratch = be.prefill_paged(7, 0, None, &mut kv2).unwrap();
+        assert_eq!(bits(&scratch), bits(&suffix), "prefix-suffix == full prefill");
     }
 
     #[test]

@@ -183,6 +183,159 @@ pub fn clustered_attention_qkv(
 }
 
 // ---------------------------------------------------------------------------
+// Paged (block-table-native) attention
+//
+// The bucket kernels above take contiguous `[g, Tk, dh]` K/V tensors; the
+// paged variants read rows in place out of the KV block slabs the pool
+// owns, addressed through a block table — no gather into bucket shapes.
+//
+// Addressing (see `kv::paged::KvLayout`): within a slab, panel `g`'s row
+// for absolute position `j` lives at `base + (g*B + j%B)*dh`, in slab
+// `blocks[j/B]`, where `base` is the layer's K (or V) panel-group offset
+// and `B` the block size.
+//
+// Numerics are pinned to the bucket kernels bit-for-bit: masked bucket
+// entries softmax to exactly 0.0 (`exp(NEG_INF - mx)` underflows) and a
+// `+= 0.0 * v` contributes nothing, so iterating keys over `[0, len)`
+// instead of `[0, Tk)` reproduces identical accumulation — asserted by
+// `paged_matches_bucket_kernels_bitwise` below and the engine-level
+// paged-vs-contiguous stream property test.
+// ---------------------------------------------------------------------------
+
+/// `softmax(q kᵀ / sqrt(dh))` against block-resident keys.
+///
+/// q: `[g, tq, dh]` at absolute positions `q_offset + qi`; key `j` read
+/// from `blocks[j / block_size]` at `k_base + (g*block_size + j%B)*dh`.
+/// Causal: `j <= q_offset + qi`. Returns `[g, tq, len]`; rows are
+/// stochastic over their unmasked prefix, masked tail entries are 0.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_attention_scores(
+    q: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    g: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), g * tq * dh, "q shape");
+    assert!(blocks.len() * block_size >= len, "block table too short for len");
+    let scale = (dh as f32).sqrt();
+    let mut out = vec![0.0f32; g * tq * len];
+    for gi in 0..g {
+        for qi in 0..tq {
+            let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            let orow = &mut out[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
+            // keys [0, kmax) are unmasked for this query
+            let kmax = (q_offset + qi + 1).min(len);
+            for (kj, slot) in orow.iter_mut().enumerate().take(kmax) {
+                let slab = blocks[kj / block_size];
+                let koff = k_base + (gi * block_size + kj % block_size) * dh;
+                let krow = &slab[koff..koff + dh];
+                let mut acc = 0.0f32;
+                for d in 0..dh {
+                    acc += qrow[d] * krow[d];
+                }
+                *slot = acc / scale;
+            }
+            let mx = orow[..kmax].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in orow[..kmax].iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            for x in orow[..kmax].iter_mut() {
+                *x /= sum;
+            }
+        }
+    }
+    out
+}
+
+/// `probs [g, tq, len] × block-resident V → [g, tq, dh]`; V row `j` for
+/// panel `g` at `blocks[j/B][v_base + (g*B + j%B)*dh]`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_attn_av(
+    probs: &[f32],
+    blocks: &[&[f32]],
+    v_base: usize,
+    g: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    len: usize,
+) -> Vec<f32> {
+    assert_eq!(probs.len(), g * tq * len, "probs shape");
+    let mut out = vec![0.0f32; g * tq * dh];
+    for gi in 0..g {
+        for qi in 0..tq {
+            let prow = &probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
+            let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            for (kj, &p) in prow.iter().enumerate() {
+                let slab = blocks[kj / block_size];
+                let voff = v_base + (gi * block_size + kj % block_size) * dh;
+                let vrow = &slab[voff..voff + dh];
+                for d in 0..dh {
+                    orow[d] += p * vrow[d];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense MHA attention against block-resident K,V. Returns `[h, tq, dh]`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_mha_attention(
+    q: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    v_base: usize,
+    h: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+) -> Vec<f32> {
+    let probs = paged_attention_scores(q, blocks, k_base, h, tq, dh, block_size, q_offset, len);
+    paged_attn_av(&probs, blocks, v_base, h, tq, dh, block_size, len)
+}
+
+/// CHAI clustered attention against block-resident K-reps and V: scores
+/// once per representative panel, broadcast to member heads via
+/// `membership`, applied to each head's own block-resident V (§3.4).
+/// Returns `[h, tq, dh]`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_clustered_attention(
+    q_rep: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    v_base: usize,
+    membership: &[usize],
+    kc: usize,
+    h: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+) -> Vec<f32> {
+    assert_eq!(membership.len(), h, "membership shape");
+    let probs =
+        paged_attention_scores(q_rep, blocks, k_base, kc, tq, dh, block_size, q_offset, len);
+    let mut probs_full = vec![0.0f32; h * tq * len];
+    for (hh, &m) in membership.iter().enumerate() {
+        assert!(m < kc, "membership {m} out of range (k={kc})");
+        probs_full[hh * tq * len..(hh + 1) * tq * len]
+            .copy_from_slice(&probs[m * tq * len..(m + 1) * tq * len]);
+    }
+    paged_attn_av(&probs_full, blocks, v_base, h, tq, dh, block_size, len)
+}
+
+// ---------------------------------------------------------------------------
 // Model primitives (mirror of python/compile/model.py)
 // ---------------------------------------------------------------------------
 
@@ -392,6 +545,99 @@ mod tests {
         // member heads copy their representative's output exactly
         assert_eq!(out[..tq * dh], out[tq * dh..2 * tq * dh]);
         assert_eq!(out[2 * tq * dh..3 * tq * dh], out[3 * tq * dh..]);
+    }
+
+    /// Scatter contiguous `[g, tk, dh]` rows into block slabs with the
+    /// `kv::paged` in-slab layout (panel-major, `base + (g*B + off)*dh`).
+    fn blocks_from_contiguous(
+        x: &[f32],
+        g: usize,
+        dh: usize,
+        b: usize,
+        base: usize,
+        slab_floats: usize,
+        len: usize,
+        tk: usize,
+    ) -> Vec<Vec<f32>> {
+        let n_blocks = (len + b - 1) / b;
+        let mut blocks = vec![vec![0.0f32; slab_floats]; n_blocks];
+        for gi in 0..g {
+            for j in 0..len {
+                let src = (gi * tk + j) * dh;
+                let dst = base + (gi * b + j % b) * dh;
+                blocks[j / b][dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+            }
+        }
+        blocks
+    }
+
+    #[test]
+    fn paged_matches_bucket_kernels_bitwise() {
+        // one layer, h=2 K panels + h=2 V panels, block size 4: the paged
+        // kernels over block slabs must reproduce the bucket kernels over
+        // zero-padded contiguous caches bit-for-bit
+        let (h, dh, b, len, tk, tq, q_offset) = (2usize, 4, 4, 6, 8, 2, 4);
+        let q = fill(h * tq * dh, 20);
+        let mut k = fill(h * tk * dh, 21);
+        let mut v = fill(h * tk * dh, 22);
+        // zero the padded rows like a real bucket cache
+        for gi in 0..h {
+            for j in len..tk {
+                for d in 0..dh {
+                    k[(gi * tk + j) * dh + d] = 0.0;
+                    v[(gi * tk + j) * dh + d] = 0.0;
+                }
+            }
+        }
+        let slab_floats = 2 * h * b * dh; // K region then V region
+        let (k_base, v_base) = (0usize, h * b * dh);
+        let mut blocks = blocks_from_contiguous(&k, h, dh, b, k_base, slab_floats, len, tk);
+        for (bi, vb) in blocks_from_contiguous(&v, h, dh, b, v_base, slab_floats, len, tk)
+            .into_iter()
+            .enumerate()
+        {
+            for (dst, src) in blocks[bi][v_base..].iter_mut().zip(&vb[v_base..]) {
+                *dst = *src;
+            }
+        }
+        let slabs: Vec<&[f32]> = blocks.iter().map(|x| x.as_slice()).collect();
+
+        let (want, _) = mha_attention(&q, &k, &v, h, tq, tk, dh, q_offset, len, None);
+        let got =
+            paged_mha_attention(&q, &slabs, k_base, v_base, h, tq, dh, b, q_offset, len);
+        let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&want), bits(&got), "paged MHA must equal bucket MHA bitwise");
+
+        // clustered: kc=1 rep panel broadcast to both heads
+        let membership = vec![0usize, 0];
+        let (cwant, _) = clustered_attention(
+            &q[..tq * dh],
+            &k[..tk * dh],
+            &v,
+            &membership,
+            1,
+            h,
+            tq,
+            tk,
+            dh,
+            q_offset,
+            len,
+        );
+        let cgot = paged_clustered_attention(
+            &q[..tq * dh],
+            &slabs,
+            k_base,
+            v_base,
+            &membership,
+            1,
+            h,
+            tq,
+            dh,
+            b,
+            q_offset,
+            len,
+        );
+        assert_eq!(bits(&cwant), bits(&cgot), "paged CHAI must equal bucket CHAI bitwise");
     }
 
     #[test]

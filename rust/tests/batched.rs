@@ -1,0 +1,237 @@
+//! Property tests for the block-table-native batched decode path.
+//!
+//! Invariants (all artifact-free, seeded toy model, `cargo test` on
+//! every commit):
+//!
+//! 1. `Engine::decode_tick` over N concurrent paged sessions produces
+//!    token streams identical to N sequential single-session decodes on
+//!    a `--no-batched-decode` engine (bucket gather/scatter path) — for
+//!    MHA and CHAI, with shared prompt prefixes in the mix so prefix
+//!    adoption, prefill skipping, and CoW all fire mid-batch.
+//! 2. Prefix-suffix prefill equals full prefill: a session whose prompt
+//!    blocks were adopted (prefill compute skipped) generates the same
+//!    stream as the first session that computed them from scratch.
+//! 3. The batched hot path performs ZERO bucket-shaped K,V
+//!    gather/scatter copies (asserted via the block-pool copy counters),
+//!    while the sequential path pays them every step.
+
+use std::path::PathBuf;
+
+use chai::config::ServingConfig;
+use chai::engine::{Engine, Session, Variant};
+use chai::util::proptest::check;
+use chai::util::rng::Rng;
+
+/// Ref-backend config pinned to the toy model; `batched` selects the
+/// fused block-native path vs the legacy bucket path.
+fn toy_cfg(seed: u64, batched: bool) -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: PathBuf::from("definitely-no-artifacts-here"),
+        backend: "ref".into(),
+        seed,
+        batched_decode: batched,
+        ..Default::default()
+    }
+}
+
+fn random_prompt(rng: &mut Rng) -> String {
+    let n = rng.range(3, 24);
+    (0..n).map(|_| (rng.range(32, 127) as u8) as char).collect()
+}
+
+/// Drive a set of live sessions to completion through fused ticks.
+fn run_ticks(engine: &Engine, sessions: &mut [Session]) -> Result<(), String> {
+    loop {
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let outcomes = engine.decode_tick(&mut refs);
+        drop(refs);
+        for o in &outcomes {
+            if let Err(e) = o {
+                return Err(format!("decode_tick: {e:#}"));
+            }
+        }
+        if sessions.iter().all(|s| s.done) {
+            return Ok(());
+        }
+    }
+}
+
+#[test]
+fn batched_ticks_equal_sequential_decodes() {
+    check("batched-vs-sequential", 6, |rng| {
+        let seed = rng.next_u64();
+        let variant = if rng.below(2) == 0 { Variant::Mha } else { Variant::Chai };
+        let n = rng.range(3, 6);
+        // a shared prompt appears at least twice so adoption + prefill
+        // skipping + CoW happen inside the batch
+        let shared = random_prompt(rng);
+        let prompts: Vec<String> = (0..n)
+            .map(|i| if i % 2 == 0 { shared.clone() } else { random_prompt(rng) })
+            .collect();
+        let max_new = rng.range(3, 8);
+
+        // batched: one engine, all sessions live at once, fused ticks
+        let batched = Engine::load(toy_cfg(seed, true)).map_err(|e| e.to_string())?;
+        let mut sessions: Vec<Session> = prompts
+            .iter()
+            .map(|p| batched.start_session(p, max_new, &variant))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|e| e.to_string())?;
+        run_ticks(&batched, &mut sessions)?;
+        let snap = batched.paged_snapshot().unwrap();
+        chai::prop_assert!(
+            snap.stats.decode_gather_copies == 0 && snap.stats.decode_scatter_copies == 0,
+            "batched path must not touch bucket-shaped caches (gathers {}, scatters {})",
+            snap.stats.decode_gather_copies,
+            snap.stats.decode_scatter_copies
+        );
+        let streams: Vec<Vec<i32>> = sessions.iter().map(|s| s.tokens.clone()).collect();
+        for s in sessions {
+            batched.finish_session(s);
+        }
+
+        // sequential oracle: fresh engine, bucket gather/scatter path,
+        // one request at a time
+        let sequential = Engine::load(toy_cfg(seed, false)).map_err(|e| e.to_string())?;
+        for (p, want) in prompts.iter().zip(&streams) {
+            let g = sequential
+                .generate(p, max_new, &variant)
+                .map_err(|e| e.to_string())?;
+            chai::prop_assert!(
+                &g.tokens == want,
+                "{} prompt {p:?}: batched {want:?} vs sequential {:?}",
+                variant.name(),
+                g.tokens
+            );
+        }
+        let snap = sequential.paged_snapshot().unwrap();
+        chai::prop_assert!(
+            snap.stats.decode_gather_copies > 0,
+            "sequential bucket path must be counting its gathers"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prefix_suffix_prefill_equals_full_prefill() {
+    check("prefill-skip", 6, |rng| {
+        let seed = rng.next_u64();
+        let variant = if rng.below(2) == 0 { Variant::Mha } else { Variant::Chai };
+        let max_new = rng.range(3, 8);
+        let e = Engine::load(toy_cfg(seed, true)).map_err(|e| e.to_string())?;
+        let contiguous = Engine::load(ServingConfig { paged_kv: false, ..toy_cfg(seed, true) })
+            .map_err(|e| e.to_string())?;
+
+        // (a) concurrent identical prompts: the 2nd session adopts the
+        // whole prompt — full blocks AND the partial tail — before any
+        // decode, so its prefill runs the logits-only pass (start == len)
+        let prompt = random_prompt(rng);
+        let mut s1 = e
+            .start_session(&prompt, max_new, &variant)
+            .map_err(|e| e.to_string())?;
+        let before = e.paged_snapshot().unwrap().stats.prefill_skipped_tokens;
+        let mut s2 = e
+            .start_session(&prompt, max_new, &variant)
+            .map_err(|e| e.to_string())?;
+        let after = e.paged_snapshot().unwrap().stats.prefill_skipped_tokens;
+        chai::prop_assert!(
+            after > before,
+            "adopting session must skip prefill compute ({before} -> {after})"
+        );
+        chai::prop_assert!(
+            s1.tokens == s2.tokens,
+            "first sampled token must agree: {:?} vs {:?}",
+            s1.tokens,
+            s2.tokens
+        );
+        {
+            let mut both = [&mut s1, &mut s2];
+            loop {
+                for o in e.decode_tick(&mut both) {
+                    o.map_err(|e| format!("{e:#}"))?;
+                }
+                if both.iter().all(|s| s.done) {
+                    break;
+                }
+            }
+        }
+        chai::prop_assert!(
+            s1.tokens == s2.tokens,
+            "{} prompt {prompt:?}: scratch {:?} vs prefix-skipped {:?}",
+            variant.name(),
+            s1.tokens,
+            s2.tokens
+        );
+        let stream = s1.tokens.clone();
+        e.finish_session(s1);
+        e.finish_session(s2);
+        let oracle = contiguous
+            .generate(&prompt, max_new, &variant)
+            .map_err(|e| e.to_string())?;
+        chai::prop_assert!(
+            oracle.tokens == stream,
+            "paged-native vs contiguous: {stream:?} vs {:?}",
+            oracle.tokens
+        );
+
+        // (b) adoption from a *finished* request: a prompt spanning a
+        // full block keeps its leading blocks published through decode
+        // (only the mutated tail is unpublished), so the suffix-only
+        // prefill path runs with 0 < start < len
+        let long: String =
+            (0..rng.range(18, 30)).map(|_| (rng.range(32, 127) as u8) as char).collect();
+        let g1 = e.generate(&long, max_new, &variant).map_err(|e| e.to_string())?;
+        let before = e.paged_snapshot().unwrap().stats.prefill_skipped_tokens;
+        let g2 = e.generate(&long, max_new, &variant).map_err(|e| e.to_string())?;
+        let after = e.paged_snapshot().unwrap().stats.prefill_skipped_tokens;
+        chai::prop_assert!(
+            after >= before + 16,
+            "leading full prompt block must be skipped ({before} -> {after})"
+        );
+        chai::prop_assert!(
+            g1.tokens == g2.tokens,
+            "{} long prompt: scratch {:?} vs prefix-skipped {:?}",
+            variant.name(),
+            g1.tokens,
+            g2.tokens
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_variant_tick_groups_by_kind() {
+    // MHA and CHAI sessions live in the same tick: decode_tick groups
+    // them into (at most) one fused call per variant and every stream
+    // still matches its solo run
+    let e = Engine::load(toy_cfg(11, true)).unwrap();
+    let prompts = ["the color of tom is", "tom keeps the hat in the box"];
+    let mut sessions: Vec<Session> = vec![
+        e.start_session(prompts[0], 5, &Variant::Mha).unwrap(),
+        e.start_session(prompts[1], 5, &Variant::Chai).unwrap(),
+        e.start_session(prompts[0], 5, &Variant::Chai).unwrap(),
+    ];
+    run_ticks(&e, &mut sessions).unwrap();
+    let streams: Vec<Vec<i32>> = sessions.iter().map(|s| s.tokens.clone()).collect();
+    for s in sessions {
+        e.finish_session(s);
+    }
+    let snap = e.paged_snapshot().unwrap();
+    assert_eq!(snap.stats.decode_gather_copies, 0);
+    assert_eq!(snap.stats.decode_scatter_copies, 0);
+    assert_eq!(snap.live_tables, 0, "all sessions released");
+
+    let solo = Engine::load(toy_cfg(11, true)).unwrap();
+    for (i, (p, v)) in [
+        (prompts[0], Variant::Mha),
+        (prompts[1], Variant::Chai),
+        (prompts[0], Variant::Chai),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let g = solo.generate(p, 5, v).unwrap();
+        assert_eq!(g.tokens, streams[i], "session {i} ({})", v.name());
+    }
+}

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 use chai::config::ServingConfig;
 
 /// The AOT artifacts dir, when `make artifacts` has produced one.
+#[allow(dead_code)] // each test binary compiles its own copy of this module
 pub fn artifacts() -> Option<PathBuf> {
     let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     d.join("manifest.json").exists().then_some(d)
@@ -14,6 +15,7 @@ pub fn artifacts() -> Option<PathBuf> {
 /// Configs to drive the full stack with: the reference backend always
 /// (toy model when artifacts are absent, real weights when present),
 /// plus the XLA backend when artifacts exist.
+#[allow(dead_code)] // each test binary compiles its own copy of this module
 pub fn stack_cfgs() -> Vec<ServingConfig> {
     let mut cfgs = vec![ServingConfig {
         artifacts_dir: artifacts().unwrap_or_else(|| PathBuf::from("no-artifacts")),
