@@ -39,6 +39,13 @@ echo "== serving smoke: batched block-native vs sequential bucket decode (ref ba
 # sequential path; writes bench_results/BENCH_serving.json
 cargo bench --bench bench_serving -- --backend ref --smoke
 
+echo "== serving overload smoke: preempt-and-requeue under an over-capacity burst (ref backend) =="
+# overload contract: zero dropped requests, bounded p99 queue wait, and
+# both preemption flavors exercised (swap-out with a roomy spill tier,
+# recompute-on-resume with the tier disabled); merges an "overload"
+# section into bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --overload
+
 echo "== golden fixtures match the python oracles (when jax is available) =="
 if python3 -c "import jax" >/dev/null 2>&1; then
   (cd ../python && python3 -m pytest -q tests/test_golden_export.py)

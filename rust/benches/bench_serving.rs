@@ -11,6 +11,13 @@
 //!           # copies, and batched tok/s strictly above sequential;
 //!           # emits bench_results/BENCH_serving.json with tokens/s +
 //!           # per-tick batch occupancy (no absolute-perf thresholds)
+//!       cargo bench --bench bench_serving -- --backend ref --overload
+//!           # CI overload smoke: an over-capacity burst (working set
+//!           # far above the KV pool) with --preempt on; asserts zero
+//!           # dropped/errored requests, bounded p99 queue wait, and
+//!           # that both preemption flavors fired (>=1 swap-out with a
+//!           # roomy spill tier, >=1 recompute with the tier disabled);
+//!           # merges an "overload" section into BENCH_serving.json
 
 mod common;
 
@@ -145,11 +152,152 @@ fn smoke(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Res
     Ok(())
 }
 
+/// Overload smoke: an instantaneous burst whose working set is several
+/// times the KV pool, served with `--preempt` on. Two modes, both
+/// over capacity: a roomy spill tier (preemptions swap out) and a
+/// disabled tier (preemptions recompute on resume). Asserts the
+/// scheduler's overload contract — zero dropped requests, bounded p99
+/// queue wait, at least one preemption of each flavor across the two
+/// modes — and merges an "overload" section into
+/// `bench_results/BENCH_serving.json` next to the --smoke rows.
+fn overload(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --overload needs a paged-native backend (ref); skipping");
+        return Ok(());
+    }
+    let n = args.usize("requests", 10)?.max(6).min(99);
+    let max_new = args.usize("max-new", 10)?;
+    // pool: 4 MHA-sized blocks — each session's prompt alone needs the
+    // pool's admission margin, so the burst's working set is several
+    // times capacity and the scheduler must preempt to drain it
+    let m = if base_cfg.artifacts_dir.join("manifest.json").exists() {
+        chai::config::Manifest::load(&base_cfg.artifacts_dir)?
+    } else {
+        chai::runtime::reference::RefBackend::toy(0).manifest().clone()
+    };
+    let block = chai::kv::paged::KvLayout::from_manifest(&m, chai::kv::CacheKind::Mha)
+        .block_bytes(16);
+    let prompts: Vec<String> = (0..n)
+        .map(|i| format!("overload {i}: tom tells a rather long story"))
+        .collect();
+
+    let mut table = Table::new(
+        "Serving overload: preempt-and-requeue under an over-capacity burst",
+        &[
+            "mode",
+            "ok",
+            "preempt swap",
+            "preempt recomp",
+            "oom",
+            "p50 wait ms",
+            "p99 wait ms",
+            "tok/s",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    for (mode, swap_blocks) in [("overload-swap", 64usize), ("overload-recompute", 0)] {
+        let cfg = ServingConfig {
+            max_batch: 8,
+            kv_block_size: 16,
+            kv_capacity_bytes: 4 * block,
+            preempt: true,
+            starve_ticks: 1,
+            swap_blocks,
+            recompute_max_tokens: 0,
+            ..base_cfg.clone()
+        };
+        let handle = Coordinator::start(cfg)?;
+        let coord = handle.coordinator.clone();
+        let t0 = now_ms();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| coord.submit(p, max_new, Variant::Chai))
+            .collect();
+        let mut ok = 0usize;
+        let mut tokens = 0usize;
+        let mut waits = Vec::new();
+        let mut e2es = Vec::new();
+        for rx in rxs {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+            if r.error.is_none() {
+                ok += 1;
+                tokens += r.n_generated;
+                waits.push(r.queue_ms);
+                e2es.push(r.e2e_ms);
+            }
+        }
+        let span_s = ((now_ms() - t0) / 1e3).max(1e-9);
+        let swaps = coord.metrics.counter("sched_preempt_swap");
+        let recomputes = coord.metrics.counter("sched_preempt_recompute");
+        let ooms = coord.metrics.counter("sched_preempt_oom");
+        handle.shutdown();
+
+        assert_eq!(ok, n, "[{mode}] overload must drop zero requests");
+        let (p50, p99) = (percentile(&waits, 50.0), percentile(&waits, 99.0));
+        // gate on e2e, not first-admission wait: queue_ms is measured to
+        // the FIRST admission, so it cannot see a session parked after a
+        // preemption — e2e covers the whole life including every requeue
+        let p99_e2e = percentile(&e2es, 99.0);
+        assert!(p99 < 120_000.0, "[{mode}] p99 queue wait {p99:.0} ms is unbounded");
+        assert!(
+            p99_e2e < 120_000.0,
+            "[{mode}] p99 e2e {p99_e2e:.0} ms — a preempted session was parked unboundedly"
+        );
+        match mode {
+            "overload-swap" => assert!(
+                swaps >= 1,
+                "[{mode}] a roomy tier under overload must record a swap-out"
+            ),
+            _ => assert!(
+                recomputes >= 1,
+                "[{mode}] a disabled tier under overload must record a recompute preemption"
+            ),
+        }
+        table.row(vec![
+            mode.to_string(),
+            format!("{ok}/{n}"),
+            format!("{swaps}"),
+            format!("{recomputes}"),
+            format!("{ooms}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{:.1}", tokens as f64 / span_s),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("requests", Json::Num(n as f64)),
+            ("ok", Json::Num(ok as f64)),
+            ("dropped", Json::Num((n - ok) as f64)),
+            ("preempt_swap", Json::Num(swaps as f64)),
+            ("preempt_recompute", Json::Num(recomputes as f64)),
+            ("preempt_oom", Json::Num(ooms as f64)),
+            ("p50_queue_ms", Json::Num(p50)),
+            ("p99_queue_ms", Json::Num(p99)),
+            ("p99_e2e_ms", Json::Num(p99_e2e)),
+            ("throughput_tok_s", Json::Num(tokens as f64 / span_s)),
+        ]));
+    }
+    table.print();
+
+    // merge next to the --smoke rows rather than clobbering them
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert("overload".to_string(), Json::Arr(json_rows));
+    common::write_results("BENCH_serving", Json::Obj(fields));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
     if args.bool("smoke") {
         return smoke(&args, &base_cfg);
+    }
+    if args.bool("overload") {
+        return overload(&args, &base_cfg);
     }
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;

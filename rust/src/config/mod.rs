@@ -215,6 +215,21 @@ pub struct ServingConfig {
     /// total K,V block pool budget in bytes (paged path; the legacy
     /// path uses the same budget for its bucket accounting)
     pub kv_capacity_bytes: usize,
+    /// preempt-and-requeue live sessions under overload (`--preempt`):
+    /// when the queue head has starved past `starve_ticks`, the
+    /// scheduler freezes the LRU live session — swapping its K,V blocks
+    /// to the host spill tier or recomputing them on resume
+    pub preempt: bool,
+    /// consecutive deferred ticks before the queue head may trigger a
+    /// preemption (`--starve-ticks`)
+    pub starve_ticks: u64,
+    /// host swap-tier budget in MHA-sized KV blocks (`--swap-blocks`);
+    /// 0 disables the tier (every preemption recomputes on resume)
+    pub swap_blocks: usize,
+    /// preempted sessions with at most this many cached positions
+    /// recompute on resume rather than swapping
+    /// (`--recompute-max-tokens`)
+    pub recompute_max_tokens: usize,
 }
 
 impl Default for ServingConfig {
@@ -231,6 +246,10 @@ impl Default for ServingConfig {
             batched_decode: true,
             kv_block_size: 16,
             kv_capacity_bytes: 512 * 1024 * 1024,
+            preempt: false,
+            starve_ticks: 4,
+            swap_blocks: 64,
+            recompute_max_tokens: 16,
         }
     }
 }

@@ -1,56 +1,33 @@
-//! Serving coordinator: request queue → continuous batcher → engine loop.
+//! Serving coordinator: the cross-thread front door of the engine loop.
 //!
 //! The `xla` PJRT client is `Rc`-based (not `Send`), so all PJRT state
 //! lives on ONE engine thread (the vLLM-style engine-loop design). Front
 //! ends (TCP server, bench drivers) submit [`Request`]s into a shared
 //! queue and receive a [`Response`] over a per-request channel.
 //!
-//! Scheduling policy (see [`batcher`]): token-level continuous batching —
-//! every tick the loop (1) admits waiting requests up to `max_batch` live
-//! sessions, subject to KV-pool admission control, (2) runs ONE fused
-//! decode tick over every live session ([`Engine::decode_tick`]: all
-//! paged sessions of a variant go through a single ragged
-//! block-table-native backend call), (3) retires finished sessions.
-//! Prefill happens at admission (prefill-prioritized, like vLLM's
-//! default) and skips compute for prompt blocks adopted from the prefix
-//! index.
+//! All scheduling policy lives in [`crate::scheduler`]: the engine loop
+//! here is a thin tick pump that drains the cross-thread inbox into the
+//! [`Scheduler`]'s pending queue and calls [`Scheduler::run_tick`] —
+//! token-level continuous batching with FCFS admission, fused paged
+//! decode ticks ([`crate::engine::Engine::decode_tick`]), and (with
+//! `--preempt`) preempt-and-requeue of live sessions under overload,
+//! swapping K,V state to the host spill tier or recomputing it on
+//! resume.
 
-pub mod batcher;
+pub use crate::scheduler::{Request, Response};
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{Admission, Engine, Session, Timing, Variant};
-use crate::kv::KvPool;
+use crate::engine::{Engine, Variant};
 use crate::metrics::Metrics;
+use crate::scheduler::{SchedPolicy, Scheduler};
 use crate::util::now_ms;
-
-#[derive(Debug)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: String,
-    pub max_new: usize,
-    pub variant: Variant,
-    pub submitted_ms: f64,
-    pub resp_tx: Sender<Response>,
-}
-
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub text: String,
-    pub n_prompt: usize,
-    pub n_generated: usize,
-    pub queue_ms: f64,
-    pub e2e_ms: f64,
-    pub timing: Timing,
-    pub error: Option<String>,
-}
 
 #[derive(Default)]
 struct Shared {
@@ -142,21 +119,6 @@ impl Coordinator {
     }
 }
 
-impl Response {
-    fn error(id: u64, msg: String) -> Response {
-        Response {
-            id,
-            text: String::new(),
-            n_prompt: 0,
-            n_generated: 0,
-            queue_ms: 0.0,
-            e2e_ms: 0.0,
-            timing: Timing::default(),
-            error: Some(msg),
-        }
-    }
-}
-
 impl CoordinatorHandle {
     pub fn shutdown(mut self) {
         self.coordinator.request_shutdown();
@@ -175,36 +137,19 @@ impl Drop for CoordinatorHandle {
     }
 }
 
-struct Live {
-    req: Request,
-    session: Session,
-    started_ms: f64,
-}
-
-/// The engine loop: continuous batching at token granularity.
-///
-/// KV admission control is block-granular by default: a request is
-/// admitted when the engine's paged store can cover its prefill blocks
-/// plus one decode block, counting evictable cached blocks (prefix
-/// reuse can only shrink the real allocation). With `paged_kv = false`
-/// the legacy contiguous [`KvPool`] worst-case bucket accounting is
-/// used instead.
+/// The thin engine loop: drain the inbox, tick the scheduler, repeat.
+/// Blocks on the condvar when there is nothing pending, live, or
+/// preempted; returns on shutdown once all accepted work has drained.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
     // surface which compute backend this engine serves with (the server's
     // `stats` command and benches read these back)
     metrics.set_info("backend", engine.backend_name());
     metrics.set_info("model", &engine.manifest().model.name);
-    let paged = engine.paged_enabled();
-    // legacy bucket-accounting pool (only consulted when !paged)
-    let mut pool = KvPool::new(cfg.kv_capacity_bytes);
-    let mut live: Vec<Live> = Vec::new();
+    let mut sched = Scheduler::new(SchedPolicy::from_config(cfg));
     loop {
-        // --- admission (prefill) ------------------------------------------
-        let admit_n = batcher::admission_quota(live.len(), cfg.max_batch);
-        let mut admitted: Vec<Request> = Vec::new();
         {
             let mut g = shared.queue.lock().unwrap();
-            if live.is_empty() && g.waiting.is_empty() {
+            if sched.is_idle() && g.waiting.is_empty() {
                 if g.shutdown {
                     return;
                 }
@@ -217,179 +162,10 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
                     return;
                 }
             }
-            for _ in 0..admit_n {
-                match g.waiting.pop_front() {
-                    Some(r) => admitted.push(r),
-                    None => break,
-                }
+            while let Some(r) = g.waiting.pop_front() {
+                sched.submit(r);
             }
         }
-        // requests that can't start this tick go back to the queue head
-        // in arrival order — including the ones behind a deferral, which
-        // must not be dropped
-        let mut deferred: Vec<Request> = Vec::new();
-        let mut pending = admitted.into_iter();
-        for req in pending.by_ref() {
-            let queue_ms = now_ms() - req.submitted_ms;
-            metrics.observe_ms("queue", queue_ms);
-            if paged {
-                match engine.paged_admission(&req.variant, &req.prompt) {
-                    Admission::Admit => {}
-                    Admission::Defer => {
-                        metrics.inc("kv_defer");
-                        deferred.push(req);
-                        break;
-                    }
-                    Admission::Reject => {
-                        // larger than the whole pool: deferring would
-                        // spin the scheduler forever
-                        metrics.inc("errors");
-                        let _ = req.resp_tx.send(Response::error(
-                            req.id,
-                            "prompt exceeds kv pool capacity".into(),
-                        ));
-                        continue;
-                    }
-                }
-            } else {
-                let total = req.prompt.len() + 1 + req.max_new;
-                let bucket = crate::config::Manifest::bucket_for(
-                    &engine.manifest().decode_buckets,
-                    total,
-                )
-                .unwrap_or(*engine.manifest().decode_buckets.last().unwrap());
-                let kind = req.variant.cache_kind();
-                if pool.admit(req.id, kind, engine.manifest(), bucket).is_err() {
-                    // pool full: push back and stop admitting this tick
-                    metrics.inc("kv_defer");
-                    deferred.push(req);
-                    break;
-                }
-            }
-            let t0 = now_ms();
-            match engine.start_session(&req.prompt, req.max_new, &req.variant) {
-                Ok(session) => {
-                    metrics.inc("admitted");
-                    metrics.observe_ms("ttft", session.timing.ttft_ms);
-                    live.push(Live { req, session, started_ms: t0 });
-                }
-                Err(e) => {
-                    if !paged {
-                        let _ = pool.release(req.id);
-                    }
-                    metrics.inc("errors");
-                    let _ = req.resp_tx.send(Response::error(req.id, format!("{e:#}")));
-                }
-            }
-        }
-        deferred.extend(pending); // everything behind the deferral
-        if !deferred.is_empty() {
-            let mut g = shared.queue.lock().unwrap();
-            for r in deferred.into_iter().rev() {
-                g.waiting.push_front(r);
-            }
-        }
-
-        // --- decode tick: one fused token step across live sessions ------
-        // `decode_tick` batches every paged session of a variant into a
-        // single ragged block-table-native backend call: one dispatch
-        // per tick, zero bucket copies per row (the ref backend still
-        // computes rows sequentially inside the call; a device backend
-        // would vectorize them)
-        let mut finished: Vec<usize> = Vec::new();
-        if !live.is_empty() {
-            if !paged {
-                for l in &live {
-                    pool.touch(l.req.id);
-                }
-            }
-            metrics.observe("decode_batch", live.len() as f64);
-            let mut sessions: Vec<&mut Session> =
-                live.iter_mut().map(|l| &mut l.session).collect();
-            let outcomes = engine.decode_tick(&mut sessions);
-            drop(sessions);
-            for (i, outcome) in outcomes.into_iter().enumerate() {
-                match outcome {
-                    Ok(more) => {
-                        metrics.inc("tokens");
-                        if let Some(ms) = live[i].session.timing.decode_ms.last() {
-                            metrics.observe_ms("decode_step", *ms);
-                        }
-                        if !more {
-                            finished.push(i);
-                        }
-                    }
-                    Err(e) => {
-                        metrics.inc("errors");
-                        let _ = live[i]
-                            .req
-                            .resp_tx
-                            .send(Response::error(live[i].req.id, format!("{e:#}")));
-                        finished.push(i);
-                    }
-                }
-            }
-        }
-        // retire back-to-front so indices stay valid
-        for &i in finished.iter().rev() {
-            let mut l = live.swap_remove(i);
-            if paged {
-                // idempotent: finish_session would release too, but
-                // errored sessions never reach it
-                engine.release_session(&mut l.session);
-            } else {
-                let _ = pool.release(l.req.id);
-            }
-            if l.session.done {
-                let timing = l.session.timing.clone();
-                let n_prompt = l.session.prompt_len;
-                let n_generated = l.session.generated();
-                let gen = engine.finish_session(l.session);
-                metrics.inc("completed");
-                let e2e = now_ms() - l.req.submitted_ms;
-                metrics.observe_ms("e2e", e2e);
-                let _ = l.req.resp_tx.send(Response {
-                    id: l.req.id,
-                    text: gen.text,
-                    n_prompt,
-                    n_generated,
-                    queue_ms: l.started_ms - l.req.submitted_ms,
-                    e2e_ms: e2e,
-                    timing,
-                    error: None,
-                });
-            }
-        }
-
-        // --- publish paged-KV occupancy/sharing gauges --------------------
-        // (served verbatim by the server's `stats`/`kv` commands)
-        if let Some(snap) = engine.paged_snapshot() {
-            metrics.set_gauge("kv_capacity_bytes", snap.capacity_bytes as f64);
-            metrics.set_gauge("kv_used_bytes", snap.used_bytes as f64);
-            metrics.set_gauge("kv_cached_bytes", snap.cached_bytes as f64);
-            metrics.set_gauge("kv_live_blocks", snap.live_blocks as f64);
-            metrics.set_gauge("kv_cached_blocks", snap.cached_blocks as f64);
-            metrics.set_gauge("kv_live_tables", snap.live_tables as f64);
-            metrics.set_gauge("paged_prefix_hit_blocks", snap.stats.prefix_hit_blocks as f64);
-            metrics.set_gauge("paged_prefix_miss_blocks", snap.stats.prefix_miss_blocks as f64);
-            metrics.set_gauge("paged_prefix_hit_rate", snap.stats.prefix_hit_rate());
-            metrics.set_gauge("paged_cow_copies", snap.stats.cow_copies as f64);
-            metrics.set_gauge("paged_evictions", snap.stats.evictions as f64);
-            metrics.set_gauge("paged_alloc_failures", snap.stats.alloc_failures as f64);
-            // block-native hot-path accounting: bucket-shaped copies on
-            // the decode path must stay 0 while batched decode is on
-            metrics.set_gauge(
-                "paged_decode_gather_copies",
-                snap.stats.decode_gather_copies as f64,
-            );
-            metrics.set_gauge(
-                "paged_decode_scatter_copies",
-                snap.stats.decode_scatter_copies as f64,
-            );
-            metrics.set_gauge(
-                "paged_prefill_skipped_tokens",
-                snap.stats.prefill_skipped_tokens as f64,
-            );
-        }
+        sched.run_tick(engine, metrics);
     }
 }

@@ -33,7 +33,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::clustering::membership::{identify, Membership};
 use crate::config::{Manifest, ServingConfig};
-use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot};
+use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot, SwapHandle, SwapPool, SwapSnapshot};
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
 use crate::runtime::{backend_for, Backend, ClusterAssignment, In, PagedDecodeRow};
@@ -148,6 +148,10 @@ pub struct Engine {
     /// engine is single-threaded, so RefCell suffices; sessions hold
     /// sequence ids into it rather than cache tensors.
     paged: Option<std::cell::RefCell<PagedKv>>,
+    /// Host-side spill tier for preempted sessions (None when
+    /// `swap_blocks == 0` or on the legacy path): frozen sessions stage
+    /// their sole-owner blocks here instead of recomputing on resume.
+    swap: Option<std::cell::RefCell<SwapPool>>,
     next_seq: std::cell::Cell<u64>,
 }
 
@@ -162,6 +166,14 @@ impl Engine {
                 cfg.kv_capacity_bytes,
             ))
         });
+        // swap-tier budget is counted in MHA-sized blocks (the largest
+        // layout), so `--swap-blocks N` holds at least N blocks of any
+        // variant
+        let swap = (cfg.paged_kv && cfg.swap_blocks > 0).then(|| {
+            let block = KvLayout::from_manifest(rt.manifest(), CacheKind::Mha)
+                .block_bytes(cfg.kv_block_size.max(1));
+            std::cell::RefCell::new(SwapPool::new(cfg.swap_blocks * block))
+        });
         Ok(Engine {
             rt,
             cfg,
@@ -170,6 +182,7 @@ impl Engine {
             rng: std::cell::RefCell::new(Rng::new(seed)),
             membership_cache: std::cell::RefCell::new(Default::default()),
             paged,
+            swap,
             next_seq: std::cell::Cell::new(0),
         })
     }
@@ -248,6 +261,186 @@ impl Engine {
         if let Caches::Paged { seq, .. } = &mut s.caches {
             if let (Some(store), Some(seq)) = (&self.paged, seq.take()) {
                 let _ = store.borrow_mut().release(seq);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Preemption: session freeze / thaw
+    // ------------------------------------------------------------------
+
+    /// Whether the scheduler may preempt this session: freeze/thaw is
+    /// implemented for block-table-native paged sessions only (the
+    /// resume path is a suffix `prefill_paged`).
+    pub fn can_freeze(&self, s: &Session) -> bool {
+        self.paged_native() && matches!(s.caches, Caches::Paged { seq: Some(_), .. })
+    }
+
+    /// Inputs to the scheduler's swap-vs-recompute cost model:
+    /// `(tokens_to_replay, bytes_to_swap)`. Replay cost is the cached
+    /// positions a recompute-resume would run through `prefill_paged`;
+    /// swap bytes exclude blocks other live sessions read (pinned).
+    pub fn preempt_cost(&self, s: &Session) -> (usize, usize) {
+        let (Some(store), Some(seq)) = (&self.paged, paged_seq_of(s)) else {
+            return (0, 0);
+        };
+        let st = store.borrow();
+        let replay = st.table(seq).map(|t| t.len).unwrap_or(0);
+        let bytes = st.swap_cost(seq).unwrap_or(0);
+        (replay, bytes)
+    }
+
+    /// Free bytes in the swap tier (0 when the tier is disabled).
+    pub fn swap_free_bytes(&self) -> usize {
+        self.swap.as_ref().map(|s| s.borrow().free_bytes()).unwrap_or(0)
+    }
+
+    /// Swap-tier occupancy/counters for gauges (None when disabled).
+    pub fn swap_snapshot(&self) -> Option<SwapSnapshot> {
+        self.swap.as_ref().map(|s| s.borrow().snapshot())
+    }
+
+    /// Drop a frozen session without resuming it (the scheduler's
+    /// errored-resume path): releases its swap-tier entry, if any —
+    /// a bare drop of [`FrozenSession`] would leak the staged bytes
+    /// and silently shrink the tier forever.
+    pub fn discard_frozen(&self, f: FrozenSession) {
+        if let (Some(tier), Some(h)) = (&self.swap, f.swap) {
+            tier.borrow_mut().discard(h);
+        }
+    }
+
+    /// Preempt a live session: capture everything a later
+    /// [`Self::thaw_session`] needs and give its blocks back to the
+    /// pool. With `prefer_swap` the sole-owner blocks are staged into
+    /// the spill tier first (falling back to plain eviction when the
+    /// tier is full or missing); shared prefix blocks are never
+    /// swapped — they stay pinned by their other readers. Returns the
+    /// frozen state and whether the K,V actually swapped (false =
+    /// recompute on resume).
+    pub fn freeze_session(&self, mut s: Session, prefer_swap: bool) -> (FrozenSession, bool) {
+        let mut handle: Option<SwapHandle> = None;
+        if prefer_swap {
+            if let (Some(store), Some(tier), Some(seq)) =
+                (&self.paged, &self.swap, paged_seq_of(&s))
+            {
+                handle = store.borrow_mut().swap_out(seq, &mut tier.borrow_mut()).ok();
+                if handle.is_some() {
+                    // swap_out released the table; don't release twice
+                    if let Caches::Paged { seq, .. } = &mut s.caches {
+                        let _ = seq.take();
+                    }
+                }
+            }
+        }
+        if handle.is_none() {
+            self.release_session(&mut s);
+        }
+        let swapped = handle.is_some();
+        (
+            FrozenSession {
+                variant: s.variant,
+                tokens: s.tokens,
+                prompt_len: s.prompt_len,
+                max_new: s.max_new,
+                bucket: s.bucket,
+                clusters: s.clusters,
+                timing: s.timing,
+                swap: handle,
+            },
+            swapped,
+        )
+    }
+
+    /// Can a frozen session's K,V reservation be re-taken right now?
+    /// Mirrors [`Self::paged_admission`] for the resume path (the cache
+    /// holds one row fewer than the token stream: the last sampled
+    /// token's row is appended by the next decode tick).
+    pub fn resume_admission(&self, f: &FrozenSession) -> Admission {
+        let Some(store) = &self.paged else { return Admission::Reject };
+        let layout = KvLayout::from_manifest(self.manifest(), f.variant.cache_kind());
+        let n = f.tokens.len().saturating_sub(1);
+        let st = store.borrow();
+        if !st.fits_ever(&layout, n) {
+            Admission::Reject
+        } else if !st.can_admit(&layout, n) {
+            Admission::Defer
+        } else {
+            Admission::Admit
+        }
+    }
+
+    /// Resume a preempted session: re-admit its cached positions
+    /// (re-adopting any blocks still reachable through the prefix
+    /// index), restore swapped blocks bit-exactly, and recompute
+    /// whatever remains via the suffix `prefill_paged` path — the same
+    /// `adopted_prefix_len`-style skip contract prefill uses, so the
+    /// resumed stream is bit-identical to an uncontended run. The
+    /// sampled-but-not-yet-cached last token is untouched; the next
+    /// decode tick appends its row exactly as it would have.
+    pub fn thaw_session(&self, f: FrozenSession) -> Result<Session> {
+        let discard = |h: Option<SwapHandle>| {
+            if let (Some(tier), Some(h)) = (&self.swap, h) {
+                tier.borrow_mut().discard(h);
+            }
+        };
+        if !self.paged_native() {
+            discard(f.swap);
+            bail!("thaw requires a block-table-native paged backend");
+        }
+        let store = self.paged.as_ref().expect("paged_native without store");
+        let cache_len = f.tokens.len().saturating_sub(1);
+        if cache_len == 0 {
+            discard(f.swap);
+            bail!("thaw of an empty session");
+        }
+        let seq = match self.paged_admit(&f.variant, &f.tokens[..cache_len]) {
+            Ok(seq) => seq,
+            Err(e) => {
+                discard(f.swap);
+                return Err(e);
+            }
+        };
+        let restore = || -> Result<f64> {
+            let mut st = store.borrow_mut();
+            let restored = match f.swap {
+                Some(h) => {
+                    let tier = self.swap.as_ref().expect("swap handle without tier");
+                    st.restore_swapped(seq, h, &mut tier.borrow_mut())?
+                }
+                None => st.adopted_prefix_len(seq)?,
+            };
+            st.stats.prefill_skipped_tokens += restored as u64;
+            let t0 = Instant::now();
+            // logits are discarded: the post-prefill token was already
+            // sampled before the preemption and lives in `tokens`
+            let _ = self.rt.prefill_paged(seq, restored, f.clusters.as_ref(), &mut st)?;
+            st.commit_prefill(seq)?;
+            Ok(t0.elapsed().as_secs_f64() * 1e3)
+        };
+        match restore() {
+            Ok(thaw_ms) => {
+                let mut timing = f.timing;
+                timing.prefill_ms += thaw_ms;
+                Ok(Session {
+                    variant: f.variant.clone(),
+                    tokens: f.tokens,
+                    prompt_len: f.prompt_len,
+                    max_new: f.max_new,
+                    bucket: f.bucket,
+                    caches: Caches::Paged {
+                        seq: Some(seq),
+                        kind: f.variant.cache_kind(),
+                    },
+                    membership_tensors: None,
+                    clusters: f.clusters,
+                    timing,
+                    done: false,
+                })
+            }
+            Err(e) => {
+                let _ = store.borrow_mut().release(seq);
+                Err(e)
             }
         }
     }
@@ -1031,6 +1224,30 @@ impl Session {
     }
 }
 
+/// A preempted session, off the live set: everything
+/// [`Engine::thaw_session`] needs to rebuild the live [`Session`]
+/// bit-identically. The cluster assignment is carried verbatim (no
+/// re-probe on resume — membership is part of the session's identity),
+/// and `swap` holds the spill-tier ticket when the K,V state was
+/// swapped out rather than dropped for recompute.
+pub struct FrozenSession {
+    pub variant: Variant,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub bucket: usize,
+    clusters: Option<ClusterAssignment>,
+    pub timing: Timing,
+    swap: Option<SwapHandle>,
+}
+
+impl FrozenSession {
+    /// Whether resume will restore from the swap tier (vs recompute).
+    pub fn is_swapped(&self) -> bool {
+        self.swap.is_some()
+    }
+}
+
 /// Paged-store sequence id of a session, if it has block-table storage.
 fn paged_seq_of(s: &Session) -> Option<u64> {
     match &s.caches {
@@ -1094,6 +1311,94 @@ mod tests {
         // all-NaN still terminates deterministically
         let idx = e.sample(&Tensor::f32(vec![2], vec![f32::NAN, f32::NAN]));
         assert!(idx == 0 || idx == 1);
+    }
+
+    #[test]
+    fn freeze_thaw_resumes_bit_identically() {
+        // a session frozen mid-decode and thawed — via the swap tier or
+        // via recompute — must emit exactly the uncontended token
+        // stream, for both cache layouts
+        for prefer_swap in [true, false] {
+            for variant in [Variant::Mha, Variant::Chai] {
+                let prompt = "the color of tom is a long tale";
+                let oracle = toy_engine(9);
+                let want = oracle.generate(prompt, 10, &variant).unwrap().tokens;
+
+                let e = toy_engine(9);
+                let mut s = e.start_session(prompt, 10, &variant).unwrap();
+                for _ in 0..3 {
+                    assert!(e.step_session(&mut s).unwrap());
+                }
+                let (frozen, swapped) = e.freeze_session(s, prefer_swap);
+                assert_eq!(
+                    swapped, prefer_swap,
+                    "default swap tier must accept a lone session's blocks"
+                );
+                assert_eq!(frozen.is_swapped(), swapped);
+                let snap = e.paged_snapshot().unwrap();
+                assert_eq!(snap.live_tables, 0, "frozen session holds no live blocks");
+                if swapped {
+                    assert!(e.swap_snapshot().unwrap().used_bytes > 0);
+                }
+
+                assert_eq!(e.resume_admission(&frozen), Admission::Admit);
+                let mut s = e.thaw_session(frozen).unwrap();
+                if swapped {
+                    assert_eq!(
+                        e.swap_snapshot().unwrap().used_bytes,
+                        0,
+                        "thaw must drain the swap tier"
+                    );
+                }
+                while e.step_session(&mut s).unwrap() {}
+                assert_eq!(
+                    s.tokens,
+                    want,
+                    "{} swap={prefer_swap}: preempted stream must be bit-identical",
+                    variant.name()
+                );
+                e.finish_session(s);
+            }
+        }
+    }
+
+    #[test]
+    fn discard_frozen_releases_swap_entry() {
+        // an errored resume must not strand the staged bytes in the tier
+        let e = toy_engine(4);
+        let s = e.start_session("the color of tom is", 6, &Variant::Chai).unwrap();
+        let (frozen, swapped) = e.freeze_session(s, true);
+        assert!(swapped);
+        assert!(e.swap_snapshot().unwrap().used_bytes > 0);
+        e.discard_frozen(frozen);
+        let snap = e.swap_snapshot().unwrap();
+        assert_eq!(snap.used_bytes, 0);
+        assert_eq!(snap.stats.discarded, 1);
+    }
+
+    #[test]
+    fn freeze_thaw_survives_repeated_preemption() {
+        // freeze/thaw on every single decode step — the most hostile
+        // schedule — still reproduces the uncontended stream
+        let variant = Variant::Chai;
+        let prompt = "tom keeps the hat in the box";
+        let want = toy_engine(3).generate(prompt, 6, &variant).unwrap().tokens;
+        let e = toy_engine(3);
+        let mut s = e.start_session(prompt, 6, &variant).unwrap();
+        let mut alternate = true;
+        loop {
+            let (frozen, _) = e.freeze_session(s, alternate);
+            alternate = !alternate;
+            s = e.thaw_session(frozen).unwrap();
+            if !e.step_session(&mut s).unwrap() {
+                break;
+            }
+        }
+        assert_eq!(s.tokens, want);
+        e.finish_session(s);
+        let snap = e.paged_snapshot().unwrap();
+        assert_eq!(snap.live_tables, 0);
+        assert_eq!(e.swap_snapshot().unwrap().used_bytes, 0);
     }
 
     #[test]

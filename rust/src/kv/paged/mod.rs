@@ -32,6 +32,7 @@
 
 pub mod pool;
 pub mod prefix;
+pub mod swap;
 pub mod table;
 
 use std::collections::BTreeMap;
@@ -44,7 +45,36 @@ use crate::tensor::Tensor;
 
 pub use pool::{BlockId, BlockPool, ReleaseOutcome};
 pub use prefix::{chain_hash, chain_seed, partial_hash, PrefixIndex};
+pub use swap::{SwapHandle, SwapPool, SwapSnapshot, SwappedBlock, SwappedSeq};
 pub use table::BlockTable;
+
+/// Typed allocation-failure error: the pool is out of blocks and
+/// nothing is evictable. The scheduler matches on this (via
+/// [`is_pool_exhausted`]) to preempt a live session instead of failing
+/// the request when `--preempt` is on.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolExhausted {
+    pub need_bytes: usize,
+    pub used_bytes: usize,
+    pub capacity_bytes: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv block pool exhausted: need {} B, used {}/{} B (nothing evictable)",
+            self.need_bytes, self.used_bytes, self.capacity_bytes
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// Whether an error chain bottoms out in [`PoolExhausted`].
+pub fn is_pool_exhausted(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<PoolExhausted>().is_some())
+}
 
 /// Geometry of one sequence's K,V rows — everything the data plane
 /// needs, decoupled from the manifest so the subsystem is testable
@@ -229,8 +259,9 @@ impl PagedKv {
     /// bytes as available? Prefix adoption can only reduce the real
     /// need. Note the policy is optimistic about decode growth (only
     /// the first decode block is reserved, vLLM-style): a long
-    /// generation can still exhaust the pool mid-stream and error —
-    /// live-session preemption is a ROADMAP open item.
+    /// generation can still exhaust the pool mid-stream — with
+    /// `--preempt` the scheduler catches the typed [`PoolExhausted`]
+    /// failure and preempts the session instead of erroring it.
     pub fn can_admit(&self, layout: &KvLayout, prompt_len: usize) -> bool {
         let need_blocks = (prompt_len + self.block_size - 1) / self.block_size + 1;
         need_blocks * layout.block_bytes(self.block_size) <= self.pool.reclaimable_bytes()
@@ -258,12 +289,11 @@ impl PagedKv {
                 }
                 None => {
                     self.stats.alloc_failures += 1;
-                    bail!(
-                        "kv block pool exhausted: need {} B, used {}/{} B (nothing evictable)",
-                        floats * 4,
-                        self.pool.used_bytes(),
-                        self.pool.capacity_bytes()
-                    );
+                    return Err(anyhow::Error::new(PoolExhausted {
+                        need_bytes: floats * 4,
+                        used_bytes: self.pool.used_bytes(),
+                        capacity_bytes: self.pool.capacity_bytes(),
+                    }));
                 }
             }
         }
@@ -563,6 +593,128 @@ impl PagedKv {
             }
         }
         Ok(n.min(t.len))
+    }
+
+    // ------------------------------------------------------------------
+    // Swap tier (preemption data plane)
+    // ------------------------------------------------------------------
+
+    /// Bytes a swap-out of sequence `id` would stage into the spill
+    /// tier: the compacted rows of every block this table is the *sole*
+    /// reader of. Shared (prefix-pinned) blocks are exempt — another
+    /// live session reads them, so they stay hot and cost nothing to
+    /// "swap". Input to the scheduler's swap-vs-recompute cost model.
+    pub fn swap_cost(&self, id: u64) -> Result<usize> {
+        let t = self.table_ref(id)?;
+        let fpt = t.layout.floats_per_token();
+        let mut bytes = 0usize;
+        for (bi, &bid) in t.blocks.iter().enumerate() {
+            let blk = self.pool.block(bid);
+            if blk.refs > 1 {
+                continue;
+            }
+            bytes += fpt * blk.filled.min(t.len - bi * t.block_size) * 4;
+        }
+        Ok(bytes)
+    }
+
+    /// Stage sequence `id`'s K,V state out of the hot pool and release
+    /// its table. Sole-owner blocks are serialized (compacted rows —
+    /// for CHAI that is each layer's cluster-rep K panels once per
+    /// block, plus the full-head V rows); blocks another live table
+    /// reads are **never** serialized — they stay resident (pinned by
+    /// the other refs) and are re-adopted through the prefix index at
+    /// swap-in. Fails (table untouched) when the tier cannot hold the
+    /// payload; the caller falls back to recompute-on-resume.
+    pub fn swap_out(&mut self, id: u64, tier: &mut SwapPool) -> Result<SwapHandle> {
+        // size check BEFORE any copying: a denied swap must cost O(blocks),
+        // not a full serialization thrown away
+        let bytes = self.swap_cost(id)?;
+        if !tier.fits(bytes) {
+            tier.stats.denied_full += 1;
+            bail!(
+                "swap tier full ({} B payload, {} B free) — recompute instead",
+                bytes,
+                tier.free_bytes()
+            );
+        }
+        let t = self.table_ref(id)?;
+        let layout = t.layout.clone();
+        let b = t.block_size;
+        let len = t.len;
+        let mut blocks: Vec<Option<SwappedBlock>> = Vec::with_capacity(t.blocks.len());
+        for (bi, &bid) in t.blocks.clone().iter().enumerate() {
+            let blk = self.pool.block(bid);
+            if blk.refs > 1 {
+                // pinned: a live batchmate reads this block
+                blocks.push(None);
+                continue;
+            }
+            let filled = blk.filled.min(len - bi * b);
+            blocks.push(Some(SwappedBlock::capture(&layout, b, filled, &blk.data)));
+        }
+        let handle = tier.insert(SwappedSeq { layout, block_size: b, len, blocks, bytes })?;
+        self.release(id)?;
+        Ok(handle)
+    }
+
+    /// Fill a freshly re-admitted sequence's blocks back in from the
+    /// spill tier (consuming the handle) and return how many *leading*
+    /// positions are now valid: adopted blocks (re-found through the
+    /// prefix index — including blocks that were pinned at swap-out)
+    /// count as restored, serialized blocks are copied back
+    /// bit-exactly, and the first unrecoverable block (pinned at
+    /// swap-out but since evicted) ends the prefix — everything past it
+    /// is recomputed by the suffix prefill. Call between `admit` and
+    /// `prefill_paged`, exactly like `adopted_prefix_len`.
+    pub fn restore_swapped(
+        &mut self,
+        id: u64,
+        handle: SwapHandle,
+        tier: &mut SwapPool,
+    ) -> Result<usize> {
+        let entry = tier.take(handle)?;
+        let t = self.table_ref(id)?;
+        if entry.layout != t.layout || entry.block_size != t.block_size {
+            bail!("swap entry geometry does not match sequence {id}");
+        }
+        if entry.len != t.len || entry.blocks.len() != t.blocks.len() {
+            bail!(
+                "swap entry covers {} positions / {} blocks, table has {} / {}",
+                entry.len,
+                entry.blocks.len(),
+                t.len,
+                t.blocks.len()
+            );
+        }
+        let blocks = t.blocks.clone();
+        let (b, len) = (t.block_size, t.len);
+        let mut valid = 0usize;
+        let mut leading = true;
+        for (bi, (&bid, saved)) in blocks.iter().zip(&entry.blocks).enumerate() {
+            let span = (len - bi * b).min(b);
+            if self.pool.block(bid).hash.is_some() {
+                // adopted at re-admission: resident content is already
+                // canonical for this chain — never write to it
+                if leading {
+                    valid += self.pool.block(bid).filled.min(span);
+                    leading = self.pool.block(bid).filled >= span;
+                }
+                continue;
+            }
+            match saved {
+                Some(sb) => {
+                    sb.restore_into(&entry.layout, b, self.pool.data_mut(bid));
+                    self.pool.set_filled(bid, sb.filled);
+                    if leading {
+                        valid += sb.filled.min(span);
+                        leading = sb.filled >= span;
+                    }
+                }
+                None => leading = false, // pinned at swap-out, evicted since
+            }
+        }
+        Ok(valid.min(len))
     }
 
     // ------------------------------------------------------------------
@@ -1122,6 +1274,123 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_block_bytes_exactly() {
+        // sharing disabled → the pure serialize/restore path, no
+        // adoption shortcuts
+        let lay = mha_layout();
+        let (l_n, h_n, dh) = (lay.n_layers, lay.n_heads, lay.head_dim);
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let mut tier = SwapPool::new(1 << 20);
+        let tokens: Vec<i32> = (0..10).collect(); // 2 full + rem 2
+        kv.admit(1, lay.clone(), "mha", false, &tokens).unwrap();
+        let bucket = 16;
+        let n = l_n * h_n * bucket * dh;
+        let kc = Tensor::f32(vec![l_n, h_n, bucket, dh], (0..n).map(|x| x as f32).collect());
+        let vc = Tensor::f32(
+            vec![l_n, h_n, bucket, dh],
+            (0..n).map(|x| 7000.0 + x as f32).collect(),
+        );
+        kv.write_prefill_mha(1, &kc, &vc, 10).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let (k0, v0) = kv.gather_mha(1, bucket).unwrap();
+
+        // compact accounting: exactly the filled rows round-trip
+        let cost = kv.swap_cost(1).unwrap();
+        assert_eq!(cost, lay.floats_per_token() * 10 * 4);
+        let h = kv.swap_out(1, &mut tier).unwrap();
+        assert!(!kv.has(1));
+        assert_eq!(kv.snapshot().used_bytes, 0, "unpublished blocks free at swap-out");
+        assert_eq!(tier.used_bytes(), cost);
+
+        // resume: fresh table, restore, bit-exact compare
+        kv.admit(2, lay, "mha", false, &tokens).unwrap();
+        let restored = kv.restore_swapped(2, h, &mut tier).unwrap();
+        assert_eq!(restored, 10, "every position restored from the tier");
+        assert_eq!(tier.used_bytes(), 0, "swap-in drains the tier");
+        kv.commit_prefill(2).unwrap();
+        let (k1, v1) = kv.gather_mha(2, bucket).unwrap();
+        let (a, b) = (k0.as_f32().unwrap(), k1.as_f32().unwrap());
+        assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()), "K bytes differ");
+        let (a, b) = (v0.as_f32().unwrap(), v1.as_f32().unwrap());
+        assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()), "V bytes differ");
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn swap_never_serializes_blocks_other_live_sessions_read() {
+        let lay = chai_layout();
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let mut tier = SwapPool::new(1 << 20);
+        let tokens: Vec<i32> = (0..10).collect(); // 2 full + rem 2
+        kv.admit(1, lay.clone(), "chai", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        kv.admit(2, lay.clone(), "chai", true, &tokens).unwrap(); // adopts all 3
+        kv.commit_prefill(2).unwrap();
+        // seq 2 diverges: CoW gives it a sole-owner tail (3 tokens)
+        kv.ensure_append_slot(2).unwrap();
+        kv.append_committed(2, 100).unwrap();
+        let seq1_before = kv.gather_chai(1, 16).unwrap();
+
+        // only the CoW'd tail is swappable — the two shared blocks stay
+        // pinned for seq 1
+        let cost = kv.swap_cost(2).unwrap();
+        assert_eq!(cost, lay.floats_per_token() * 3 * 4);
+        let h = kv.swap_out(2, &mut tier).unwrap();
+        assert_eq!(tier.stats.pinned_blocks, 2, "shared blocks must not be staged");
+        assert_eq!(tier.stats.out_blocks, 1);
+        assert!(kv.has(1), "seq 1 unaffected");
+        kv.check_consistency().unwrap();
+
+        // seq 1 still reads its rows bit-exactly
+        let seq1_after = kv.gather_chai(1, 16).unwrap();
+        for (x, y) in seq1_before.0.iter().zip(&seq1_after.0) {
+            assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+        }
+        assert_eq!(
+            seq1_before.1.as_f32().unwrap(),
+            seq1_after.1.as_f32().unwrap()
+        );
+
+        // resume: shared prefix re-adopts through the index, the CoW'd
+        // tail restores from the tier — the whole sequence is valid
+        let mut resumed = tokens.clone();
+        resumed.push(100);
+        kv.admit(3, lay, "chai", true, &resumed).unwrap();
+        let restored = kv.restore_swapped(3, h, &mut tier).unwrap();
+        assert_eq!(restored, 11);
+        kv.commit_prefill(3).unwrap();
+        kv.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn swap_denied_when_tier_full_leaves_table_intact() {
+        let lay = mha_layout();
+        let mut kv = PagedKv::new(4, 1 << 20);
+        let mut tier = SwapPool::new(16); // far too small
+        let tokens: Vec<i32> = (0..6).collect();
+        kv.admit(1, lay, "mha", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        assert!(kv.swap_out(1, &mut tier).is_err());
+        assert!(kv.has(1), "denied swap must leave the table untouched");
+        assert_eq!(tier.stats.denied_full, 1);
+        assert_eq!(tier.used_bytes(), 0);
+        kv.check_consistency().unwrap();
+        kv.release(1).unwrap();
+    }
+
+    #[test]
+    fn pool_exhaustion_is_typed() {
+        let lay = mha_layout();
+        let mut kv = PagedKv::new(4, 2 * lay.block_bytes(4));
+        let tokens: Vec<i32> = (0..8).collect();
+        kv.admit(1, lay.clone(), "mha", true, &tokens).unwrap();
+        kv.commit_prefill(1).unwrap();
+        let err = kv.admit(2, lay, "mha", true, &(100..116).collect::<Vec<i32>>()).unwrap_err();
+        assert!(is_pool_exhausted(&err), "alloc failure must downcast: {err:#}");
+        assert!(!is_pool_exhausted(&anyhow::anyhow!("other")));
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Host-side swap tier for preempted sequences.
+//!
+//! When the scheduler preempts a live session (see `scheduler`), its
+//! K,V state can be staged out of the hot block pool into this spill
+//! tier instead of being recomputed on resume. Swapped state is stored
+//! *compacted*: per block, only the `filled` token rows of every panel
+//! round-trip, so a swapped CHAI block carries just each layer's `k_l`
+//! cluster-representative K panels (serialized once per block — the
+//! panels resident in the block ARE the rep panels) plus the full-head
+//! V rows. Blocks another live table still references are never
+//! serialized (they stay pinned in the hot tier — the manager records
+//! a `None` placeholder and re-adopts them through the prefix index on
+//! swap-in); see [`super::PagedKv::swap_out`].
+//!
+//! The tier has its own byte budget (`--swap-blocks`, accounted against
+//! the MHA block size): when an entry does not fit, swap-out is denied
+//! and the scheduler falls back to recompute-on-resume.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::KvLayout;
+
+/// Ticket returned by a swap-out; redeemed (once) by swap-in.
+pub type SwapHandle = u64;
+
+/// One serialized block: the compacted rows of its K and V panels.
+#[derive(Debug, Clone)]
+pub struct SwappedBlock {
+    /// token rows captured (<= block_size)
+    pub filled: usize,
+    /// compact row data: `floats_per_token * filled` f32s, K panels
+    /// first (layer-major, panel-major), then V panels
+    pub data: Vec<f32>,
+}
+
+impl SwappedBlock {
+    /// Serialize `filled` rows of every panel out of a block slab.
+    pub fn capture(
+        layout: &KvLayout,
+        block_size: usize,
+        filled: usize,
+        slab: &[f32],
+    ) -> SwappedBlock {
+        let dh = layout.head_dim;
+        let mut data = Vec::with_capacity(layout.floats_per_token() * filled);
+        for l in 0..layout.n_layers {
+            let base = layout.k_layer_offset(l, block_size);
+            for r in 0..layout.k_heads[l] {
+                let src = base + r * block_size * dh;
+                data.extend_from_slice(&slab[src..src + filled * dh]);
+            }
+        }
+        for l in 0..layout.n_layers {
+            let base = layout.v_layer_offset(l, block_size);
+            for h in 0..layout.n_heads {
+                let src = base + h * block_size * dh;
+                data.extend_from_slice(&slab[src..src + filled * dh]);
+            }
+        }
+        SwappedBlock { filled, data }
+    }
+
+    /// Scatter the compact rows back into a (freshly allocated) slab.
+    pub fn restore_into(&self, layout: &KvLayout, block_size: usize, slab: &mut [f32]) {
+        let dh = layout.head_dim;
+        let mut cur = 0usize;
+        for l in 0..layout.n_layers {
+            let base = layout.k_layer_offset(l, block_size);
+            for r in 0..layout.k_heads[l] {
+                let dst = base + r * block_size * dh;
+                slab[dst..dst + self.filled * dh]
+                    .copy_from_slice(&self.data[cur..cur + self.filled * dh]);
+                cur += self.filled * dh;
+            }
+        }
+        for l in 0..layout.n_layers {
+            let base = layout.v_layer_offset(l, block_size);
+            for h in 0..layout.n_heads {
+                let dst = base + h * block_size * dh;
+                slab[dst..dst + self.filled * dh]
+                    .copy_from_slice(&self.data[cur..cur + self.filled * dh]);
+                cur += self.filled * dh;
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Everything needed to rebuild one preempted sequence's K,V rows.
+#[derive(Debug)]
+pub struct SwappedSeq {
+    pub layout: KvLayout,
+    pub block_size: usize,
+    /// covered positions at swap-out time (== the table's `len`)
+    pub len: usize,
+    /// per logical block: `Some` = serialized here, `None` = pinned in
+    /// the hot tier at swap-out (another live table was reading it)
+    pub blocks: Vec<Option<SwappedBlock>>,
+    /// accounting size of the serialized payload
+    pub bytes: usize,
+}
+
+/// Monotonic swap-tier counters (surfaced as `swap_*` gauges).
+#[derive(Debug, Default, Clone)]
+pub struct SwapStats {
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub out_blocks: u64,
+    pub in_blocks: u64,
+    /// blocks exempted from serialization because another live table
+    /// still read them (prefix-pinned)
+    pub pinned_blocks: u64,
+    /// swap-outs denied because the tier was full (caller falls back to
+    /// recompute-on-resume)
+    pub denied_full: u64,
+    pub out_bytes: u64,
+    pub in_bytes: u64,
+    /// entries dropped without a swap-in (errored resumes)
+    pub discarded: u64,
+}
+
+/// Point-in-time view for gauges.
+#[derive(Debug, Clone)]
+pub struct SwapSnapshot {
+    pub capacity_bytes: usize,
+    pub used_bytes: usize,
+    pub entries: usize,
+    pub blocks: usize,
+    pub stats: SwapStats,
+}
+
+/// Fixed-budget host spill tier: swapped sequences keyed by handle.
+#[derive(Debug)]
+pub struct SwapPool {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    next: SwapHandle,
+    entries: BTreeMap<SwapHandle, SwappedSeq>,
+    pub stats: SwapStats,
+}
+
+impl SwapPool {
+    pub fn new(capacity_bytes: usize) -> SwapPool {
+        SwapPool {
+            capacity_bytes,
+            used_bytes: 0,
+            next: 0,
+            entries: BTreeMap::new(),
+            stats: SwapStats::default(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity_bytes - self.used_bytes
+    }
+
+    pub fn fits(&self, bytes: usize) -> bool {
+        bytes <= self.free_bytes()
+    }
+
+    /// Store a swapped sequence; the caller must have checked
+    /// [`Self::fits`] (a non-fitting insert is an error, not an evict —
+    /// the swap tier never drops state it has accepted).
+    pub fn insert(&mut self, entry: SwappedSeq) -> Result<SwapHandle> {
+        if !self.fits(entry.bytes) {
+            bail!(
+                "swap tier full: need {} B, used {}/{} B",
+                entry.bytes,
+                self.used_bytes,
+                self.capacity_bytes
+            );
+        }
+        let h = self.next;
+        self.next += 1;
+        self.used_bytes += entry.bytes;
+        self.stats.swap_outs += 1;
+        self.stats.out_bytes += entry.bytes as u64;
+        self.stats.out_blocks += entry.blocks.iter().flatten().count() as u64;
+        self.stats.pinned_blocks += entry.blocks.iter().filter(|b| b.is_none()).count() as u64;
+        self.entries.insert(h, entry);
+        Ok(h)
+    }
+
+    /// Redeem a handle: the entry leaves the tier (swap-in).
+    pub fn take(&mut self, handle: SwapHandle) -> Result<SwappedSeq> {
+        let e = self
+            .entries
+            .remove(&handle)
+            .ok_or_else(|| anyhow!("unknown swap handle {handle}"))?;
+        self.used_bytes -= e.bytes;
+        self.stats.swap_ins += 1;
+        self.stats.in_bytes += e.bytes as u64;
+        self.stats.in_blocks += e.blocks.iter().flatten().count() as u64;
+        Ok(e)
+    }
+
+    /// Drop an entry without restoring it (errored resume path).
+    pub fn discard(&mut self, handle: SwapHandle) {
+        if let Some(e) = self.entries.remove(&handle) {
+            self.used_bytes -= e.bytes;
+            self.stats.discarded += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> SwapSnapshot {
+        SwapSnapshot {
+            capacity_bytes: self.capacity_bytes,
+            used_bytes: self.used_bytes,
+            entries: self.entries.len(),
+            blocks: self.entries.values().map(|e| e.blocks.iter().flatten().count()).sum(),
+            stats: self.stats.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { n_layers: 2, n_heads: 4, head_dim: 2, k_heads: vec![2, 3] }
+    }
+
+    #[test]
+    fn block_capture_restore_roundtrip_exact() {
+        let lay = layout();
+        let b = 4;
+        let n = lay.block_floats(b);
+        // distinct value per slot so any index slip is caught
+        let slab: Vec<f32> = (0..n).map(|x| x as f32).collect();
+        for filled in 1..=b {
+            let sb = SwappedBlock::capture(&lay, b, filled, &slab);
+            assert_eq!(sb.data.len(), lay.floats_per_token() * filled);
+            let mut out = vec![0.0f32; n];
+            sb.restore_into(&lay, b, &mut out);
+            // every captured row restored bit-exactly; untouched slots zero
+            let dh = lay.head_dim;
+            for l in 0..lay.n_layers {
+                for r in 0..lay.k_heads[l] {
+                    let base = lay.k_layer_offset(l, b) + r * b * dh;
+                    for t in 0..b {
+                        for d in 0..dh {
+                            let idx = base + t * dh + d;
+                            let want = if t < filled { slab[idx] } else { 0.0 };
+                            assert_eq!(out[idx].to_bits(), want.to_bits(), "k l{l} r{r} t{t}");
+                        }
+                    }
+                }
+                for h in 0..lay.n_heads {
+                    let base = lay.v_layer_offset(l, b) + h * b * dh;
+                    for t in 0..b {
+                        for d in 0..dh {
+                            let idx = base + t * dh + d;
+                            let want = if t < filled { slab[idx] } else { 0.0 };
+                            assert_eq!(out[idx].to_bits(), want.to_bits(), "v l{l} h{h} t{t}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_accounting_and_capacity() {
+        let lay = layout();
+        let mut p = SwapPool::new(1000);
+        let sb = SwappedBlock::capture(&lay, 4, 2, &vec![1.0; lay.block_floats(4)]);
+        let bytes = sb.bytes();
+        let entry = SwappedSeq {
+            layout: lay.clone(),
+            block_size: 4,
+            len: 2,
+            blocks: vec![Some(sb.clone()), None],
+            bytes,
+        };
+        assert!(p.fits(bytes));
+        let h = p.insert(entry).unwrap();
+        assert_eq!(p.used_bytes(), bytes);
+        assert_eq!(p.stats.pinned_blocks, 1);
+        assert_eq!(p.stats.out_blocks, 1);
+        let snap = p.snapshot();
+        assert_eq!(snap.entries, 1);
+        assert_eq!(snap.blocks, 1);
+
+        // a too-big entry is denied, never evicted-for
+        let big = SwappedSeq {
+            layout: lay.clone(),
+            block_size: 4,
+            len: 8,
+            blocks: vec![],
+            bytes: 2000,
+        };
+        assert!(p.insert(big).is_err());
+
+        let back = p.take(h).unwrap();
+        assert_eq!(back.bytes, bytes);
+        assert_eq!(p.used_bytes(), 0);
+        assert!(p.take(h).is_err(), "handles are single-use");
+    }
+
+    #[test]
+    fn discard_frees_without_swap_in() {
+        let lay = layout();
+        let mut p = SwapPool::new(1000);
+        let h = p
+            .insert(SwappedSeq { layout: lay, block_size: 4, len: 1, blocks: vec![], bytes: 100 })
+            .unwrap();
+        p.discard(h);
+        assert_eq!(p.used_bytes(), 0);
+        assert_eq!(p.stats.discarded, 1);
+        assert_eq!(p.stats.swap_ins, 0);
+    }
+}

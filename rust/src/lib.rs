@@ -23,9 +23,12 @@
 //!   [`kv::paged`] subsystem serves K,V from a refcounted block pool
 //!   with token-hash prefix sharing, copy-on-write divergence and LRU
 //!   eviction — the coordinator's default admission unit.
-//! * [`coordinator`] is the serving layer: request queue, continuous
-//!   batcher, prefill/decode scheduler; [`server`] exposes it over a TCP
-//!   line-JSON protocol.
+//! * [`scheduler`] owns serving policy: the FCFS pending queue, the
+//!   continuous-batching live set, and the preemption engine
+//!   (preempt-and-requeue under overload with KV swap-out to a host
+//!   spill tier or recompute-on-resume); [`coordinator`] is the thin
+//!   cross-thread tick loop around it, and [`server`] exposes it over a
+//!   TCP line-JSON protocol.
 //! * [`util`] contains the substrates the offline build needs (JSON,
 //!   PRNG, CLI args, stats, a property-testing harness) — the crates.io
 //!   mirror in this environment only vendors `xla` + `anyhow`.
@@ -41,6 +44,7 @@ pub mod kv;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod scheduler;
 pub mod server;
 pub mod tensor;
 pub mod util;

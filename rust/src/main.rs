@@ -13,6 +13,9 @@
 //!   chai serve --kv-block-size 16 --kv-capacity-mb 512   # paged KV knobs
 //!   chai serve --no-paged                                # legacy contiguous KV
 //!   chai serve --no-batched-decode                       # per-session bucket decode (no fused block-native ticks)
+//!   chai serve --preempt --swap-blocks 64 --starve-ticks 4
+//!                                                        # overload scheduling: preempt-and-requeue the LRU live
+//!                                                        # session (KV swap-out to a host tier / recompute on resume)
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -55,6 +58,15 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         batched_decode: !args.bool("no-batched-decode"),
         kv_block_size: args.usize("kv-block-size", 16)?,
         kv_capacity_bytes: args.usize("kv-capacity-mb", 512)? * 1024 * 1024,
+        // overload scheduling: --preempt enables preempt-and-requeue of
+        // the LRU live session once the queue head has starved past
+        // --starve-ticks; its K,V blocks swap out to a --swap-blocks
+        // sized host tier or recompute on resume (cost-model chosen,
+        // sessions under --recompute-max-tokens always recompute)
+        preempt: args.bool("preempt"),
+        starve_ticks: args.usize("starve-ticks", 4)? as u64,
+        swap_blocks: args.usize("swap-blocks", 64)?,
+        recompute_max_tokens: args.usize("recompute-max-tokens", 16)?,
     })
 }
 

@@ -82,6 +82,23 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Focused view: counters and gauges whose names start with any of
+    /// `prefixes`, flattened into one object. The server's `sched`
+    /// command is built from this (queue depths, preemption/swap
+    /// counters) without shipping the whole metrics dump.
+    pub fn subset_json(&self, prefixes: &[&str]) -> Json {
+        let g = self.inner.lock().unwrap();
+        let keep = |k: &str| prefixes.iter().any(|p| k.starts_with(p));
+        let mut fields: BTreeMap<String, Json> = BTreeMap::new();
+        for (k, v) in g.counters.iter().filter(|(k, _)| keep(k)) {
+            fields.insert(k.clone(), Json::Num(*v as f64));
+        }
+        for (k, v) in g.gauges.iter().filter(|(k, _)| keep(k)) {
+            fields.insert(k.clone(), Json::Num(*v));
+        }
+        Json::Obj(fields)
+    }
+
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let counters = Json::Obj(
@@ -158,6 +175,22 @@ mod tests {
             j.get("gauges").unwrap().get("kv_used_bytes").unwrap().usize().unwrap(),
             456
         );
+    }
+
+    #[test]
+    fn subset_filters_counters_and_gauges_by_prefix() {
+        let m = Metrics::new();
+        m.inc("sched_preempt_swap");
+        m.inc("tokens");
+        m.set_gauge("sched_pending", 3.0);
+        m.set_gauge("swap_used_bytes", 64.0);
+        m.set_gauge("kv_used_bytes", 9.0);
+        let j = m.subset_json(&["sched_", "swap_"]);
+        assert_eq!(j.get("sched_preempt_swap").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("sched_pending").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("swap_used_bytes").unwrap().usize().unwrap(), 64);
+        assert!(j.opt("tokens").is_none());
+        assert!(j.opt("kv_used_bytes").is_none());
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! Scheduling policy: knobs + the swap-vs-recompute cost model, pure
+//! and unit-tested in isolation from the engine.
+
+use crate::config::ServingConfig;
+
+/// What to do with a preemption victim's K,V state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// stage sole-owner blocks into the host spill tier; restore
+    /// bit-exactly on resume
+    Swap,
+    /// drop the blocks; resume replays the cached positions through the
+    /// suffix `prefill_paged` path
+    Recompute,
+}
+
+/// Scheduler knobs, derived from [`ServingConfig`].
+#[derive(Debug, Clone)]
+pub struct SchedPolicy {
+    /// max live sessions per tick (continuous-batching width)
+    pub max_batch: usize,
+    /// enable preempt-and-requeue of live sessions under overload
+    pub preempt: bool,
+    /// consecutive ticks the queue head may be deferred before the
+    /// scheduler preempts a live session for it
+    pub starve_ticks: u64,
+    /// sessions with at most this many cached positions always
+    /// recompute (replaying a short prefix is cheaper than a swap
+    /// round-trip)
+    pub recompute_max_tokens: usize,
+    /// legacy contiguous-pool budget (`--no-paged` path)
+    pub kv_capacity_bytes: usize,
+}
+
+impl SchedPolicy {
+    pub fn from_config(cfg: &ServingConfig) -> SchedPolicy {
+        SchedPolicy {
+            max_batch: cfg.max_batch,
+            preempt: cfg.preempt,
+            starve_ticks: cfg.starve_ticks,
+            recompute_max_tokens: cfg.recompute_max_tokens,
+            kv_capacity_bytes: cfg.kv_capacity_bytes,
+        }
+    }
+}
+
+/// Per-session cost model (tokens-to-replay vs bytes-to-swap): swap
+/// when the session is expensive to replay AND the spill tier can hold
+/// its sole-owner bytes; recompute when the replay is cheap, the tier
+/// is full, or nothing would actually be staged (a fully prefix-shared
+/// session swaps zero bytes — its blocks stay pinned by its
+/// batchmates, so recompute-resume re-adopts them for free).
+pub fn preempt_action(
+    replay_tokens: usize,
+    swap_bytes: usize,
+    swap_free_bytes: usize,
+    recompute_max_tokens: usize,
+) -> PreemptAction {
+    if swap_bytes == 0 || swap_bytes > swap_free_bytes {
+        return PreemptAction::Recompute;
+    }
+    if replay_tokens <= recompute_max_tokens {
+        return PreemptAction::Recompute;
+    }
+    PreemptAction::Swap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_tier_forces_recompute() {
+        assert_eq!(preempt_action(1000, 4096, 1024, 0), PreemptAction::Recompute);
+        assert_eq!(preempt_action(1000, 4096, 4096, 0), PreemptAction::Swap);
+    }
+
+    #[test]
+    fn cheap_replay_prefers_recompute() {
+        assert_eq!(preempt_action(8, 4096, 1 << 20, 16), PreemptAction::Recompute);
+        assert_eq!(preempt_action(17, 4096, 1 << 20, 16), PreemptAction::Swap);
+    }
+
+    #[test]
+    fn fully_shared_sessions_never_swap() {
+        // zero sole-owner bytes: nothing to stage, recompute re-adopts
+        assert_eq!(preempt_action(1000, 0, 1 << 20, 0), PreemptAction::Recompute);
+    }
+}

@@ -1,7 +1,8 @@
 //! TCP line-JSON serving protocol (one JSON object per line).
 //!
 //! Request:  `{"prompt": "...", "max_new": 32, "variant": "chai"}`
-//!           `{"cmd": "stats"}` `{"cmd": "kv"}` `{"cmd": "info"}` `{"cmd": "ping"}`
+//!           `{"cmd": "stats"}` `{"cmd": "kv"}` `{"cmd": "sched"}`
+//!           `{"cmd": "info"}` `{"cmd": "ping"}`
 //! Response: `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}`
 //!           or `{"error": "..."}`.
 //!
@@ -112,6 +113,9 @@ fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
                 .opt("gauges")
                 .cloned()
                 .unwrap_or_else(|| Json::obj(vec![]))),
+            // scheduler view: queue depths, live/preempted counts,
+            // preemption + swap-tier counters and occupancy
+            "sched" => Ok(coord.metrics.subset_json(&["sched_", "swap_", "kv_defer"])),
             // static serving facts: compute backend, model name
             "info" => Ok(coord
                 .metrics
@@ -179,6 +183,10 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.call(&Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+
+    pub fn sched(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::Str("sched".into()))]))
     }
 
     pub fn info(&mut self) -> Result<Json> {
