@@ -46,6 +46,21 @@ echo "== serving overload smoke: preempt-and-requeue under an over-capacity burs
 # section into bench_results/BENCH_serving.json
 cargo bench --bench bench_serving -- --backend ref --overload
 
+echo "== router smoke: 4 replicas vs 1, placement transparency, prefix-affinity hit rate (ref backend) =="
+# router contract: 4-replica aggregate tok/s strictly above 1-replica on
+# the burst workload (skipped on single-core runners), token streams
+# bit-identical across replica counts and all routing policies, and the
+# prefix-affinity policy beating round-robin's prefix-cache hit rate on
+# a shared-system-prompt workload; merges a "router" section into
+# bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --replicas
+
+echo "== streaming + cancellation example client (ref backend) =="
+# examples/stream_cancel.rs: spins a 2-replica router + TCP server,
+# streams a generation frame-by-frame, then cancels one mid-decode and
+# checks the terminal cancelled line + clean pool
+cargo run --release --example stream_cancel
+
 echo "== golden fixtures match the python oracles (when jax is available) =="
 if python3 -c "import jax" >/dev/null 2>&1; then
   (cd ../python && python3 -m pytest -q tests/test_golden_export.py)

@@ -1,0 +1,103 @@
+//! Streaming + cancellation client against the multi-replica router.
+//!
+//! Spins up a 2-replica router front-end (pure-rust reference backend —
+//! no artifacts needed) behind the TCP line-JSON server, then:
+//!
+//!   1. streams a generation, printing each `{"id","i","tok","text"}`
+//!      frame as it arrives, followed by the terminal summary line;
+//!   2. starts a second streaming generation and cancels it mid-decode
+//!      from ANOTHER connection (`{"cmd":"cancel","id":N}` — request
+//!      ids are global across the front-end), showing the terminal
+//!      `{"cancelled":true}` line and the clean pool afterwards.
+//!
+//! Run:  cargo run --release --example stream_cancel
+//!       cargo run --release --example stream_cancel -- --replicas 4 --route prefix
+
+use anyhow::Result;
+use chai::config::ServingConfig;
+use chai::engine::Variant;
+use chai::router::{Frontend, Router};
+use chai::scheduler::SubmitOpts;
+use chai::server::{Client, Server};
+use chai::util::args::Args;
+use chai::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cfg = ServingConfig {
+        artifacts_dir: std::path::PathBuf::from(args.str("artifacts", "artifacts")),
+        backend: args.str("backend", "ref"),
+        replicas: args.usize("replicas", 2)?,
+        route: args.str("route", "rr"),
+        ..Default::default()
+    };
+    let replicas = cfg.replicas;
+    let handle = Router::start(cfg)?;
+    let router = handle.router.clone();
+    let server = Server::start(router.clone(), "127.0.0.1:0")?;
+    let addr = server.addr.to_string();
+    println!("router serving on {addr} ({replicas} replicas)");
+
+    // --- 1: stream a generation frame by frame ------------------------
+    let mut client = Client::connect(&addr)?;
+    println!("\n--- streaming generation ---");
+    let done = client.generate_stream("the color of tom is", 12, "chai", |f| {
+        println!(
+            "frame {}: tok {:>3}  {:?}",
+            f.get("i").unwrap().usize().unwrap(),
+            f.get("tok").unwrap().usize().unwrap(),
+            f.get("text").unwrap().str().unwrap(),
+        );
+    })?;
+    println!("terminal: {}", done.to_string());
+    anyhow::ensure!(done.opt("error").is_none(), "streaming failed: {}", done.to_string());
+
+    // --- 2: cancel a streaming generation mid-decode ------------------
+    println!("\n--- cancellation ---");
+    // hogs keep both replicas' decode batches busy so the victim is
+    // still mid-decode when the cancel lands
+    let hogs: Vec<_> = (0..6)
+        .map(|i| {
+            router
+                .submit_opts(SubmitOpts::new(&format!("hog {i}"), 56, Variant::Chai))
+                .1
+        })
+        .collect();
+    let mut victim = Client::connect(&addr)?;
+    let mut side = Client::connect(&addr)?;
+    victim.send(&Json::obj(vec![
+        ("prompt", Json::Str("tom".into())),
+        ("max_new", Json::Num(60.0)),
+        ("stream", Json::Bool(true)),
+    ]))?;
+    let first = victim.read_json()?;
+    let id = first.get("id")?.usize()? as u64;
+    println!("victim request id {id}, first frame received — cancelling from another connection");
+    let ack = side.cancel(id)?;
+    println!("cancel ack: {}", ack.to_string());
+    let terminal = loop {
+        let j = victim.read_json()?;
+        if j.opt("tok").is_none() {
+            break j;
+        }
+    };
+    println!("victim terminal: {}", terminal.to_string());
+    anyhow::ensure!(
+        terminal.opt("cancelled").is_some(),
+        "expected a terminal cancelled line, got {}",
+        terminal.to_string()
+    );
+    for rx in hogs {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "hog failed: {:?}", r.error);
+    }
+
+    // pool state after the abort: no live tables anywhere
+    let kv = side.kv()?;
+    println!("\npool after cancel: {}", kv.to_string());
+
+    server.stop();
+    handle.shutdown();
+    println!("\nok: streamed, cancelled, and shut down cleanly");
+    Ok(())
+}

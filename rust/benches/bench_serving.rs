@@ -18,6 +18,15 @@
 //!           # that both preemption flavors fired (>=1 swap-out with a
 //!           # roomy spill tier, >=1 recompute with the tier disabled);
 //!           # merges an "overload" section into BENCH_serving.json
+//!       cargo bench --bench bench_serving -- --backend ref --replicas
+//!           # CI router smoke: 4 data-parallel replicas (shared
+//!           # weights) vs 1 on a burst — aggregate tok/s strictly
+//!           # higher (multi-core runners), token streams bit-identical
+//!           # across replica counts AND across all routing policies,
+//!           # and prefix-affinity placement beating round-robin's
+//!           # prefix-cache hit rate on a shared-system-prompt
+//!           # workload; merges a "router" section into
+//!           # BENCH_serving.json
 
 mod common;
 
@@ -25,6 +34,8 @@ use chai::bench::{poisson_trace, Table};
 use chai::config::ServingConfig;
 use chai::coordinator::Coordinator;
 use chai::engine::Variant;
+use chai::router::{Frontend, Router};
+use chai::scheduler::SubmitOpts;
 use chai::util::json::Json;
 use chai::util::now_ms;
 use chai::util::stats::{mean, percentile};
@@ -290,6 +301,193 @@ fn overload(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::
     Ok(())
 }
 
+/// One synchronized burst through a router front-end: submit every
+/// prompt, wait for all, return (per-request texts, aggregate tok/s).
+fn router_burst(
+    router: &Router,
+    prompts: &[String],
+    max_new: usize,
+) -> anyhow::Result<(Vec<String>, f64)> {
+    let t0 = now_ms();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| router.submit_opts(SubmitOpts::new(p, max_new, Variant::Chai)).1)
+        .collect();
+    let mut texts = Vec::new();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+        anyhow::ensure!(r.error.is_none(), "burst request failed: {:?}", r.error);
+        tokens += r.n_generated;
+        texts.push(r.text);
+    }
+    let span_s = ((now_ms() - t0) / 1e3).max(1e-9);
+    Ok((texts, tokens as f64 / span_s))
+}
+
+/// Router smoke (`--replicas`): the multi-replica front-end's CI gate.
+///
+/// 1. **Scale**: a burst served by 4 data-parallel replicas (shared
+///    weights, round-robin placement) must deliver strictly more
+///    aggregate tok/s than the same burst on 1 replica (best-of-3;
+///    skipped on single-core runners where data parallelism cannot
+///    win), with bit-identical per-request token streams.
+/// 2. **Placement transparency**: rr, least-loaded and prefix-affinity
+///    must produce bit-identical token streams on a shared-system-
+///    prompt workload.
+/// 3. **Affinity**: on that workload, prefix-affinity must beat
+///    round-robin's aggregate prefix-cache hit rate — placement is
+///    what turns N private block pools back into one effective cache.
+///
+/// Merges a "router" section into `bench_results/BENCH_serving.json`.
+fn replicas(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --replicas needs the ref backend (shared toy weights); skipping");
+        return Ok(());
+    }
+    let n = args.usize("requests", 12)?.max(8);
+    let max_new = args.usize("max-new", 16)?;
+    let fleet = args.usize("replica-count", 4)?.max(2);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+
+    let mut table = Table::new(
+        "Router: data-parallel replicas under a burst (shared weights)",
+        &["config", "ok", "tok/s", "prefix hit rate"],
+    );
+    let mut json_rows = Vec::new();
+
+    // --- 1 vs N replicas on one burst workload (rr placement) ----------
+    let burst: Vec<String> = (0..n)
+        .map(|i| format!("burst case {} of the tom story", i % 4)) // shared prefixes
+        .collect();
+    let mut tok_s_by_fleet = Vec::new();
+    let mut texts_by_fleet = Vec::new();
+    for replicas in [1usize, fleet] {
+        let cfg = ServingConfig {
+            replicas,
+            route: "rr".into(),
+            max_batch: 8,
+            ..base_cfg.clone()
+        };
+        let handle = Router::start(cfg)?;
+        let router = handle.router.clone();
+        // best-of-3: a single wall-clock sample on a shared runner can
+        // be skewed by one OS scheduler hiccup
+        let mut best = 0.0f64;
+        let mut texts = Vec::new();
+        for rep in 0..3 {
+            let (t, tok_s) = router_burst(&router, &burst, max_new)?;
+            best = best.max(tok_s);
+            if rep == 0 {
+                texts = t;
+            } else {
+                assert_eq!(texts, t, "greedy decoding must repeat exactly");
+            }
+        }
+        let hit = router.prefix_hit_rate();
+        table.row(vec![
+            format!("{replicas} replica(s), rr"),
+            format!("{n}/{n}"),
+            format!("{best:.1}"),
+            format!("{hit:.3}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(format!("burst-{replicas}-replicas"))),
+            ("replicas", Json::Num(replicas as f64)),
+            ("requests", Json::Num(n as f64)),
+            ("throughput_tok_s", Json::Num(best)),
+            ("prefix_hit_rate", Json::Num(hit)),
+        ]));
+        tok_s_by_fleet.push(best);
+        texts_by_fleet.push(texts);
+        handle.shutdown();
+    }
+    assert_eq!(
+        texts_by_fleet[0], texts_by_fleet[1],
+        "replica count must not change token streams"
+    );
+    if cores > 1 {
+        assert!(
+            tok_s_by_fleet[1] > tok_s_by_fleet[0],
+            "{fleet}-replica aggregate {:.1} tok/s must be strictly above 1-replica {:.1} tok/s",
+            tok_s_by_fleet[1],
+            tok_s_by_fleet[0]
+        );
+    } else {
+        eprintln!("[bench] single-core runner: skipping the {fleet}-vs-1 throughput gate");
+    }
+
+    // --- placement policies on a shared-system-prompt workload ---------
+    // three distinct system prompts, each spanning >1 full KV block
+    // (block_size 16 tokens), with a unique per-request tail
+    let sys = [
+        "you are a helpful assistant for tom; answer briefly",
+        "you are a meticulous reviewer of tom's code today",
+        "you are a storyteller recounting the tale of tom ok",
+    ];
+    let affinity: Vec<String> = (0..2 * n)
+        .map(|i| format!("{} q{i}", sys[i % sys.len()]))
+        .collect();
+    let mut texts_by_policy = Vec::new();
+    let mut hit_by_policy = Vec::new();
+    for route in ["rr", "least-loaded", "prefix"] {
+        let cfg = ServingConfig {
+            replicas: fleet,
+            route: route.into(),
+            max_batch: 8,
+            ..base_cfg.clone()
+        };
+        let handle = Router::start(cfg)?;
+        let router = handle.router.clone();
+        let (texts, tok_s) = router_burst(&router, &affinity, 8)?;
+        let hit = router.prefix_hit_rate();
+        table.row(vec![
+            format!("{fleet} replicas, {route}"),
+            format!("{}/{}", texts.len(), affinity.len()),
+            format!("{tok_s:.1}"),
+            format!("{hit:.3}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(format!("affinity-{route}"))),
+            ("replicas", Json::Num(fleet as f64)),
+            ("requests", Json::Num(affinity.len() as f64)),
+            ("throughput_tok_s", Json::Num(tok_s)),
+            ("prefix_hit_rate", Json::Num(hit)),
+        ]));
+        texts_by_policy.push(texts);
+        hit_by_policy.push(hit);
+        handle.shutdown();
+    }
+    table.print();
+    assert_eq!(
+        texts_by_policy[0], texts_by_policy[1],
+        "rr and least-loaded must produce identical token streams"
+    );
+    assert_eq!(
+        texts_by_policy[0], texts_by_policy[2],
+        "rr and prefix-affinity must produce identical token streams"
+    );
+    // the affinity gate: routing same-prefix traffic to the replica
+    // that already holds those blocks must raise the aggregate hit rate
+    assert!(
+        hit_by_policy[2] > hit_by_policy[0],
+        "prefix-affinity hit rate {:.3} must exceed round-robin {:.3} \
+         on a shared-system-prompt workload",
+        hit_by_policy[2],
+        hit_by_policy[0]
+    );
+
+    // merge next to the --smoke/--overload rows rather than clobbering
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert("router".to_string(), Json::Arr(json_rows));
+    common::write_results("BENCH_serving", Json::Obj(fields));
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
@@ -298,6 +496,9 @@ fn main() -> anyhow::Result<()> {
     }
     if args.bool("overload") {
         return overload(&args, &base_cfg);
+    }
+    if args.bool("replicas") {
+        return replicas(&args, &base_cfg);
     }
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;

@@ -230,6 +230,15 @@ pub struct ServingConfig {
     /// recompute on resume rather than swapping
     /// (`--recompute-max-tokens`)
     pub recompute_max_tokens: usize,
+    /// data-parallel engine replicas behind the router front-end
+    /// (`--replicas`); each has its own engine thread, scheduler and
+    /// paged pool, sharing one copy of the model weights on the ref
+    /// backend
+    pub replicas: usize,
+    /// router placement policy (`--route`): "rr" round-robin,
+    /// "least-loaded" by pending+live+preempted population, or
+    /// "prefix" affinity by the prompt's KV hash-chain fingerprint
+    pub route: String,
 }
 
 impl Default for ServingConfig {
@@ -250,6 +259,8 @@ impl Default for ServingConfig {
             starve_ticks: 4,
             swap_blocks: 64,
             recompute_max_tokens: 16,
+            replicas: 1,
+            route: "rr".into(),
         }
     }
 }

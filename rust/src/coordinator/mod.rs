@@ -1,20 +1,31 @@
-//! Serving coordinator: the cross-thread front door of the engine loop.
+//! Serving coordinator: the cross-thread front door of ONE engine
+//! replica.
 //!
 //! The `xla` PJRT client is `Rc`-based (not `Send`), so all PJRT state
 //! lives on ONE engine thread (the vLLM-style engine-loop design). Front
-//! ends (TCP server, bench drivers) submit [`Request`]s into a shared
-//! queue and receive a [`Response`] over a per-request channel.
+//! ends (TCP server, the multi-replica [`crate::router`], bench drivers)
+//! submit [`Request`]s into a shared queue and receive a [`Response`]
+//! over a per-request channel; streaming requests additionally receive
+//! one [`StreamFrame`] per decoded token, and [`Coordinator::cancel`]
+//! aborts a request wherever it lives (pending, live mid-decode, or
+//! preempted) — the abort is threaded through the scheduler into the
+//! engine, which frees the session's sole-owner K,V blocks.
 //!
 //! All scheduling policy lives in [`crate::scheduler`]: the engine loop
-//! here is a thin tick pump that drains the cross-thread inbox into the
-//! [`Scheduler`]'s pending queue and calls [`Scheduler::run_tick`] —
-//! token-level continuous batching with FCFS admission, fused paged
-//! decode ticks ([`crate::engine::Engine::decode_tick`]), and (with
-//! `--preempt`) preempt-and-requeue of live sessions under overload,
-//! swapping K,V state to the host spill tier or recomputing it on
-//! resume.
+//! here is a thin tick pump that drains the cross-thread inbox (new
+//! requests + cancellations) into the [`Scheduler`] and calls
+//! [`Scheduler::run_tick`] — token-level continuous batching with FCFS
+//! admission, fused paged decode ticks
+//! ([`crate::engine::Engine::decode_tick`]), and (with `--preempt`)
+//! preempt-and-requeue of live sessions under overload.
+//!
+//! Shutdown never strands a client: once [`CoordinatorHandle::shutdown`]
+//! (or drop) is requested, every request still pending, live, or
+//! preempted receives a terminal `{"error": "shutting down"}` response,
+//! and later submissions are refused with the same error instead of
+//! queueing into a loop that will never serve them.
 
-pub use crate::scheduler::{Request, Response};
+pub use crate::scheduler::{Request, Response, StreamFrame, SubmitOpts};
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver};
@@ -29,6 +40,12 @@ use crate::metrics::Metrics;
 use crate::scheduler::{SchedPolicy, Scheduler};
 use crate::util::now_ms;
 
+/// Deferred engine construction, run ON the engine thread (backends are
+/// not `Send`; the closure only has to be). The router passes factories
+/// that close over `Arc`'d shared weights so N replicas load the model
+/// once.
+pub type EngineFactory = Box<dyn FnOnce() -> Result<Engine> + Send + 'static>;
+
 #[derive(Default)]
 struct Shared {
     queue: Mutex<QueueState>,
@@ -38,6 +55,8 @@ struct Shared {
 #[derive(Default)]
 struct QueueState {
     waiting: VecDeque<Request>,
+    /// request ids whose abort was requested but not yet applied
+    cancels: Vec<u64>,
     shutdown: bool,
 }
 
@@ -57,6 +76,13 @@ pub struct CoordinatorHandle {
 impl Coordinator {
     /// Spawn the engine thread and return the submission handle.
     pub fn start(cfg: ServingConfig) -> Result<CoordinatorHandle> {
+        let load_cfg = cfg.clone();
+        Self::start_with(cfg, Box::new(move || Engine::load(load_cfg)))
+    }
+
+    /// Spawn the engine thread around a caller-supplied engine factory
+    /// (executed on the engine thread, since backends are not `Send`).
+    pub fn start_with(cfg: ServingConfig, make_engine: EngineFactory) -> Result<CoordinatorHandle> {
         let shared = Arc::new(Shared::default());
         let metrics = Arc::new(Metrics::new());
         let coord = Coordinator {
@@ -69,11 +95,12 @@ impl Coordinator {
         let engine_thread = std::thread::Builder::new()
             .name("chai-engine".into())
             .spawn(move || {
-                match Engine::load(cfg.clone()) {
+                match make_engine() {
                     Ok(engine) => engine_loop(&engine, &cfg, &thread_shared, &thread_metrics),
                     Err(e) => {
                         eprintln!("[engine] failed to load: {e:#}");
-                        // drain queue with errors
+                        // refuse current and future requests (submit
+                        // checks the shutdown flag)
                         let mut g = thread_shared.queue.lock().unwrap();
                         g.shutdown = true;
                         while let Some(r) = g.waiting.pop_front() {
@@ -87,29 +114,72 @@ impl Coordinator {
 
     /// Submit a request; returns the channel the response arrives on.
     pub fn submit(&self, prompt: &str, max_new: usize, variant: Variant) -> Receiver<Response> {
-        let (tx, rx) = channel();
+        self.submit_opts(SubmitOpts::new(prompt, max_new, variant)).1
+    }
+
+    /// Submit with full options (streaming channel); assigns the id.
+    pub fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
         let id = {
             let mut g = self.next_id.lock().unwrap();
             *g += 1;
             *g
         };
+        let rx = self.submit_with_id(id, opts);
+        (id, rx)
+    }
+
+    /// Submit under a caller-assigned id (the router owns the id space
+    /// so ids stay unique across replicas). After shutdown the request
+    /// is refused with a terminal error instead of queueing forever.
+    pub fn submit_with_id(&self, id: u64, opts: SubmitOpts) -> Receiver<Response> {
+        let (tx, rx) = channel();
         let req = Request {
             id,
-            prompt: prompt.to_string(),
-            max_new,
-            variant,
+            prompt: opts.prompt,
+            max_new: opts.max_new,
+            variant: opts.variant,
             submitted_ms: now_ms(),
             resp_tx: tx,
+            stream: opts.stream,
         };
-        self.metrics.inc("submitted");
         let mut g = self.shared.queue.lock().unwrap();
+        if g.shutdown {
+            let _ = req.resp_tx.send(Response::error(id, "shutting down".into()));
+            return rx;
+        }
+        self.metrics.inc("submitted");
         g.waiting.push_back(req);
         self.shared.cv.notify_one();
         rx
     }
 
+    /// Request an abort of request `id` (async: the engine applies it
+    /// on its next tick). Safe for unknown/finished ids — the router
+    /// broadcasts cancels to every replica, so no per-replica counter
+    /// is bumped here (`sched_cancelled` counts the abort that
+    /// actually landed; `router_cancel_requests` counts client
+    /// intents).
+    pub fn cancel(&self, id: u64) {
+        let mut g = self.shared.queue.lock().unwrap();
+        if g.shutdown {
+            return; // everything gets failed at shutdown anyway
+        }
+        g.cancels.push(id);
+        self.shared.cv.notify_one();
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().waiting.len()
+    }
+
+    /// Scheduling load of this replica for the router's least-loaded
+    /// policy: inbox depth plus the scheduler's pending + live +
+    /// preempted populations (the `{"cmd":"sched"}` gauges).
+    pub fn load_cost(&self) -> f64 {
+        self.queue_depth() as f64
+            + self.metrics.gauge("sched_pending")
+            + self.metrics.gauge("sched_live")
+            + self.metrics.gauge("sched_preempted")
     }
 
     fn request_shutdown(&self) {
@@ -137,35 +207,47 @@ impl Drop for CoordinatorHandle {
     }
 }
 
-/// The thin engine loop: drain the inbox, tick the scheduler, repeat.
-/// Blocks on the condvar when there is nothing pending, live, or
-/// preempted; returns on shutdown once all accepted work has drained.
+/// The thin engine loop: drain the inbox (requests + cancels), tick the
+/// scheduler, repeat. Blocks on the condvar when there is nothing
+/// pending, live, or preempted. On shutdown every request still held
+/// anywhere in the pipeline is answered with a terminal error — a
+/// client may never be left blocked on a channel whose sender quietly
+/// died.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
     // surface which compute backend this engine serves with (the server's
     // `stats` command and benches read these back)
     metrics.set_info("backend", engine.backend_name());
     metrics.set_info("model", &engine.manifest().model.name);
     let mut sched = Scheduler::new(SchedPolicy::from_config(cfg));
+    let mut cancels: Vec<u64> = Vec::new();
     loop {
         {
             let mut g = shared.queue.lock().unwrap();
-            if sched.is_idle() && g.waiting.is_empty() {
+            if sched.is_idle() && g.waiting.is_empty() && g.cancels.is_empty() {
                 if g.shutdown {
                     return;
                 }
                 // idle: block until work arrives
                 g = shared
                     .cv
-                    .wait_while(g, |q| q.waiting.is_empty() && !q.shutdown)
+                    .wait_while(g, |q| {
+                        q.waiting.is_empty() && q.cancels.is_empty() && !q.shutdown
+                    })
                     .unwrap();
-                if g.shutdown && g.waiting.is_empty() {
-                    return;
-                }
             }
             while let Some(r) = g.waiting.pop_front() {
                 sched.submit(r);
             }
+            cancels.append(&mut g.cancels);
+            if g.shutdown {
+                break;
+            }
+        }
+        for id in cancels.drain(..) {
+            sched.cancel(id, engine, metrics);
         }
         sched.run_tick(engine, metrics);
     }
+    // shutdown: answer everything still in flight, then exit
+    sched.fail_all(engine, metrics, "shutting down");
 }

@@ -158,6 +158,13 @@ pub struct Engine {
 impl Engine {
     pub fn load(cfg: ServingConfig) -> Result<Engine> {
         let rt = backend_for(&cfg)?;
+        Engine::with_backend(rt, cfg)
+    }
+
+    /// Build an engine around an already-constructed backend (the
+    /// router uses this to hand each replica a backend over `Arc`'d
+    /// shared weights instead of loading N copies of the model).
+    pub fn with_backend(rt: Box<dyn Backend>, cfg: ServingConfig) -> Result<Engine> {
         let (static_membership, static_reps) = rt.manifest().static_clusters()?;
         let seed = cfg.seed;
         let paged = cfg.paged_kv.then(|| {

@@ -44,7 +44,7 @@ use crate::kv::CacheKind;
 use crate::tensor::Tensor;
 
 pub use pool::{BlockId, BlockPool, ReleaseOutcome};
-pub use prefix::{chain_hash, chain_seed, partial_hash, PrefixIndex};
+pub use prefix::{chain_hash, chain_seed, partial_hash, prompt_fingerprint, PrefixIndex};
 pub use swap::{SwapHandle, SwapPool, SwapSnapshot, SwappedBlock, SwappedSeq};
 pub use table::BlockTable;
 

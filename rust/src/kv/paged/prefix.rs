@@ -61,6 +61,37 @@ pub fn partial_hash(prev: u64, tokens: &[i32]) -> u64 {
     chain_hash(prev ^ PARTIAL_SALT, tokens) ^ fold_u64(FNV_OFFSET, tokens.len() as u64)
 }
 
+/// Routing digest of a prompt's shareable prefix: the chain hash of its
+/// leading full blocks — at most `max_blocks` of them — or the salted
+/// partial hash when the prompt is shorter than one block. The keys are
+/// the SAME token-hash chain the prefix index files blocks under, so a
+/// router that places requests by this digest lands same-prefix traffic
+/// on the replica that already holds those blocks (the prefix-affinity
+/// policy). The cap is what makes affinity robust to tails: hashing
+/// every full block would give "system prompt + question A" and
+/// "system prompt + question B" different digests whenever the
+/// questions spill into further full blocks, scattering exactly the
+/// traffic that should stay together — capping at the leading blocks
+/// groups by the shared head instead. Pure function of its arguments —
+/// no pool access.
+pub fn prompt_fingerprint(
+    namespace: &str,
+    tokens: &[i32],
+    block_size: usize,
+    max_blocks: usize,
+) -> u64 {
+    let b = block_size.max(1);
+    let mut h = chain_seed(namespace);
+    let n_full = tokens.len() / b;
+    if n_full == 0 {
+        return partial_hash(h, tokens);
+    }
+    for i in 0..n_full.min(max_blocks.max(1)) {
+        h = chain_hash(h, &tokens[i * b..(i + 1) * b]);
+    }
+    h
+}
+
 /// hash → block id map. The manager keeps it consistent with block
 /// lifetimes: entries are added when a block's content is final for its
 /// key, and removed on eviction or before in-place mutation.
@@ -146,6 +177,65 @@ mod tests {
         assert_ne!(partial_hash(s, &t), chain_hash(s, &t));
         // different lengths of partial differ
         assert_ne!(partial_hash(s, &t[..3]), partial_hash(s, &t));
+    }
+
+    #[test]
+    fn fingerprint_groups_by_shareable_prefix() {
+        let (b, cap) = (4, 8);
+        // same leading full blocks + different tails → same fingerprint
+        let sys: Vec<i32> = (0..9).collect(); // 2 full blocks + tail of 1
+        let mut a = sys.clone();
+        a.extend([100, 101]);
+        let mut c = sys.clone();
+        c.extend([200]);
+        assert_eq!(
+            prompt_fingerprint("chai", &a, b, cap),
+            prompt_fingerprint("chai", &c, b, cap)
+        );
+        // diverging inside the first block → different fingerprints
+        let mut d = a.clone();
+        d[1] = 99;
+        assert_ne!(
+            prompt_fingerprint("chai", &a, b, cap),
+            prompt_fingerprint("chai", &d, b, cap)
+        );
+        // namespaces do not alias
+        assert_ne!(
+            prompt_fingerprint("chai", &a, b, cap),
+            prompt_fingerprint("mha", &a, b, cap)
+        );
+        // sub-block prompts hash by their exact content (salted partial)
+        assert_ne!(
+            prompt_fingerprint("mha", &[1, 2], b, cap),
+            prompt_fingerprint("mha", &[1, 2, 3], b, cap)
+        );
+        assert_eq!(
+            prompt_fingerprint("mha", &[1, 2], b, cap),
+            prompt_fingerprint("mha", &[1, 2], b, cap)
+        );
+    }
+
+    #[test]
+    fn fingerprint_cap_groups_long_divergent_tails() {
+        let b = 4;
+        // shared 2-block system prompt, then long tails that spill into
+        // further FULL blocks — uncapped digests diverge, capped ones
+        // keep the traffic together
+        let sys: Vec<i32> = (0..8).collect();
+        let mut a = sys.clone();
+        a.extend((500..510).collect::<Vec<i32>>()); // blocks 2,3 differ
+        let mut c = sys.clone();
+        c.extend((900..910).collect::<Vec<i32>>());
+        assert_ne!(
+            prompt_fingerprint("mha", &a, b, usize::MAX),
+            prompt_fingerprint("mha", &c, b, usize::MAX),
+            "uncapped: divergent full tails split the digest"
+        );
+        assert_eq!(
+            prompt_fingerprint("mha", &a, b, 2),
+            prompt_fingerprint("mha", &c, b, 2),
+            "capped at the shared head: same replica"
+        );
     }
 
     #[test]

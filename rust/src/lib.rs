@@ -27,8 +27,14 @@
 //!   continuous-batching live set, and the preemption engine
 //!   (preempt-and-requeue under overload with KV swap-out to a host
 //!   spill tier or recompute-on-resume); [`coordinator`] is the thin
-//!   cross-thread tick loop around it, and [`server`] exposes it over a
-//!   TCP line-JSON protocol.
+//!   cross-thread tick loop around it.
+//! * [`router`] is the multi-replica front-end: N data-parallel engine
+//!   replicas behind a pluggable placement policy (round-robin,
+//!   least-loaded, prefix-affinity by KV hash-chain fingerprint), one
+//!   shared copy of the model weights, a global request-id space, and
+//!   broadcast cancellation; [`server`] exposes either a single
+//!   coordinator or the router over a TCP line-JSON protocol with
+//!   per-token streaming and request cancellation.
 //! * [`util`] contains the substrates the offline build needs (JSON,
 //!   PRNG, CLI args, stats, a property-testing harness) — the crates.io
 //!   mirror in this environment only vendors `xla` + `anyhow`.
@@ -43,6 +49,7 @@ pub mod eval;
 pub mod kv;
 pub mod metrics;
 pub mod model;
+pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

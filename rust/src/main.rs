@@ -16,6 +16,10 @@
 //!   chai serve --preempt --swap-blocks 64 --starve-ticks 4
 //!                                                        # overload scheduling: preempt-and-requeue the LRU live
 //!                                                        # session (KV swap-out to a host tier / recompute on resume)
+//!   chai serve --replicas 4 --route prefix               # multi-replica router front-end: 4 data-parallel engines
+//!                                                        # (shared weights), prefix-affinity placement; --route
+//!                                                        # rr|least-loaded|prefix. Streaming: {"stream": true};
+//!                                                        # abort: {"cmd": "cancel", "id": N}
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -28,8 +32,8 @@ use anyhow::{bail, Result};
 use chai::bench::Table;
 use chai::clustering::correlation;
 use chai::config::ServingConfig;
-use chai::coordinator::Coordinator;
 use chai::engine::{Engine, Variant};
+use chai::router::Router;
 use chai::eval;
 use chai::kv;
 use chai::runtime::{Backend, In};
@@ -67,6 +71,12 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         starve_ticks: args.usize("starve-ticks", 4)? as u64,
         swap_blocks: args.usize("swap-blocks", 64)?,
         recompute_max_tokens: args.usize("recompute-max-tokens", 16)?,
+        // multi-replica router front-end: --replicas N engine replicas
+        // (own scheduler + paged pool each, one shared copy of the
+        // model weights on the ref backend) placed by --route
+        // rr|least-loaded|prefix
+        replicas: args.usize("replicas", 1)?,
+        route: args.str("route", "rr"),
     })
 }
 
@@ -92,10 +102,17 @@ fn main() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serving_config(args)?;
     let bind = args.str("bind", "127.0.0.1:7777");
-    let handle = Coordinator::start(cfg)?;
-    let server = Server::start(handle.coordinator.clone(), &bind)?;
-    println!("chai serving on {}", server.addr);
+    let (replicas, route) = (cfg.replicas.max(1), cfg.route.clone());
+    // the router front-end serves any replica count; a single replica
+    // still gets streaming + cancellation with no placement overhead
+    let handle = Router::start(cfg)?;
+    let server = Server::start(handle.router.clone(), &bind)?;
+    println!(
+        "chai serving on {} ({replicas} replica(s), route policy {route})",
+        server.addr
+    );
     println!("protocol: one JSON per line, e.g. {{\"prompt\": \"the color of tom is\", \"variant\": \"chai\"}}");
+    println!("          streaming: add \"stream\": true; abort with {{\"cmd\": \"cancel\", \"id\": N}}");
     // serve until killed
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

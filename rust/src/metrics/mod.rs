@@ -136,9 +136,37 @@ impl Metrics {
     }
 }
 
+/// Key-wise sum of the numeric fields of several JSON objects — the
+/// router's per-replica rollup primitive (counters and gauges are both
+/// flat `name → number` objects). Non-numeric fields are skipped; a key
+/// missing from some replicas contributes only where present.
+pub fn sum_json_objects<'a>(objs: impl IntoIterator<Item = &'a Json>) -> Json {
+    let mut out: BTreeMap<String, f64> = BTreeMap::new();
+    for o in objs {
+        if let Json::Obj(m) = o {
+            for (k, v) in m {
+                if let Json::Num(n) = v {
+                    *out.entry(k.clone()).or_insert(0.0) += n;
+                }
+            }
+        }
+    }
+    Json::Obj(out.into_iter().map(|(k, v)| (k, Json::Num(v))).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sum_json_objects_is_keywise() {
+        let a = Json::obj(vec![("x", Json::Num(1.0)), ("y", Json::Num(2.0))]);
+        let b = Json::obj(vec![("x", Json::Num(10.0)), ("z", Json::Str("skip".into()))]);
+        let s = sum_json_objects([&a, &b]);
+        assert_eq!(s.get("x").unwrap().num().unwrap(), 11.0);
+        assert_eq!(s.get("y").unwrap().num().unwrap(), 2.0);
+        assert!(s.opt("z").is_none(), "non-numeric fields are dropped");
+    }
 
     #[test]
     fn counters_accumulate() {

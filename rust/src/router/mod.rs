@@ -1,0 +1,498 @@
+//! Multi-replica router front-end: the subsystem that turns one engine
+//! into a service.
+//!
+//! The [`Router`] owns N data-parallel engine **replicas** — each a full
+//! [`Coordinator`] with its own engine thread, [`crate::scheduler`], and
+//! paged K,V pool — and places every incoming request by a pluggable
+//! [`RoutePolicy`]:
+//!
+//! * **round-robin** (`--route rr`) — classic rotation, the baseline.
+//! * **least-loaded** (`--route least-loaded`) — picks the replica with
+//!   the smallest `pending + live + preempted` population (the same
+//!   numbers the server's `{"cmd":"sched"}` view reports), so a replica
+//!   stuck behind a long generation stops receiving new work.
+//! * **prefix-affinity** (`--route prefix`) — hashes the prompt's
+//!   shareable prefix ([`prompt_fingerprint`]: the token-hash chain of
+//!   its leading full blocks, the exact keys the paged pool's prefix
+//!   index uses) and pins the request to `digest % N`. Repeated system
+//!   prompts therefore land on the replica that already holds those
+//!   blocks, multiplying the paged cache's prefix-sharing wins — the
+//!   same observation RelayAttention exploits for shared system
+//!   prompts, applied at the replica-placement level.
+//!
+//! Replicas share model weights: on the reference backend the router
+//! loads/synthesizes the model once ([`SharedRefModel`]) and each
+//! replica's engine thread wraps the `Arc`'d weights in its own
+//! backend, so N replicas cost one model copy plus N K,V pools. The
+//! router owns the request-id space (ids stay unique across replicas);
+//! cancellation broadcasts to every replica (exactly one holds the id;
+//! the rest no-op), so the front-end needs no id→replica bookkeeping
+//! that could leak.
+//!
+//! [`Frontend`] is the seam the TCP server drives — both a bare
+//! [`Coordinator`] (single replica, zero router overhead) and the
+//! [`Router`] implement it, so every protocol feature (streaming,
+//! cancellation, stats/kv/sched/info views) works identically at both
+//! scales. Router views roll up counters and gauges across replicas
+//! (prefix hit rate recomputed from the summed block counts), attach a
+//! `router` section (`router_*` counters, per-replica routed counts,
+//! live load costs), and keep the per-replica breakdown.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ServingConfig;
+use crate::coordinator::{Coordinator, CoordinatorHandle};
+use crate::engine::Engine;
+use crate::kv::paged::prompt_fingerprint;
+use crate::metrics::{sum_json_objects, Metrics};
+use crate::model::tokenizer;
+use crate::runtime::reference::{RefBackend, SharedRefModel};
+use crate::scheduler::{Response, SubmitOpts};
+use crate::util::json::Json;
+
+/// The serving surface the TCP server (and benches) drive — implemented
+/// by both a single [`Coordinator`] and the multi-replica [`Router`].
+pub trait Frontend: Clone + Send + 'static {
+    /// Submit a request (assigning its id); returns `(id, response rx)`.
+    fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>);
+    /// Request an abort of `id` (async; unknown ids are a no-op).
+    fn cancel(&self, id: u64);
+    /// `{"cmd":"stats"}` — full counters/latency/gauges/info view.
+    fn stats_json(&self) -> Json;
+    /// `{"cmd":"kv"}` — paged-pool occupancy + sharing gauges.
+    fn kv_json(&self) -> Json;
+    /// `{"cmd":"sched"}` — queue depths + preemption/swap counters.
+    fn sched_json(&self) -> Json;
+    /// `{"cmd":"info"}` — static serving facts (backend, model, ...).
+    fn info_json(&self) -> Json;
+}
+
+impl Frontend for Coordinator {
+    fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
+        Coordinator::submit_opts(self, opts)
+    }
+
+    fn cancel(&self, id: u64) {
+        Coordinator::cancel(self, id)
+    }
+
+    fn stats_json(&self) -> Json {
+        self.metrics.to_json()
+    }
+
+    fn kv_json(&self) -> Json {
+        self.metrics
+            .to_json()
+            .opt("gauges")
+            .cloned()
+            .unwrap_or_else(|| Json::obj(vec![]))
+    }
+
+    fn sched_json(&self) -> Json {
+        self.metrics.subset_json(&["sched_", "swap_", "kv_defer"])
+    }
+
+    fn info_json(&self) -> Json {
+        self.metrics
+            .to_json()
+            .opt("info")
+            .cloned()
+            .unwrap_or_else(|| Json::obj(vec![]))
+    }
+}
+
+/// Base of the router-assigned request-id space. Disjoint from the
+/// ids a bare [`Coordinator::submit`] hands out (which count up from
+/// 1), so a broadcast cancel for a router id can never collide with a
+/// request submitted directly to a replica coordinator on the side.
+pub const ROUTER_ID_BASE: u64 = 1 << 32;
+
+/// Leading full blocks the prefix-affinity digest covers (with the
+/// default 16-token blocks: the first 64 tokens). Capping keeps
+/// affinity robust to tails — "system prompt + question A/B" must map
+/// to the SAME replica even when the questions spill into further full
+/// blocks; an uncapped chain digest would scatter exactly that
+/// traffic. Bounded hashing also keeps routing O(1)-ish per request.
+pub const AFFINITY_PREFIX_BLOCKS: usize = 4;
+
+/// Replica-placement policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => RoutePolicy::RoundRobin,
+            "least-loaded" | "ll" => RoutePolicy::LeastLoaded,
+            "prefix" | "prefix-affinity" => RoutePolicy::PrefixAffinity,
+            other => bail!("unknown route policy {other:?} (rr|least-loaded|prefix)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::PrefixAffinity => "prefix",
+        }
+    }
+}
+
+/// Multi-replica front-end; cheap to clone (all state is `Arc`'d).
+#[derive(Clone)]
+pub struct Router {
+    replicas: Arc<Vec<Coordinator>>,
+    policy: RoutePolicy,
+    /// router-owned global id space (unique across replicas)
+    next_id: Arc<AtomicU64>,
+    rr: Arc<AtomicUsize>,
+    /// router-level metrics only (`router_*`); replica metrics live on
+    /// each coordinator and are rolled up on read
+    pub metrics: Arc<Metrics>,
+    /// block size the prefix-affinity fingerprint is computed at (must
+    /// match the replicas' paged pools so the digest keys align)
+    kv_block_size: usize,
+}
+
+/// Owns the replica engine threads; dropping (or `shutdown`) stops all.
+pub struct RouterHandle {
+    pub router: Router,
+    replica_handles: Vec<CoordinatorHandle>,
+}
+
+impl RouterHandle {
+    pub fn shutdown(self) {
+        for h in self.replica_handles {
+            h.shutdown();
+        }
+    }
+}
+
+impl Router {
+    /// Spawn `cfg.replicas` engine replicas (weights shared on the
+    /// reference backend) routed by `cfg.route`.
+    pub fn start(cfg: ServingConfig) -> Result<RouterHandle> {
+        let n = cfg.replicas.max(1);
+        let policy = RoutePolicy::parse(&cfg.route)?;
+        // one physical copy of the model for all replicas (ref backend;
+        // the XLA backend is Rc-bound to its engine thread and loads
+        // per replica)
+        let shared = match crate::runtime::resolve_backend(&cfg)? {
+            "ref" => Some(SharedRefModel::load_or_toy(&cfg.artifacts_dir, cfg.seed)?),
+            _ => None,
+        };
+        let mut replicas = Vec::with_capacity(n);
+        let mut replica_handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let handle = match shared.clone() {
+                Some(model) => {
+                    let engine_cfg = cfg.clone();
+                    Coordinator::start_with(
+                        cfg.clone(),
+                        Box::new(move || {
+                            Engine::with_backend(
+                                Box::new(RefBackend::from_shared(&model)),
+                                engine_cfg,
+                            )
+                        }),
+                    )?
+                }
+                None => Coordinator::start(cfg.clone())?,
+            };
+            replicas.push(handle.coordinator.clone());
+            replica_handles.push(handle);
+        }
+        let metrics = Arc::new(Metrics::new());
+        metrics.set_info("router_policy", policy.name());
+        metrics.set_gauge("router_replicas", n as f64);
+        let router = Router {
+            replicas: Arc::new(replicas),
+            policy,
+            next_id: Arc::new(AtomicU64::new(ROUTER_ID_BASE)),
+            rr: Arc::new(AtomicUsize::new(0)),
+            metrics,
+            kv_block_size: cfg.kv_block_size.max(1),
+        };
+        Ok(RouterHandle { replica_handles, router })
+    }
+
+    pub fn replicas(&self) -> &[Coordinator] {
+        &self.replicas
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the replica for a request (see [`RoutePolicy`]).
+    fn route(&self, opts: &SubmitOpts) -> usize {
+        let n = self.replicas.len();
+        match self.policy {
+            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::LeastLoaded => {
+                // stable argmin: earliest replica wins ties
+                let mut best = 0usize;
+                let mut best_cost = f64::INFINITY;
+                for (i, c) in self.replicas.iter().enumerate() {
+                    let cost = c.load_cost();
+                    if cost < best_cost {
+                        best = i;
+                        best_cost = cost;
+                    }
+                }
+                best
+            }
+            RoutePolicy::PrefixAffinity => {
+                // one extra O(prompt) byte-level encode on the server
+                // thread (the engine re-tokenizes on its own thread) —
+                // routing must not wait on the engine
+                let tokens = tokenizer::encode(&opts.prompt, true, false);
+                let fp = prompt_fingerprint(
+                    &opts.variant.name(),
+                    &tokens,
+                    self.kv_block_size,
+                    AFFINITY_PREFIX_BLOCKS,
+                );
+                (fp % n as u64) as usize
+            }
+        }
+    }
+
+    /// Sum of a counter across all replicas.
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.replicas.iter().map(|c| c.metrics.counter(name)).sum()
+    }
+
+    /// Sum of a gauge across all replicas.
+    pub fn gauge_sum(&self, name: &str) -> f64 {
+        self.replicas.iter().map(|c| c.metrics.gauge(name)).sum()
+    }
+
+    /// Aggregate prefix-sharing hit rate, recomputed from the summed
+    /// hit/miss block counts (a mean of per-replica rates would weight
+    /// idle replicas equally with busy ones).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hits = self.gauge_sum("paged_prefix_hit_blocks");
+        let total = hits + self.gauge_sum("paged_prefix_miss_blocks");
+        if total <= 0.0 {
+            0.0
+        } else {
+            hits / total
+        }
+    }
+
+    /// The `router` section of the rolled-up views: policy, replica
+    /// count, per-replica routed counts and live load costs, plus every
+    /// router-level counter.
+    fn router_json(&self) -> Json {
+        let routed: Vec<Json> = (0..self.replicas.len())
+            .map(|i| {
+                Json::Num(self.metrics.counter(&format!("router_routed_replica_{i}")) as f64)
+            })
+            .collect();
+        let load: Vec<Json> =
+            self.replicas.iter().map(|c| Json::Num(c.load_cost())).collect();
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.name().into())),
+            ("replicas", Json::Num(self.replicas.len() as f64)),
+            (
+                "routed_total",
+                Json::Num(self.metrics.counter("router_routed_total") as f64),
+            ),
+            (
+                "cancel_requests",
+                Json::Num(self.metrics.counter("router_cancel_requests") as f64),
+            ),
+            ("routed", Json::Arr(routed)),
+            ("load", Json::Arr(load)),
+        ])
+    }
+
+    /// Roll gauges up across replicas and patch the aggregate hit rate
+    /// (sums of rates are meaningless).
+    fn rolled_gauges(&self, per: &[Json]) -> Json {
+        let mut gauges = sum_json_objects(per.iter().filter_map(|j| j.opt("gauges")));
+        if let Json::Obj(m) = &mut gauges {
+            if m.contains_key("paged_prefix_hit_rate") {
+                m.insert(
+                    "paged_prefix_hit_rate".into(),
+                    Json::Num(self.prefix_hit_rate()),
+                );
+            }
+            m.insert("router_replicas".into(), Json::Num(self.replicas.len() as f64));
+        }
+        gauges
+    }
+}
+
+impl Frontend for Router {
+    fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let r = self.route(&opts);
+        self.metrics.inc("router_routed_total");
+        self.metrics.inc(&format!("router_routed_replica_{r}"));
+        (id, self.replicas[r].submit_with_id(id, opts))
+    }
+
+    /// Broadcast: exactly one replica holds the id, the rest no-op.
+    fn cancel(&self, id: u64) {
+        self.metrics.inc("router_cancel_requests");
+        for c in self.replicas.iter() {
+            c.cancel(id);
+        }
+    }
+
+    fn stats_json(&self) -> Json {
+        let per: Vec<Json> = self.replicas.iter().map(|c| c.metrics.to_json()).collect();
+        let counters = sum_json_objects(per.iter().filter_map(|j| j.opt("counters")));
+        let gauges = self.rolled_gauges(&per);
+        let info = Frontend::info_json(self);
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("info", info),
+            ("router", self.router_json()),
+            ("replicas", Json::Arr(per)),
+        ])
+    }
+
+    fn kv_json(&self) -> Json {
+        let per: Vec<Json> =
+            self.replicas.iter().map(|c| Frontend::kv_json(c)).collect();
+        self.rolled_gauges(
+            &per.iter()
+                .map(|g| Json::obj(vec![("gauges", g.clone())]))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    fn sched_json(&self) -> Json {
+        let per: Vec<Json> =
+            self.replicas.iter().map(|c| Frontend::sched_json(c)).collect();
+        let mut merged = sum_json_objects(per.iter());
+        if let Json::Obj(m) = &mut merged {
+            m.insert("router".into(), self.router_json());
+            m.insert("per_replica".into(), Json::Arr(per));
+        }
+        merged
+    }
+
+    fn info_json(&self) -> Json {
+        // replica 0 speaks for the fleet (same backend/model everywhere)
+        let mut info = self
+            .replicas
+            .first()
+            .map(|c| Frontend::info_json(c))
+            .unwrap_or_else(|| Json::obj(vec![]));
+        if let Json::Obj(m) = &mut info {
+            m.insert("replicas".into(), Json::Num(self.replicas.len() as f64));
+            m.insert("route".into(), Json::Str(self.policy.name().into()));
+        }
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Variant;
+    use std::path::PathBuf;
+
+    fn toy_cfg(replicas: usize, route: &str) -> ServingConfig {
+        ServingConfig {
+            artifacts_dir: PathBuf::from("definitely-no-artifacts-here"),
+            backend: "ref".into(),
+            replicas,
+            route: route.into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn route_policy_parse_roundtrip() {
+        for (s, p) in [
+            ("rr", RoutePolicy::RoundRobin),
+            ("round-robin", RoutePolicy::RoundRobin),
+            ("least-loaded", RoutePolicy::LeastLoaded),
+            ("ll", RoutePolicy::LeastLoaded),
+            ("prefix", RoutePolicy::PrefixAffinity),
+            ("prefix-affinity", RoutePolicy::PrefixAffinity),
+        ] {
+            assert_eq!(RoutePolicy::parse(s).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_ids_are_unique() {
+        let handle = Router::start(toy_cfg(3, "rr")).unwrap();
+        let router = handle.router.clone();
+        let mut ids = Vec::new();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let (id, rx) = router.submit_opts(SubmitOpts::new(
+                    &format!("the color of tom number {i}"),
+                    3,
+                    Variant::Chai,
+                ));
+                ids.push(id);
+                rx
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "router ids must be unique across replicas");
+        // rotation touched every replica
+        for i in 0..3 {
+            assert_eq!(
+                router.metrics.counter(&format!("router_routed_replica_{i}")),
+                2,
+                "round-robin must spread 6 requests 2/2/2"
+            );
+        }
+        let stats = router.stats_json();
+        assert_eq!(
+            stats.get("counters").unwrap().get("completed").unwrap().usize().unwrap(),
+            6,
+            "rollup must sum completions across replicas"
+        );
+        assert_eq!(
+            stats.get("router").unwrap().get("replicas").unwrap().usize().unwrap(),
+            3
+        );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn prefix_affinity_pins_equal_prefixes_to_one_replica() {
+        let handle = Router::start(toy_cfg(4, "prefix")).unwrap();
+        let router = handle.router.clone();
+        // same long system prompt, different tails → same replica
+        let sys = "you are a helpful assistant; answer briefly and cite tom";
+        let picks: Vec<usize> = (0..4)
+            .map(|i| {
+                router.route(&SubmitOpts::new(
+                    &format!("{sys} || question {i}"),
+                    2,
+                    Variant::Chai,
+                ))
+            })
+            .collect();
+        assert!(
+            picks.iter().all(|p| *p == picks[0]),
+            "shared system prompt must pin to one replica: {picks:?}"
+        );
+        handle.shutdown();
+    }
+}

@@ -34,9 +34,36 @@ use crate::util::rng::Rng;
 
 pub struct RefBackend {
     manifest: Manifest,
-    weights: BTreeMap<String, Tensor>,
+    /// `Arc`'d so data-parallel replicas (the router's N engines) share
+    /// one physical copy of the model weights
+    weights: std::sync::Arc<BTreeMap<String, Tensor>>,
     /// cumulative executions per artifact (parity with `Runtime`)
     pub exec_counts: RefCell<BTreeMap<String, u64>>,
+}
+
+/// The shareable half of a [`RefBackend`]: manifest + `Arc`'d weights.
+/// The router builds one of these and hands a clone to every replica's
+/// engine thread, so N data-parallel replicas hold ONE copy of the
+/// model while keeping their own execution state
+/// ([`RefBackend::from_shared`] — the backend itself is not `Sync`, the
+/// weights are).
+#[derive(Clone)]
+pub struct SharedRefModel {
+    manifest: Manifest,
+    weights: std::sync::Arc<BTreeMap<String, Tensor>>,
+}
+
+impl SharedRefModel {
+    /// Validate once (real weights when the dir holds a manifest, the
+    /// seeded toy model otherwise) and wrap for sharing.
+    pub fn load_or_toy(dir: &Path, seed: u64) -> Result<SharedRefModel> {
+        let be = RefBackend::load_or_toy(dir, seed)?;
+        Ok(SharedRefModel { manifest: be.manifest, weights: be.weights })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -108,7 +135,21 @@ impl RefBackend {
         if manifest.k_list.iter().any(|&k| k == 0 || k > m.n_heads) {
             bail!("manifest k_list {:?} invalid for H={}", manifest.k_list, m.n_heads);
         }
-        Ok(RefBackend { manifest, weights, exec_counts: RefCell::new(BTreeMap::new()) })
+        Ok(RefBackend {
+            manifest,
+            weights: std::sync::Arc::new(weights),
+            exec_counts: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// A replica backend over an already-validated shared model: clones
+    /// the manifest, shares the weight storage, gets fresh exec counts.
+    pub fn from_shared(model: &SharedRefModel) -> RefBackend {
+        RefBackend {
+            manifest: model.manifest.clone(),
+            weights: model.weights.clone(),
+            exec_counts: RefCell::new(BTreeMap::new()),
+        }
     }
 
     fn w(&self, name: &str) -> Result<&[f32]> {

@@ -41,8 +41,21 @@
 //! suffix-prefill path, so token streams under forced preemption equal
 //! uncontended runs (property-tested in `tests/preempt.rs`).
 //!
+//! Two request-lifecycle extensions ride on the same populations:
+//! **streaming** (a request carrying a frame channel receives one
+//! [`StreamFrame`] per sampled token, tracked by a per-session
+//! `streamed` counter so freeze/thaw never duplicates or drops a
+//! frame) and **cancellation** ([`Scheduler::cancel`] aborts a request
+//! wherever it lives — pending is dequeued, live is removed mid-decode
+//! with its sole-owner blocks released, preempted is discarded along
+//! with any staged swap bytes — and the client gets a terminal
+//! cancelled [`Response`]). [`Scheduler::fail_all`] is the shutdown
+//! counterpart: every held request is answered with a terminal error
+//! so no client ever blocks on a dropped channel.
+//!
 //! The coordinator is now a thin wrapper: it drains its cross-thread
-//! inbox into [`Scheduler::submit`] and calls [`Scheduler::run_tick`].
+//! inbox (submissions + cancels) into the scheduler and calls
+//! [`Scheduler::run_tick`].
 
 pub mod batcher;
 pub mod policy;
@@ -67,6 +80,41 @@ pub struct Request {
     pub variant: Variant,
     pub submitted_ms: f64,
     pub resp_tx: Sender<Response>,
+    /// per-token frame channel (`"stream": true` requests); `None`
+    /// means the client only wants the final summary
+    pub stream: Option<Sender<StreamFrame>>,
+}
+
+/// Front-end submission options (everything a [`Request`] carries
+/// besides the id and the response channel, which the coordinator or
+/// router assigns).
+#[derive(Debug)]
+pub struct SubmitOpts {
+    pub prompt: String,
+    pub max_new: usize,
+    pub variant: Variant,
+    pub stream: Option<Sender<StreamFrame>>,
+}
+
+impl SubmitOpts {
+    pub fn new(prompt: &str, max_new: usize, variant: Variant) -> SubmitOpts {
+        SubmitOpts { prompt: prompt.to_string(), max_new, variant, stream: None }
+    }
+}
+
+/// One streamed token: emitted by the scheduler the moment a session
+/// samples it (the first at admission, one more per decode tick), long
+/// before the final [`Response`]. Frames arrive strictly in `index`
+/// order; the channel closes once the terminal response has been sent
+/// and the request is dropped.
+#[derive(Debug, Clone)]
+pub struct StreamFrame {
+    pub id: u64,
+    /// 0-based generated-token index
+    pub index: usize,
+    pub token: i32,
+    /// decoded text of this token alone
+    pub text: String,
 }
 
 #[derive(Debug, Clone)]
@@ -79,6 +127,11 @@ pub struct Response {
     pub e2e_ms: f64,
     pub timing: Timing,
     pub error: Option<String>,
+    /// terminal cancelled marker: the request was aborted by
+    /// `{"cmd":"cancel"}` or a client disconnect, its sole-owner blocks
+    /// were reclaimed, and `n_generated` counts what was produced
+    /// before the abort
+    pub cancelled: bool,
 }
 
 impl Response {
@@ -92,6 +145,22 @@ impl Response {
             e2e_ms: 0.0,
             timing: Timing::default(),
             error: Some(msg),
+            cancelled: false,
+        }
+    }
+
+    /// Terminal frame for an aborted request.
+    pub fn aborted(id: u64, n_generated: usize) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            n_prompt: 0,
+            n_generated,
+            queue_ms: 0.0,
+            e2e_ms: 0.0,
+            timing: Timing::default(),
+            error: None,
+            cancelled: true,
         }
     }
 }
@@ -107,6 +176,32 @@ struct Live {
     /// a starvation victim in its own admission tick (it decodes once
     /// first, so every admission makes progress)
     admitted_tick: u64,
+    /// generated tokens already emitted as [`StreamFrame`]s — survives
+    /// preemption (a thawed session resumes at its pre-freeze count),
+    /// so every token streams exactly once
+    streamed: usize,
+}
+
+impl Live {
+    /// Stream every not-yet-emitted generated token, in order. Cheap
+    /// no-op for non-streaming requests and when nothing new exists.
+    fn emit_new_frames(&mut self) {
+        let n = self.session.generated();
+        let Some(tx) = &self.req.stream else {
+            self.streamed = n;
+            return;
+        };
+        while self.streamed < n {
+            let tok = self.session.tokens[self.session.prompt_len + self.streamed];
+            let _ = tx.send(StreamFrame {
+                id: self.req.id,
+                index: self.streamed,
+                token: tok,
+                text: crate::model::tokenizer::decode(&[tok]),
+            });
+            self.streamed += 1;
+        }
+    }
 }
 
 /// A preempted session awaiting resume.
@@ -114,6 +209,8 @@ struct Preempted {
     req: Request,
     frozen: FrozenSession,
     started_ms: f64,
+    /// stream frames emitted before the freeze (resume continues here)
+    streamed: usize,
 }
 
 /// Monotonic scheduler counters (mirrored into [`Metrics`]).
@@ -253,6 +350,7 @@ impl Scheduler {
                                 started_ms: p.started_ms,
                                 last_decode_tick: self.tick,
                                 admitted_tick: self.tick,
+                                streamed: p.streamed,
                             });
                         }
                         Err(e) => {
@@ -325,13 +423,17 @@ impl Scheduler {
                         Ok(session) => {
                             metrics.inc("admitted");
                             metrics.observe_ms("ttft", session.timing.ttft_ms);
-                            self.live.push(Live {
+                            let mut l = Live {
                                 req,
                                 session,
                                 started_ms: t0,
                                 last_decode_tick: self.tick,
                                 admitted_tick: self.tick,
-                            });
+                                streamed: 0,
+                            };
+                            // prefill sampled the first generated token
+                            l.emit_new_frames();
+                            self.live.push(l);
                         }
                         Err(e) => {
                             if !paged {
@@ -398,7 +500,82 @@ impl Scheduler {
             req: l.req,
             frozen,
             started_ms: l.started_ms,
+            streamed: l.streamed,
         });
+    }
+
+    // ------------------------------------------------------------------
+    // Cancellation / shutdown
+    // ------------------------------------------------------------------
+
+    /// Abort request `id` wherever it lives — pending (dequeue), live
+    /// (release its sole-owner blocks mid-decode; blocks shared with
+    /// other sessions stay pinned by their refcounts), or preempted
+    /// (discard the frozen state, draining any staged swap bytes). The
+    /// client receives a terminal cancelled [`Response`]; frames already
+    /// streamed stand. Unknown ids (finished, never submitted, or
+    /// routed to another replica) are a no-op.
+    pub fn cancel(&mut self, id: u64, engine: &Engine, metrics: &Metrics) -> bool {
+        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            if i == 0 {
+                self.head_starved_ticks = 0;
+            }
+            let req = self.pending.remove(i).expect("position came from iter");
+            metrics.inc("sched_cancelled");
+            let _ = req.resp_tx.send(Response::aborted(id, 0));
+            return true;
+        }
+        if let Some(i) = self.live.iter().position(|l| l.req.id == id) {
+            let mut l = self.live.swap_remove(i);
+            if engine.paged_enabled() {
+                engine.release_session(&mut l.session);
+            } else {
+                let _ = self.legacy_pool.release(l.req.id);
+            }
+            metrics.inc("sched_cancelled");
+            let _ = l.req.resp_tx.send(Response::aborted(id, l.session.generated()));
+            return true;
+        }
+        if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
+            if i == 0 {
+                self.resume_starved_ticks = 0;
+            }
+            let p = self.preempted.remove(i).expect("position came from iter");
+            let generated = p.frozen.tokens.len().saturating_sub(p.frozen.prompt_len);
+            engine.discard_frozen(p.frozen);
+            metrics.inc("sched_cancelled");
+            let _ = p.req.resp_tx.send(Response::aborted(id, generated));
+            return true;
+        }
+        false
+    }
+
+    /// Fail every request the scheduler still holds (pending, live,
+    /// preempted) with a terminal error response, returning all K,V
+    /// resources. The coordinator calls this at shutdown so no client
+    /// is ever left blocked on a dropped channel.
+    pub fn fail_all(&mut self, engine: &Engine, metrics: &Metrics, msg: &str) {
+        let paged = engine.paged_enabled();
+        for req in self.pending.drain(..) {
+            metrics.inc("errors");
+            let _ = req.resp_tx.send(Response::error(req.id, msg.into()));
+        }
+        for mut l in self.live.drain(..) {
+            if paged {
+                engine.release_session(&mut l.session);
+            } else {
+                let _ = self.legacy_pool.release(l.req.id);
+            }
+            metrics.inc("errors");
+            let _ = l.req.resp_tx.send(Response::error(l.req.id, msg.into()));
+        }
+        for p in self.preempted.drain(..) {
+            engine.discard_frozen(p.frozen);
+            metrics.inc("errors");
+            let _ = p.req.resp_tx.send(Response::error(p.req.id, msg.into()));
+        }
+        self.head_starved_ticks = 0;
+        self.resume_starved_ticks = 0;
     }
 
     // ------------------------------------------------------------------
@@ -430,6 +607,7 @@ impl Scheduler {
                 Ok(more) => {
                     metrics.inc("tokens");
                     self.live[i].last_decode_tick = self.tick;
+                    self.live[i].emit_new_frames();
                     if let Some(ms) = self.live[i].session.timing.decode_ms.last() {
                         metrics.observe_ms("decode_step", *ms);
                     }
@@ -497,6 +675,7 @@ impl Scheduler {
                 e2e_ms: e2e,
                 timing,
                 error: None,
+                cancelled: false,
             });
         }
     }
@@ -592,6 +771,7 @@ mod tests {
                 variant: Variant::Chai,
                 submitted_ms: now_ms(),
                 resp_tx: tx,
+                stream: None,
             },
             rx,
         )
@@ -699,6 +879,96 @@ mod tests {
         assert_eq!(lr.n_generated, 6, "the starved request must run to completion");
         assert_eq!(hr.n_generated, 24, "the preempted hog must also finish");
         assert_eq!(metrics.gauge("kv_live_tables"), 0.0, "no leaked tables");
+    }
+
+    /// Streaming emits exactly one frame per generated token, in
+    /// order, and the concatenated frame text equals the final text.
+    #[test]
+    fn streaming_frames_match_final_text() {
+        let engine = Engine::load(toy_cfg()).unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Scheduler::new(SchedPolicy::from_config(&toy_cfg()));
+        let (tx, frames_rx) = channel();
+        let (mut req, rx) = make_req(1, "the color of tom is", 6);
+        req.stream = Some(tx);
+        sched.submit(req);
+        drive(&mut sched, &engine, &metrics, 10_000);
+        let r = rx.try_recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let frames: Vec<StreamFrame> = frames_rx.try_iter().collect();
+        assert_eq!(frames.len(), r.n_generated, "one frame per generated token");
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.index, i, "frames arrive in order");
+            assert_eq!(f.id, 1);
+        }
+        let cat: String = frames.iter().map(|f| f.text.as_str()).collect();
+        assert_eq!(cat, r.text, "frame concat must equal the final text");
+    }
+
+    /// Cancelling a mid-decode streaming session frees its sole-owner
+    /// blocks (occupancy returns to the pre-request baseline) and the
+    /// client receives a terminal cancelled response; a pending request
+    /// cancels straight out of the queue.
+    #[test]
+    fn cancel_aborts_live_and_pending() {
+        let engine = Engine::load(toy_cfg()).unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Scheduler::new(SchedPolicy {
+            max_batch: 1, // the second request stays pending
+            ..SchedPolicy::from_config(&toy_cfg())
+        });
+        let baseline = engine.paged_snapshot().unwrap().live_blocks;
+        let (tx, frames_rx) = channel();
+        let (mut live_req, live_rx) = make_req(1, "the color of tom is quite a story", 24);
+        live_req.stream = Some(tx);
+        let (pend_req, pend_rx) = make_req(2, "tom keeps the hat", 4);
+        sched.submit(live_req);
+        sched.submit(pend_req);
+        for _ in 0..3 {
+            sched.run_tick(&engine, &metrics);
+        }
+        assert!(frames_rx.try_iter().count() >= 3, "session must be mid-decode");
+        assert!(sched.cancel(1, &engine, &metrics), "live session must cancel");
+        let r = live_rx.try_recv().unwrap();
+        assert!(r.cancelled && r.error.is_none(), "{r:?}");
+        assert!(r.n_generated >= 3);
+        assert_eq!(
+            engine.paged_snapshot().unwrap().live_blocks,
+            baseline,
+            "cancel must return occupancy to the pre-request baseline"
+        );
+        assert!(sched.cancel(2, &engine, &metrics), "pending request must cancel");
+        let r = pend_rx.try_recv().unwrap();
+        assert!(r.cancelled && r.n_generated == 0);
+        assert!(!sched.cancel(99, &engine, &metrics), "unknown id is a no-op");
+        assert!(sched.is_idle());
+        assert_eq!(metrics.counter("sched_cancelled"), 2);
+    }
+
+    /// `fail_all` answers every population with a terminal error and
+    /// releases all K,V state (the coordinator's shutdown contract).
+    #[test]
+    fn fail_all_answers_every_request() {
+        let engine = Engine::load(toy_cfg()).unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Scheduler::new(SchedPolicy {
+            max_batch: 1,
+            ..SchedPolicy::from_config(&toy_cfg())
+        });
+        let (live_req, live_rx) = make_req(1, "the color of tom is", 24);
+        let (pend_req, pend_rx) = make_req(2, "tom keeps the hat", 4);
+        sched.submit(live_req);
+        sched.submit(pend_req);
+        sched.run_tick(&engine, &metrics);
+        assert_eq!(sched.live_len(), 1);
+        assert_eq!(sched.pending_len(), 1);
+        sched.fail_all(&engine, &metrics, "shutting down");
+        for rx in [live_rx, pend_rx] {
+            let r = rx.try_recv().expect("every request must be answered");
+            assert_eq!(r.error.as_deref(), Some("shutting down"));
+        }
+        assert!(sched.is_idle());
+        assert_eq!(engine.paged_snapshot().unwrap().live_tables, 0, "no leaked tables");
     }
 
     /// Preemption is off by default: the same overload defers but never

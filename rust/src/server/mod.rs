@@ -1,151 +1,449 @@
 //! TCP line-JSON serving protocol (one JSON object per line).
 //!
-//! Request:  `{"prompt": "...", "max_new": 32, "variant": "chai"}`
-//!           `{"cmd": "stats"}` `{"cmd": "kv"}` `{"cmd": "sched"}`
-//!           `{"cmd": "info"}` `{"cmd": "ping"}`
-//! Response: `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}`
-//!           or `{"error": "..."}`.
+//! ## Requests
 //!
-//! Connection handling is thread-per-connection (requests are forwarded to
-//! the single engine thread through the coordinator, so the server threads
-//! only do I/O). A matching [`Client`] is provided for examples/benches.
+//! Generation:
+//! `{"prompt": "...", "max_new": 32, "variant": "chai"}`
+//! `{"prompt": "...", "stream": true}` — stream tokens as they decode
+//!
+//! Commands:
+//! `{"cmd": "stats"}` `{"cmd": "kv"}` `{"cmd": "sched"}`
+//! `{"cmd": "info"}` `{"cmd": "ping"}`
+//! `{"cmd": "cancel", "id": N}` — abort request `N` wherever it lives
+//! (pending, live mid-decode, or preempted); may be sent from ANY
+//! connection, since request ids are global across the front-end
+//!
+//! ## Responses
+//!
+//! Non-streaming generation returns one summary line:
+//! `{"id": 1, "text": "...", "ttft_ms": ..., "e2e_ms": ...}` or
+//! `{"error": "..."}`.
+//!
+//! With `"stream": true` the server first emits one frame line per
+//! decoded token, in order, then a terminal line:
+//!
+//! ```text
+//! {"id": 7, "i": 0, "tok": 104, "text": "h"}
+//! {"id": 7, "i": 1, "tok": 105, "text": "i"}
+//! {"id": 7, "text": "hi", "n_generated": 2, ...}          <- terminal
+//! ```
+//!
+//! Frame lines always carry `"tok"`; the terminal line never does.
+//! A cancelled request's terminal line is
+//! `{"id": 7, "cancelled": true, "n_generated": k}` — frames already
+//! delivered stand. Disconnecting mid-stream aborts the request on the
+//! engine (the failed frame write cancels it), so a vanished client
+//! cannot pin K,V blocks.
+//!
+//! ## Connection handling
+//!
+//! Thread-per-connection (requests are forwarded to the engine
+//! replica(s) through a [`Frontend`]: a single coordinator or the
+//! multi-replica router — the server threads only do I/O). Accepted
+//! sockets run with a short read timeout so connection threads observe
+//! [`Server::stop`] and exit instead of blocking in `read_line`
+//! forever. Malformed JSON, unknown commands, and oversized prompts
+//! each produce an `{"error": ...}` line without killing the
+//! connection. A matching [`Client`] is provided for examples/benches.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::Coordinator;
 use crate::engine::Variant;
+use crate::router::Frontend;
+use crate::scheduler::SubmitOpts;
 use crate::util::json::Json;
+
+/// Reject prompts above this many bytes at the protocol layer — far
+/// above any servable sequence, so the engine never tokenizes a
+/// pathological line (the pool/bucket checks still guard everything
+/// below this).
+pub const MAX_PROMPT_BYTES: usize = 1 << 20;
+
+/// Hard cap on one buffered request line, enforced at READ time (not
+/// after parsing): a client streaming bytes without a newline can
+/// never grow the line buffer past this. Sized so that any prompt the
+/// protocol accepts still fits on the wire even under worst-case JSON
+/// escaping (`\uXXXX` = 6 bytes per character) — a legal prompt is
+/// answered with an error LINE, never a closed connection; only lines
+/// no legal request could produce close the stream.
+pub const MAX_LINE_BYTES: usize = 6 * MAX_PROMPT_BYTES + (64 << 10);
+
+/// Poll interval for the accept loop and the per-connection read
+/// timeout: how quickly server threads observe `stop`.
+const POLL_MS: u64 = 25;
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Bind and serve in background threads until `stop`/drop.
-    pub fn start(coordinator: Coordinator, bind: &str) -> Result<Server> {
+    pub fn start<F: Frontend>(api: F, bind: &str) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(AtomicUsize::new(0));
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name("chai-accept".into())
             .spawn(move || {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let coord = coordinator.clone();
-                            // Detached: a connection thread lives until its
-                            // client disconnects (joining here would block
-                            // shutdown on clients idling in read_line).
-                            let _ = std::thread::Builder::new()
+                            let api = api.clone();
+                            let stop = stop2.clone();
+                            let conns = conns2.clone();
+                            conns.fetch_add(1, Ordering::Relaxed);
+                            // Detached, but not unbounded: the read
+                            // timeout set in handle_conn lets every
+                            // connection thread observe `stop` and exit
+                            // even while its client idles silently.
+                            let spawned = std::thread::Builder::new()
                                 .name("chai-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, &coord);
+                                    let _ = handle_conn(stream, &api, &stop);
+                                    conns.fetch_sub(1, Ordering::Relaxed);
                                 });
+                            if spawned.is_err() {
+                                // the closure owning the decrement never
+                                // ran (thread exhaustion) — undo the
+                                // increment or the counter stays
+                                // inflated forever
+                                conns2.fetch_sub(1, Ordering::Relaxed);
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(POLL_MS));
                         }
                         Err(_) => break,
                     }
                 }
             })?;
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { addr, stop, conns, accept_thread: Some(accept_thread) })
+    }
+
+    /// Connections currently being served (observability/tests).
+    pub fn active_connections(&self) -> usize {
+        self.conns.load(Ordering::Relaxed)
+    }
+
+    /// The live connection counter itself — lets tests observe thread
+    /// exit after [`Server::stop`] has consumed the server.
+    pub fn conn_counter(&self) -> Arc<AtomicUsize> {
+        self.conns.clone()
     }
 
     pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        // best-effort wait for connection threads to notice the flag
+        // (they wake from read_line at most one poll interval later;
+        // bounded so a conn blocked writing to a dead peer cannot wedge
+        // shutdown)
+        for _ in 0..200 {
+            if self.conns.load(Ordering::Relaxed) == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(POLL_MS));
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.stop_inner();
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &Coordinator) -> Result<()> {
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+fn handle_conn<F: Frontend>(stream: TcpStream, api: &F, stop: &AtomicBool) -> Result<()> {
+    // the read timeout is what lets this thread observe `stop`: without
+    // it, a silent client would pin the thread in a blocking read
+    // forever
+    stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    // raw bytes, not a String: a read timeout can land mid-UTF-8
+    // sequence, and `read_line`'s UTF-8 guard would throw those partial
+    // bytes away — `read_until` keeps them across timeouts. Decoding
+    // happens once per complete line.
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        // cap enforced at read time: `take` bounds how much one line
+        // can ever buffer, no matter how much the client sends
+        let budget = (MAX_LINE_BYTES.saturating_sub(buf.len())) as u64;
+        match (&mut reader).take(budget).read_until(b'\n', &mut buf) {
+            Ok(0) if buf.is_empty() => return Ok(()), // client closed
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    {
+                        let line = String::from_utf8_lossy(&buf);
+                        let trimmed = line.trim();
+                        if !trimmed.is_empty() {
+                            handle_request(trimmed, api, &mut writer, stop)?;
+                        }
+                    }
+                    buf.clear();
+                } else if buf.len() >= MAX_LINE_BYTES {
+                    // no newline within the cap: report and close (the
+                    // stream cannot be resynced mid-line)
+                    let _ = write_line(
+                        &mut writer,
+                        &Json::obj(vec![(
+                            "error",
+                            Json::Str(format!(
+                                "request line exceeds the {MAX_LINE_BYTES} byte protocol limit"
+                            )),
+                        )]),
+                    );
+                    return Ok(());
+                } else {
+                    return Ok(()); // client closed mid-line
+                }
+            }
+            // timeout: bytes read so far stay in `buf`; either exit
+            // (server stopping) or poll again
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let reply = match handle_line(trimmed, coord) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
     }
 }
 
-fn handle_line(line: &str, coord: &Coordinator) -> Result<Json> {
-    let req = Json::parse(line)?;
+fn write_line(writer: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    writer.write_all(j.to_string().as_bytes())?;
+    writer.write_all(b"\n")
+}
+
+/// Dispatch one request line. Protocol errors (bad JSON, unknown cmd,
+/// oversized prompt) become `{"error": ...}` lines — the connection
+/// survives them all.
+fn handle_request<F: Frontend>(
+    line: &str,
+    api: &F,
+    writer: &mut TcpStream,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let parsed = (|| -> Result<(bool, Json)> {
+        let req = Json::parse(line)?;
+        // commands are never streamed — `{"cmd":..., "stream":true}`
+        // must still dispatch as the command, not as a generation
+        let stream = req.opt("cmd").is_none()
+            && req
+                .opt("stream")
+                .map(|v| v.boolean())
+                .transpose()?
+                .unwrap_or(false);
+        Ok((stream, req))
+    })();
+    match parsed {
+        Err(e) => {
+            write_line(writer, &Json::obj(vec![("error", Json::Str(format!("{e:#}")))]))?;
+            Ok(())
+        }
+        Ok((false, req)) => {
+            let reply = match handle_line(&req, api, stop) {
+                Ok(j) => j,
+                Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+            };
+            write_line(writer, &reply)?;
+            Ok(())
+        }
+        Ok((true, req)) => handle_streaming(&req, api, writer, stop),
+    }
+}
+
+/// Wait for a terminal response, polling so this thread stays
+/// responsive to `stop`: when the server is stopping, the in-flight
+/// request is aborted (its blocks are reclaimed) and the terminal
+/// cancelled/error line still reaches the client. This is what keeps
+/// connection threads from outliving [`Server::stop`] mid-generation.
+fn recv_terminal<F: Frontend>(
+    rx: &Receiver<crate::scheduler::Response>,
+    id: u64,
+    api: &F,
+    stop: &AtomicBool,
+) -> Result<crate::scheduler::Response> {
+    let mut abort_sent = false;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(POLL_MS)) {
+            Ok(resp) => return Ok(resp),
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) && !abort_sent {
+                    api.cancel(id);
+                    abort_sent = true;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("engine dropped request")
+            }
+        }
+    }
+}
+
+/// A streaming generation: frames as tokens decode, then the terminal
+/// summary. A failed frame write (client disconnected mid-stream) or
+/// a stopping server aborts the request on the engine — either way
+/// the session's blocks are reclaimed and a terminal line is produced.
+fn handle_streaming<F: Frontend>(
+    req: &Json,
+    api: &F,
+    writer: &mut TcpStream,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let opts = match parse_generation(req) {
+        Ok(o) => o,
+        Err(e) => {
+            write_line(writer, &Json::obj(vec![("error", Json::Str(format!("{e:#}")))]))?;
+            return Ok(());
+        }
+    };
+    let (frame_tx, frame_rx) = channel();
+    let (id, resp_rx) = api.submit_opts(SubmitOpts { stream: Some(frame_tx), ..opts });
+    let mut abort_sent = false;
+    loop {
+        match frame_rx.recv_timeout(Duration::from_millis(POLL_MS)) {
+            Ok(f) => {
+                // check stop here too: a stream whose frames arrive
+                // faster than the poll interval would otherwise never
+                // reach the Timeout arm
+                if stop.load(Ordering::Relaxed) && !abort_sent {
+                    api.cancel(id);
+                    abort_sent = true;
+                }
+                let frame = Json::obj(vec![
+                    ("id", Json::Num(f.id as f64)),
+                    ("i", Json::Num(f.index as f64)),
+                    ("tok", Json::Num(f.token as f64)),
+                    ("text", Json::Str(f.text)),
+                ]);
+                if let Err(e) = write_line(writer, &frame) {
+                    // disconnect-abort: free the session's blocks
+                    // mid-decode; wait (bounded) for the terminal
+                    // response so the abort is confirmed before the
+                    // thread exits
+                    api.cancel(id);
+                    let _ = resp_rx.recv_timeout(Duration::from_secs(60));
+                    return Err(e.into());
+                }
+            }
+            // channel closed: the terminal response is in flight
+            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                // a stopping server aborts in-flight streams (the
+                // terminal cancelled line is still delivered below)
+                if stop.load(Ordering::Relaxed) && !abort_sent {
+                    api.cancel(id);
+                    abort_sent = true;
+                }
+            }
+        }
+    }
+    let resp = recv_terminal(&resp_rx, id, api, stop)?;
+    write_line(writer, &response_json(&resp))?;
+    Ok(())
+}
+
+fn parse_generation(req: &Json) -> Result<SubmitOpts> {
+    let prompt = req.get("prompt")?.str()?.to_string();
+    if prompt.len() > MAX_PROMPT_BYTES {
+        anyhow::bail!(
+            "prompt of {} bytes exceeds the {} byte protocol limit",
+            prompt.len(),
+            MAX_PROMPT_BYTES
+        );
+    }
+    let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
+    let variant =
+        Variant::parse(req.opt("variant").map(|v| v.str()).transpose()?.unwrap_or("chai"))?;
+    Ok(SubmitOpts::new(&prompt, max_new, variant))
+}
+
+fn response_json(resp: &crate::scheduler::Response) -> Json {
+    if let Some(e) = &resp.error {
+        return Json::obj(vec![
+            ("id", Json::Num(resp.id as f64)),
+            ("error", Json::Str(e.clone())),
+        ]);
+    }
+    if resp.cancelled {
+        return Json::obj(vec![
+            ("id", Json::Num(resp.id as f64)),
+            ("cancelled", Json::Bool(true)),
+            ("n_generated", Json::Num(resp.n_generated as f64)),
+        ]);
+    }
+    Json::obj(vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("text", Json::Str(resp.text.clone())),
+        ("n_generated", Json::Num(resp.n_generated as f64)),
+        ("queue_ms", Json::Num(resp.queue_ms)),
+        ("ttft_ms", Json::Num(resp.timing.ttft_ms)),
+        ("e2e_ms", Json::Num(resp.e2e_ms)),
+    ])
+}
+
+fn handle_line<F: Frontend>(req: &Json, api: &F, stop: &AtomicBool) -> Result<Json> {
     if let Some(cmd) = req.opt("cmd") {
         return match cmd.str()? {
             "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
-            "stats" => Ok(coord.metrics.to_json()),
+            "stats" => Ok(api.stats_json()),
             // paged-KV occupancy + sharing view (subset of stats gauges)
-            "kv" => Ok(coord
-                .metrics
-                .to_json()
-                .opt("gauges")
-                .cloned()
-                .unwrap_or_else(|| Json::obj(vec![]))),
+            "kv" => Ok(api.kv_json()),
             // scheduler view: queue depths, live/preempted counts,
             // preemption + swap-tier counters and occupancy
-            "sched" => Ok(coord.metrics.subset_json(&["sched_", "swap_", "kv_defer"])),
+            "sched" => Ok(api.sched_json()),
             // static serving facts: compute backend, model name
-            "info" => Ok(coord
-                .metrics
-                .to_json()
-                .opt("info")
-                .cloned()
-                .unwrap_or_else(|| Json::obj(vec![]))),
+            "info" => Ok(api.info_json()),
+            // abort by id, from any connection (ids are front-end
+            // global); ack is immediate, the abort lands on the next
+            // engine tick and the submitting connection receives the
+            // terminal cancelled line
+            "cancel" => {
+                let id = req.get("id")?.usize()? as u64;
+                api.cancel(id);
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(id as f64)),
+                ]))
+            }
             other => Ok(Json::obj(vec![(
                 "error",
                 Json::Str(format!("unknown cmd {other:?}")),
             )])),
         };
     }
-    let prompt = req.get("prompt")?.str()?.to_string();
-    let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
-    let variant =
-        Variant::parse(req.opt("variant").map(|v| v.str()).transpose()?.unwrap_or("chai"))?;
-    let rx = coord.submit(&prompt, max_new, variant);
-    let resp = rx.recv().context("engine dropped request")?;
-    if let Some(e) = resp.error {
-        return Ok(Json::obj(vec![("error", Json::Str(e))]));
-    }
-    Ok(Json::obj(vec![
-        ("id", Json::Num(resp.id as f64)),
-        ("text", Json::Str(resp.text)),
-        ("n_generated", Json::Num(resp.n_generated as f64)),
-        ("queue_ms", Json::Num(resp.queue_ms)),
-        ("ttft_ms", Json::Num(resp.timing.ttft_ms)),
-        ("e2e_ms", Json::Num(resp.e2e_ms)),
-    ]))
+    let opts = parse_generation(req)?;
+    let (id, rx) = api.submit_opts(opts);
+    let resp = recv_terminal(&rx, id, api, stop)?;
+    Ok(response_json(&resp))
 }
 
 /// Line-JSON client for examples and the serving bench.
@@ -160,12 +458,31 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 
-    pub fn call(&mut self, req: &Json) -> Result<Json> {
+    /// Send one request line (without reading a reply).
+    pub fn send(&mut self, req: &Json) -> Result<()> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Send raw bytes verbatim (protocol-error tests: malformed JSON).
+    pub fn send_raw(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    /// Read one reply line.
+    pub fn read_json(&mut self) -> Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the connection");
+        }
         Json::parse(line.trim())
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.send(req)?;
+        self.read_json()
     }
 
     pub fn generate(&mut self, prompt: &str, max_new: usize, variant: &str) -> Result<Json> {
@@ -176,6 +493,39 @@ impl Client {
         ]))
     }
 
+    /// Streaming generation: `on_frame` sees every `{"id","i","tok"}`
+    /// frame as it arrives; returns the terminal line (summary, error,
+    /// or `{"cancelled": true}`).
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        variant: &str,
+        mut on_frame: impl FnMut(&Json),
+    ) -> Result<Json> {
+        self.send(&Json::obj(vec![
+            ("prompt", Json::Str(prompt.into())),
+            ("max_new", Json::Num(max_new as f64)),
+            ("variant", Json::Str(variant.into())),
+            ("stream", Json::Bool(true)),
+        ]))?;
+        loop {
+            let j = self.read_json()?;
+            if j.opt("tok").is_none() {
+                return Ok(j); // terminal line
+            }
+            on_frame(&j);
+        }
+    }
+
+    /// Abort request `id` (any connection may cancel any id).
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        self.call(&Json::obj(vec![
+            ("cmd", Json::Str("cancel".into())),
+            ("id", Json::Num(id as f64)),
+        ]))
+    }
+
     pub fn ping(&mut self) -> Result<bool> {
         let r = self.call(&Json::obj(vec![("cmd", Json::Str("ping".into()))]))?;
         Ok(r.opt("pong").is_some())
@@ -183,6 +533,10 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<Json> {
         self.call(&Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+
+    pub fn kv(&mut self) -> Result<Json> {
+        self.call(&Json::obj(vec![("cmd", Json::Str("kv".into()))]))
     }
 
     pub fn sched(&mut self) -> Result<Json> {

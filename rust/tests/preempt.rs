@@ -74,6 +74,7 @@ fn make_req(
             variant,
             submitted_ms: now_ms(),
             resp_tx: tx,
+            stream: None,
         },
         rx,
     )

@@ -1,0 +1,435 @@
+//! Integration tests for the router front-end, token streaming,
+//! request cancellation, and the serving protocol's error/shutdown
+//! contracts. Everything runs unconditionally on the pure-Rust
+//! reference backend (seeded toy model — no artifacts needed).
+//!
+//! The toy model's largest decode bucket is 64 positions, so every
+//! prompt+max_new here stays under that.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::Variant;
+use chai::router::{Frontend, Router};
+use chai::scheduler::SubmitOpts;
+use chai::server::{Client, Server};
+use chai::util::json::Json;
+
+fn ref_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: PathBuf::from("no-artifacts"),
+        backend: "ref".into(),
+        ..Default::default()
+    }
+}
+
+/// Poll a metrics predicate: gauges land at the end of the retiring
+/// tick, slightly after the response goes out.
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !f() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(f(), "not reached within 30s: {what}");
+}
+
+// ---------------------------------------------------------------------------
+// Streaming
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streaming_frames_then_terminal_summary_over_tcp() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server = Server::start(handle.coordinator.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    // oracle: the same request without streaming
+    let want = client.generate("the color of tom is", 8, "chai").unwrap();
+    assert!(want.opt("error").is_none(), "{want:?}");
+
+    let mut frames: Vec<Json> = Vec::new();
+    let done = client
+        .generate_stream("the color of tom is", 8, "chai", |f| frames.push(f.clone()))
+        .unwrap();
+    assert!(done.opt("error").is_none(), "{done:?}");
+    assert!(done.opt("cancelled").is_none(), "{done:?}");
+    let n = done.get("n_generated").unwrap().usize().unwrap();
+    assert_eq!(frames.len(), n, "one frame per decoded token");
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.get("i").unwrap().usize().unwrap(), i, "frames in order");
+        assert_eq!(
+            f.get("id").unwrap().usize().unwrap(),
+            done.get("id").unwrap().usize().unwrap()
+        );
+    }
+    let cat: String =
+        frames.iter().map(|f| f.get("text").unwrap().str().unwrap()).collect();
+    assert_eq!(
+        cat,
+        want.get("text").unwrap().str().unwrap(),
+        "streamed frames must concatenate to the non-streaming text"
+    );
+    server.stop();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation
+// ---------------------------------------------------------------------------
+
+/// The acceptance contract: aborting a mid-decode streaming session
+/// returns pool occupancy to its pre-request baseline (no leaked
+/// blocks) and the client receives a terminal cancelled frame. The
+/// abort arrives from a DIFFERENT connection — request ids are global
+/// across the front-end.
+#[test]
+fn cancel_mid_stream_restores_pool_baseline() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let coord = handle.coordinator.clone();
+    let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // 7 in-process hogs keep the continuous batch busy for ~59 ticks,
+    // so the streaming victim (admitted alongside them) is guaranteed
+    // to still be mid-decode when the cancel lands
+    let hog_rxs: Vec<_> = (0..7)
+        .map(|i| coord.submit(&format!("hog {i}"), 56, Variant::Chai))
+        .collect();
+
+    let mut stream_client = Client::connect(&addr).unwrap();
+    let mut side_client = Client::connect(&addr).unwrap();
+    stream_client
+        .send(&Json::obj(vec![
+            ("prompt", Json::Str("tom".into())),
+            ("max_new", Json::Num(60.0)),
+            ("variant", Json::Str("chai".into())),
+            ("stream", Json::Bool(true)),
+        ]))
+        .unwrap();
+    // the first frame proves the victim is admitted and decoding
+    let first = stream_client.read_json().unwrap();
+    assert!(first.opt("tok").is_some(), "expected a stream frame: {first:?}");
+    let id = first.get("id").unwrap().usize().unwrap() as u64;
+
+    let ack = side_client.cancel(id).unwrap();
+    assert!(ack.get("ok").unwrap().boolean().unwrap());
+
+    // the streaming connection drains whatever frames were in flight,
+    // then sees the terminal cancelled line
+    let terminal = loop {
+        let j = stream_client.read_json().unwrap();
+        if j.opt("tok").is_none() {
+            break j;
+        }
+    };
+    assert!(
+        terminal.get("cancelled").unwrap().boolean().unwrap(),
+        "client must receive a terminal cancelled frame: {terminal:?}"
+    );
+    assert!(
+        terminal.get("n_generated").unwrap().usize().unwrap() < 60,
+        "the abort must land mid-decode: {terminal:?}"
+    );
+    assert_eq!(coord.metrics.counter("sched_cancelled"), 1);
+
+    // the batchmates (their blocks stayed pinned by their own refs)
+    // complete normally
+    for rx in hog_rxs {
+        let r = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.n_generated, 56);
+    }
+
+    // occupancy back to the pre-request baseline: zero live blocks or
+    // tables anywhere (published prefix blocks live on as evictable
+    // cache, which is not occupancy)
+    wait_until("pool back to baseline", || {
+        coord.metrics.gauge("sched_live") == 0.0
+            && coord.metrics.gauge("kv_live_tables") == 0.0
+            && coord.metrics.gauge("kv_live_blocks") == 0.0
+    });
+    server.stop();
+    handle.shutdown();
+}
+
+/// Cancelling a session must not corrupt a batchmate sharing its
+/// prefix blocks: the survivor's stream is bit-identical to an
+/// uncontended run (the shared blocks stay pinned by the survivor's
+/// refs when the victim's table is torn down).
+#[test]
+fn cancel_leaves_shared_prefix_batchmate_bit_identical() {
+    let prompt = "tom keeps the hat in the box";
+    // oracle: uncontended run on a fresh stack
+    let oracle = Coordinator::start(ref_cfg()).unwrap();
+    let want = oracle
+        .coordinator
+        .submit(prompt, 30, Variant::Chai)
+        .recv_timeout(Duration::from_secs(600))
+        .unwrap();
+    assert!(want.error.is_none());
+    oracle.shutdown();
+
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let coord = handle.coordinator.clone();
+    // victim shares the survivor's full prompt (adopts its blocks);
+    // its stream channel doubles as the mid-decode synchronization
+    let (tx, frames) = std::sync::mpsc::channel();
+    let (victim_id, victim_rx) = coord.submit_opts(SubmitOpts {
+        stream: Some(tx),
+        ..SubmitOpts::new(prompt, 30, Variant::Chai)
+    });
+    let survivor_rx = coord.submit(prompt, 30, Variant::Chai);
+    // three observed frames == the victim is live and mid-decode
+    for _ in 0..3 {
+        frames.recv_timeout(Duration::from_secs(30)).expect("victim frame");
+    }
+    coord.cancel(victim_id);
+    let v = victim_rx.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(v.cancelled, "{v:?}");
+    assert!(v.n_generated >= 3 && v.n_generated < 30, "mid-decode abort: {v:?}");
+    let s = survivor_rx.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(s.error.is_none(), "{:?}", s.error);
+    assert_eq!(s.text, want.text, "survivor stream must be bit-identical");
+    wait_until("no leaked tables", || {
+        coord.metrics.gauge("kv_live_tables") == 0.0
+    });
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Protocol error paths (satellite): malformed JSON, unknown cmd,
+// oversized prompt — each an {"error":..} line, none kill the
+// connection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn protocol_errors_never_kill_the_connection() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server = Server::start(handle.coordinator.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    // malformed JSON (raw bytes, not a JSON-encoded string)
+    client.send_raw("{not json at all\n").unwrap();
+    let r = client.read_json().unwrap();
+    assert!(r.opt("error").is_some(), "malformed JSON must error: {r:?}");
+
+    // unknown cmd
+    let r = client
+        .call(&Json::obj(vec![("cmd", Json::Str("selfdestruct".into()))]))
+        .unwrap();
+    assert!(
+        r.get("error").unwrap().str().unwrap().contains("unknown cmd"),
+        "{r:?}"
+    );
+
+    // a non-object line
+    client.send_raw("42\n").unwrap();
+    let r = client.read_json().unwrap();
+    assert!(r.opt("error").is_some(), "non-object must error: {r:?}");
+
+    // oversized prompt: rejected at the protocol layer before
+    // tokenization
+    let huge = "x".repeat(chai::server::MAX_PROMPT_BYTES + 1);
+    let r = client.generate(&huge, 4, "chai").unwrap();
+    assert!(
+        r.get("error").unwrap().str().unwrap().contains("protocol limit"),
+        "{r:?}"
+    );
+
+    // a streaming request with a bad variant errors as its first line
+    let r = client
+        .call(&Json::obj(vec![
+            ("prompt", Json::Str("hello".into())),
+            ("variant", Json::Str("warp-drive".into())),
+            ("stream", Json::Bool(true)),
+        ]))
+        .unwrap();
+    assert!(r.opt("error").is_some(), "{r:?}");
+
+    // ...and the connection still works
+    assert!(client.ping().unwrap());
+    let ok = client.generate("the color of tom is", 4, "chai").unwrap();
+    assert!(ok.opt("error").is_none(), "{ok:?}");
+
+    server.stop();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Shutdown contracts (satellites)
+// ---------------------------------------------------------------------------
+
+/// Coordinator shutdown answers every in-flight request with a
+/// terminal `{"error": "shutting down"}` instead of dropping channels,
+/// and refuses later submissions the same way.
+#[test]
+fn shutdown_answers_inflight_and_refuses_new_requests() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let coord = handle.coordinator.clone();
+    // more long generations than the batch width so some are still
+    // pending when shutdown lands
+    let rxs: Vec<_> = (0..12)
+        .map(|i| coord.submit(&format!("a long tale number {i}"), 40, Variant::Chai))
+        .collect();
+    wait_until("work in flight", || coord.metrics.gauge("sched_live") >= 1.0);
+    handle.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // a response MUST arrive — the old bug left clients blocked on
+        // a channel whose sender was parked in a dead queue
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("request {i} hung across shutdown: {e}"));
+        if let Some(err) = r.error {
+            assert!(err.contains("shutting down"), "request {i}: {err}");
+        }
+    }
+    // submissions after shutdown get an immediate terminal error
+    let rx = coord.submit("too late", 4, Variant::Chai);
+    let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(r.error.as_deref(), Some("shutting down"));
+}
+
+/// `Server::stop` must not leave connection threads parked in
+/// `read_line`: idle clients are detected via the read timeout and the
+/// threads exit.
+#[test]
+fn server_stop_releases_idle_connection_threads() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server = Server::start(handle.coordinator.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    // three clients connect and then go silent
+    let idle: Vec<Client> = (0..3).map(|_| Client::connect(&addr).unwrap()).collect();
+    wait_until("connections registered", || server.active_connections() == 3);
+    let conns = server.conn_counter();
+    let t0 = Instant::now();
+    server.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "stop must not hang on idle connections"
+    );
+    assert_eq!(
+        conns.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "idle connection threads must observe stop and exit"
+    );
+    drop(idle);
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_serves_streams_and_cancels_across_replicas() {
+    let cfg = ServingConfig { replicas: 2, route: "rr".into(), ..ref_cfg() };
+    let handle = Router::start(cfg).unwrap();
+    let router = handle.router.clone();
+    let server = Server::start(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // plain requests spread over both replicas and all succeed
+    for i in 0..4 {
+        let r = client
+            .generate(&format!("the color of tom number {i}"), 4, "chai")
+            .unwrap();
+        assert!(r.opt("error").is_none(), "{r:?}");
+    }
+    assert_eq!(router.counter_sum("completed"), 4);
+    assert!(router.metrics.counter("router_routed_replica_0") >= 1);
+    assert!(router.metrics.counter("router_routed_replica_1") >= 1);
+
+    // streaming through the router
+    let mut frames = 0usize;
+    let done = client
+        .generate_stream("tom keeps the hat", 6, "chai", |_| frames += 1)
+        .unwrap();
+    assert!(done.opt("error").is_none(), "{done:?}");
+    assert_eq!(frames, done.get("n_generated").unwrap().usize().unwrap());
+
+    // cancel broadcast: the one replica holding the id aborts it. Hogs
+    // on BOTH replicas keep ticks busy so the abort lands mid-decode.
+    let hog_rxs: Vec<_> = (0..6)
+        .map(|i| {
+            router
+                .submit_opts(SubmitOpts::new(&format!("hog {i}"), 56, Variant::Chai))
+                .1
+        })
+        .collect();
+    let mut stream_client = Client::connect(&addr).unwrap();
+    stream_client
+        .send(&Json::obj(vec![
+            ("prompt", Json::Str("tom".into())),
+            ("max_new", Json::Num(60.0)),
+            ("stream", Json::Bool(true)),
+        ]))
+        .unwrap();
+    let first = stream_client.read_json().unwrap();
+    assert!(first.opt("tok").is_some(), "{first:?}");
+    let id = first.get("id").unwrap().usize().unwrap() as u64;
+    client.cancel(id).unwrap();
+    let terminal = loop {
+        let j = stream_client.read_json().unwrap();
+        if j.opt("tok").is_none() {
+            break j;
+        }
+    };
+    assert!(terminal.get("cancelled").unwrap().boolean().unwrap(), "{terminal:?}");
+    assert_eq!(router.counter_sum("sched_cancelled"), 1);
+    for rx in hog_rxs {
+        let r = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+
+    // rolled-up views carry the router section and fleet info
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.get("router").unwrap().get("replicas").unwrap().usize().unwrap(),
+        2
+    );
+    assert_eq!(stats.get("replicas").unwrap().arr().unwrap().len(), 2);
+    let info = client.info().unwrap();
+    assert_eq!(info.get("replicas").unwrap().usize().unwrap(), 2);
+    assert_eq!(info.get("backend").unwrap().str().unwrap(), "ref");
+    let sched = client.sched().unwrap();
+    assert!(sched.opt("sched_cancelled").is_some(), "{sched:?}");
+
+    server.stop();
+    handle.shutdown();
+}
+
+/// All three routing policies produce bit-identical token streams —
+/// placement must never change what a request generates.
+#[test]
+fn routing_policies_are_stream_transparent() {
+    let prompts: Vec<String> = (0..6)
+        .map(|i| format!("the color of tom is case {}", i % 2))
+        .collect();
+    let mut texts_by_policy: Vec<Vec<String>> = Vec::new();
+    for route in ["rr", "least-loaded", "prefix"] {
+        let cfg = ServingConfig { replicas: 3, route: route.into(), ..ref_cfg() };
+        let handle = Router::start(cfg).unwrap();
+        let router = handle.router.clone();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit_opts(SubmitOpts::new(p, 6, Variant::Chai)).1)
+            .collect();
+        let texts: Vec<String> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+                assert!(r.error.is_none(), "[{route}] {:?}", r.error);
+                r.text
+            })
+            .collect();
+        texts_by_policy.push(texts);
+        handle.shutdown();
+    }
+    assert_eq!(texts_by_policy[0], texts_by_policy[1], "rr vs least-loaded");
+    assert_eq!(texts_by_policy[0], texts_by_policy[2], "rr vs prefix-affinity");
+}
