@@ -1,0 +1,199 @@
+//! Microbench: the net subsystem's lock-free rings vs a
+//! `Mutex<VecDeque>` inbox on the same bounded producer/consumer
+//! workload — the hot-path data structures behind the reactor's token
+//! fan-out (SPSC per-request event rings) and the coordinator's
+//! submission inbox (MPSC).
+//!
+//! Run:  cargo bench --bench bench_ringbuf [-- --items 200000]
+//!
+//! Prints a paper-style table and writes
+//! `bench_results/BENCH_ringbuf.json` (throughput in ops/s per
+//! structure; no absolute thresholds — shape only, single-core CI
+//! runners invert fine-grained lock costs unpredictably).
+
+mod common;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use chai::bench::Table;
+use chai::net::ring::{Mpsc, Spsc};
+use chai::util::json::Json;
+use chai::util::now_ms;
+
+const CAPACITY: usize = 1024;
+
+/// One producer thread pushes `items` u64s through the structure while
+/// the bench thread pops them all; returns ops/s (an op = one
+/// push+pop pair completing).
+fn spsc_ring(items: usize) -> f64 {
+    let ring = Arc::new(Spsc::new(CAPACITY));
+    let tx = ring.clone();
+    let t0 = now_ms();
+    let producer = std::thread::spawn(move || {
+        for i in 0..items as u64 {
+            let mut v = i;
+            while let Err(back) = tx.push(v) {
+                v = back;
+                std::thread::yield_now();
+            }
+        }
+    });
+    let mut popped = 0usize;
+    let mut next = 0u64;
+    while popped < items {
+        match ring.pop() {
+            Some(v) => {
+                assert_eq!(v, next, "SPSC must stay FIFO under load");
+                next += 1;
+                popped += 1;
+            }
+            None => std::thread::yield_now(),
+        }
+    }
+    producer.join().unwrap();
+    items as f64 / ((now_ms() - t0) / 1e3).max(1e-9)
+}
+
+/// Same single-producer workload through a locked deque bounded at the
+/// same capacity.
+fn spsc_mutex(items: usize) -> f64 {
+    let q: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let tx = q.clone();
+    let t0 = now_ms();
+    let producer = std::thread::spawn(move || {
+        for i in 0..items as u64 {
+            loop {
+                {
+                    let mut g = tx.lock().unwrap();
+                    if g.len() < CAPACITY {
+                        g.push_back(i);
+                        break;
+                    }
+                }
+                std::thread::yield_now();
+            }
+        }
+    });
+    let mut popped = 0usize;
+    while popped < items {
+        let v = q.lock().unwrap().pop_front();
+        match v {
+            Some(_) => popped += 1,
+            None => std::thread::yield_now(),
+        }
+    }
+    producer.join().unwrap();
+    items as f64 / ((now_ms() - t0) / 1e3).max(1e-9)
+}
+
+/// `producers` threads push `items / producers` each through the MPSC
+/// ring (shed-on-full handled by retry, as the coordinator's submit
+/// path would under sustained overload).
+fn mpsc_ring(items: usize, producers: usize) -> f64 {
+    let ring = Arc::new(Mpsc::new(CAPACITY));
+    let per = items / producers;
+    let t0 = now_ms();
+    let handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let tx = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..per as u64 {
+                    let mut v = (p as u64) << 32 | i;
+                    while let Err(back) = tx.push(v) {
+                        v = back;
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+    let total = per * producers;
+    let mut popped = 0usize;
+    while popped < total {
+        match ring.pop() {
+            Some(_) => popped += 1,
+            None => std::thread::yield_now(),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    total as f64 / ((now_ms() - t0) / 1e3).max(1e-9)
+}
+
+fn mpsc_mutex(items: usize, producers: usize) -> f64 {
+    let q: Arc<Mutex<VecDeque<u64>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let per = items / producers;
+    let t0 = now_ms();
+    let handles: Vec<_> = (0..producers)
+        .map(|p| {
+            let tx = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per as u64 {
+                    let v = (p as u64) << 32 | i;
+                    loop {
+                        {
+                            let mut g = tx.lock().unwrap();
+                            if g.len() < CAPACITY {
+                                g.push_back(v);
+                                break;
+                            }
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+    let total = per * producers;
+    let mut popped = 0usize;
+    while popped < total {
+        let v = q.lock().unwrap().pop_front();
+        match v {
+            Some(_) => popped += 1,
+            None => std::thread::yield_now(),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    total as f64 / ((now_ms() - t0) / 1e3).max(1e-9)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = common::bench_args();
+    let items = args.usize("items", 200_000)?.max(CAPACITY * 4);
+    let producers = args.usize("producers", 4)?.max(2);
+
+    let mut table = Table::new(
+        "Ring buffers vs Mutex<VecDeque> (bounded producer/consumer)",
+        &["structure", "producers", "items", "ops/s"],
+    );
+    let mut rows = Vec::new();
+    let cases: [(&str, usize, f64); 4] = [
+        ("spsc-ring", 1, spsc_ring(items)),
+        ("spsc-mutex-deque", 1, spsc_mutex(items)),
+        ("mpsc-ring", producers, mpsc_ring(items, producers)),
+        ("mpsc-mutex-deque", producers, mpsc_mutex(items, producers)),
+    ];
+    for (name, nprod, ops) in cases {
+        assert!(ops > 0.0, "{name} made no progress");
+        table.row(vec![
+            name.to_string(),
+            nprod.to_string(),
+            items.to_string(),
+            format!("{ops:.0}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("structure", Json::Str(name.into())),
+            ("producers", Json::Num(nprod as f64)),
+            ("items", Json::Num(items as f64)),
+            ("ops_per_s", Json::Num(ops)),
+        ]));
+    }
+    table.print();
+    println!("\nshape: rings avoid the lock handoff on every push/pop of the hot paths");
+    common::write_results("BENCH_ringbuf", Json::obj(vec![("rows", Json::Arr(rows))]));
+    Ok(())
+}

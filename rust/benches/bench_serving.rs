@@ -27,6 +27,16 @@
 //!           # prefix-cache hit rate on a shared-system-prompt
 //!           # workload; merges a "router" section into
 //!           # BENCH_serving.json
+//!       cargo bench --bench bench_serving -- --backend ref --connections
+//!           # CI front-end fan-out gate (Linux): one epoll-driven
+//!           # load generator holds 1k+ concurrent token streams
+//!           # against the SAME coordinator through both transports
+//!           # (`--net threads` vs `--net reactor`); asserts
+//!           # bit-identical per-connection streams, zero error
+//!           # terminals, p99 TTFT no worse at low concurrency and
+//!           # strictly better at high concurrency, and reactor
+//!           # throughput within/above bounds; merges a "connections"
+//!           # section into BENCH_serving.json
 
 mod common;
 
@@ -488,6 +498,378 @@ fn replicas(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::
     Ok(())
 }
 
+/// Epoll-driven load generator for `--connections`: the bench process
+/// itself multiplexes every client socket on one epoll instance, so a
+/// single thread can hold thousands of concurrent token streams
+/// without perturbing the server under test with thousands of client
+/// threads.
+#[cfg(target_os = "linux")]
+mod fanout {
+    use chai::net::sys::{Epoll, EpollEvent, EPOLLIN, EPOLLRDHUP};
+    use chai::util::json::Json;
+    use chai::util::now_ms;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::TcpStream;
+    use std::os::unix::io::AsRawFd;
+
+    /// What one connection received, reduced to a transport-independent
+    /// signature: per-frame `(i, tok, text)` plus the terminal summary.
+    /// Request ids are excluded on purpose — arrival order (and thus id
+    /// assignment) differs between runs; the token streams must not.
+    pub struct ConnOutcome {
+        pub sig: String,
+        pub ttft_ms: f64,
+        pub error: Option<String>,
+    }
+
+    pub struct LevelRun {
+        pub outcomes: Vec<ConnOutcome>,
+        pub span_s: f64,
+        pub tokens: usize,
+    }
+
+    struct C {
+        stream: TcpStream,
+        buf: Vec<u8>,
+        fired: f64,
+        ttft: f64,
+        sig: String,
+        done: bool,
+        error: Option<String>,
+    }
+
+    /// Connect `n` sockets, fire one streaming generation on each
+    /// (prompt keyed by connection index so runs are comparable), and
+    /// drain every stream to its terminal line through one epoll loop.
+    pub fn drive(addr: &str, n: usize, max_new: usize, deadline_s: f64) -> anyhow::Result<LevelRun> {
+        let mut conns: Vec<C> = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = TcpStream::connect(addr)
+                .map_err(|e| anyhow::anyhow!("connect {} of {n}: {e}", i + 1))?;
+            s.set_nodelay(true)?;
+            conns.push(C {
+                stream: s,
+                buf: Vec::new(),
+                fired: 0.0,
+                ttft: -1.0,
+                sig: String::new(),
+                done: false,
+                error: None,
+            });
+        }
+        let ep = Epoll::new()?;
+        for (i, c) in conns.iter().enumerate() {
+            c.stream.set_nonblocking(true)?;
+            ep.add(c.stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, i as u64)?;
+        }
+
+        // fire phase: request lines are tiny and the sockets are fresh,
+        // so writes land in the send buffer without blocking
+        let t0 = now_ms();
+        for (i, c) in conns.iter_mut().enumerate() {
+            let line = Json::obj(vec![
+                ("prompt", Json::Str(format!("the color of tom is case {}", i % 5))),
+                ("max_new", Json::Num(max_new as f64)),
+                ("variant", Json::Str("chai".into())),
+                ("stream", Json::Bool(true)),
+            ])
+            .to_string()
+                + "\n";
+            let bytes = line.as_bytes();
+            let mut off = 0usize;
+            while off < bytes.len() {
+                match c.stream.write(&bytes[off..]) {
+                    Ok(k) => off += k,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::yield_now(),
+                    Err(e) => anyhow::bail!("conn {i}: request write failed: {e}"),
+                }
+            }
+            c.fired = now_ms();
+        }
+
+        // drain phase: level-triggered reads, newline framing, terminal
+        // detection by the protocol contract (a line without "tok")
+        let mut live = n;
+        let mut tokens = 0usize;
+        let mut last_done = t0;
+        let mut events = vec![EpollEvent::zeroed(); 512];
+        let mut chunk = [0u8; 16 << 10];
+        while live > 0 {
+            anyhow::ensure!(
+                (now_ms() - t0) / 1e3 < deadline_s,
+                "fan-out deadline: {live}/{n} connections still streaming after {deadline_s}s"
+            );
+            let k = ep.wait(&mut events, 250)?;
+            for ev in &events[..k] {
+                let idx = ev.token() as usize;
+                let c = &mut conns[idx];
+                if c.done {
+                    continue;
+                }
+                // read to WouldBlock first; an EOF only counts as an
+                // error after any already-buffered lines (possibly the
+                // terminal) have been parsed below
+                let mut eof: Option<String> = None;
+                loop {
+                    match c.stream.read(&mut chunk) {
+                        Ok(0) => {
+                            eof = Some("closed before terminal line".into());
+                            break;
+                        }
+                        Ok(got) => c.buf.extend_from_slice(&chunk[..got]),
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) => {
+                            eof = Some(format!("read failed: {e}"));
+                            break;
+                        }
+                    }
+                }
+                while !c.done {
+                    let Some(pos) = c.buf.iter().position(|&b| b == b'\n') else { break };
+                    let line = String::from_utf8_lossy(&c.buf[..pos]).into_owned();
+                    c.buf.drain(..=pos);
+                    if c.ttft < 0.0 {
+                        c.ttft = now_ms() - c.fired;
+                    }
+                    let j = Json::parse(&line)?;
+                    if j.opt("tok").is_some() {
+                        tokens += 1;
+                        c.sig.push_str(&format!(
+                            "f {} {} {};",
+                            j.get("i")?.usize()?,
+                            j.get("tok")?.int()?,
+                            j.get("text")?.str()?
+                        ));
+                    } else {
+                        if let Some(e) = j.opt("error") {
+                            c.error = Some(e.str().unwrap_or("?").to_string());
+                        } else if j.opt("cancelled").is_some() {
+                            c.error = Some("cancelled".into());
+                        } else {
+                            c.sig.push_str(&format!(
+                                "t {} {};",
+                                j.get("text")?.str()?,
+                                j.get("n_generated")?.usize()?
+                            ));
+                        }
+                        c.done = true;
+                        live -= 1;
+                        last_done = now_ms();
+                    }
+                }
+                if let Some(msg) = eof {
+                    if !c.done {
+                        c.done = true;
+                        c.error = Some(msg);
+                        live -= 1;
+                    }
+                }
+            }
+        }
+        Ok(LevelRun {
+            span_s: ((last_done - t0) / 1e3).max(1e-9),
+            tokens,
+            outcomes: conns
+                .into_iter()
+                .map(|c| ConnOutcome {
+                    sig: c.sig,
+                    ttft_ms: c.ttft,
+                    error: c.error,
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Front-end fan-out gate (`--connections`, Linux): both transports
+/// serve the identical streaming workload off the SAME coordinator —
+/// first ~8 connections (the latency floor must not regress), then 1k+
+/// (where thread-per-connection drowns in stacks and poll wakeups while
+/// the reactor multiplexes everything on one I/O thread).
+///
+/// Gates: bit-identical per-connection token streams across transports
+/// at both levels, zero error terminals, zero lost terminals / buffer
+/// kills; at low concurrency reactor p99 TTFT within 1.5x + 25 ms and
+/// tok/s >= 0.7x of threads; at high concurrency reactor p99 TTFT
+/// strictly below threads and tok/s >= 0.95x (best of two attempts —
+/// one wall-clock sample on a shared runner can be skewed). Merges a
+/// "connections" section into `bench_results/BENCH_serving.json`.
+#[cfg(target_os = "linux")]
+fn connections(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    use chai::net::NetMode;
+    use chai::server::Server;
+
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --connections needs the ref backend (toy weights); skipping");
+        return Ok(());
+    }
+    // each connection costs two fds (client + server end) in this one
+    // process; raise RLIMIT_NOFILE and clamp the fleet to what we got
+    let want = args.usize("conns", 1000)?.max(64);
+    let soft = chai::net::sys::raise_nofile_limit((2 * want + 512) as u64);
+    let high_n = want.min(((soft.saturating_sub(256)) / 2) as usize).max(64);
+    if high_n < want {
+        eprintln!(
+            "[bench] RLIMIT_NOFILE soft cap {soft}: running {high_n} connections instead of {want}"
+        );
+    }
+
+    let handle = Coordinator::start(ServingConfig { max_batch: 8, ..base_cfg.clone() })?;
+    let coord = handle.coordinator.clone();
+    coord.submit("warm up please", 2, Variant::Chai).recv().unwrap();
+
+    // one measurement: fresh server on the shared coordinator, full
+    // fan-out, transport-invariant health asserts
+    let measure = |mode: NetMode, n: usize, max_new: usize| -> anyhow::Result<fanout::LevelRun> {
+        let server = Server::start_with(coord.clone(), "127.0.0.1:0", mode)?;
+        let run = fanout::drive(&server.addr.to_string(), n, max_new, 570.0)?;
+        let stats = server.net_stats().to_json(0, mode.name());
+        server.stop();
+        let errors: Vec<String> = run
+            .outcomes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, o)| o.error.as_ref().map(|e| format!("conn {i}: {e}")))
+            .collect();
+        anyhow::ensure!(
+            errors.is_empty(),
+            "[{}] {} of {n} streams ended in error terminals: {:?} ...",
+            mode.name(),
+            errors.len(),
+            &errors[..errors.len().min(4)]
+        );
+        for key in ["net_lost_terminals", "net_conn_buffer_kills"] {
+            anyhow::ensure!(
+                stats.get(key)?.num()? == 0.0,
+                "[{}] {key} must be 0 under a healthy fan-out: {stats:?}",
+                mode.name()
+            );
+        }
+        anyhow::ensure!(
+            stats.get("net_accepted_total")?.usize()? >= n,
+            "[{}] accepted fewer connections than driven",
+            mode.name()
+        );
+        Ok(run)
+    };
+
+    let mut table = Table::new(
+        "Front-end fan-out: thread-per-connection vs epoll reactor (one coordinator)",
+        &["transport", "conns", "ok", "tokens", "p99 ttft ms", "tok/s"],
+    );
+    let mut json_rows = Vec::new();
+    let row = |table: &mut Table,
+                   json_rows: &mut Vec<Json>,
+                   level: &str,
+                   mode_name: &str,
+                   n: usize,
+                   run: &fanout::LevelRun,
+                   p99: f64,
+                   tok_s: f64| {
+        table.row(vec![
+            format!("{mode_name} ({level})"),
+            n.to_string(),
+            format!("{n}/{n}"),
+            run.tokens.to_string(),
+            format!("{p99:.1}"),
+            format!("{tok_s:.1}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(format!("{level}-{mode_name}"))),
+            ("connections", Json::Num(n as f64)),
+            ("tokens", Json::Num(run.tokens as f64)),
+            ("p99_ttft_ms", Json::Num(p99)),
+            ("throughput_tok_s", Json::Num(tok_s)),
+        ]));
+    };
+    let summarize = |run: &fanout::LevelRun| -> (f64, f64) {
+        let ttfts: Vec<f64> = run.outcomes.iter().map(|o| o.ttft_ms).collect();
+        (percentile(&ttfts, 99.0), run.tokens as f64 / run.span_s)
+    };
+    let sigs = |run: &fanout::LevelRun| -> Vec<&str> {
+        run.outcomes.iter().map(|o| o.sig.as_str()).collect()
+    };
+
+    // --- low concurrency: the latency floor must not regress ----------
+    let low_n = 8usize;
+    let low_max_new = args.usize("max-new", 8)?;
+    let t_low = measure(NetMode::Threads, low_n, low_max_new)?;
+    let r_low = measure(NetMode::Reactor, low_n, low_max_new)?;
+    assert_eq!(
+        sigs(&t_low),
+        sigs(&r_low),
+        "low concurrency: transports must produce bit-identical token streams"
+    );
+    let (t_p99, t_tok) = summarize(&t_low);
+    let (r_p99, r_tok) = summarize(&r_low);
+    row(&mut table, &mut json_rows, "low", "threads", low_n, &t_low, t_p99, t_tok);
+    row(&mut table, &mut json_rows, "low", "reactor", low_n, &r_low, r_p99, r_tok);
+    assert!(
+        r_p99 <= t_p99 * 1.5 + 25.0,
+        "low concurrency: reactor p99 TTFT {r_p99:.1} ms regressed past threads {t_p99:.1} ms"
+    );
+    assert!(
+        r_tok >= 0.7 * t_tok,
+        "low concurrency: reactor {r_tok:.1} tok/s fell below 0.7x threads {t_tok:.1} tok/s"
+    );
+
+    // --- high concurrency: 1k+ streams, one I/O thread ----------------
+    // best of two attempts: the strict ordering gate is the acceptance
+    // criterion, but one OS-scheduler hiccup shouldn't flake CI
+    let high_max_new = args.usize("stream-max-new", 2)?.max(1);
+    for attempt in 0..2 {
+        let t_high = measure(NetMode::Threads, high_n, high_max_new)?;
+        let r_high = measure(NetMode::Reactor, high_n, high_max_new)?;
+        assert_eq!(
+            sigs(&t_high),
+            sigs(&r_high),
+            "high concurrency: transports must produce bit-identical token streams"
+        );
+        let (tp, tt) = summarize(&t_high);
+        let (rp, rt) = summarize(&r_high);
+        let ordered = rp < tp && rt >= 0.95 * tt;
+        if ordered || attempt == 1 {
+            let lvl = format!("high{}", if attempt > 0 { "-retry" } else { "" });
+            row(&mut table, &mut json_rows, &lvl, "threads", high_n, &t_high, tp, tt);
+            row(&mut table, &mut json_rows, &lvl, "reactor", high_n, &r_high, rp, rt);
+            assert!(
+                rp < tp,
+                "high concurrency ({high_n} conns): reactor p99 TTFT {rp:.1} ms must be \
+                 strictly below threads {tp:.1} ms"
+            );
+            assert!(
+                rt >= 0.95 * tt,
+                "high concurrency ({high_n} conns): reactor {rt:.1} tok/s fell below \
+                 0.95x threads {tt:.1} tok/s"
+            );
+            break;
+        }
+        eprintln!("[bench] high-concurrency ordering gate missed on attempt 1; retrying once");
+    }
+    handle.shutdown();
+    table.print();
+    println!(
+        "\nshape: one epoll thread holds {high_n} streams that thread-per-connection \
+         pays for in stacks and wakeups"
+    );
+
+    // merge next to the other sections rather than clobbering them
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert("connections".to_string(), Json::Arr(json_rows));
+    common::write_results("BENCH_serving", Json::Obj(fields));
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn connections(_args: &chai::util::args::Args, _base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    eprintln!("[bench] --connections exercises the epoll reactor (Linux-only); skipping");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
@@ -499,6 +881,9 @@ fn main() -> anyhow::Result<()> {
     }
     if args.bool("replicas") {
         return replicas(&args, &base_cfg);
+    }
+    if args.bool("connections") {
+        return connections(&args, &base_cfg);
     }
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;

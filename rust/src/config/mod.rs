@@ -239,6 +239,16 @@ pub struct ServingConfig {
     /// "least-loaded" by pending+live+preempted population, or
     /// "prefix" affinity by the prompt's KV hash-chain fingerprint
     pub route: String,
+    /// streaming front-end transport (`--net`): "threads" spawns one
+    /// I/O thread per connection; "reactor" (Linux) multiplexes every
+    /// connection on one epoll thread with lock-free rings on the
+    /// request and token-frame hot paths
+    pub net: String,
+    /// capacity of each coordinator's bounded submission inbox
+    /// (`--net-inbox`); a submission that finds it full is shed with a
+    /// terminal `{"error":"overloaded"}` line instead of queueing
+    /// without bound
+    pub net_inbox: usize,
 }
 
 impl Default for ServingConfig {
@@ -261,6 +271,8 @@ impl Default for ServingConfig {
             recompute_max_tokens: 16,
             replicas: 1,
             route: "rr".into(),
+            net: "threads".into(),
+            net_inbox: 4096,
         }
     }
 }

@@ -19,15 +19,29 @@
 //! ([`crate::engine::Engine::decode_tick`]), and (with `--preempt`)
 //! preempt-and-requeue of live sessions under overload.
 //!
+//! The submission inbox is a **bounded lock-free MPSC ring**
+//! ([`crate::net::ring::Mpsc`]): server/router/reactor threads push
+//! without taking any lock on the hot path, and backpressure is
+//! explicit — a full inbox sheds the request with a terminal
+//! `{"error": "overloaded"}` response instead of queueing without
+//! bound (`net_shed_overloaded` counts the sheds, `net_inbox_hwm`
+//! tracks the deepest occupancy). Only the cold paths (cancel
+//! requests, the idle-park condvar, shutdown) still go through a
+//! mutex.
+//!
 //! Shutdown never strands a client: once [`CoordinatorHandle::shutdown`]
 //! (or drop) is requested, every request still pending, live, or
 //! preempted receives a terminal `{"error": "shutting down"}` response,
 //! and later submissions are refused with the same error instead of
-//! queueing into a loop that will never serve them.
+//! queueing into a loop that will never serve them. A `submitting`
+//! quiescence gate (incremented for the duration of every push) lets
+//! the engine thread wait out in-flight submissions before its final
+//! inbox drain, so a request can never slip into the ring after the
+//! last pop and hang its client.
 
-pub use crate::scheduler::{Request, Response, StreamFrame, SubmitOpts};
+pub use crate::scheduler::{FrameSink, Request, RespSink, Response, StreamFrame, SubmitOpts};
 
-use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -37,6 +51,7 @@ use anyhow::Result;
 use crate::config::ServingConfig;
 use crate::engine::{Engine, Variant};
 use crate::metrics::Metrics;
+use crate::net::ring::Mpsc;
 use crate::scheduler::{SchedPolicy, Scheduler};
 use crate::util::now_ms;
 
@@ -46,15 +61,35 @@ use crate::util::now_ms;
 /// once.
 pub type EngineFactory = Box<dyn FnOnce() -> Result<Engine> + Send + 'static>;
 
-#[derive(Default)]
 struct Shared {
+    /// lock-free bounded submission inbox (the request hot path):
+    /// front-end threads push, the engine thread pops
+    inbox: Mpsc<Request>,
+    /// submitters currently between their shutdown check and the end of
+    /// their push — the engine's final drain waits for this to hit 0
+    submitting: AtomicUsize,
+    /// fast-path mirror of `QueueState::shutdown` (checked by `submit`
+    /// without taking the mutex)
+    shutdown: AtomicBool,
+    /// cold-path state only: cancels + the condvar the engine parks on
     queue: Mutex<QueueState>,
     cv: Condvar,
 }
 
+impl Shared {
+    fn new(inbox_capacity: usize) -> Shared {
+        Shared {
+            inbox: Mpsc::new(inbox_capacity.max(1)),
+            submitting: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            queue: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
 #[derive(Default)]
 struct QueueState {
-    waiting: VecDeque<Request>,
     /// request ids whose abort was requested but not yet applied
     cancels: Vec<u64>,
     shutdown: bool,
@@ -83,7 +118,7 @@ impl Coordinator {
     /// Spawn the engine thread around a caller-supplied engine factory
     /// (executed on the engine thread, since backends are not `Send`).
     pub fn start_with(cfg: ServingConfig, make_engine: EngineFactory) -> Result<CoordinatorHandle> {
-        let shared = Arc::new(Shared::default());
+        let shared = Arc::new(Shared::new(cfg.net_inbox));
         let metrics = Arc::new(Metrics::new());
         let coord = Coordinator {
             shared: shared.clone(),
@@ -100,11 +135,15 @@ impl Coordinator {
                     Err(e) => {
                         eprintln!("[engine] failed to load: {e:#}");
                         // refuse current and future requests (submit
-                        // checks the shutdown flag)
-                        let mut g = thread_shared.queue.lock().unwrap();
-                        g.shutdown = true;
-                        while let Some(r) = g.waiting.pop_front() {
-                            let _ = r.resp_tx.send(Response::error(r.id, format!("{e:#}")));
+                        // checks the shutdown flag), then wait out any
+                        // in-flight pushes and fail what they queued
+                        thread_shared.shutdown.store(true, Ordering::SeqCst);
+                        thread_shared.queue.lock().unwrap().shutdown = true;
+                        while thread_shared.submitting.load(Ordering::SeqCst) != 0 {
+                            std::thread::yield_now();
+                        }
+                        while let Some(r) = thread_shared.inbox.pop() {
+                            r.resp_tx.send(Response::error(r.id, format!("{e:#}")));
                         }
                     }
                 }
@@ -119,13 +158,24 @@ impl Coordinator {
 
     /// Submit with full options (streaming channel); assigns the id.
     pub fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            *g += 1;
-            *g
-        };
+        let id = self.alloc_id();
         let rx = self.submit_with_id(id, opts);
         (id, rx)
+    }
+
+    /// Submit with a caller-supplied response sink (the reactor path:
+    /// no channel allocation, the terminal lands in the request's event
+    /// ring); assigns and returns the id.
+    pub fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64 {
+        let id = self.alloc_id();
+        self.submit_request(id, opts, resp);
+        id
+    }
+
+    fn alloc_id(&self) -> u64 {
+        let mut g = self.next_id.lock().unwrap();
+        *g += 1;
+        *g
     }
 
     /// Submit under a caller-assigned id (the router owns the id space
@@ -133,24 +183,51 @@ impl Coordinator {
     /// is refused with a terminal error instead of queueing forever.
     pub fn submit_with_id(&self, id: u64, opts: SubmitOpts) -> Receiver<Response> {
         let (tx, rx) = channel();
+        self.submit_request(id, opts, tx.into());
+        rx
+    }
+
+    /// The one true submission path: lock-free push into the bounded
+    /// inbox ring. A full ring sheds the request right here with a
+    /// terminal `{"error": "overloaded"}` — nothing was admitted, so
+    /// there is no session state to unwind — and a stopped coordinator
+    /// refuses with `"shutting down"`. The `submitting` gate brackets
+    /// the shutdown check *and* the push so the engine's final drain
+    /// can wait out every in-flight submission (see [`engine_loop`]).
+    pub fn submit_request(&self, id: u64, opts: SubmitOpts, resp_tx: RespSink) {
         let req = Request {
             id,
             prompt: opts.prompt,
             max_new: opts.max_new,
             variant: opts.variant,
             submitted_ms: now_ms(),
-            resp_tx: tx,
+            resp_tx,
             stream: opts.stream,
         };
-        let mut g = self.shared.queue.lock().unwrap();
-        if g.shutdown {
-            let _ = req.resp_tx.send(Response::error(id, "shutting down".into()));
-            return rx;
+        let sh = &*self.shared;
+        sh.submitting.fetch_add(1, Ordering::SeqCst);
+        if sh.shutdown.load(Ordering::SeqCst) {
+            sh.submitting.fetch_sub(1, Ordering::SeqCst);
+            req.resp_tx.send(Response::error(id, "shutting down".into()));
+            return;
         }
-        self.metrics.inc("submitted");
-        g.waiting.push_back(req);
-        self.shared.cv.notify_one();
-        rx
+        match sh.inbox.push(req) {
+            Ok(()) => {
+                sh.submitting.fetch_sub(1, Ordering::SeqCst);
+                self.metrics.inc("submitted");
+                // lock-then-notify pairs with the engine's predicate
+                // check under the same mutex: the engine either sees
+                // the push before parking or is parked and gets the
+                // notify — a wakeup can never fall between the two
+                drop(sh.queue.lock().unwrap());
+                sh.cv.notify_one();
+            }
+            Err(req) => {
+                sh.submitting.fetch_sub(1, Ordering::SeqCst);
+                self.metrics.inc("net_shed_overloaded");
+                req.resp_tx.send(Response::error(id, "overloaded".into()));
+            }
+        }
     }
 
     /// Request an abort of request `id` (async: the engine applies it
@@ -169,7 +246,7 @@ impl Coordinator {
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().waiting.len()
+        self.shared.inbox.len()
     }
 
     /// Scheduling load of this replica for the router's least-loaded
@@ -183,6 +260,9 @@ impl Coordinator {
     }
 
     fn request_shutdown(&self) {
+        // atomic first: any submitter that misses it and pushes anyway
+        // is covered by the quiescence gate in the engine's final drain
+        self.shared.shutdown.store(true, Ordering::SeqCst);
         let mut g = self.shared.queue.lock().unwrap();
         g.shutdown = true;
         self.shared.cv.notify_all();
@@ -207,47 +287,63 @@ impl Drop for CoordinatorHandle {
     }
 }
 
-/// The thin engine loop: drain the inbox (requests + cancels), tick the
-/// scheduler, repeat. Blocks on the condvar when there is nothing
-/// pending, live, or preempted. On shutdown every request still held
-/// anywhere in the pipeline is answered with a terminal error — a
-/// client may never be left blocked on a channel whose sender quietly
-/// died.
+/// The thin engine loop: drain the inbox ring (requests) and the
+/// cold-path cancel list, tick the scheduler, repeat. Blocks on the
+/// condvar when there is nothing pending, live, or preempted — the
+/// inbox is checked inside the wait predicate (under the mutex the
+/// producers' lock-then-notify pairs with), so a push can never slip
+/// between the idle check and the park. On shutdown every request
+/// still held anywhere in the pipeline is answered with a terminal
+/// error — a client may never be left blocked on a channel whose
+/// sender quietly died; the `submitting` gate guarantees the final
+/// drain sees every push that beat the shutdown flag.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
     // surface which compute backend this engine serves with (the server's
     // `stats` command and benches read these back)
     metrics.set_info("backend", engine.backend_name());
     metrics.set_info("model", &engine.manifest().model.name);
+    metrics.set_gauge("net_inbox_capacity", shared.inbox.capacity() as f64);
     let mut sched = Scheduler::new(SchedPolicy::from_config(cfg));
     let mut cancels: Vec<u64> = Vec::new();
-    loop {
+    let mut stopping = false;
+    while !stopping {
         {
             let mut g = shared.queue.lock().unwrap();
-            if sched.is_idle() && g.waiting.is_empty() && g.cancels.is_empty() {
-                if g.shutdown {
-                    return;
+            if sched.is_idle() && shared.inbox.is_empty() && g.cancels.is_empty() {
+                if !g.shutdown {
+                    // idle: block until work arrives
+                    g = shared
+                        .cv
+                        .wait_while(g, |q| {
+                            shared.inbox.is_empty() && q.cancels.is_empty() && !q.shutdown
+                        })
+                        .unwrap();
                 }
-                // idle: block until work arrives
-                g = shared
-                    .cv
-                    .wait_while(g, |q| {
-                        q.waiting.is_empty() && q.cancels.is_empty() && !q.shutdown
-                    })
-                    .unwrap();
-            }
-            while let Some(r) = g.waiting.pop_front() {
-                sched.submit(r);
             }
             cancels.append(&mut g.cancels);
-            if g.shutdown {
-                break;
-            }
+            stopping = g.shutdown;
+        }
+        while let Some(r) = shared.inbox.pop() {
+            sched.submit(r);
+        }
+        if stopping {
+            break;
         }
         for id in cancels.drain(..) {
             sched.cancel(id, engine, metrics);
         }
         sched.run_tick(engine, metrics);
+        metrics.set_gauge("net_inbox_depth", shared.inbox.len() as f64);
+        metrics.set_gauge("net_inbox_hwm", shared.inbox.high_water() as f64);
     }
-    // shutdown: answer everything still in flight, then exit
+    // shutdown: wait out submitters that passed the shutdown check
+    // before the flag landed (they are mid-push right now), take what
+    // they queued, then answer everything still in flight
+    while shared.submitting.load(Ordering::SeqCst) != 0 {
+        std::thread::yield_now();
+    }
+    while let Some(r) = shared.inbox.pop() {
+        sched.submit(r);
+    }
     sched.fail_all(engine, metrics, "shutting down");
 }

@@ -34,7 +34,10 @@
 //!   shared copy of the model weights, a global request-id space, and
 //!   broadcast cancellation; [`server`] exposes either a single
 //!   coordinator or the router over a TCP line-JSON protocol with
-//!   per-token streaming and request cancellation.
+//!   per-token streaming and request cancellation, through either a
+//!   thread-per-connection transport or [`net`]'s single-thread epoll
+//!   reactor with lock-free ring buffers on the request and token-frame
+//!   hot paths (`--net threads|reactor`).
 //! * [`util`] contains the substrates the offline build needs (JSON,
 //!   PRNG, CLI args, stats, a property-testing harness) — the crates.io
 //!   mirror in this environment only vendors `xla` + `anyhow`.
@@ -49,6 +52,7 @@ pub mod eval;
 pub mod kv;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

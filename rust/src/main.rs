@@ -20,6 +20,10 @@
 //!                                                        # (shared weights), prefix-affinity placement; --route
 //!                                                        # rr|least-loaded|prefix. Streaming: {"stream": true};
 //!                                                        # abort: {"cmd": "cancel", "id": N}
+//!   chai serve --net reactor --net-inbox 4096            # epoll-reactor transport (Linux): ONE I/O thread multiplexes
+//!                                                        # all streaming connections; bounded submission inbox sheds
+//!                                                        # with {"error":"overloaded"} when full. --net threads (default)
+//!                                                        # keeps the thread-per-connection transport
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -77,6 +81,12 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // rr|least-loaded|prefix
         replicas: args.usize("replicas", 1)?,
         route: args.str("route", "rr"),
+        // streaming front-end transport: --net threads (default,
+        // portable) or --net reactor (Linux, single epoll I/O thread);
+        // --net-inbox bounds each coordinator's submission ring (full
+        // inbox = shed with a terminal {"error":"overloaded"} line)
+        net: args.str("net", "threads"),
+        net_inbox: args.usize("net-inbox", 4096)?,
     })
 }
 
@@ -102,14 +112,16 @@ fn main() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serving_config(args)?;
     let bind = args.str("bind", "127.0.0.1:7777");
+    let net_mode = chai::net::NetMode::parse(&cfg.net)?;
     let (replicas, route) = (cfg.replicas.max(1), cfg.route.clone());
     // the router front-end serves any replica count; a single replica
     // still gets streaming + cancellation with no placement overhead
     let handle = Router::start(cfg)?;
-    let server = Server::start(handle.router.clone(), &bind)?;
+    let server = Server::start_with(handle.router.clone(), &bind, net_mode)?;
     println!(
-        "chai serving on {} ({replicas} replica(s), route policy {route})",
-        server.addr
+        "chai serving on {} ({replicas} replica(s), route policy {route}, net {})",
+        server.addr,
+        net_mode.name()
     );
     println!("protocol: one JSON per line, e.g. {{\"prompt\": \"the color of tom is\", \"variant\": \"chai\"}}");
     println!("          streaming: add \"stream\": true; abort with {{\"cmd\": \"cancel\", \"id\": N}}");

@@ -1,0 +1,315 @@
+//! Event-driven net subsystem: lock-free rings + a single-thread epoll
+//! reactor for the streaming front end.
+//!
+//! Two transports serve the same line-JSON protocol (`crate::server`):
+//!
+//! * **threads** (`--net threads`, default, portable) — one OS thread
+//!   per connection, blocking I/O with an idle-poll read timeout.
+//! * **reactor** (`--net reactor`, Linux) — ONE I/O thread multiplexes
+//!   every connection through raw epoll ([`sys`]): non-blocking
+//!   accept/read/write, per-connection line-framing state machines, and
+//!   write-interest toggling for token fan-out ([`reactor`]).
+//!
+//! The reactor never blocks on the engine: each request carries a
+//! bounded [`ring::Spsc`] of [`NetEvent`]s (serialized frame/terminal
+//! lines) that the engine thread fills and the reactor drains, and a
+//! shared [`ReadyQueue`] ([`ring::Mpsc`] + eventfd) tells the reactor
+//! *which* connections have events pending. Backpressure is explicit
+//! end to end: the coordinator's submission inbox is a bounded
+//! [`ring::Mpsc`] that sheds-on-full with a terminal
+//! `{"error":"overloaded"}` line, per-request event rings are sized so
+//! every frame plus the terminal always fits, and a slow reader only
+//! grows (and eventually kills) its own connection's write buffer —
+//! never another session's.
+//!
+//! Everything reactor-specific is `cfg(target_os = "linux")`; the rings,
+//! [`NetMode`], and [`NetStats`] are portable (the threaded transport
+//! reports through the same `net_*` stats surface).
+
+pub mod ring;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
+#[cfg(target_os = "linux")]
+pub mod sys;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Streaming front-end transport (`--net`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetMode {
+    /// one OS thread per connection (portable baseline)
+    Threads,
+    /// single epoll I/O thread for all connections (Linux)
+    #[cfg(target_os = "linux")]
+    Reactor,
+}
+
+impl NetMode {
+    pub fn parse(s: &str) -> Result<NetMode> {
+        match s {
+            "threads" | "thread" => Ok(NetMode::Threads),
+            #[cfg(target_os = "linux")]
+            "reactor" | "epoll" => Ok(NetMode::Reactor),
+            #[cfg(not(target_os = "linux"))]
+            "reactor" | "epoll" => bail!("--net reactor requires Linux (epoll)"),
+            other => bail!("unknown net mode {other:?} (threads|reactor)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetMode::Threads => "threads",
+            #[cfg(target_os = "linux")]
+            NetMode::Reactor => "reactor",
+        }
+    }
+}
+
+/// Transport counters for the `net` section of `{"cmd":"stats"}`,
+/// shared by both transports (fields a transport does not exercise stay
+/// zero). Plain atomics — these sit on I/O hot paths.
+#[derive(Default)]
+pub struct NetStats {
+    /// connections accepted over the server's lifetime
+    pub accepted: AtomicU64,
+    /// complete request lines parsed off sockets
+    pub lines_in: AtomicU64,
+    /// response lines written (frames + terminals + command replies)
+    pub lines_out: AtomicU64,
+    /// threaded transport: read-timeout wakeups with no data (the
+    /// busy-wake regression gauge)
+    pub idle_wakeups: AtomicU64,
+    /// reactor transport: epoll_wait returns
+    pub reactor_wakeups: AtomicU64,
+    /// high-water mark of the ready-connection ring
+    pub ready_ring_hwm: AtomicU64,
+    /// high-water mark across all per-request event rings
+    pub frame_ring_hwm: AtomicU64,
+    /// connections killed because a slow reader grew its write buffer
+    /// past the cap (the reader only ever kills itself)
+    pub conn_buffer_kills: AtomicU64,
+    /// terminal events that found their (correctly-sized) ring full —
+    /// always 0 unless an invariant broke
+    pub lost_terminals: AtomicU64,
+}
+
+impl NetStats {
+    /// Monotonic max update (relaxed; these are observability gauges).
+    pub fn record_hwm(cell: &AtomicU64, v: u64) {
+        cell.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// The `net` section: every counter under a `net_` key so the
+    /// router's `sum_json_objects` rollup can sum them numerically.
+    pub fn to_json(&self, active: usize, transport: &str) -> Json {
+        let n = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("net_transport", Json::Str(transport.into())),
+            ("net_active_connections", Json::Num(active as f64)),
+            ("net_accepted_total", n(&self.accepted)),
+            ("net_lines_in", n(&self.lines_in)),
+            ("net_lines_out", n(&self.lines_out)),
+            ("net_idle_wakeups", n(&self.idle_wakeups)),
+            ("net_reactor_wakeups", n(&self.reactor_wakeups)),
+            ("net_ready_ring_hwm", n(&self.ready_ring_hwm)),
+            ("net_frame_ring_hwm", n(&self.frame_ring_hwm)),
+            ("net_conn_buffer_kills", n(&self.conn_buffer_kills)),
+            ("net_lost_terminals", n(&self.lost_terminals)),
+        ])
+    }
+}
+
+/// One serialized response line bound for a connection (already JSON,
+/// no trailing newline). Terminal events end their request's
+/// subscription on the connection.
+#[cfg(target_os = "linux")]
+pub struct NetEvent {
+    pub line: String,
+    pub terminal: bool,
+}
+
+/// Default capacity of the [`ReadyQueue`] id ring. Overflow is safe
+/// (it degrades one reactor pass to a full-connection scan), so this
+/// only needs to cover the common case of distinct connections with
+/// pending events between two reactor passes.
+#[cfg(target_os = "linux")]
+pub const READY_RING_CAPACITY: usize = 4096;
+
+/// Wakes the reactor and tells it *which* connections have pending
+/// events: a bounded [`ring::Mpsc`] of connection ids (many engine
+/// threads push, the reactor pops) plus an eventfd registered in the
+/// reactor's epoll set. If the id ring ever fills, `scan_all` degrades
+/// one reactor pass to checking every connection — wakeups may coalesce
+/// but are never lost.
+#[cfg(target_os = "linux")]
+pub struct ReadyQueue {
+    ids: ring::Mpsc<u64>,
+    scan_all: std::sync::atomic::AtomicBool,
+    efd: sys::EventFd,
+    stats: std::sync::Arc<NetStats>,
+}
+
+#[cfg(target_os = "linux")]
+impl ReadyQueue {
+    pub fn new(capacity: usize, stats: std::sync::Arc<NetStats>) -> std::io::Result<ReadyQueue> {
+        Ok(ReadyQueue {
+            ids: ring::Mpsc::new(capacity),
+            scan_all: std::sync::atomic::AtomicBool::new(false),
+            efd: sys::EventFd::new()?,
+            stats,
+        })
+    }
+
+    /// Mark connection `conn` as having pending events and wake the
+    /// reactor. Ring push happens-before the eventfd write, so a wakeup
+    /// always finds its id (or the scan_all fallback) visible.
+    pub fn notify(&self, conn: u64) {
+        if self.ids.push(conn).is_err() {
+            self.scan_all.store(true, Ordering::Release);
+        }
+        NetStats::record_hwm(&self.stats.ready_ring_hwm, self.ids.high_water() as u64);
+        self.efd.wake();
+    }
+
+    /// Bare wakeup with no connection attached (stop requests).
+    pub fn wake(&self) {
+        self.efd.wake();
+    }
+
+    pub fn raw_fd(&self) -> std::os::unix::io::RawFd {
+        self.efd.raw_fd()
+    }
+
+    /// Drain the eventfd and collect pending connection ids into `out`
+    /// (reactor thread only). Returns `true` when the id ring
+    /// overflowed since the last drain — the caller must then check
+    /// every connection.
+    pub fn drain(&self, out: &mut Vec<u64>) -> bool {
+        self.efd.drain();
+        while let Some(id) = self.ids.pop() {
+            out.push(id);
+        }
+        self.scan_all.swap(false, Ordering::Acquire)
+    }
+}
+
+/// The engine-side handle of one request's event ring: the scheduler's
+/// response/frame sinks serialize into it and nudge the [`ReadyQueue`].
+/// Cloned once when a request streams (frame sink + response sink share
+/// the ring, and both live on the same engine thread, preserving the
+/// SPSC contract; a submission-refusal terminal is pushed by the
+/// submitting thread *before* the request could ever reach an engine,
+/// so the single-producer discipline holds there too).
+#[cfg(target_os = "linux")]
+#[derive(Clone)]
+pub struct NetSink {
+    conn: u64,
+    ring: std::sync::Arc<ring::Spsc<NetEvent>>,
+    ready: std::sync::Arc<ReadyQueue>,
+    stats: std::sync::Arc<NetStats>,
+}
+
+#[cfg(target_os = "linux")]
+impl NetSink {
+    pub fn new(
+        conn: u64,
+        ring: std::sync::Arc<ring::Spsc<NetEvent>>,
+        ready: std::sync::Arc<ReadyQueue>,
+        stats: std::sync::Arc<NetStats>,
+    ) -> NetSink {
+        NetSink { conn, ring, ready, stats }
+    }
+
+    /// Ring a per-request event ring must have so `max_new` frames plus
+    /// one terminal can never shed.
+    pub fn ring_capacity(max_new: usize) -> usize {
+        (max_new + 2).next_power_of_two()
+    }
+
+    /// Queue one frame line; `false` means the ring was momentarily
+    /// full and the caller should retry on its next tick.
+    pub fn send_frame(&self, f: &crate::scheduler::StreamFrame) -> bool {
+        let line = crate::server::frame_json(f).to_string();
+        let ok = self.ring.push(NetEvent { line, terminal: false }).is_ok();
+        if ok {
+            NetStats::record_hwm(&self.stats.frame_ring_hwm, self.ring.high_water() as u64);
+            self.ready.notify(self.conn);
+        }
+        ok
+    }
+
+    /// Queue the terminal response line. Rings are sized so this cannot
+    /// shed; if it ever does, the loss is counted rather than silent.
+    pub fn send_response(&self, r: &crate::scheduler::Response) {
+        let line = crate::server::response_json(r).to_string();
+        if self.ring.push(NetEvent { line, terminal: true }).is_err() {
+            self.stats.lost_terminals.fetch_add(1, Ordering::Relaxed);
+        }
+        NetStats::record_hwm(&self.stats.frame_ring_hwm, self.ring.high_water() as u64);
+        self.ready.notify(self.conn);
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl std::fmt::Debug for NetSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NetSink(conn {})", self.conn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_mode_parses() {
+        assert_eq!(NetMode::parse("threads").unwrap(), NetMode::Threads);
+        #[cfg(target_os = "linux")]
+        assert_eq!(NetMode::parse("reactor").unwrap(), NetMode::Reactor);
+        assert!(NetMode::parse("uring").is_err());
+    }
+
+    #[test]
+    fn stats_json_uses_net_prefixed_keys() {
+        let s = NetStats::default();
+        s.accepted.fetch_add(3, Ordering::Relaxed);
+        let j = s.to_json(2, "threads");
+        assert_eq!(j.get("net_transport").unwrap().str().unwrap(), "threads");
+        assert_eq!(j.get("net_active_connections").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("net_accepted_total").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("net_lost_terminals").unwrap().usize().unwrap(), 0);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn ready_queue_collects_ids_and_degrades_to_scan_all() {
+        let stats = std::sync::Arc::new(NetStats::default());
+        let rq = ReadyQueue::new(4, stats.clone()).unwrap();
+        rq.notify(7);
+        rq.notify(9);
+        let mut ids = Vec::new();
+        assert!(!rq.drain(&mut ids));
+        assert_eq!(ids, vec![7, 9]);
+        // overflow the id ring: wakeups coalesce into a full scan
+        for i in 0..10 {
+            rq.notify(i);
+        }
+        ids.clear();
+        assert!(rq.drain(&mut ids), "overflow must force a full scan");
+        assert_eq!(ids.len(), 4, "ring kept its capacity worth of ids");
+        assert!(stats.ready_ring_hwm.load(Ordering::Relaxed) >= 4);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn sink_ring_capacity_always_fits_frames_plus_terminal() {
+        for max_new in [0usize, 1, 2, 31, 32, 100] {
+            assert!(NetSink::ring_capacity(max_new) >= max_new + 1);
+        }
+    }
+}

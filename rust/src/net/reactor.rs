@@ -1,0 +1,493 @@
+//! Single-thread epoll reactor: every streaming connection multiplexed
+//! on ONE I/O thread.
+//!
+//! ## Event loop
+//!
+//! The reactor owns the listener, an eventfd waker (the engine side of
+//! the [`ReadyQueue`]) and one [`Conn`] per accepted socket, all
+//! registered in a level-triggered epoll set. Each pass:
+//!
+//! 1. `epoll_wait` (1 s timeout — the backstop for the `stop` flag).
+//! 2. Socket events: accept new connections; on readable, pull bytes
+//!    into the connection's line-framing buffer and dispatch every
+//!    complete line; on writable, flush the pending write buffer.
+//! 3. Engine events: drain the [`ReadyQueue`] and copy each named
+//!    connection's pending [`NetEvent`] lines (token frames, terminal
+//!    responses — pushed by engine threads through [`NetSink`]s) into
+//!    its write buffer.
+//! 4. Write-interest toggling: `EPOLLOUT` is registered only while a
+//!    connection has unflushed bytes, so a mostly-drained fan-out never
+//!    spins the loop.
+//!
+//! ## Connection states
+//!
+//! A connection is **open** (reading + dispatching), **closing**
+//! (protocol violation: flush the error line, then die), or **dead**
+//! (reaped at the end of the pass: in-flight requests cancelled on the
+//! engine, fd deregistered). A slow reader grows only its own write
+//! buffer; past [`MAX_WBUF_BYTES`] the connection is killed
+//! (`net_conn_buffer_kills`) — it can never delay another session,
+//! because per-request rings and the write buffers are per-connection
+//! and the engine never blocks on either.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::net::ring::Spsc;
+use crate::net::sys::{Epoll, EpollEvent, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use crate::net::{NetEvent, NetSink, NetStats, ReadyQueue};
+use crate::router::Frontend;
+use crate::scheduler::{FrameSink, RespSink, SubmitOpts};
+use crate::server::{self, NetView, MAX_LINE_BYTES};
+use crate::util::json::Json;
+
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+/// Kill a connection whose unread replies exceed this (slow reader
+/// with unbounded fan-out); its own sessions are cancelled, nobody
+/// else's are touched.
+const MAX_WBUF_BYTES: usize = 16 << 20;
+/// Bytes per read(2) into the line-framing buffer.
+const READ_CHUNK: usize = 16 << 10;
+/// Epoll events drained per wait (level-triggered: leftovers re-arm).
+const EVENTS_PER_WAIT: usize = 256;
+/// epoll_wait timeout — backstop for observing `stop` even if the
+/// waker write were ever lost.
+const WAIT_MS: i32 = 1000;
+
+/// One in-flight request submitted from a connection: the reactor end
+/// of its event ring.
+struct Sub {
+    id: u64,
+    ring: Arc<Spsc<NetEvent>>,
+    done: bool,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// line-framing read buffer (bytes up to `scanned` hold no newline)
+    rbuf: Vec<u8>,
+    scanned: usize,
+    /// serialized reply bytes not yet accepted by the socket
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// whether EPOLLOUT is currently registered for this fd
+    registered_write: bool,
+    /// flush remaining wbuf, then die (unrecoverable protocol error)
+    closing: bool,
+    dead: bool,
+    subs: Vec<Sub>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            scanned: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            registered_write: false,
+            closing: false,
+            dead: false,
+            subs: Vec::new(),
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Register the listener + waker on the CALLING thread (so setup errors
+/// surface as a `Result` from `Server::start_with`), then hand the
+/// epoll set to the reactor thread.
+pub(crate) fn spawn<F: Frontend>(
+    listener: TcpListener,
+    api: F,
+    stop: Arc<AtomicBool>,
+    ready: Arc<ReadyQueue>,
+    net: Arc<NetStats>,
+    active: Arc<AtomicUsize>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    let ep = Epoll::new()?;
+    ep.add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+    ep.add(ready.raw_fd(), EPOLLIN, TOKEN_WAKER)?;
+    std::thread::Builder::new()
+        .name("chai-reactor".into())
+        .spawn(move || run(&ep, &listener, &api, &stop, &ready, &net, &active))
+}
+
+fn run<F: Frontend>(
+    ep: &Epoll,
+    listener: &TcpListener,
+    api: &F,
+    stop: &AtomicBool,
+    ready: &Arc<ReadyQueue>,
+    net: &Arc<NetStats>,
+    active: &Arc<AtomicUsize>,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];
+    let mut ready_ids: Vec<u64> = Vec::new();
+    loop {
+        let n = match ep.wait(&mut events, WAIT_MS) {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        net.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        for ev in events.iter().take(n) {
+            let (token, flags) = (ev.token(), ev.events());
+            match token {
+                TOKEN_LISTENER => {
+                    accept_all(ep, listener, &mut conns, &mut next_id, net, active)
+                }
+                TOKEN_WAKER => {} // drained below, once per pass
+                id => {
+                    if let Some(c) = conns.get_mut(&id) {
+                        if flags & (EPOLLERR | EPOLLHUP) != 0 {
+                            c.dead = true;
+                        } else {
+                            if flags & EPOLLOUT != 0 {
+                                flush_conn(c);
+                            }
+                            if flags & (EPOLLIN | EPOLLRDHUP) != 0 {
+                                read_conn(api, ready, net, active, id, c);
+                            }
+                            flush_and_toggle(ep, id, c);
+                        }
+                    }
+                }
+            }
+        }
+        // engine events: copy pending frames/terminals into write
+        // buffers. The ring push happens-before the eventfd write, so
+        // every notify lands either in this drain or the next wakeup.
+        ready_ids.clear();
+        let scan_all = ready.drain(&mut ready_ids);
+        if scan_all {
+            // id ring overflowed: one coalesced pass over everything
+            for (id, c) in conns.iter_mut() {
+                drain_subs(c, net);
+                flush_and_toggle(ep, *id, c);
+            }
+        } else {
+            for id in &ready_ids {
+                if let Some(c) = conns.get_mut(id) {
+                    drain_subs(c, net);
+                    flush_and_toggle(ep, *id, c);
+                }
+            }
+        }
+        // reap: cancel whatever a dead connection still had in flight
+        // (the engine reclaims its blocks; terminals land in rings we
+        // drop here), deregister, forget
+        conns.retain(|_, c| {
+            if c.dead {
+                for s in &c.subs {
+                    if !s.done {
+                        api.cancel(s.id);
+                    }
+                }
+                let _ = ep.del(c.stream.as_raw_fd());
+                active.fetch_sub(1, Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    // stopping: abort every in-flight request so the engine reclaims
+    // their sessions, then drop all sockets (clients see EOF)
+    for c in conns.values() {
+        for s in &c.subs {
+            if !s.done {
+                api.cancel(s.id);
+            }
+        }
+    }
+    active.fetch_sub(conns.len(), Ordering::Relaxed);
+}
+
+fn accept_all(
+    ep: &Epoll,
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_id: &mut u64,
+    net: &NetStats,
+    active: &AtomicUsize,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let id = *next_id;
+                *next_id += 1;
+                if ep.add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, id).is_err() {
+                    continue;
+                }
+                net.accepted.fetch_add(1, Ordering::Relaxed);
+                active.fetch_add(1, Ordering::Relaxed);
+                conns.insert(id, Conn::new(stream));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Non-blocking read until WouldBlock/EOF, dispatching every complete
+/// line as it appears.
+fn read_conn<F: Frontend>(
+    api: &F,
+    ready: &Arc<ReadyQueue>,
+    net: &Arc<NetStats>,
+    active: &Arc<AtomicUsize>,
+    id: u64,
+    c: &mut Conn,
+) {
+    loop {
+        let old = c.rbuf.len();
+        c.rbuf.resize(old + READ_CHUNK, 0);
+        match (&c.stream).read(&mut c.rbuf[old..]) {
+            Ok(0) => {
+                c.rbuf.truncate(old);
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.rbuf.truncate(old + n);
+                process_lines(api, ready, net, active, id, c);
+                if c.dead || c.closing {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                c.rbuf.truncate(old);
+                return;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {
+                c.rbuf.truncate(old);
+            }
+            Err(_) => {
+                c.rbuf.truncate(old);
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Pop complete lines off the read buffer. `scanned` remembers how far
+/// the newline scan got, so a drip-fed client costs amortized O(bytes),
+/// not O(bytes × reads). Enforces the same `MAX_LINE_BYTES` contract as
+/// the threaded transport: over-long lines get an error line and a
+/// close (the stream cannot be resynced mid-line).
+fn process_lines<F: Frontend>(
+    api: &F,
+    ready: &Arc<ReadyQueue>,
+    net: &Arc<NetStats>,
+    active: &Arc<AtomicUsize>,
+    id: u64,
+    c: &mut Conn,
+) {
+    loop {
+        match c.rbuf[c.scanned..].iter().position(|b| *b == b'\n') {
+            Some(off) => {
+                let end = c.scanned + off;
+                if end > MAX_LINE_BYTES {
+                    oversized_line(c, net);
+                    return;
+                }
+                let line = String::from_utf8_lossy(&c.rbuf[..end]).into_owned();
+                c.rbuf.drain(..=end);
+                c.scanned = 0;
+                let trimmed = line.trim();
+                if !trimmed.is_empty() {
+                    net.lines_in.fetch_add(1, Ordering::Relaxed);
+                    handle_line(api, ready, net, active, id, c, trimmed);
+                }
+                if c.dead || c.closing {
+                    return;
+                }
+            }
+            None => {
+                c.scanned = c.rbuf.len();
+                if c.rbuf.len() > MAX_LINE_BYTES {
+                    oversized_line(c, net);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn oversized_line(c: &mut Conn, net: &NetStats) {
+    push_line(
+        c,
+        net,
+        &Json::obj(vec![(
+            "error",
+            Json::Str(format!(
+                "request line exceeds the {MAX_LINE_BYTES} byte protocol limit"
+            )),
+        )]),
+    );
+    c.closing = true;
+}
+
+/// Dispatch one request line. Commands answer inline (the reactor never
+/// blocks, so they interleave with streaming frames); generations
+/// submit to the engine with this connection's [`NetSink`] and return
+/// immediately — replies arrive through the ready queue.
+fn handle_line<F: Frontend>(
+    api: &F,
+    ready: &Arc<ReadyQueue>,
+    net: &Arc<NetStats>,
+    active: &Arc<AtomicUsize>,
+    conn_id: u64,
+    c: &mut Conn,
+    line: &str,
+) {
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            push_error(c, net, &e);
+            return;
+        }
+    };
+    if req.opt("cmd").is_some() {
+        let view = NetView { net, conns: active, transport: "reactor" };
+        let reply = match server::command_json(&req, api, &view) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+        };
+        push_line(c, net, &reply);
+        return;
+    }
+    let stream = match req.opt("stream").map(|v| v.boolean()).transpose() {
+        Ok(s) => s.unwrap_or(false),
+        Err(e) => {
+            push_error(c, net, &e);
+            return;
+        }
+    };
+    let opts = match server::parse_generation(&req) {
+        Ok(o) => o,
+        Err(e) => {
+            push_error(c, net, &e);
+            return;
+        }
+    };
+    // sized so max_new frames + the terminal can never shed
+    let ring = Arc::new(Spsc::new(NetSink::ring_capacity(opts.max_new)));
+    let sink = NetSink::new(conn_id, ring.clone(), ready.clone(), net.clone());
+    let opts = if stream {
+        SubmitOpts { stream: Some(FrameSink::Net(sink.clone())), ..opts }
+    } else {
+        opts
+    };
+    let id = api.submit_sink(opts, RespSink::Net(sink));
+    c.subs.push(Sub { id, ring, done: false });
+}
+
+/// Copy pending engine events (frames, terminals) into the write
+/// buffer; retire finished subscriptions; kill the connection if its
+/// reader has fallen hopelessly behind.
+fn drain_subs(c: &mut Conn, net: &NetStats) {
+    if c.dead {
+        return;
+    }
+    for s in c.subs.iter_mut() {
+        while let Some(ev) = s.ring.pop() {
+            c.wbuf.extend_from_slice(ev.line.as_bytes());
+            c.wbuf.push(b'\n');
+            net.lines_out.fetch_add(1, Ordering::Relaxed);
+            if ev.terminal {
+                s.done = true;
+            }
+        }
+    }
+    c.subs.retain(|s| !s.done);
+    if c.pending_write() > MAX_WBUF_BYTES {
+        net.conn_buffer_kills.fetch_add(1, Ordering::Relaxed);
+        c.dead = true;
+    }
+}
+
+fn push_line(c: &mut Conn, net: &NetStats, j: &Json) {
+    c.wbuf.extend_from_slice(j.to_string().as_bytes());
+    c.wbuf.push(b'\n');
+    net.lines_out.fetch_add(1, Ordering::Relaxed);
+}
+
+fn push_error(c: &mut Conn, net: &NetStats, e: &anyhow::Error) {
+    push_line(c, net, &Json::obj(vec![("error", Json::Str(format!("{e:#}")))]));
+}
+
+/// Write until the socket would block. Compacts the consumed prefix
+/// lazily so steady streaming doesn't memmove on every flush.
+fn flush_conn(c: &mut Conn) {
+    while c.wpos < c.wbuf.len() {
+        match (&c.stream).write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => c.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    } else if c.wpos > (64 << 10) {
+        c.wbuf.drain(..c.wpos);
+        c.wpos = 0;
+    }
+}
+
+/// Flush, then reconcile EPOLLOUT registration with whether bytes
+/// remain: write interest exists only while the write buffer is
+/// non-empty, so an idle fan-out target costs zero wakeups.
+fn flush_and_toggle(ep: &Epoll, id: u64, c: &mut Conn) {
+    if c.dead {
+        return;
+    }
+    flush_conn(c);
+    if c.dead {
+        return;
+    }
+    if c.closing && c.pending_write() == 0 {
+        c.dead = true;
+        return;
+    }
+    let want = c.pending_write() > 0;
+    if want != c.registered_write {
+        let flags = EPOLLIN | EPOLLRDHUP | if want { EPOLLOUT } else { 0 };
+        if ep.modify(c.stream.as_raw_fd(), flags, id).is_ok() {
+            c.registered_write = want;
+        } else {
+            c.dead = true;
+        }
+    }
+}

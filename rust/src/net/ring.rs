@@ -1,0 +1,421 @@
+//! Cache-padded lock-free bounded ring buffers.
+//!
+//! Two shapes, both bounded and shed-on-full (a rejected push returns
+//! the value to the caller instead of blocking or reallocating — the
+//! event-driven front end turns that into an explicit `overloaded`
+//! response rather than letting queues grow without bound):
+//!
+//! * [`Spsc`] — single-producer single-consumer, plain monotonic
+//!   head/tail indices. Used for the per-request event rings (engine
+//!   thread → reactor thread): one producer, one consumer, sized so
+//!   every frame plus the terminal always fits.
+//! * [`Mpsc`] — multi-producer single-consumer bounded queue (Vyukov
+//!   style: a per-slot sequence number arbitrates producers, so a
+//!   stalled producer never blocks the consumer behind a half-written
+//!   slot). Used for the coordinator submission inbox (many server
+//!   threads or the reactor → one engine thread) and the reactor's
+//!   ready-connection queue (many engine threads → one reactor).
+//!
+//! Both rings track a high-water mark and a shed count for the `net_*`
+//! gauges. Capacities round up to a power of two.
+//!
+//! Safety contract (documented, not type-enforced, because both ends
+//! are shared through `Arc`): at most one thread pops at a time; for
+//! [`Spsc`], at most one thread pushes at a time. Producer *handoff* is
+//! fine as long as it is ordered through some other synchronization
+//! (the serving stack hands a request's ring from the submitting thread
+//! to the engine thread through the [`Mpsc`] inbox, which provides that
+//! ordering).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Pad to a cache line so the producer's tail and the consumer's head
+/// never false-share.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// Single-producer single-consumer bounded ring.
+pub struct Spsc<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// pop index (consumer-owned, monotonic)
+    head: CachePadded<AtomicUsize>,
+    /// push index (producer-owned, monotonic)
+    tail: CachePadded<AtomicUsize>,
+    high_water: AtomicUsize,
+    sheds: AtomicUsize,
+}
+
+unsafe impl<T: Send> Send for Spsc<T> {}
+unsafe impl<T: Send> Sync for Spsc<T> {}
+
+impl<T> Spsc<T> {
+    /// `capacity` rounds up to a power of two (min 2).
+    pub fn new(capacity: usize) -> Spsc<T> {
+        let cap = capacity.next_power_of_two().max(2);
+        let buf: Vec<UnsafeCell<MaybeUninit<T>>> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Spsc {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            head: CachePadded(AtomicUsize::new(0)),
+            tail: CachePadded(AtomicUsize::new(0)),
+            high_water: AtomicUsize::new(0),
+            sheds: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Push (single producer); a full ring sheds — the value comes back
+    /// in `Err` so the caller can answer/retry instead of losing it.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        let head = self.head.0.load(Ordering::Acquire);
+        let occ = tail.wrapping_sub(head);
+        if occ == self.capacity() {
+            self.sheds.fetch_add(1, Ordering::Relaxed);
+            return Err(v);
+        }
+        unsafe {
+            (*self.buf[tail & self.mask].get()).write(v);
+        }
+        self.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        self.high_water.fetch_max(occ + 1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Pop (single consumer).
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let v = unsafe { (*self.buf[head & self.mask].get()).assume_init_read() };
+        self.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Some(v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tail
+            .0
+            .load(Ordering::Relaxed)
+            .wrapping_sub(self.head.0.load(Ordering::Relaxed))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Highest occupancy ever observed by a push.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Pushes rejected because the ring was full.
+    pub fn sheds(&self) -> usize {
+        self.sheds.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Drop for Spsc<T> {
+    fn drop(&mut self) {
+        // owned exclusively here: drain so T's destructors run
+        while self.pop().is_some() {}
+    }
+}
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Multi-producer single-consumer bounded ring (Vyukov bounded queue,
+/// with the consumer side simplified to a plain store since only one
+/// thread ever pops).
+pub struct Mpsc<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    /// enqueue cursor (producers race on it with CAS)
+    tail: CachePadded<AtomicUsize>,
+    /// dequeue cursor (consumer-owned)
+    head: CachePadded<AtomicUsize>,
+    high_water: AtomicUsize,
+    sheds: AtomicUsize,
+}
+
+unsafe impl<T: Send> Send for Mpsc<T> {}
+unsafe impl<T: Send> Sync for Mpsc<T> {}
+
+impl<T> Mpsc<T> {
+    /// `capacity` rounds up to a power of two (min 2).
+    pub fn new(capacity: usize) -> Mpsc<T> {
+        let cap = capacity.next_power_of_two().max(2);
+        let buf: Vec<Slot<T>> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        Mpsc {
+            buf: buf.into_boxed_slice(),
+            mask: cap - 1,
+            tail: CachePadded(AtomicUsize::new(0)),
+            head: CachePadded(AtomicUsize::new(0)),
+            high_water: AtomicUsize::new(0),
+            sheds: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Push from any thread; a full ring sheds (`Err` returns the
+    /// value). Lock-free: a producer that loses the CAS race retries
+    /// at the new cursor, never spinning on another producer's slot.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut pos = self.tail.0.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = (seq as isize).wrapping_sub(pos as isize);
+            if dif == 0 {
+                match self.tail.0.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe {
+                            (*slot.val.get()).write(v);
+                        }
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        let occ = pos
+                            .wrapping_add(1)
+                            .wrapping_sub(self.head.0.load(Ordering::Relaxed));
+                        self.high_water.fetch_max(occ.min(self.capacity()), Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                // slot not yet consumed a full lap ago: ring is full
+                self.sheds.fetch_add(1, Ordering::Relaxed);
+                return Err(v);
+            } else {
+                // another producer claimed this slot; advance
+                pos = self.tail.0.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pop (single consumer). Returns `None` when empty OR when the
+    /// producer that claimed the next slot has not finished writing it
+    /// yet — the consumer simply retries on its next pass instead of
+    /// spinning.
+    pub fn pop(&self) -> Option<T> {
+        let pos = self.head.0.load(Ordering::Relaxed);
+        let slot = &self.buf[pos & self.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        let dif = (seq as isize).wrapping_sub(pos.wrapping_add(1) as isize);
+        if dif != 0 {
+            return None;
+        }
+        let v = unsafe { (*slot.val.get()).assume_init_read() };
+        slot.seq
+            .store(pos.wrapping_add(self.capacity()), Ordering::Release);
+        self.head.0.store(pos.wrapping_add(1), Ordering::Relaxed);
+        Some(v)
+    }
+
+    /// Occupancy (approximate under concurrent pushes).
+    pub fn len(&self) -> usize {
+        self.tail
+            .0
+            .load(Ordering::Relaxed)
+            .wrapping_sub(self.head.0.load(Ordering::Relaxed))
+            .min(self.capacity())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Highest occupancy ever observed by a push.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Pushes rejected because the ring was full.
+    pub fn sheds(&self) -> usize {
+        self.sheds.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Drop for Mpsc<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spsc_fifo_and_shed_accounting() {
+        let r: Spsc<u32> = Spsc::new(4);
+        assert_eq!(r.capacity(), 4);
+        for i in 0..4 {
+            assert!(r.push(i).is_ok());
+        }
+        // full: push sheds and hands the value back
+        assert_eq!(r.push(99), Err(99));
+        assert_eq!(r.push(100), Err(100));
+        assert_eq!(r.sheds(), 2);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.high_water(), 4);
+        for i in 0..4 {
+            assert_eq!(r.pop(), Some(i), "FIFO order");
+        }
+        assert_eq!(r.pop(), None);
+        assert!(r.is_empty());
+        // below capacity nothing is ever lost, across the wrap point
+        for lap in 0..10u32 {
+            for i in 0..3 {
+                assert!(r.push(lap * 3 + i).is_ok());
+            }
+            for i in 0..3 {
+                assert_eq!(r.pop(), Some(lap * 3 + i));
+            }
+        }
+        assert_eq!(r.sheds(), 2, "no new sheds below capacity");
+    }
+
+    #[test]
+    fn spsc_concurrent_producer_consumer() {
+        const N: usize = 100_000;
+        let r: Arc<Spsc<usize>> = Arc::new(Spsc::new(64));
+        let p = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for i in 0..N {
+                    let mut v = i;
+                    // bounded ring: spin until the consumer makes room
+                    while let Err(back) = r.push(v) {
+                        v = back;
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        let mut next = 0usize;
+        while next < N {
+            match r.pop() {
+                Some(v) => {
+                    assert_eq!(v, next, "in order, nothing lost");
+                    next += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        p.join().unwrap();
+        assert!(r.is_empty());
+        assert!(r.high_water() <= r.capacity());
+    }
+
+    #[test]
+    fn mpsc_shed_accounting_when_full() {
+        let r: Mpsc<u32> = Mpsc::new(4);
+        for i in 0..4 {
+            assert!(r.push(i).is_ok());
+        }
+        assert_eq!(r.push(9), Err(9));
+        assert_eq!(r.sheds(), 1);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.high_water(), 4);
+        for i in 0..4 {
+            assert_eq!(r.pop(), Some(i));
+        }
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn mpsc_concurrent_producer_stress_preserves_per_producer_order() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 20_000;
+        let r: Arc<Mpsc<(usize, usize)>> = Arc::new(Mpsc::new(128));
+        let handles: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let r = r.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        let mut v = (p, i);
+                        while let Err(back) = r.push(v) {
+                            v = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut got = 0usize;
+        let mut next_per_producer = [0usize; PRODUCERS];
+        while got < PRODUCERS * PER {
+            match r.pop() {
+                Some((p, i)) => {
+                    assert_eq!(
+                        i, next_per_producer[p],
+                        "per-producer FIFO order must hold"
+                    );
+                    next_per_producer[p] += 1;
+                    got += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(r.is_empty());
+        assert_eq!(next_per_producer, [PER; PRODUCERS]);
+    }
+
+    #[test]
+    fn drop_releases_unconsumed_items() {
+        // Arc strong counts observe the queued clones being dropped
+        let token = Arc::new(());
+        {
+            let r: Spsc<Arc<()>> = Spsc::new(8);
+            for _ in 0..5 {
+                r.push(token.clone()).unwrap();
+            }
+            assert_eq!(Arc::strong_count(&token), 6);
+        }
+        assert_eq!(Arc::strong_count(&token), 1, "Spsc drop must run destructors");
+        {
+            let r: Mpsc<Arc<()>> = Mpsc::new(8);
+            for _ in 0..5 {
+                r.push(token.clone()).unwrap();
+            }
+            assert_eq!(Arc::strong_count(&token), 6);
+        }
+        assert_eq!(Arc::strong_count(&token), 1, "Mpsc drop must run destructors");
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(Spsc::<u8>::new(0).capacity(), 2);
+        assert_eq!(Spsc::<u8>::new(3).capacity(), 4);
+        assert_eq!(Mpsc::<u8>::new(5).capacity(), 8);
+        assert_eq!(Mpsc::<u8>::new(1024).capacity(), 1024);
+    }
+}

@@ -1,0 +1,272 @@
+//! Raw Linux epoll/eventfd/rlimit bindings (the vendored mirror has no
+//! `libc` crate, so the handful of syscall wrappers the reactor needs
+//! are declared here directly against glibc — which the binary already
+//! links). Linux-only; the module is `cfg`-gated out elsewhere.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+// O_CLOEXEC / O_NONBLOCK (asm-generic values; x86_64 and aarch64 agree)
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Mirror of the kernel's `struct epoll_event`. Packed on x86_64 only,
+/// matching the UAPI header (`__attribute__((packed))` there; natural
+/// alignment everywhere else).
+#[derive(Clone, Copy)]
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+pub struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+impl EpollEvent {
+    pub fn zeroed() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+
+    /// Readiness mask of this event (copied out — the struct may be
+    /// packed, so fields are never borrowed).
+    pub fn events(&self) -> u32 {
+        self.events
+    }
+
+    /// The `u64` token registered with the fd.
+    pub fn token(&self) -> u64 {
+        self.data
+    }
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// Owned epoll instance (level-triggered; the reactor re-arms write
+/// interest explicitly, so edge-triggered semantics are not needed).
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let evp = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+        cvt(unsafe { epoll_ctl(self.fd, op, fd, evp) }).map(|_| ())
+    }
+
+    pub fn add(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    pub fn modify(&self, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait for events (`timeout_ms < 0` blocks indefinitely); EINTR
+    /// retries transparently. Returns how many entries of `events` were
+    /// filled.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len().min(i32::MAX as usize) as i32,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// Owned nonblocking eventfd: the reactor's cross-thread waker (engine
+/// threads `wake()` it after queueing work; the reactor keeps it in its
+/// epoll set and `drain()`s it every loop).
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw_fd(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Wake the waiter. A full counter (`EAGAIN`) still leaves the fd
+    /// readable, so the error is safely ignored.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, (&one as *const u64).cast(), 8);
+        }
+    }
+
+    /// Drain the counter so a level-triggered poll stops reporting the
+    /// fd readable until the next `wake`.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        unsafe {
+            read(self.fd, buf.as_mut_ptr(), 8);
+        }
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+/// `(soft, hard)` RLIMIT_NOFILE.
+pub fn nofile_limit() -> io::Result<(u64, u64)> {
+    let mut r = Rlimit { cur: 0, max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut r) })?;
+    Ok((r.cur, r.max))
+}
+
+/// Best-effort raise of the soft RLIMIT_NOFILE toward `want` (capped at
+/// the hard limit); returns the effective soft limit. The 1k-connection
+/// serving bench calls this so a conservative default soft limit does
+/// not cap the fleet.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let Ok((soft, hard)) = nofile_limit() else {
+        return 1024;
+    };
+    if soft >= want {
+        return soft;
+    }
+    let target = want.min(hard);
+    let r = Rlimit { cur: target, max: hard };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &r) } == 0 {
+        target
+    } else {
+        soft
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn eventfd_wakes_epoll_and_drains() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.raw_fd(), EPOLLIN, 7).unwrap();
+        let mut evs = [EpollEvent::zeroed(); 4];
+        // nothing pending: a zero-timeout wait returns no events
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+        efd.wake();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 7);
+        assert!(evs[0].events() & EPOLLIN != 0);
+        efd.drain();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0, "drained fd must go quiet");
+        // level-triggered: an undrained wake keeps reporting readable
+        efd.wake();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 1);
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn epoll_tracks_socket_readability_and_write_interest() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 42).unwrap();
+        let mut evs = [EpollEvent::zeroed(); 4];
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0);
+        client.write_all(b"hi\n").unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(evs[0].token(), 42);
+        assert!(evs[0].events() & EPOLLIN != 0);
+        // toggling write interest on an idle socket reports writable
+        ep.modify(server.as_raw_fd(), EPOLLIN | EPOLLOUT, 42).unwrap();
+        let n = ep.wait(&mut evs, 1000).unwrap();
+        assert!(n >= 1);
+        assert!(evs[0].events() & EPOLLOUT != 0);
+        ep.del(server.as_raw_fd()).unwrap();
+        assert_eq!(ep.wait(&mut evs, 0).unwrap(), 0, "deleted fd must not report");
+    }
+
+    #[test]
+    fn nofile_limit_reads_and_raises_best_effort() {
+        let (soft, hard) = nofile_limit().unwrap();
+        assert!(soft > 0 && hard >= soft);
+        let eff = raise_nofile_limit(soft); // no-op raise
+        assert!(eff >= soft);
+    }
+}

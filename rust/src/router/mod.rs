@@ -51,7 +51,7 @@ use crate::kv::paged::prompt_fingerprint;
 use crate::metrics::{sum_json_objects, Metrics};
 use crate::model::tokenizer;
 use crate::runtime::reference::{RefBackend, SharedRefModel};
-use crate::scheduler::{Response, SubmitOpts};
+use crate::scheduler::{RespSink, Response, SubmitOpts};
 use crate::util::json::Json;
 
 /// The serving surface the TCP server (and benches) drive — implemented
@@ -59,6 +59,10 @@ use crate::util::json::Json;
 pub trait Frontend: Clone + Send + 'static {
     /// Submit a request (assigning its id); returns `(id, response rx)`.
     fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>);
+    /// Submit with a caller-supplied terminal sink instead of a fresh
+    /// channel (the epoll reactor path: the response lands in the
+    /// request's lock-free event ring); returns the assigned id.
+    fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64;
     /// Request an abort of `id` (async; unknown ids are a no-op).
     fn cancel(&self, id: u64);
     /// `{"cmd":"stats"}` — full counters/latency/gauges/info view.
@@ -74,6 +78,10 @@ pub trait Frontend: Clone + Send + 'static {
 impl Frontend for Coordinator {
     fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
         Coordinator::submit_opts(self, opts)
+    }
+
+    fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64 {
+        Coordinator::submit_sink(self, opts, resp)
     }
 
     fn cancel(&self, id: u64) {
@@ -340,6 +348,15 @@ impl Frontend for Router {
         self.metrics.inc("router_routed_total");
         self.metrics.inc(&format!("router_routed_replica_{r}"));
         (id, self.replicas[r].submit_with_id(id, opts))
+    }
+
+    fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let r = self.route(&opts);
+        self.metrics.inc("router_routed_total");
+        self.metrics.inc(&format!("router_routed_replica_{r}"));
+        self.replicas[r].submit_request(id, opts, resp);
+        id
     }
 
     /// Broadcast: exactly one replica holds the id, the rest no-op.

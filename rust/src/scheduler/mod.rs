@@ -79,10 +79,74 @@ pub struct Request {
     pub max_new: usize,
     pub variant: Variant,
     pub submitted_ms: f64,
-    pub resp_tx: Sender<Response>,
-    /// per-token frame channel (`"stream": true` requests); `None`
+    pub resp_tx: RespSink,
+    /// per-token frame sink (`"stream": true` requests); `None`
     /// means the client only wants the final summary
-    pub stream: Option<Sender<StreamFrame>>,
+    pub stream: Option<FrameSink>,
+}
+
+/// Where a request's terminal [`Response`] goes: a per-request channel
+/// (threaded transport, direct [`crate::coordinator`] submitters) or
+/// the request's lock-free event ring (epoll reactor transport, which
+/// serializes the response to its wire line on the engine thread).
+#[derive(Debug)]
+pub enum RespSink {
+    Channel(Sender<Response>),
+    #[cfg(target_os = "linux")]
+    Net(crate::net::NetSink),
+}
+
+impl RespSink {
+    /// Deliver the terminal response. Never blocks; a vanished receiver
+    /// is the receiver's problem (the request is over either way).
+    pub fn send(&self, resp: Response) {
+        match self {
+            RespSink::Channel(tx) => {
+                let _ = tx.send(resp);
+            }
+            #[cfg(target_os = "linux")]
+            RespSink::Net(sink) => sink.send_response(&resp),
+        }
+    }
+}
+
+impl From<Sender<Response>> for RespSink {
+    fn from(tx: Sender<Response>) -> RespSink {
+        RespSink::Channel(tx)
+    }
+}
+
+/// Where a streaming request's per-token [`StreamFrame`]s go. The net
+/// sink is bounded: `send` reports whether the frame was accepted so
+/// the emitter can hold its position and retry instead of dropping.
+#[derive(Debug)]
+pub enum FrameSink {
+    Channel(Sender<StreamFrame>),
+    #[cfg(target_os = "linux")]
+    Net(crate::net::NetSink),
+}
+
+impl FrameSink {
+    /// `false` means the bounded sink was momentarily full — the caller
+    /// must NOT advance its streamed counter (retry next tick). The
+    /// channel arm always accepts (a dropped receiver discards frames,
+    /// matching the threaded transport's disconnect semantics).
+    pub fn send(&self, frame: StreamFrame) -> bool {
+        match self {
+            FrameSink::Channel(tx) => {
+                let _ = tx.send(frame);
+                true
+            }
+            #[cfg(target_os = "linux")]
+            FrameSink::Net(sink) => sink.send_frame(&frame),
+        }
+    }
+}
+
+impl From<Sender<StreamFrame>> for FrameSink {
+    fn from(tx: Sender<StreamFrame>) -> FrameSink {
+        FrameSink::Channel(tx)
+    }
 }
 
 /// Front-end submission options (everything a [`Request`] carries
@@ -93,7 +157,7 @@ pub struct SubmitOpts {
     pub prompt: String,
     pub max_new: usize,
     pub variant: Variant,
-    pub stream: Option<Sender<StreamFrame>>,
+    pub stream: Option<FrameSink>,
 }
 
 impl SubmitOpts {
@@ -185,6 +249,9 @@ struct Live {
 impl Live {
     /// Stream every not-yet-emitted generated token, in order. Cheap
     /// no-op for non-streaming requests and when nothing new exists.
+    /// A bounded sink that momentarily refuses a frame holds the
+    /// counter in place — the frame is re-offered on the next tick (and
+    /// at retire/cancel), so nothing is ever skipped or duplicated.
     fn emit_new_frames(&mut self) {
         let n = self.session.generated();
         let Some(tx) = &self.req.stream else {
@@ -193,12 +260,15 @@ impl Live {
         };
         while self.streamed < n {
             let tok = self.session.tokens[self.session.prompt_len + self.streamed];
-            let _ = tx.send(StreamFrame {
+            let accepted = tx.send(StreamFrame {
                 id: self.req.id,
                 index: self.streamed,
                 token: tok,
                 text: crate::model::tokenizer::decode(&[tok]),
             });
+            if !accepted {
+                break;
+            }
             self.streamed += 1;
         }
     }
@@ -323,7 +393,7 @@ impl Scheduler {
                     let p = self.preempted.pop_front().unwrap();
                     self.resume_starved_ticks = 0;
                     metrics.inc("errors");
-                    let _ = p.req.resp_tx.send(Response::error(
+                    p.req.resp_tx.send(Response::error(
                         p.req.id,
                         "preempted session exceeds kv pool capacity".into(),
                     ));
@@ -355,10 +425,7 @@ impl Scheduler {
                         }
                         Err(e) => {
                             metrics.inc("errors");
-                            let _ = p
-                                .req
-                                .resp_tx
-                                .send(Response::error(p.req.id, format!("{e:#}")));
+                            p.req.resp_tx.send(Response::error(p.req.id, format!("{e:#}")));
                         }
                     }
                 }
@@ -398,8 +465,7 @@ impl Scheduler {
                     let req = self.pending.pop_front().unwrap();
                     self.head_starved_ticks = 0;
                     metrics.inc("errors");
-                    let _ = req
-                        .resp_tx
+                    req.resp_tx
                         .send(Response::error(req.id, "prompt exceeds kv pool capacity".into()));
                 }
                 Admission::Defer => {
@@ -440,9 +506,7 @@ impl Scheduler {
                                 let _ = self.legacy_pool.release(req.id);
                             }
                             metrics.inc("errors");
-                            let _ = req
-                                .resp_tx
-                                .send(Response::error(req.id, format!("{e:#}")));
+                            req.resp_tx.send(Response::error(req.id, format!("{e:#}")));
                         }
                     }
                 }
@@ -522,7 +586,7 @@ impl Scheduler {
             }
             let req = self.pending.remove(i).expect("position came from iter");
             metrics.inc("sched_cancelled");
-            let _ = req.resp_tx.send(Response::aborted(id, 0));
+            req.resp_tx.send(Response::aborted(id, 0));
             return true;
         }
         if let Some(i) = self.live.iter().position(|l| l.req.id == id) {
@@ -532,8 +596,11 @@ impl Scheduler {
             } else {
                 let _ = self.legacy_pool.release(l.req.id);
             }
+            // flush sampled-but-unsent frames so "frames already
+            // streamed stand" holds before the terminal goes out
+            l.emit_new_frames();
             metrics.inc("sched_cancelled");
-            let _ = l.req.resp_tx.send(Response::aborted(id, l.session.generated()));
+            l.req.resp_tx.send(Response::aborted(id, l.session.generated()));
             return true;
         }
         if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
@@ -544,7 +611,7 @@ impl Scheduler {
             let generated = p.frozen.tokens.len().saturating_sub(p.frozen.prompt_len);
             engine.discard_frozen(p.frozen);
             metrics.inc("sched_cancelled");
-            let _ = p.req.resp_tx.send(Response::aborted(id, generated));
+            p.req.resp_tx.send(Response::aborted(id, generated));
             return true;
         }
         false
@@ -558,7 +625,7 @@ impl Scheduler {
         let paged = engine.paged_enabled();
         for req in self.pending.drain(..) {
             metrics.inc("errors");
-            let _ = req.resp_tx.send(Response::error(req.id, msg.into()));
+            req.resp_tx.send(Response::error(req.id, msg.into()));
         }
         for mut l in self.live.drain(..) {
             if paged {
@@ -567,12 +634,12 @@ impl Scheduler {
                 let _ = self.legacy_pool.release(l.req.id);
             }
             metrics.inc("errors");
-            let _ = l.req.resp_tx.send(Response::error(l.req.id, msg.into()));
+            l.req.resp_tx.send(Response::error(l.req.id, msg.into()));
         }
         for p in self.preempted.drain(..) {
             engine.discard_frozen(p.frozen);
             metrics.inc("errors");
-            let _ = p.req.resp_tx.send(Response::error(p.req.id, msg.into()));
+            p.req.resp_tx.send(Response::error(p.req.id, msg.into()));
         }
         self.head_starved_ticks = 0;
         self.resume_starved_ticks = 0;
@@ -623,7 +690,7 @@ impl Scheduler {
                         oom.push(i);
                     } else {
                         metrics.inc("errors");
-                        let _ = self.live[i]
+                        self.live[i]
                             .req
                             .resp_tx
                             .send(Response::error(self.live[i].req.id, format!("{e:#}")));
@@ -651,6 +718,9 @@ impl Scheduler {
     }
 
     fn retire(&mut self, engine: &Engine, metrics: &Metrics, mut l: Live, paged: bool) {
+        // re-offer any frame a bounded sink refused earlier: the
+        // terminal line must never overtake a frame
+        l.emit_new_frames();
         if paged {
             // idempotent: finish_session would release too, but errored
             // sessions never reach it
@@ -666,7 +736,7 @@ impl Scheduler {
             metrics.inc("completed");
             let e2e = now_ms() - l.req.submitted_ms;
             metrics.observe_ms("e2e", e2e);
-            let _ = l.req.resp_tx.send(Response {
+            l.req.resp_tx.send(Response {
                 id: l.req.id,
                 text: gen.text,
                 n_prompt,
@@ -770,7 +840,7 @@ mod tests {
                 max_new,
                 variant: Variant::Chai,
                 submitted_ms: now_ms(),
-                resp_tx: tx,
+                resp_tx: tx.into(),
                 stream: None,
             },
             rx,
@@ -890,7 +960,7 @@ mod tests {
         let mut sched = Scheduler::new(SchedPolicy::from_config(&toy_cfg()));
         let (tx, frames_rx) = channel();
         let (mut req, rx) = make_req(1, "the color of tom is", 6);
-        req.stream = Some(tx);
+        req.stream = Some(tx.into());
         sched.submit(req);
         drive(&mut sched, &engine, &metrics, 10_000);
         let r = rx.try_recv().unwrap();
@@ -920,7 +990,7 @@ mod tests {
         let baseline = engine.paged_snapshot().unwrap().live_blocks;
         let (tx, frames_rx) = channel();
         let (mut live_req, live_rx) = make_req(1, "the color of tom is quite a story", 24);
-        live_req.stream = Some(tx);
+        live_req.stream = Some(tx.into());
         let (pend_req, pend_rx) = make_req(2, "tom keeps the hat", 4);
         sched.submit(live_req);
         sched.submit(pend_req);

@@ -35,29 +35,56 @@
 //! engine (the failed frame write cancels it), so a vanished client
 //! cannot pin K,V blocks.
 //!
+//! Under overload the front end sheds instead of queueing without
+//! bound: a submission that finds the coordinator's bounded inbox full
+//! receives the terminal line `{"id": N, "error": "overloaded"}`
+//! immediately (no frames precede it; nothing was admitted, so there
+//! is no session state to unwind). Clients should treat any terminal
+//! line without `"tok"` — summary, error, or cancelled — as the end of
+//! that request.
+//!
 //! ## Connection handling
 //!
-//! Thread-per-connection (requests are forwarded to the engine
-//! replica(s) through a [`Frontend`]: a single coordinator or the
-//! multi-replica router — the server threads only do I/O). Accepted
-//! sockets run with a short read timeout so connection threads observe
-//! [`Server::stop`] and exit instead of blocking in `read_line`
-//! forever. Malformed JSON, unknown commands, and oversized prompts
-//! each produce an `{"error": ...}` line without killing the
-//! connection. A matching [`Client`] is provided for examples/benches.
+//! Two transports serve this protocol (`--net`, [`crate::net`]):
+//!
+//! * **threads** (default, portable) — thread-per-connection (requests
+//!   are forwarded to the engine replica(s) through a [`Frontend`]: a
+//!   single coordinator or the multi-replica router — the server
+//!   threads only do I/O). Accepted sockets block in `read` and are
+//!   woken by [`Server::stop`] through a socket-shutdown registry
+//!   (with a coarse idle-poll timeout as a backstop), so idle
+//!   connections cost near-zero wakeups. Request/response lines on one
+//!   connection are strictly sequential.
+//! * **reactor** (Linux) — one epoll I/O thread multiplexes every
+//!   connection ([`crate::net::reactor`]). Protocol semantics are
+//!   identical with one extension: because the reactor never blocks a
+//!   connection on an in-flight generation, commands sent while a
+//!   generation streams are answered immediately (lines are
+//!   disambiguated by `"id"`). Lockstep clients — write one request,
+//!   read until its terminal — observe byte-identical behavior on both
+//!   transports.
+//!
+//! Malformed JSON, unknown commands, and oversized prompts each
+//! produce an `{"error": ...}` line without killing the connection. A
+//! matching [`Client`] is provided for examples/benches. The `stats`
+//! command carries a `net` section (`net_*` transport counters: active
+//! connections, ring high-water marks, shed/wakeup counts) alongside
+//! the engine metrics.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::engine::Variant;
+use crate::net::{NetMode, NetStats};
 use crate::router::Frontend;
-use crate::scheduler::SubmitOpts;
+use crate::scheduler::{StreamFrame, SubmitOpts};
 use crate::util::json::Json;
 
 /// Reject prompts above this many bytes at the protocol layer — far
@@ -75,63 +102,103 @@ pub const MAX_PROMPT_BYTES: usize = 1 << 20;
 /// no legal request could produce close the stream.
 pub const MAX_LINE_BYTES: usize = 6 * MAX_PROMPT_BYTES + (64 << 10);
 
-/// Poll interval for the accept loop and the per-connection read
-/// timeout: how quickly server threads observe `stop`.
+/// Poll interval for in-flight work: how quickly a connection thread
+/// streaming frames (or waiting on a terminal) observes `stop`.
 const POLL_MS: u64 = 25;
+
+/// Read timeout for IDLE threaded connections. Deliberately coarse:
+/// `stop` wakes blocked reads through the socket registry (shutdown)
+/// rather than by polling, so this timeout is only a backstop — each
+/// idle connection costs 4 wakeups/s instead of the 40/s a `POLL_MS`
+/// read timeout would burn.
+const IDLE_POLL_MS: u64 = 250;
+
+/// Sockets a threaded-transport server currently serves, keyed by an
+/// internal connection id. [`Server::stop`] shuts these down to yank
+/// connection threads out of blocked reads immediately instead of
+/// waiting out the idle-poll timeout.
+type ConnRegistry = Arc<Mutex<HashMap<u64, TcpStream>>>;
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     conns: Arc<AtomicUsize>,
+    net: Arc<NetStats>,
+    mode: NetMode,
+    registry: ConnRegistry,
+    #[cfg(target_os = "linux")]
+    ready: Option<Arc<crate::net::ReadyQueue>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind and serve in background threads until `stop`/drop.
+    /// Bind and serve in background threads until `stop`/drop, on the
+    /// default (portable, thread-per-connection) transport.
     pub fn start<F: Frontend>(api: F, bind: &str) -> Result<Server> {
+        Server::start_with(api, bind, NetMode::Threads)
+    }
+
+    /// Bind and serve until `stop`/drop on an explicit transport:
+    /// [`NetMode::Threads`] spawns one I/O thread per connection;
+    /// [`NetMode::Reactor`] (Linux) multiplexes every connection on a
+    /// single epoll thread with lock-free rings on the token-frame
+    /// path.
+    pub fn start_with<F: Frontend>(api: F, bind: &str, mode: NetMode) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(AtomicUsize::new(0));
-        let stop2 = stop.clone();
-        let conns2 = conns.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("chai-accept".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let api = api.clone();
-                            let stop = stop2.clone();
-                            let conns = conns2.clone();
-                            conns.fetch_add(1, Ordering::Relaxed);
-                            // Detached, but not unbounded: the read
-                            // timeout set in handle_conn lets every
-                            // connection thread observe `stop` and exit
-                            // even while its client idles silently.
-                            let spawned = std::thread::Builder::new()
-                                .name("chai-conn".into())
-                                .spawn(move || {
-                                    let _ = handle_conn(stream, &api, &stop);
-                                    conns.fetch_sub(1, Ordering::Relaxed);
-                                });
-                            if spawned.is_err() {
-                                // the closure owning the decrement never
-                                // ran (thread exhaustion) — undo the
-                                // increment or the counter stays
-                                // inflated forever
-                                conns2.fetch_sub(1, Ordering::Relaxed);
-                            }
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(POLL_MS));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(Server { addr, stop, conns, accept_thread: Some(accept_thread) })
+        let net = Arc::new(NetStats::default());
+        let registry: ConnRegistry = Arc::new(Mutex::new(HashMap::new()));
+        match mode {
+            NetMode::Threads => {
+                let accept_thread = spawn_threaded_accept(
+                    listener,
+                    api,
+                    stop.clone(),
+                    conns.clone(),
+                    net.clone(),
+                    registry.clone(),
+                )?;
+                Ok(Server {
+                    addr,
+                    stop,
+                    conns,
+                    net,
+                    mode,
+                    registry,
+                    #[cfg(target_os = "linux")]
+                    ready: None,
+                    accept_thread: Some(accept_thread),
+                })
+            }
+            #[cfg(target_os = "linux")]
+            NetMode::Reactor => {
+                listener.set_nonblocking(true)?;
+                let ready = Arc::new(crate::net::ReadyQueue::new(
+                    crate::net::READY_RING_CAPACITY,
+                    net.clone(),
+                )?);
+                let accept_thread = crate::net::reactor::spawn(
+                    listener,
+                    api,
+                    stop.clone(),
+                    ready.clone(),
+                    net.clone(),
+                    conns.clone(),
+                )?;
+                Ok(Server {
+                    addr,
+                    stop,
+                    conns,
+                    net,
+                    mode,
+                    registry,
+                    ready: Some(ready),
+                    accept_thread: Some(accept_thread),
+                })
+            }
+        }
     }
 
     /// Connections currently being served (observability/tests).
@@ -145,19 +212,45 @@ impl Server {
         self.conns.clone()
     }
 
+    /// Transport counters (`net_*`): accepted/active connections, ring
+    /// high-water marks, shed and wakeup counts.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        self.net.clone()
+    }
+
     pub fn stop(mut self) {
         self.stop_inner();
     }
 
     fn stop_inner(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        match self.mode {
+            NetMode::Threads => {
+                // the accept thread blocks in accept(): a throwaway
+                // self-connection is the wake-up call
+                let _ = TcpStream::connect(self.addr);
+                // yank connection threads out of blocked reads NOW —
+                // read returns 0/err and the thread sees `stop`
+                if let Ok(reg) = self.registry.lock() {
+                    for s in reg.values() {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                }
+            }
+            #[cfg(target_os = "linux")]
+            NetMode::Reactor => {
+                if let Some(r) = &self.ready {
+                    r.wake();
+                }
+            }
+        }
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
         // best-effort wait for connection threads to notice the flag
-        // (they wake from read_line at most one poll interval later;
-        // bounded so a conn blocked writing to a dead peer cannot wedge
-        // shutdown)
+        // (the registry shutdown above wakes them; the idle-poll
+        // timeout is the backstop; bounded so a conn blocked writing to
+        // a dead peer cannot wedge shutdown)
         for _ in 0..200 {
             if self.conns.load(Ordering::Relaxed) == 0 {
                 break;
@@ -165,6 +258,63 @@ impl Server {
             std::thread::sleep(Duration::from_millis(POLL_MS));
         }
     }
+}
+
+fn spawn_threaded_accept<F: Frontend>(
+    listener: TcpListener,
+    api: F,
+    stop: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+    net: Arc<NetStats>,
+    registry: ConnRegistry,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    let next_id = AtomicU64::new(1);
+    std::thread::Builder::new().name("chai-accept".into()).spawn(move || {
+        // blocking accept — zero wakeups while idle; Server::stop
+        // unblocks it with a self-connection
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stop.load(Ordering::Relaxed) {
+                        break; // the stop self-connection itself
+                    }
+                    net.accepted.fetch_add(1, Ordering::Relaxed);
+                    let conn_id = next_id.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(dup) = stream.try_clone() {
+                        registry.lock().unwrap().insert(conn_id, dup);
+                    }
+                    let api = api.clone();
+                    let stop = stop.clone();
+                    let conns = conns.clone();
+                    let net = net.clone();
+                    let registry = registry.clone();
+                    conns.fetch_add(1, Ordering::Relaxed);
+                    // Detached, but not unbounded: the registry entry
+                    // (stop-wake) plus the idle read timeout let every
+                    // connection thread observe `stop` and exit even
+                    // while its client idles silently.
+                    let spawned = std::thread::Builder::new().name("chai-conn".into()).spawn(
+                        move || {
+                            let _ = handle_conn(stream, &api, &stop, &net, &conns);
+                            registry.lock().unwrap().remove(&conn_id);
+                            conns.fetch_sub(1, Ordering::Relaxed);
+                        },
+                    );
+                    if spawned.is_err() {
+                        // the closure owning the decrement never ran
+                        // (thread exhaustion) — undo the increment or
+                        // the counter stays inflated forever
+                        conns.fetch_sub(1, Ordering::Relaxed);
+                        registry.lock().unwrap().remove(&conn_id);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(POLL_MS));
+                }
+                Err(_) => break,
+            }
+        }
+    })
 }
 
 impl Drop for Server {
@@ -180,13 +330,37 @@ fn is_timeout(e: &std::io::Error) -> bool {
     )
 }
 
-fn handle_conn<F: Frontend>(stream: TcpStream, api: &F, stop: &AtomicBool) -> Result<()> {
-    // the read timeout is what lets this thread observe `stop`: without
-    // it, a silent client would pin the thread in a blocking read
-    // forever
-    stream.set_read_timeout(Some(Duration::from_millis(POLL_MS)))?;
+/// Live transport facts a command handler may report — threaded and
+/// reactor transports both inject their view into `{"cmd":"stats"}`.
+pub(crate) struct NetView<'a> {
+    pub(crate) net: &'a NetStats,
+    pub(crate) conns: &'a AtomicUsize,
+    pub(crate) transport: &'static str,
+}
+
+impl NetView<'_> {
+    fn json(&self) -> Json {
+        self.net.to_json(self.conns.load(Ordering::Relaxed), self.transport)
+    }
+}
+
+fn handle_conn<F: Frontend>(
+    stream: TcpStream,
+    api: &F,
+    stop: &AtomicBool,
+    net: &NetStats,
+    conns: &AtomicUsize,
+) -> Result<()> {
+    // same terminal-latency behavior as the reactor transport, so the
+    // two are comparable under the serving bench
+    let _ = stream.set_nodelay(true);
+    // coarse idle timeout: a backstop only — Server::stop wakes blocked
+    // reads through the socket registry, so this no longer bounds
+    // shutdown latency and can be lazy about it
+    stream.set_read_timeout(Some(Duration::from_millis(IDLE_POLL_MS)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
+    let view = NetView { net, conns, transport: "threads" };
     // raw bytes, not a String: a read timeout can land mid-UTF-8
     // sequence, and `read_line`'s UTF-8 guard would throw those partial
     // bytes away — `read_until` keeps them across timeouts. Decoding
@@ -204,7 +378,8 @@ fn handle_conn<F: Frontend>(stream: TcpStream, api: &F, stop: &AtomicBool) -> Re
                         let line = String::from_utf8_lossy(&buf);
                         let trimmed = line.trim();
                         if !trimmed.is_empty() {
-                            handle_request(trimmed, api, &mut writer, stop)?;
+                            net.lines_in.fetch_add(1, Ordering::Relaxed);
+                            handle_request(trimmed, api, &mut writer, stop, &view)?;
                         }
                     }
                     buf.clear();
@@ -228,6 +403,7 @@ fn handle_conn<F: Frontend>(stream: TcpStream, api: &F, stop: &AtomicBool) -> Re
             // timeout: bytes read so far stay in `buf`; either exit
             // (server stopping) or poll again
             Err(e) if is_timeout(&e) => {
+                net.idle_wakeups.fetch_add(1, Ordering::Relaxed);
                 if stop.load(Ordering::Relaxed) {
                     return Ok(());
                 }
@@ -250,6 +426,7 @@ fn handle_request<F: Frontend>(
     api: &F,
     writer: &mut TcpStream,
     stop: &AtomicBool,
+    view: &NetView<'_>,
 ) -> Result<()> {
     let parsed = (|| -> Result<(bool, Json)> {
         let req = Json::parse(line)?;
@@ -269,7 +446,7 @@ fn handle_request<F: Frontend>(
             Ok(())
         }
         Ok((false, req)) => {
-            let reply = match handle_line(&req, api, stop) {
+            let reply = match handle_line(&req, api, stop, view) {
                 Ok(j) => j,
                 Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
             };
@@ -326,7 +503,7 @@ fn handle_streaming<F: Frontend>(
         }
     };
     let (frame_tx, frame_rx) = channel();
-    let (id, resp_rx) = api.submit_opts(SubmitOpts { stream: Some(frame_tx), ..opts });
+    let (id, resp_rx) = api.submit_opts(SubmitOpts { stream: Some(frame_tx.into()), ..opts });
     let mut abort_sent = false;
     loop {
         match frame_rx.recv_timeout(Duration::from_millis(POLL_MS)) {
@@ -338,12 +515,7 @@ fn handle_streaming<F: Frontend>(
                     api.cancel(id);
                     abort_sent = true;
                 }
-                let frame = Json::obj(vec![
-                    ("id", Json::Num(f.id as f64)),
-                    ("i", Json::Num(f.index as f64)),
-                    ("tok", Json::Num(f.token as f64)),
-                    ("text", Json::Str(f.text)),
-                ]);
+                let frame = frame_json(&f);
                 if let Err(e) = write_line(writer, &frame) {
                     // disconnect-abort: free the session's blocks
                     // mid-decode; wait (bounded) for the terminal
@@ -371,7 +543,7 @@ fn handle_streaming<F: Frontend>(
     Ok(())
 }
 
-fn parse_generation(req: &Json) -> Result<SubmitOpts> {
+pub(crate) fn parse_generation(req: &Json) -> Result<SubmitOpts> {
     let prompt = req.get("prompt")?.str()?.to_string();
     if prompt.len() > MAX_PROMPT_BYTES {
         anyhow::bail!(
@@ -386,7 +558,17 @@ fn parse_generation(req: &Json) -> Result<SubmitOpts> {
     Ok(SubmitOpts::new(&prompt, max_new, variant))
 }
 
-fn response_json(resp: &crate::scheduler::Response) -> Json {
+/// One stream frame as its wire line (`"tok"` marks it non-terminal).
+pub(crate) fn frame_json(f: &StreamFrame) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(f.id as f64)),
+        ("i", Json::Num(f.index as f64)),
+        ("tok", Json::Num(f.token as f64)),
+        ("text", Json::Str(f.text.clone())),
+    ])
+}
+
+pub(crate) fn response_json(resp: &crate::scheduler::Response) -> Json {
     if let Some(e) = &resp.error {
         return Json::obj(vec![
             ("id", Json::Num(resp.id as f64)),
@@ -410,35 +592,54 @@ fn response_json(resp: &crate::scheduler::Response) -> Json {
     ])
 }
 
-fn handle_line<F: Frontend>(req: &Json, api: &F, stop: &AtomicBool) -> Result<Json> {
-    if let Some(cmd) = req.opt("cmd") {
-        return match cmd.str()? {
-            "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
-            "stats" => Ok(api.stats_json()),
-            // paged-KV occupancy + sharing view (subset of stats gauges)
-            "kv" => Ok(api.kv_json()),
-            // scheduler view: queue depths, live/preempted counts,
-            // preemption + swap-tier counters and occupancy
-            "sched" => Ok(api.sched_json()),
-            // static serving facts: compute backend, model name
-            "info" => Ok(api.info_json()),
-            // abort by id, from any connection (ids are front-end
-            // global); ack is immediate, the abort lands on the next
-            // engine tick and the submitting connection receives the
-            // terminal cancelled line
-            "cancel" => {
-                let id = req.get("id")?.usize()? as u64;
-                api.cancel(id);
-                Ok(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("id", Json::Num(id as f64)),
-                ]))
+/// Dispatch one `{"cmd": ...}` line — shared verbatim by the threaded
+/// transport and the epoll reactor, so command semantics cannot drift
+/// between them.
+pub(crate) fn command_json<F: Frontend>(req: &Json, api: &F, view: &NetView<'_>) -> Result<Json> {
+    match req.get("cmd")?.str()? {
+        "ping" => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+        // engine metrics plus this transport's `net` section
+        "stats" => {
+            let mut j = api.stats_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("net".into(), view.json());
             }
-            other => Ok(Json::obj(vec![(
-                "error",
-                Json::Str(format!("unknown cmd {other:?}")),
-            )])),
-        };
+            Ok(j)
+        }
+        // paged-KV occupancy + sharing view (subset of stats gauges)
+        "kv" => Ok(api.kv_json()),
+        // scheduler view: queue depths, live/preempted counts,
+        // preemption + swap-tier counters and occupancy
+        "sched" => Ok(api.sched_json()),
+        // static serving facts: compute backend, model name
+        "info" => Ok(api.info_json()),
+        // abort by id, from any connection (ids are front-end
+        // global); ack is immediate, the abort lands on the next
+        // engine tick and the submitting connection receives the
+        // terminal cancelled line
+        "cancel" => {
+            let id = req.get("id")?.usize()? as u64;
+            api.cancel(id);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+            ]))
+        }
+        other => Ok(Json::obj(vec![(
+            "error",
+            Json::Str(format!("unknown cmd {other:?}")),
+        )])),
+    }
+}
+
+fn handle_line<F: Frontend>(
+    req: &Json,
+    api: &F,
+    stop: &AtomicBool,
+    view: &NetView<'_>,
+) -> Result<Json> {
+    if req.opt("cmd").is_some() {
+        return command_json(req, api, view);
     }
     let opts = parse_generation(req)?;
     let (id, rx) = api.submit_opts(opts);

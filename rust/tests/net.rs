@@ -1,0 +1,341 @@
+//! Integration tests for the event-driven net subsystem: the epoll
+//! reactor transport (protocol parity with the threaded transport,
+//! slow-reader isolation, multiplexed cancellation), the bounded
+//! submission inbox's overloaded-shed contract, and the threaded
+//! transport's idle-wakeup/stop-latency guarantees. Everything runs on
+//! the pure-Rust reference backend (seeded toy model).
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::{Engine, Variant};
+use chai::net::NetMode;
+use chai::server::{Client, Server};
+use chai::util::json::Json;
+
+fn ref_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: PathBuf::from("no-artifacts"),
+        backend: "ref".into(),
+        ..Default::default()
+    }
+}
+
+/// Poll a predicate: gauges land at the end of the retiring tick,
+/// slightly after the response goes out.
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !f() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(f(), "not reached within 30s: {what}");
+}
+
+// ---------------------------------------------------------------------------
+// Reactor transport: protocol parity with the threaded transport
+// ---------------------------------------------------------------------------
+
+/// The acceptance contract's core: a lockstep client observes
+/// bit-identical behavior on both transports — same command replies,
+/// same generation summaries, same frame-for-frame token streams.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_token_streams_are_bit_identical_to_threads() {
+    let mut per_mode: Vec<(String, Vec<String>, String)> = Vec::new();
+    for mode in [NetMode::Threads, NetMode::Reactor] {
+        let handle = Coordinator::start(ref_cfg()).unwrap();
+        let server =
+            Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", mode).unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+        assert!(client.ping().unwrap());
+        let info = client.info().unwrap();
+        assert_eq!(info.get("backend").unwrap().str().unwrap(), "ref");
+
+        let summary = client.generate("the color of tom is", 8, "chai").unwrap();
+        assert!(summary.opt("error").is_none(), "{summary:?}");
+        let text = summary.get("text").unwrap().str().unwrap().to_string();
+
+        let mut frames: Vec<String> = Vec::new();
+        let done = client
+            .generate_stream("tom keeps the hat", 8, "chai", |f| {
+                frames.push(f.to_string());
+            })
+            .unwrap();
+        assert!(done.opt("error").is_none(), "{done:?}");
+        assert_eq!(
+            frames.len(),
+            done.get("n_generated").unwrap().usize().unwrap(),
+            "one frame per decoded token"
+        );
+        let streamed: String = frames
+            .iter()
+            .map(|l| {
+                let f = Json::parse(l).unwrap();
+                f.get("text").unwrap().str().unwrap().to_string()
+            })
+            .collect();
+
+        // the stats net section names the transport that served it
+        let stats = client.stats().unwrap();
+        let net = stats.get("net").unwrap();
+        assert_eq!(net.get("net_transport").unwrap().str().unwrap(), mode.name());
+        assert!(net.get("net_accepted_total").unwrap().usize().unwrap() >= 1);
+        assert_eq!(net.get("net_lost_terminals").unwrap().usize().unwrap(), 0);
+
+        per_mode.push((text, frames, streamed));
+        server.stop();
+        handle.shutdown();
+    }
+    let (t_text, t_frames, t_streamed) = &per_mode[0];
+    let (r_text, r_frames, r_streamed) = &per_mode[1];
+    assert_eq!(t_text, r_text, "summary text must match across transports");
+    assert_eq!(t_frames, r_frames, "frame lines must be bit-identical");
+    assert_eq!(t_streamed, r_streamed);
+}
+
+/// Reactor protocol error paths mirror the threaded transport: bad
+/// JSON, unknown cmd, oversized prompt — error lines, live connection.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_protocol_errors_never_kill_the_connection() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server =
+        Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", NetMode::Reactor).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    client.send_raw("{not json at all\n").unwrap();
+    let r = client.read_json().unwrap();
+    assert!(r.opt("error").is_some(), "malformed JSON must error: {r:?}");
+
+    let r = client
+        .call(&Json::obj(vec![("cmd", Json::Str("selfdestruct".into()))]))
+        .unwrap();
+    assert!(r.get("error").unwrap().str().unwrap().contains("unknown cmd"), "{r:?}");
+
+    let huge = "x".repeat(chai::server::MAX_PROMPT_BYTES + 1);
+    let r = client.generate(&huge, 4, "chai").unwrap();
+    assert!(r.get("error").unwrap().str().unwrap().contains("protocol limit"), "{r:?}");
+
+    // ...and the connection still serves
+    assert!(client.ping().unwrap());
+    let ok = client.generate("the color of tom is", 4, "chai").unwrap();
+    assert!(ok.opt("error").is_none(), "{ok:?}");
+
+    server.stop();
+    handle.shutdown();
+}
+
+/// Cross-connection cancellation through the reactor: the abort frees
+/// the session (pool back to baseline) and the terminal cancelled line
+/// reaches the streaming connection.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_cancel_mid_stream_restores_pool_baseline() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let coord = handle.coordinator.clone();
+    let server = Server::start_with(coord.clone(), "127.0.0.1:0", NetMode::Reactor).unwrap();
+    let addr = server.addr.to_string();
+
+    // in-process hogs keep ticks busy so the abort lands mid-decode
+    let hog_rxs: Vec<_> = (0..7)
+        .map(|i| coord.submit(&format!("hog {i}"), 56, Variant::Chai))
+        .collect();
+
+    let mut stream_client = Client::connect(&addr).unwrap();
+    let mut side_client = Client::connect(&addr).unwrap();
+    stream_client
+        .send(&Json::obj(vec![
+            ("prompt", Json::Str("tom".into())),
+            ("max_new", Json::Num(60.0)),
+            ("variant", Json::Str("chai".into())),
+            ("stream", Json::Bool(true)),
+        ]))
+        .unwrap();
+    let first = stream_client.read_json().unwrap();
+    assert!(first.opt("tok").is_some(), "expected a stream frame: {first:?}");
+    let id = first.get("id").unwrap().usize().unwrap() as u64;
+
+    let ack = side_client.cancel(id).unwrap();
+    assert!(ack.get("ok").unwrap().boolean().unwrap());
+
+    let terminal = loop {
+        let j = stream_client.read_json().unwrap();
+        if j.opt("tok").is_none() {
+            break j;
+        }
+    };
+    assert!(terminal.get("cancelled").unwrap().boolean().unwrap(), "{terminal:?}");
+    assert!(terminal.get("n_generated").unwrap().usize().unwrap() < 60, "{terminal:?}");
+
+    for rx in hog_rxs {
+        let r = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    wait_until("pool back to baseline", || {
+        coord.metrics.gauge("sched_live") == 0.0
+            && coord.metrics.gauge("kv_live_tables") == 0.0
+            && coord.metrics.gauge("kv_live_blocks") == 0.0
+    });
+    server.stop();
+    handle.shutdown();
+}
+
+/// Slow-reader isolation: a client that submits a stream and then stops
+/// reading must not delay any other session. Its frames pile up in its
+/// own connection's buffers; another client's requests complete
+/// promptly, and the stalled client's stream is still intact when it
+/// finally reads.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_slow_reader_never_delays_other_sessions() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server =
+        Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", NetMode::Reactor).unwrap();
+    let addr = server.addr.to_string();
+
+    // oracle for the fast client's text
+    let mut oracle = Client::connect(&addr).unwrap();
+    let want = oracle.generate("the color of tom is", 6, "chai").unwrap();
+    assert!(want.opt("error").is_none(), "{want:?}");
+
+    // the slow reader: submit a stream, then go silent without reading
+    let mut slow = Client::connect(&addr).unwrap();
+    slow.send(&Json::obj(vec![
+        ("prompt", Json::Str("tom keeps the hat".into())),
+        ("max_new", Json::Num(40.0)),
+        ("variant", Json::Str("chai".into())),
+        ("stream", Json::Bool(true)),
+    ]))
+    .unwrap();
+
+    // meanwhile a fast client keeps getting served, bit-identically
+    let mut fast = Client::connect(&addr).unwrap();
+    for _ in 0..3 {
+        let r = fast.generate("the color of tom is", 6, "chai").unwrap();
+        assert!(r.opt("error").is_none(), "{r:?}");
+        assert_eq!(
+            r.get("text").unwrap().str().unwrap(),
+            want.get("text").unwrap().str().unwrap(),
+            "fast client must be unaffected by the stalled reader"
+        );
+    }
+    assert!(fast.ping().unwrap());
+
+    // the stalled stream is complete and ordered once finally read
+    let mut i = 0usize;
+    let terminal = loop {
+        let j = slow.read_json().unwrap();
+        if j.opt("tok").is_none() {
+            break j;
+        }
+        assert_eq!(j.get("i").unwrap().usize().unwrap(), i, "frames in order");
+        i += 1;
+    };
+    assert!(terminal.opt("error").is_none(), "{terminal:?}");
+    assert_eq!(i, terminal.get("n_generated").unwrap().usize().unwrap());
+
+    server.stop();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Bounded inbox: overloaded shed (transport-independent)
+// ---------------------------------------------------------------------------
+
+/// Submissions that find the bounded inbox full are shed immediately
+/// with a terminal `{"error": "overloaded"}` — and shedding admits
+/// nothing, so after the backlog drains the pool is back at baseline.
+#[test]
+fn full_inbox_sheds_overloaded_and_restores_pool_baseline() {
+    let inbox = 4usize;
+    let cfg = ServingConfig { net_inbox: inbox, ..ref_cfg() };
+    let load_cfg = cfg.clone();
+    // hold the engine back so nothing drains while we overfill
+    let handle = Coordinator::start_with(
+        cfg,
+        Box::new(move || {
+            std::thread::sleep(Duration::from_millis(400));
+            Engine::load(load_cfg)
+        }),
+    )
+    .unwrap();
+    let coord = handle.coordinator.clone();
+
+    let rxs: Vec<_> = (0..inbox + 3)
+        .map(|i| coord.submit(&format!("the color of tom {i}"), 4, Variant::Chai))
+        .collect();
+
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("request {i} hung: {e}"));
+        match r.error.as_deref() {
+            None => served += 1,
+            Some("overloaded") => shed += 1,
+            Some(other) => panic!("request {i}: unexpected error {other:?}"),
+        }
+    }
+    assert_eq!(served, inbox, "ring capacity worth of requests must be served");
+    assert_eq!(shed, 3, "overflow must shed with a terminal overloaded error");
+    assert_eq!(coord.metrics.counter("net_shed_overloaded"), shed as u64);
+    assert_eq!(coord.metrics.counter("completed"), served as u64);
+
+    // shed requests admitted nothing: after the backlog drains, zero
+    // live sessions, tables, or blocks remain anywhere
+    wait_until("pool back to baseline", || {
+        coord.metrics.gauge("sched_live") == 0.0
+            && coord.metrics.gauge("sched_pending") == 0.0
+            && coord.metrics.gauge("kv_live_tables") == 0.0
+            && coord.metrics.gauge("kv_live_blocks") == 0.0
+    });
+    assert!(coord.metrics.gauge("net_inbox_hwm") >= inbox as f64);
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Threaded transport: idle wakeups + stop latency (satellite)
+// ---------------------------------------------------------------------------
+
+/// Idle connections must not spin the CPU: with the coarse idle-poll
+/// interval, three silent clients over ~1.2 s cost a handful of
+/// wakeups (the old 25 ms read timeout burned ~40/s per connection),
+/// and `Server::stop` still returns promptly because blocked reads are
+/// woken through the socket registry, not the timeout.
+#[test]
+fn threaded_idle_connections_wake_rarely_and_stop_is_fast() {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server = Server::start(handle.coordinator.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let net = server.net_stats();
+
+    let idle: Vec<Client> = (0..3).map(|_| Client::connect(&addr).unwrap()).collect();
+    wait_until("connections registered", || server.active_connections() == 3);
+    let base = net.idle_wakeups.load(std::sync::atomic::Ordering::Relaxed);
+    std::thread::sleep(Duration::from_millis(1200));
+    let wakeups = net.idle_wakeups.load(std::sync::atomic::Ordering::Relaxed) - base;
+    // 3 conns × 1.2 s at a 250 ms idle poll ≈ 15 wakeups; the old
+    // 25 ms timeout would have produced ~144. Generous margin for CI.
+    assert!(wakeups <= 40, "idle busy-wake regression: {wakeups} wakeups in 1.2s");
+
+    let conns = server.conn_counter();
+    let t0 = Instant::now();
+    server.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "stop must not hang on idle connections"
+    );
+    assert_eq!(
+        conns.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "idle connection threads must observe stop and exit"
+    );
+    drop(idle);
+    handle.shutdown();
+}

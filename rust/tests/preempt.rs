@@ -73,7 +73,7 @@ fn make_req(
             max_new,
             variant,
             submitted_ms: now_ms(),
-            resp_tx: tx,
+            resp_tx: tx.into(),
             stream: None,
         },
         rx,

@@ -179,7 +179,7 @@ fn cancel_leaves_shared_prefix_batchmate_bit_identical() {
     // its stream channel doubles as the mid-decode synchronization
     let (tx, frames) = std::sync::mpsc::channel();
     let (victim_id, victim_rx) = coord.submit_opts(SubmitOpts {
-        stream: Some(tx),
+        stream: Some(tx.into()),
         ..SubmitOpts::new(prompt, 30, Variant::Chai)
     });
     let survivor_rx = coord.submit(prompt, 30, Variant::Chai);
