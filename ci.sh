@@ -72,6 +72,15 @@ echo "== front-end fan-out gate: 1k+ streams, thread-per-conn vs epoll reactor (
 # bench_results/BENCH_serving.json
 cargo bench --bench bench_serving -- --backend ref --connections
 
+echo "== failover drill: SIGKILL one of 4 replica processes mid-decode (ref backend) =="
+# replica-mesh contract (Linux; self-skips elsewhere): 4 `chai replica`
+# child processes behind the router, a streaming burst, kill -9 the
+# busiest replica — zero accepted requests lost, every stream
+# exactly-once and bit-identical to a single-engine oracle on the
+# survivors; merges a "failover" section into
+# bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --failover
+
 echo "== streaming + cancellation example client (ref backend) =="
 # examples/stream_cancel.rs: spins a 2-replica router + TCP server,
 # streams a generation frame-by-frame, then cancels one mid-decode and

@@ -37,6 +37,15 @@
 //!           # strictly better at high concurrency, and reactor
 //!           # throughput within/above bounds; merges a "connections"
 //!           # section into BENCH_serving.json
+//!       cargo bench --bench bench_serving -- --backend ref --failover
+//!           # CI failover drill (Linux): 4 `chai replica` processes
+//!           # behind the router (process transport), a burst of
+//!           # streaming requests, then SIGKILL the busiest replica
+//!           # mid-decode; asserts every accepted request completes on
+//!           # the survivors with exactly-once, oracle-identical token
+//!           # streams (zero losses, zero duplicate frames), reports
+//!           # time-to-full-recovery, and merges a "failover" section
+//!           # into BENCH_serving.json
 
 mod common;
 
@@ -870,6 +879,184 @@ fn connections(_args: &chai::util::args::Args, _base_cfg: &ServingConfig) -> any
     Ok(())
 }
 
+/// Failover drill (`--failover`, Linux): the replica mesh's CI gate.
+///
+/// 4 `chai replica` child processes behind the router (`--transport
+/// process`, each a separate OS process speaking line-JSON over the
+/// epoll reactor), a burst of streaming requests, then SIGKILL the
+/// replica holding the most accepted requests while it is mid-decode.
+/// The supervisor must declare it dead and requeue its accepted
+/// requests on the survivors at their recorded stream offsets.
+///
+/// Gates: EVERY accepted request completes (zero losses), every client
+/// stream is exactly-once (frame indexes 0..n-1, no gap or duplicate
+/// across the replica generations) and bit-identical to a single-engine
+/// oracle (greedy decode), exactly one death is recorded, and the mesh
+/// serves new work afterwards. Reports time from the kill to the last
+/// terminal. Merges a "failover" section into
+/// `bench_results/BENCH_serving.json`.
+#[cfg(target_os = "linux")]
+fn failover(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    use chai::scheduler::{Response, StreamFrame};
+    use std::sync::mpsc::Receiver;
+
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --failover needs the ref backend (toy weights); skipping");
+        return Ok(());
+    }
+    let n = args.usize("requests", 12)?.max(8);
+    let max_new = args.usize("max-new", 24)?.max(8);
+    let fleet = args.usize("replica-count", 4)?.max(2);
+    let prompts: Vec<String> =
+        (0..n).map(|i| format!("failover tale of tom number {i}")).collect();
+
+    // greedy-decode oracle: each prompt alone on a single-engine stack
+    let oracle = Coordinator::start(base_cfg.clone())?;
+    let mut want: Vec<String> = Vec::with_capacity(n);
+    for p in &prompts {
+        let r = oracle
+            .coordinator
+            .submit(p, max_new, Variant::Chai)
+            .recv_timeout(std::time::Duration::from_secs(600))?;
+        anyhow::ensure!(r.error.is_none(), "oracle request failed: {:?}", r.error);
+        want.push(r.text);
+    }
+    oracle.shutdown();
+
+    let cfg = ServingConfig {
+        replicas: fleet,
+        transport: "process".into(),
+        replica_cmd: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_chai"))),
+        probe_ms: 50,
+        probe_suspect: 3,
+        max_batch: 8,
+        ..base_cfg.clone()
+    };
+    let handle = Router::start(cfg)?;
+    let router = handle.router.clone();
+
+    // fire the streaming burst and wait until every request is
+    // demonstrably mid-decode (first frame received) — the kill must
+    // land while the victim holds live generations, not a cold queue
+    let streams: Vec<(Receiver<StreamFrame>, Receiver<Response>)> = prompts
+        .iter()
+        .map(|p| {
+            let (tx, frames) = std::sync::mpsc::channel();
+            let (_, resp) = router.submit_opts(SubmitOpts {
+                stream: Some(tx.into()),
+                ..SubmitOpts::new(p, max_new, Variant::Chai)
+            });
+            (frames, resp)
+        })
+        .collect();
+    let mut firsts: Vec<StreamFrame> = Vec::with_capacity(n);
+    for (i, (frames, _)) in streams.iter().enumerate() {
+        let f = frames
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|e| anyhow::anyhow!("stream {i}: no first frame: {e}"))?;
+        anyhow::ensure!(f.index == 0, "stream {i}: first frame index {}", f.index);
+        firsts.push(f);
+    }
+
+    let victim = (0..router.replica_count())
+        .max_by_key(|i| router.transport(*i).inflight())
+        .unwrap();
+    let in_flight = router.transport(victim).inflight();
+    anyhow::ensure!(in_flight >= 1, "victim replica holds no accepted requests");
+    let t_kill = now_ms();
+    router.transport(victim).kill_hard()?;
+
+    // every accepted request must complete, exactly-once and
+    // oracle-identical, no matter which replica generation served it
+    let mut recovered = 0usize;
+    for (i, (frames, resp)) in streams.into_iter().enumerate() {
+        let r = resp.recv_timeout(std::time::Duration::from_secs(600))?;
+        anyhow::ensure!(r.error.is_none(), "request {i} lost to the kill: {:?}", r.error);
+        anyhow::ensure!(!r.cancelled, "request {i}: spurious cancel");
+        anyhow::ensure!(r.text == want[i], "request {i}: text diverged from the oracle");
+        let mut got = vec![firsts[i].clone()];
+        got.extend(frames.try_iter());
+        anyhow::ensure!(
+            got.len() == r.n_generated,
+            "request {i}: {} frames for {} tokens",
+            got.len(),
+            r.n_generated
+        );
+        let mut cat = String::new();
+        for (k, f) in got.iter().enumerate() {
+            anyhow::ensure!(
+                f.index == k,
+                "request {i}: frame index {} at position {k} (gap or duplicate)",
+                f.index
+            );
+            cat.push_str(&f.text);
+        }
+        anyhow::ensure!(cat == want[i], "request {i}: frames diverged from the oracle");
+        recovered += 1;
+    }
+    let recovery_ms = now_ms() - t_kill;
+    anyhow::ensure!(
+        router.metrics.counter("router_replica_deaths") == 1,
+        "exactly one death must be recorded"
+    );
+    let requeued = router.metrics.counter("router_requeued");
+    anyhow::ensure!(requeued >= 1, "the victim's accepted requests must be requeued");
+    anyhow::ensure!(
+        recovery_ms < 120_000.0,
+        "recovery took {recovery_ms:.0} ms — survivors must absorb the orphans promptly"
+    );
+
+    // the mesh keeps serving new work on the survivors
+    let (_, rx) = router.submit_opts(SubmitOpts::new(&prompts[0], 4, Variant::Chai));
+    let r = rx.recv_timeout(std::time::Duration::from_secs(600))?;
+    anyhow::ensure!(r.error.is_none(), "post-crash submit failed: {:?}", r.error);
+    handle.shutdown();
+
+    let mut table = Table::new(
+        "Failover: SIGKILL one of 4 replica processes mid-decode",
+        &["fleet", "ok", "killed holding", "requeued", "recovery ms"],
+    );
+    table.row(vec![
+        format!("{fleet} process replicas"),
+        format!("{recovered}/{n}"),
+        format!("{in_flight}"),
+        format!("{requeued}"),
+        format!("{recovery_ms:.0}"),
+    ]);
+    table.print();
+    println!(
+        "\nshape: a kill -9'd replica loses zero accepted requests; streams stay \
+         exactly-once and bit-identical on the survivors"
+    );
+
+    // merge next to the other sections rather than clobbering them
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert(
+        "failover".to_string(),
+        Json::obj(vec![
+            ("replicas", Json::Num(fleet as f64)),
+            ("requests", Json::Num(n as f64)),
+            ("ok", Json::Num(recovered as f64)),
+            ("lost", Json::Num((n - recovered) as f64)),
+            ("killed_holding", Json::Num(in_flight as f64)),
+            ("requeued", Json::Num(requeued as f64)),
+            ("recovery_ms", Json::Num(recovery_ms)),
+        ]),
+    );
+    common::write_results("BENCH_serving", Json::Obj(fields));
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn failover(_args: &chai::util::args::Args, _base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    eprintln!("[bench] --failover exercises the process transport (Linux-only); skipping");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = common::bench_args();
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
@@ -884,6 +1071,9 @@ fn main() -> anyhow::Result<()> {
     }
     if args.bool("connections") {
         return connections(&args, &base_cfg);
+    }
+    if args.bool("failover") {
+        return failover(&args, &base_cfg);
     }
     let n = args.usize("requests", 12)?;
     let max_new = args.usize("max-new", 8)?;

@@ -249,6 +249,22 @@ pub struct ServingConfig {
     /// terminal `{"error":"overloaded"}` line instead of queueing
     /// without bound
     pub net_inbox: usize,
+    /// replica transport (`--transport`): "local" keeps every replica
+    /// in-process behind the router; "process" (Linux) spawns each as
+    /// a separate `chai replica` child process speaking the line-JSON
+    /// protocol over its own epoll reactor, so a replica crash cannot
+    /// take the router down
+    pub transport: String,
+    /// health-probe cadence in milliseconds for mesh replicas
+    /// (`--probe-ms`)
+    pub probe_ms: u64,
+    /// consecutive failed probes before a suspect replica is declared
+    /// dead and its accepted requests are requeued on survivors
+    /// (`--probe-suspect`)
+    pub probe_suspect: u32,
+    /// binary to spawn for `--transport process` replicas
+    /// (`--replica-cmd`); `None` re-executes the current binary
+    pub replica_cmd: Option<PathBuf>,
 }
 
 impl Default for ServingConfig {
@@ -273,6 +289,10 @@ impl Default for ServingConfig {
             route: "rr".into(),
             net: "threads".into(),
             net_inbox: 4096,
+            transport: "local".into(),
+            probe_ms: 100,
+            probe_suspect: 3,
+            replica_cmd: None,
         }
     }
 }

@@ -39,20 +39,23 @@
 //! inbox drain, so a request can never slip into the ring after the
 //! last pop and hang its client.
 
-pub use crate::scheduler::{FrameSink, Request, RespSink, Response, StreamFrame, SubmitOpts};
+pub use crate::scheduler::{
+    DrainedItem, FrameSink, Request, RespSink, Response, StreamFrame, SubmitOpts,
+};
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use crate::config::ServingConfig;
-use crate::engine::{Engine, Variant};
+use crate::engine::{Engine, MigratedSession, Variant};
 use crate::metrics::Metrics;
 use crate::net::ring::Mpsc;
 use crate::scheduler::{SchedPolicy, Scheduler};
+use crate::util::json::Json;
 use crate::util::now_ms;
 
 /// Deferred engine construction, run ON the engine thread (backends are
@@ -92,7 +95,49 @@ impl Shared {
 struct QueueState {
     /// request ids whose abort was requested but not yet applied
     cancels: Vec<u64>,
+    /// mesh control operations (drain / adopt) awaiting the engine
+    /// thread — cold path, like cancels
+    ops: Vec<Op>,
     shutdown: bool,
+}
+
+/// Mesh control operations the engine thread executes between ticks.
+enum Op {
+    /// Evacuate every held request ([`crate::scheduler::Scheduler::drain`])
+    /// and hand the items to the waiting caller.
+    Drain(Sender<Vec<DrainedItem>>),
+    /// Adopt a session migrated from a peer replica.
+    Adopt { req: Request, payload: AdoptPayload, streamed: usize },
+    /// Wire-protocol drain (a `chai replica` child being told to
+    /// evacuate by its parent): the reply line goes out on the
+    /// requesting connection's event ring.
+    #[cfg(target_os = "linux")]
+    DrainNet(crate::net::NetSink),
+}
+
+/// An adopted session's payload: already-decoded (in-process mesh) or
+/// the wire-encoded [`crate::mesh`] record, decoded on the engine
+/// thread against this replica's own manifest.
+enum AdoptPayload {
+    Local(MigratedSession),
+    Wire(Json),
+}
+
+/// A wire `{"cmd": "adopt", ...}` unpacked by the transport layer:
+/// everything the coordinator needs to re-home a migrated session under
+/// its original request id.
+#[cfg(target_os = "linux")]
+pub struct AdoptNet {
+    /// original (router-assigned) request id — survives migration so
+    /// the client's stream and cancels keep working
+    pub rid: u64,
+    /// frames the client has already received (resume point)
+    pub streamed: usize,
+    pub max_new: usize,
+    /// [`crate::mesh::encode_migrated`] record
+    pub record: Json,
+    pub stream: Option<FrameSink>,
+    pub resp: RespSink,
 }
 
 /// Handle owned by front-ends; cheap to clone.
@@ -144,6 +189,11 @@ impl Coordinator {
                         }
                         while let Some(r) = thread_shared.inbox.pop() {
                             r.resp_tx.send(Response::error(r.id, format!("{e:#}")));
+                        }
+                        let ops =
+                            std::mem::take(&mut thread_shared.queue.lock().unwrap().ops);
+                        for op in ops {
+                            fail_op(op, &thread_metrics);
                         }
                     }
                 }
@@ -203,6 +253,7 @@ impl Coordinator {
             submitted_ms: now_ms(),
             resp_tx,
             stream: opts.stream,
+            stream_offset: opts.stream_offset,
         };
         let sh = &*self.shared;
         sh.submitting.fetch_add(1, Ordering::SeqCst);
@@ -243,6 +294,92 @@ impl Coordinator {
         }
         g.cancels.push(id);
         self.shared.cv.notify_one();
+    }
+
+    /// Queue a mesh op for the engine thread. `Err` hands the op back:
+    /// the coordinator is shutting down and will never run it, so the
+    /// caller must answer the op's client itself.
+    fn push_op(&self, op: Op) -> Result<(), Op> {
+        let mut g = self.shared.queue.lock().unwrap();
+        if g.shutdown {
+            return Err(op);
+        }
+        g.ops.push(op);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// Evacuate every request this replica holds (blocking until the
+    /// engine thread hands them over). Empty when the replica is
+    /// already shutting down — its requests get terminal errors from
+    /// `fail_all` instead, so nothing is silently dropped either way.
+    pub fn drain_collect(&self) -> Vec<DrainedItem> {
+        let (tx, rx) = channel();
+        if self.push_op(Op::Drain(tx)).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    /// Adopt a session migrated in-process from a peer replica, keeping
+    /// its original id and stream position.
+    pub fn adopt_local(&self, req: Request, m: MigratedSession, streamed: usize) {
+        self.adopt_op(req, AdoptPayload::Local(m), streamed);
+    }
+
+    /// Adopt a wire-encoded session record (decoded on the engine
+    /// thread against this replica's manifest).
+    pub fn adopt_wire(&self, req: Request, record: Json, streamed: usize) {
+        self.adopt_op(req, AdoptPayload::Wire(record), streamed);
+    }
+
+    fn adopt_op(&self, req: Request, payload: AdoptPayload, streamed: usize) {
+        if let Err(Op::Adopt { req, .. }) = self.push_op(Op::Adopt { req, payload, streamed }) {
+            self.metrics.inc("errors");
+            req.resp_tx.send(Response::error(req.id, "shutting down".into()));
+        }
+    }
+
+    /// Wire-protocol drain (a `chai replica` child told to evacuate by
+    /// its parent): the engine thread writes one `{"drained": [...]}`
+    /// reply line on the requesting connection's event ring.
+    #[cfg(target_os = "linux")]
+    pub fn drain_net(&self, sink: crate::net::NetSink) {
+        if let Err(Op::DrainNet(sink)) = self.push_op(Op::DrainNet(sink)) {
+            let err = Json::obj(vec![("error", Json::Str("shutting down".into()))]);
+            sink.send_line(err.to_string(), true);
+        }
+    }
+
+    /// Unpack a wire `{"cmd": "adopt"}` into a [`Request`] and queue
+    /// it. The session record itself is decoded on the engine thread
+    /// (it needs this replica's manifest); only the variant — needed
+    /// for the `Request` — is peeked at here, and a malformed record is
+    /// answered with a terminal error immediately.
+    #[cfg(target_os = "linux")]
+    pub fn adopt_net(&self, a: AdoptNet) {
+        let variant = a.record.get("variant").and_then(|v| Variant::parse(v.str()?));
+        let variant = match variant {
+            Ok(v) => v,
+            Err(e) => {
+                self.metrics.inc("errors");
+                a.resp.send(Response::error(a.rid, format!("adopt: {e:#}")));
+                return;
+            }
+        };
+        let req = Request {
+            id: a.rid,
+            // the prompt's tokens travel inside the session record;
+            // the original text stays with the parent's entry registry
+            prompt: String::new(),
+            max_new: a.max_new,
+            variant,
+            submitted_ms: now_ms(),
+            resp_tx: a.resp,
+            stream: a.stream,
+            stream_offset: a.streamed,
+        };
+        self.adopt_op(req, AdoptPayload::Wire(a.record), a.streamed);
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -305,22 +442,28 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
     metrics.set_gauge("net_inbox_capacity", shared.inbox.capacity() as f64);
     let mut sched = Scheduler::new(SchedPolicy::from_config(cfg));
     let mut cancels: Vec<u64> = Vec::new();
+    let mut ops: Vec<Op> = Vec::new();
     let mut stopping = false;
     while !stopping {
         {
             let mut g = shared.queue.lock().unwrap();
-            if sched.is_idle() && shared.inbox.is_empty() && g.cancels.is_empty() {
+            if sched.is_idle() && shared.inbox.is_empty() && g.cancels.is_empty() && g.ops.is_empty()
+            {
                 if !g.shutdown {
                     // idle: block until work arrives
                     g = shared
                         .cv
                         .wait_while(g, |q| {
-                            shared.inbox.is_empty() && q.cancels.is_empty() && !q.shutdown
+                            shared.inbox.is_empty()
+                                && q.cancels.is_empty()
+                                && q.ops.is_empty()
+                                && !q.shutdown
                         })
                         .unwrap();
                 }
             }
             cancels.append(&mut g.cancels);
+            ops.append(&mut g.ops);
             stopping = g.shutdown;
         }
         while let Some(r) = shared.inbox.pop() {
@@ -330,7 +473,19 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
             break;
         }
         for id in cancels.drain(..) {
-            sched.cancel(id, engine, metrics);
+            if !sched.cancel(id, engine, metrics) {
+                // cancel raced ahead of its submit (the submitter may
+                // still be mid-push into the inbox): tombstone the id so
+                // the submit aborts at drain time instead of running to
+                // completion. Harmless for genuinely unknown ids — the
+                // router broadcasts cancels and ids are never reused.
+                sched.note_cancelled_unseen(id);
+            }
+        }
+        // mesh ops run after the inbox drain so a drain reply includes
+        // every submit that was already on the wire ahead of it
+        for op in ops.drain(..) {
+            run_op(op, &mut sched, engine, metrics);
         }
         sched.run_tick(engine, metrics);
         metrics.set_gauge("net_inbox_depth", shared.inbox.len() as f64);
@@ -338,12 +493,69 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
     }
     // shutdown: wait out submitters that passed the shutdown check
     // before the flag landed (they are mid-push right now), take what
-    // they queued, then answer everything still in flight
+    // they queued, then answer everything still in flight — including
+    // mesh ops, whose callers must never block on a dead engine
     while shared.submitting.load(Ordering::SeqCst) != 0 {
         std::thread::yield_now();
     }
     while let Some(r) = shared.inbox.pop() {
         sched.submit(r);
     }
+    ops.append(&mut shared.queue.lock().unwrap().ops);
+    for op in ops.drain(..) {
+        fail_op(op, metrics);
+    }
     sched.fail_all(engine, metrics, "shutting down");
+}
+
+/// Execute one mesh op on the engine thread.
+fn run_op(op: Op, sched: &mut Scheduler, engine: &Engine, metrics: &Metrics) {
+    match op {
+        Op::Drain(tx) => {
+            let _ = tx.send(sched.drain(engine, metrics));
+        }
+        Op::Adopt { req, payload, streamed } => {
+            let m = match payload {
+                AdoptPayload::Local(m) => Ok(m),
+                AdoptPayload::Wire(j) => crate::mesh::decode_migrated(&j, engine.manifest()),
+            };
+            match m {
+                Ok(m) => sched.adopt(req, m, streamed, engine, metrics),
+                Err(e) => {
+                    metrics.inc("errors");
+                    req.resp_tx.send(Response::error(req.id, format!("adopt: {e:#}")));
+                }
+            }
+        }
+        #[cfg(target_os = "linux")]
+        Op::DrainNet(sink) => {
+            let records = sched
+                .drain(engine, metrics)
+                .into_iter()
+                .map(|d| {
+                    let session = d.session.map(|m| crate::mesh::encode_migrated(&m));
+                    crate::mesh::drain_record(d.req.id, d.streamed, session)
+                })
+                .collect();
+            sink.send_line(crate::mesh::drain_reply(records).to_string(), true);
+        }
+    }
+}
+
+/// Answer a mesh op that will never run (engine stopping or dead).
+fn fail_op(op: Op, metrics: &Metrics) {
+    match op {
+        Op::Drain(tx) => {
+            let _ = tx.send(Vec::new());
+        }
+        Op::Adopt { req, .. } => {
+            metrics.inc("errors");
+            req.resp_tx.send(Response::error(req.id, "shutting down".into()));
+        }
+        #[cfg(target_os = "linux")]
+        Op::DrainNet(sink) => {
+            let err = Json::obj(vec![("error", Json::Str("shutting down".into()))]);
+            sink.send_line(err.to_string(), true);
+        }
+    }
 }

@@ -33,7 +33,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::clustering::membership::{identify, Membership};
 use crate::config::{Manifest, ServingConfig};
-use crate::kv::paged::{KvLayout, PagedKv, PagedSnapshot, SwapHandle, SwapPool, SwapSnapshot};
+use crate::kv::paged::{
+    KvLayout, PagedKv, PagedSnapshot, SwapHandle, SwapPool, SwapSnapshot, SwappedSeq,
+};
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
 use crate::runtime::{backend_for, Backend, ClusterAssignment, In, PagedDecodeRow};
@@ -1252,6 +1254,69 @@ impl FrozenSession {
     /// Whether resume will restore from the swap tier (vs recompute).
     pub fn is_swapped(&self) -> bool {
         self.swap.is_some()
+    }
+}
+
+/// A session detached from any engine, for migration between replicas
+/// (the mesh drain path). Unlike [`FrozenSession`], whose `swap` field
+/// is a ticket into ONE engine's spill tier, this is fully
+/// self-contained: the serialized K,V rows travel inside it, so it can
+/// cross a process boundary (see `crate::mesh` for the wire codec) and
+/// be re-adopted by [`Engine::import_frozen`] on a different replica.
+/// Resume stays bit-deterministic either way: restored rows are
+/// bit-exact and anything unrecoverable (e.g. blocks pinned by the
+/// source's batchmates) is recomputed through the suffix-prefill path.
+pub struct MigratedSession {
+    pub variant: Variant,
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub bucket: usize,
+    pub clusters: Option<ClusterAssignment>,
+    pub timing: Timing,
+    /// compact per-panel K,V serialization (`None` = recompute on the
+    /// target; `blocks[i] = None` = pinned at freeze, re-adopt or
+    /// recompute)
+    pub kv: Option<SwappedSeq>,
+}
+
+impl Engine {
+    /// Detach a frozen session from this engine: redeem its swap ticket
+    /// (if any) out of the local spill tier into the self-contained
+    /// [`MigratedSession`] form a peer replica can adopt.
+    pub fn export_frozen(&self, f: FrozenSession) -> MigratedSession {
+        let kv = match (&self.swap, f.swap) {
+            (Some(tier), Some(h)) => tier.borrow_mut().take(h).ok(),
+            _ => None,
+        };
+        MigratedSession {
+            variant: f.variant,
+            tokens: f.tokens,
+            prompt_len: f.prompt_len,
+            max_new: f.max_new,
+            bucket: f.bucket,
+            clusters: f.clusters,
+            timing: f.timing,
+            kv,
+        }
+    }
+
+    /// Adopt a migrated session: stage its K,V payload into this
+    /// engine's spill tier and hand back a [`FrozenSession`] that
+    /// [`Self::thaw_session`] resumes exactly like a local preemption.
+    /// A missing/full tier or absent payload degrades to
+    /// recompute-on-resume — never an error, and still bit-identical.
+    pub fn import_frozen(&self, m: MigratedSession) -> FrozenSession {
+        let MigratedSession { variant, tokens, prompt_len, max_new, bucket, clusters, timing, kv } =
+            m;
+        let mut handle: Option<SwapHandle> = None;
+        if let (Some(tier), Some(entry)) = (&self.swap, kv) {
+            let mut t = tier.borrow_mut();
+            if t.fits(entry.bytes) {
+                handle = t.insert(entry).ok();
+            }
+        }
+        FrozenSession { variant, tokens, prompt_len, max_new, bucket, clusters, timing, swap: handle }
     }
 }
 

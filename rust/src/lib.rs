@@ -30,9 +30,15 @@
 //!   cross-thread tick loop around it.
 //! * [`router`] is the multi-replica front-end: N data-parallel engine
 //!   replicas behind a pluggable placement policy (round-robin,
-//!   least-loaded, prefix-affinity by KV hash-chain fingerprint), one
-//!   shared copy of the model weights, a global request-id space, and
-//!   broadcast cancellation; [`server`] exposes either a single
+//!   least-loaded, prefix-affinity by KV hash-chain fingerprint over a
+//!   consistent-hash ring), one shared copy of the model weights, a
+//!   global request-id space, and broadcast cancellation. Replicas are
+//!   location-transparent (`--transport local|process`): the process
+//!   transport runs each as a separate `chai replica` child supervised
+//!   by health probes, with graceful drain migrating live sessions in
+//!   [`mesh`]'s wire form and crash requeue replaying accepted requests
+//!   on survivors at their recorded stream offsets; [`server`] exposes
+//!   either a single
 //!   coordinator or the router over a TCP line-JSON protocol with
 //!   per-token streaming and request cancellation, through either a
 //!   thread-per-connection transport or [`net`]'s single-thread epoll
@@ -50,6 +56,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod kv;
+pub mod mesh;
 pub mod metrics;
 pub mod model;
 pub mod net;

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   serve     start the TCP line-JSON server (engine thread + coordinator)
+//!   replica   one mesh replica (Linux): reactor server on an ephemeral
+//!             port, spawned and supervised by a `chai serve
+//!             --transport process` parent
 //!   generate  one-shot generation from the command line
 //!   eval      accuracy of a variant on the synthetic suites (Tables 1-3)
 //!   analyze   offline head analysis: correlations, elbow, memberships
@@ -24,6 +27,10 @@
 //!                                                        # all streaming connections; bounded submission inbox sheds
 //!                                                        # with {"error":"overloaded"} when full. --net threads (default)
 //!                                                        # keeps the thread-per-connection transport
+//!   chai serve --replicas 4 --transport process           # location-transparent mesh (Linux): each replica is a
+//!                                                        # separate `chai replica` process behind the same router;
+//!                                                        # health probes (--probe-ms 100 --probe-suspect 3) requeue
+//!                                                        # a dead replica's in-flight requests on the survivors
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -65,7 +72,13 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // per-session bucket gather/scatter path
         batched_decode: !args.bool("no-batched-decode"),
         kv_block_size: args.usize("kv-block-size", 16)?,
-        kv_capacity_bytes: args.usize("kv-capacity-mb", 512)? * 1024 * 1024,
+        // --kv-capacity-bytes carries the exact pool size (the process
+        // transport forwards it to replica children so parent and child
+        // budgets agree to the byte); --kv-capacity-mb is the human knob
+        kv_capacity_bytes: match args.opt_str("kv-capacity-bytes") {
+            Some(v) => v.parse()?,
+            None => args.usize("kv-capacity-mb", 512)? * 1024 * 1024,
+        },
         // overload scheduling: --preempt enables preempt-and-requeue of
         // the LRU live session once the queue head has starved past
         // --starve-ticks; its K,V blocks swap out to a --swap-blocks
@@ -87,6 +100,17 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // inbox = shed with a terminal {"error":"overloaded"} line)
         net: args.str("net", "threads"),
         net_inbox: args.usize("net-inbox", 4096)?,
+        // replica mesh: --transport local keeps every replica in the
+        // router process; --transport process (Linux) spawns each one
+        // as a `chai replica` child speaking line-JSON over the epoll
+        // reactor, with health probes every --probe-ms escalating
+        // suspect->dead after --probe-suspect consecutive failures
+        transport: args.str("transport", "local"),
+        probe_ms: args.usize("probe-ms", 100)? as u64,
+        probe_suspect: args.usize("probe-suspect", 3)? as u32,
+        // replica child binary override (tests point this at the
+        // freshly-built `chai`); default re-executes the current binary
+        replica_cmd: args.opt_str("replica-cmd").map(PathBuf::from),
     })
 }
 
@@ -95,6 +119,7 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
+        "replica" => cmd_replica(&args),
         "generate" => cmd_generate(&args),
         "eval" => cmd_eval(&args),
         "analyze" => cmd_analyze(&args),
@@ -129,6 +154,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// One mesh replica: a single coordinator behind a reactor server on an
+/// ephemeral port. The parent learns the port from the one-line stdout
+/// handshake and owns our lifetime through the stdin pipe — EOF there
+/// (graceful shutdown OR a dead parent) is the exit signal, so a
+/// replica can never outlive its router as an orphan.
+#[cfg(target_os = "linux")]
+fn cmd_replica(args: &Args) -> Result<()> {
+    use std::io::{Read, Write};
+
+    let mut cfg = serving_config(args)?;
+    cfg.replicas = 1; // a replica is exactly one engine; fan-out is the parent's job
+    let handle = chai::coordinator::Coordinator::start(cfg)?;
+    let server = Server::start_with(
+        handle.coordinator.clone(),
+        "127.0.0.1:0",
+        chai::net::NetMode::Reactor,
+    )?;
+    // the handshake line must be the FIRST stdout line and must flush:
+    // the parent blocks on it before connecting
+    let hello = Json::obj(vec![("replica_listening", Json::Str(server.addr.to_string()))]);
+    println!("{}", hello.to_string());
+    std::io::stdout().flush()?;
+    // park until the parent closes our stdin
+    let mut sink = Vec::new();
+    let _ = std::io::stdin().read_to_end(&mut sink);
+    server.stop();
+    handle.shutdown();
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn cmd_replica(_args: &Args) -> Result<()> {
+    bail!("chai replica requires Linux (epoll reactor)")
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {

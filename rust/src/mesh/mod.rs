@@ -1,0 +1,440 @@
+//! Mesh wire codec: bit-exact JSON serialization of migrated sessions.
+//!
+//! The replica mesh moves live work between `chai replica` processes as
+//! single line-JSON records (the same framing every other protocol
+//! command uses — see `crate::server`). The payload is an
+//! [`Engine::export_frozen`] [`MigratedSession`]: tokens, generation
+//! budget, the CHAI cluster assignment, timing, and the compact
+//! per-panel K,V serialization the swap tier produces
+//! ([`SwappedSeq`]).
+//!
+//! **Bit-exactness.** Resume on the target must be bit-identical to
+//! resume on the source, so f32 K,V rows cross the wire as their `u32`
+//! bit patterns — every `u32` is exactly representable as an f64, and
+//! the JSON serializer prints integer-valued numbers through `i64`
+//! formatting, so the round trip is lossless by construction (floats
+//! printed as decimals would not be, and NaN payloads would not even
+//! parse). Timing floats use the serializer's shortest-roundtrip `f64`
+//! path, which is also exact.
+//!
+//! **Layout is NOT serialized.** A [`SwappedSeq`] embeds the source's
+//! [`KvLayout`]; on the wire only the variant name travels, and the
+//! decoder rebuilds the layout from the TARGET engine's manifest
+//! (`KvLayout::from_manifest(manifest, variant.cache_kind())`). The
+//! mesh requires identical manifests across replicas anyway (same
+//! model, same clustering artifacts), and deriving locally means a
+//! mismatched fleet fails loudly at the data-length check below instead
+//! of scribbling rows into a wrong-shaped slab.
+//!
+//! Blocks pinned in the source's hot tier at freeze time serialize as
+//! `null` placeholders; the target's `restore_swapped` sees the hole,
+//! truncates the bit-exact leading prefix there, and recomputes the
+//! suffix through the deterministic prefill path — still bit-identical
+//! (greedy decode), just more FLOPs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Manifest;
+use crate::engine::{MigratedSession, Timing, Variant};
+use crate::kv::paged::{KvLayout, SwappedBlock, SwappedSeq};
+use crate::runtime::ClusterAssignment;
+use crate::util::json::Json;
+
+/// Serialize a migrated session to its wire object (one line once
+/// `to_string`'d by the caller).
+pub fn encode_migrated(m: &MigratedSession) -> Json {
+    let tokens = Json::Arr(m.tokens.iter().map(|&t| Json::Num(t as f64)).collect());
+    let clusters = match &m.clusters {
+        None => Json::Null,
+        Some(c) => Json::obj(vec![
+            (
+                "membership",
+                Json::Arr(c.membership.iter().map(|v| Json::from_usizes(v)).collect()),
+            ),
+            ("reps", Json::Arr(c.reps.iter().map(|v| Json::from_usizes(v)).collect())),
+        ]),
+    };
+    let timing = Json::obj(vec![
+        ("probe_ms", Json::Num(m.timing.probe_ms)),
+        ("cluster_ms", Json::Num(m.timing.cluster_ms)),
+        ("prefill_ms", Json::Num(m.timing.prefill_ms)),
+        ("ttft_ms", Json::Num(m.timing.ttft_ms)),
+        ("decode_ms", Json::from_f64s(&m.timing.decode_ms)),
+    ]);
+    let kv = match &m.kv {
+        None => Json::Null,
+        Some(seq) => {
+            let blocks = seq
+                .blocks
+                .iter()
+                .map(|b| match b {
+                    None => Json::Null,
+                    Some(b) => Json::obj(vec![
+                        ("filled", Json::Num(b.filled as f64)),
+                        (
+                            "data",
+                            Json::Arr(
+                                b.data
+                                    .iter()
+                                    .map(|f| Json::Num(f.to_bits() as f64))
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                })
+                .collect();
+            Json::obj(vec![
+                ("block_size", Json::Num(seq.block_size as f64)),
+                ("len", Json::Num(seq.len as f64)),
+                ("blocks", Json::Arr(blocks)),
+            ])
+        }
+    };
+    Json::obj(vec![
+        ("variant", Json::Str(m.variant.name())),
+        ("tokens", tokens),
+        ("prompt_len", Json::Num(m.prompt_len as f64)),
+        ("max_new", Json::Num(m.max_new as f64)),
+        ("bucket", Json::Num(m.bucket as f64)),
+        ("clusters", clusters),
+        ("timing", timing),
+        ("kv", kv),
+    ])
+}
+
+fn decode_timing(j: &Json) -> Result<Timing> {
+    Ok(Timing {
+        probe_ms: j.get("probe_ms")?.num()?,
+        cluster_ms: j.get("cluster_ms")?.num()?,
+        prefill_ms: j.get("prefill_ms")?.num()?,
+        decode_ms: j.get("decode_ms")?.f64_vec()?,
+        ttft_ms: j.get("ttft_ms")?.num()?,
+    })
+}
+
+fn decode_f32_bits(j: &Json) -> Result<f32> {
+    let n = j.num()?;
+    if n < 0.0 || n > u32::MAX as f64 || n.fract() != 0.0 {
+        bail!("kv data value {n} is not a u32 bit pattern");
+    }
+    Ok(f32::from_bits(n as u32))
+}
+
+fn decode_kv(j: &Json, layout: &KvLayout) -> Result<SwappedSeq> {
+    let block_size = j.get("block_size")?.usize()?;
+    let len = j.get("len")?.usize()?;
+    if block_size == 0 {
+        bail!("kv record has block_size 0");
+    }
+    let mut blocks: Vec<Option<SwappedBlock>> = Vec::new();
+    for (i, b) in j.get("blocks")?.arr()?.iter().enumerate() {
+        if matches!(b, Json::Null) {
+            blocks.push(None);
+            continue;
+        }
+        let filled = b.get("filled")?.usize()?;
+        if filled == 0 || filled > block_size {
+            bail!("kv block {i}: filled {filled} outside 1..={block_size}");
+        }
+        let raw = b.get("data")?.arr()?;
+        // the capture format is `floats_per_token * filled` rows; a
+        // mismatch means the fleet's manifests disagree — refuse rather
+        // than restore into a wrong-shaped slab
+        let want = layout.floats_per_token() * filled;
+        if raw.len() != want {
+            bail!(
+                "kv block {i}: {} floats on the wire, layout expects {want} \
+                 (mismatched replica manifests?)",
+                raw.len()
+            );
+        }
+        let mut data = Vec::with_capacity(raw.len());
+        for v in raw {
+            data.push(decode_f32_bits(v).with_context(|| format!("kv block {i}"))?);
+        }
+        blocks.push(Some(SwappedBlock { filled, data }));
+    }
+    if blocks.len() != (len + block_size - 1) / block_size {
+        bail!(
+            "kv record covers len {len} with {} blocks (block_size {block_size})",
+            blocks.len()
+        );
+    }
+    // accounting size recomputed locally, identically to how the source
+    // tier charged it (sum of serialized block payloads)
+    let bytes = blocks.iter().flatten().map(|b| b.bytes()).sum();
+    Ok(SwappedSeq { layout: layout.clone(), block_size, len, blocks, bytes })
+}
+
+/// Parse a wire record back into a [`MigratedSession`], rebuilding the
+/// K,V layout from the TARGET's `manifest` (see module docs). Runs on
+/// the adopting engine's thread.
+pub fn decode_migrated(j: &Json, manifest: &Manifest) -> Result<MigratedSession> {
+    let variant = Variant::parse(j.get("variant")?.str()?)?;
+    let tokens: Vec<i32> = j
+        .get("tokens")?
+        .arr()?
+        .iter()
+        .map(|t| t.int().map(|v| v as i32))
+        .collect::<Result<_>>()?;
+    let prompt_len = j.get("prompt_len")?.usize()?;
+    if prompt_len > tokens.len() {
+        bail!("prompt_len {prompt_len} exceeds {} tokens", tokens.len());
+    }
+    let clusters = match j.get("clusters")? {
+        Json::Null => None,
+        c => {
+            let membership: Vec<Vec<usize>> = c
+                .get("membership")?
+                .arr()?
+                .iter()
+                .map(|v| v.usize_vec())
+                .collect::<Result<_>>()?;
+            let reps: Vec<Vec<usize>> =
+                c.get("reps")?.arr()?.iter().map(|v| v.usize_vec()).collect::<Result<_>>()?;
+            Some(ClusterAssignment { membership, reps })
+        }
+    };
+    let layout = KvLayout::from_manifest(manifest, variant.cache_kind());
+    let kv = match j.get("kv")? {
+        Json::Null => None,
+        k => Some(decode_kv(k, &layout).context("kv payload")?),
+    };
+    if let Some(seq) = &kv {
+        if seq.len > tokens.len() {
+            bail!("kv record covers {} positions but only {} tokens", seq.len, tokens.len());
+        }
+    }
+    Ok(MigratedSession {
+        variant,
+        tokens,
+        prompt_len,
+        max_new: j.get("max_new")?.usize()?,
+        bucket: j.get("bucket")?.usize()?,
+        clusters,
+        timing: decode_timing(j.get("timing")?)?,
+        kv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Drain protocol records
+// ---------------------------------------------------------------------------
+
+/// One entry of a `{"cmd":"drain"}` reply: a request the replica gave
+/// back. `session: None` means the request never started decoding (or
+/// could not be frozen) — the parent resubmits it from its own copy of
+/// the prompt; `Some` carries the encoded [`MigratedSession`] for
+/// bit-deterministic resume elsewhere. `streamed` is the replica's
+/// frame count at drain time — informational; the parent's own
+/// forwarded-frame counter is authoritative for dedup.
+#[derive(Debug)]
+pub struct DrainRecord {
+    pub rid: u64,
+    pub streamed: usize,
+    pub session: Option<Json>,
+}
+
+impl DrainRecord {
+    pub fn parse(j: &Json) -> Result<DrainRecord> {
+        Ok(DrainRecord {
+            rid: j.get("rid")?.usize()? as u64,
+            streamed: j.opt("streamed").map(|v| v.usize()).transpose()?.unwrap_or(0),
+            session: match j.opt("session") {
+                None | Some(Json::Null) => None,
+                Some(s) => Some(s.clone()),
+            },
+        })
+    }
+}
+
+/// Build one drain-reply record (see [`DrainRecord`]).
+pub fn drain_record(rid: u64, streamed: usize, session: Option<Json>) -> Json {
+    Json::obj(vec![
+        ("rid", Json::Num(rid as f64)),
+        ("streamed", Json::Num(streamed as f64)),
+        ("session", session.unwrap_or(Json::Null)),
+    ])
+}
+
+/// The full `{"cmd":"drain"}` reply line: every held request, encoded.
+pub fn drain_reply(records: Vec<Json>) -> Json {
+    Json::obj(vec![("drained", Json::Arr(records))])
+}
+
+/// Parse a drain reply into its records.
+pub fn parse_drain_reply(j: &Json) -> Result<Vec<DrainRecord>> {
+    j.get("drained")?.arr()?.iter().map(DrainRecord::parse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{reference::RefBackend, Backend};
+    use crate::util::rng::Rng;
+
+    fn toy_manifest() -> Manifest {
+        RefBackend::toy(0).manifest().clone()
+    }
+
+    fn sample_session(with_kv: bool, with_holes: bool) -> MigratedSession {
+        let m = toy_manifest();
+        let variant = Variant::Chai;
+        let layout = KvLayout::from_manifest(&m, variant.cache_kind());
+        let block_size = 16usize;
+        let len = 40usize; // 2 full blocks + 8 rows
+        let mut rng = Rng::new(0x5eed);
+        let mut blocks: Vec<Option<SwappedBlock>> = Vec::new();
+        for bi in 0..(len + block_size - 1) / block_size {
+            if with_holes && bi == 1 {
+                blocks.push(None); // pinned at freeze time
+                continue;
+            }
+            let filled = (len - bi * block_size).min(block_size);
+            // varied finite values with negatives and long mantissas —
+            // everything attention math actually produces
+            let data: Vec<f32> = (0..layout.floats_per_token() * filled)
+                .map(|_| (rng.next_u64() as u32) as f32 * 1.1920929e-7 - 256.0)
+                .collect();
+            blocks.push(Some(SwappedBlock { filled, data }));
+        }
+        let bytes = blocks.iter().flatten().map(|b| b.bytes()).sum();
+        let kv = with_kv.then(|| SwappedSeq { layout, block_size, len, blocks, bytes });
+        MigratedSession {
+            variant,
+            tokens: (0..41).map(|t| t as i32).collect(),
+            prompt_len: 17,
+            max_new: 64,
+            bucket: 128,
+            clusters: Some(ClusterAssignment {
+                membership: vec![vec![0, 0, 1, 1], vec![1, 0, 1, 0]],
+                reps: vec![vec![0, 2], vec![1, 0]],
+            }),
+            timing: Timing {
+                probe_ms: 1.25,
+                cluster_ms: 0.5,
+                prefill_ms: 3.75,
+                decode_ms: vec![0.125, 0.25, 0.0625],
+                ttft_ms: 4.0,
+            },
+            kv: None,
+        }
+        .with_kv(kv)
+    }
+
+    trait WithKv {
+        fn with_kv(self, kv: Option<SwappedSeq>) -> MigratedSession;
+    }
+    impl WithKv for MigratedSession {
+        fn with_kv(mut self, kv: Option<SwappedSeq>) -> MigratedSession {
+            self.kv = kv;
+            self
+        }
+    }
+
+    /// The acceptance contract: encode → line string → parse → decode
+    /// reproduces every f32 bit pattern, token, and cluster exactly.
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let m = toy_manifest();
+        for (with_kv, with_holes) in [(true, false), (true, true), (false, false)] {
+            let orig = sample_session(with_kv, with_holes);
+            let line = encode_migrated(&orig).to_string();
+            let back = decode_migrated(&Json::parse(&line).unwrap(), &m).unwrap();
+            assert_eq!(back.variant, orig.variant);
+            assert_eq!(back.tokens, orig.tokens);
+            assert_eq!(back.prompt_len, orig.prompt_len);
+            assert_eq!(back.max_new, orig.max_new);
+            assert_eq!(back.bucket, orig.bucket);
+            let (bc, oc) = (back.clusters.unwrap(), orig.clusters.unwrap());
+            assert_eq!(bc.membership, oc.membership);
+            assert_eq!(bc.reps, oc.reps);
+            assert_eq!(back.timing.decode_ms, orig.timing.decode_ms);
+            assert_eq!(back.timing.ttft_ms, orig.timing.ttft_ms);
+            match (&back.kv, &orig.kv) {
+                (None, None) => {}
+                (Some(b), Some(o)) => {
+                    assert_eq!(b.block_size, o.block_size);
+                    assert_eq!(b.len, o.len);
+                    assert_eq!(b.bytes, o.bytes, "accounting must be recomputed identically");
+                    assert_eq!(b.layout, o.layout, "layout rebuilt from the manifest");
+                    assert_eq!(b.blocks.len(), o.blocks.len());
+                    for (bb, ob) in b.blocks.iter().zip(&o.blocks) {
+                        match (bb, ob) {
+                            (None, None) => {}
+                            (Some(bb), Some(ob)) => {
+                                assert_eq!(bb.filled, ob.filled);
+                                let bits: Vec<u32> =
+                                    bb.data.iter().map(|f| f.to_bits()).collect();
+                                let obits: Vec<u32> =
+                                    ob.data.iter().map(|f| f.to_bits()).collect();
+                                assert_eq!(bits, obits, "f32 rows must round-trip bit-exactly");
+                            }
+                            _ => panic!("hole placement must survive the round trip"),
+                        }
+                    }
+                }
+                _ => panic!("kv presence must survive the round trip"),
+            }
+        }
+    }
+
+    /// Corrupted records fail loudly instead of restoring garbage.
+    #[test]
+    fn decode_rejects_malformed_records() {
+        let m = toy_manifest();
+        let good = encode_migrated(&sample_session(true, false));
+
+        // truncated kv data (wrong row count for the layout)
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(kv)) = o.get_mut("kv") {
+                if let Some(Json::Arr(blocks)) = kv.get_mut("blocks") {
+                    if let Some(Json::Obj(b0)) = blocks.get_mut(0) {
+                        if let Some(Json::Arr(data)) = b0.get_mut("data") {
+                            data.pop();
+                        }
+                    }
+                }
+            }
+        }
+        assert!(decode_migrated(&j, &m).is_err(), "short kv rows must be rejected");
+
+        // prompt_len beyond the token list
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            o.insert("prompt_len".into(), Json::Num(10_000.0));
+        }
+        assert!(decode_migrated(&j, &m).is_err());
+
+        // unknown variant
+        let mut j = good;
+        if let Json::Obj(o) = &mut j {
+            o.insert("variant".into(), Json::Str("definitely-not-a-variant".into()));
+        }
+        assert!(decode_migrated(&j, &m).is_err());
+    }
+
+    /// Drain records: pending (no session) and migrated forms parse
+    /// back to what was written.
+    #[test]
+    fn drain_records_roundtrip() {
+        let session = encode_migrated(&sample_session(true, true));
+        let reply = drain_reply(vec![
+            drain_record(7, 0, None),
+            drain_record(9, 4, Some(session.clone())),
+        ]);
+        let line = reply.to_string();
+        let records = parse_drain_reply(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].rid, 7);
+        assert!(records[0].session.is_none());
+        assert_eq!(records[1].rid, 9);
+        assert_eq!(records[1].streamed, 4);
+        assert_eq!(
+            records[1].session.as_ref().unwrap().to_string(),
+            session.to_string(),
+            "the embedded session record must pass through untouched"
+        );
+    }
+}

@@ -93,6 +93,10 @@ pub struct NetStats {
     /// connections killed because a slow reader grew its write buffer
     /// past the cap (the reader only ever kills itself)
     pub conn_buffer_kills: AtomicU64,
+    /// connections that closed mid-line (bytes with no trailing
+    /// newline at EOF) — the partial line is rejected with an error
+    /// line, never processed (identical across both transports)
+    pub truncated_eof: AtomicU64,
     /// terminal events that found their (correctly-sized) ring full —
     /// always 0 unless an invariant broke
     pub lost_terminals: AtomicU64,
@@ -119,6 +123,7 @@ impl NetStats {
             ("net_ready_ring_hwm", n(&self.ready_ring_hwm)),
             ("net_frame_ring_hwm", n(&self.frame_ring_hwm)),
             ("net_conn_buffer_kills", n(&self.conn_buffer_kills)),
+            ("net_truncated_eof", n(&self.truncated_eof)),
             ("net_lost_terminals", n(&self.lost_terminals)),
         ])
     }
@@ -247,7 +252,15 @@ impl NetSink {
     /// shed; if it ever does, the loss is counted rather than silent.
     pub fn send_response(&self, r: &crate::scheduler::Response) {
         let line = crate::server::response_json(r).to_string();
-        if self.ring.push(NetEvent { line, terminal: true }).is_err() {
+        self.send_line(line, true);
+    }
+
+    /// Queue an already-serialized reply line (no trailing newline) —
+    /// the mesh drain path, whose reply is not a per-request
+    /// [`crate::scheduler::Response`]. Terminal lines end the
+    /// subscription; a full ring is counted, never silent.
+    pub fn send_line(&self, line: String, terminal: bool) {
+        if self.ring.push(NetEvent { line, terminal }).is_err() {
             self.stats.lost_terminals.fetch_add(1, Ordering::Relaxed);
         }
         NetStats::record_hwm(&self.stats.frame_ring_hwm, self.ring.high_water() as u64);

@@ -266,7 +266,23 @@ fn read_conn<F: Frontend>(
         match (&c.stream).read(&mut c.rbuf[old..]) {
             Ok(0) => {
                 c.rbuf.truncate(old);
-                c.dead = true;
+                if !c.rbuf.is_empty() {
+                    // EOF with a partial line buffered: reject it with
+                    // the same error line as the threaded transport
+                    // (flush-then-close), never process it
+                    net.truncated_eof.fetch_add(1, Ordering::Relaxed);
+                    push_line(
+                        c,
+                        net,
+                        &Json::obj(vec![(
+                            "error",
+                            Json::Str(server::TRUNCATED_EOF_ERROR.into()),
+                        )]),
+                    );
+                    c.closing = true;
+                } else {
+                    c.dead = true;
+                }
                 return;
             }
             Ok(n) => {
@@ -370,7 +386,29 @@ fn handle_line<F: Frontend>(
             return;
         }
     };
-    if req.opt("cmd").is_some() {
+    if let Some(cmd) = req.opt("cmd") {
+        // drain/adopt are reactor-native: their replies ride this
+        // connection's event rings so they serialize FIFO behind every
+        // in-flight frame/terminal — command_json cannot provide that
+        match cmd.str() {
+            Ok("drain") => {
+                // a couple of slots is plenty: the drain reply is one
+                // line (plus headroom for the refusal path)
+                let ring = Arc::new(Spsc::new(8));
+                let sink = NetSink::new(conn_id, ring.clone(), ready.clone(), net.clone());
+                match api.drain_net(sink) {
+                    // id 0 never collides: real request ids start at 1
+                    Ok(()) => c.subs.push(Sub { id: 0, ring, done: false }),
+                    Err(e) => push_error(c, net, &e),
+                }
+                return;
+            }
+            Ok("adopt") => {
+                adopt_line(api, ready, net, conn_id, c, req);
+                return;
+            }
+            _ => {}
+        }
         let view = NetView { net, conns: active, transport: "reactor" };
         let reply = match server::command_json(&req, api, &view) {
             Ok(j) => j,
@@ -381,6 +419,15 @@ fn handle_line<F: Frontend>(
     }
     let stream = match req.opt("stream").map(|v| v.boolean()).transpose() {
         Ok(s) => s.unwrap_or(false),
+        Err(e) => {
+            push_error(c, net, &e);
+            return;
+        }
+    };
+    // a caller-pinned id (mesh requeues keep the router-assigned id the
+    // client's stream is keyed by); None → the frontend assigns one
+    let rid = match req.opt("rid").map(|v| v.usize()).transpose() {
+        Ok(r) => r.map(|r| r as u64),
         Err(e) => {
             push_error(c, net, &e);
             return;
@@ -401,8 +448,62 @@ fn handle_line<F: Frontend>(
     } else {
         opts
     };
-    let id = api.submit_sink(opts, RespSink::Net(sink));
+    let id = match rid {
+        Some(rid) => {
+            api.submit_rid(rid, opts, RespSink::Net(sink));
+            rid
+        }
+        None => api.submit_sink(opts, RespSink::Net(sink)),
+    };
     c.subs.push(Sub { id, ring, done: false });
+}
+
+/// `{"cmd":"adopt"}`: resume a migrated session under its original
+/// request id. The session record travels as the `"session"` value in
+/// [`crate::mesh`] wire form; frames (when `"stream":true`) resume at
+/// index `"streamed"` and the terminal rides the same event ring as a
+/// native generation.
+fn adopt_line<F: Frontend>(
+    api: &F,
+    ready: &Arc<ReadyQueue>,
+    net: &Arc<NetStats>,
+    conn_id: u64,
+    c: &mut Conn,
+    mut req: Json,
+) {
+    let parsed = (|| -> anyhow::Result<(u64, usize, usize, bool, Json)> {
+        let rid = req.get("rid")?.usize()? as u64;
+        let streamed = req.opt("streamed").map(|v| v.usize()).transpose()?.unwrap_or(0);
+        let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
+        let stream = req.opt("stream").map(|v| v.boolean()).transpose()?.unwrap_or(false);
+        let record = match &mut req {
+            Json::Obj(m) => m.remove("session"),
+            _ => None,
+        };
+        let record = record.ok_or_else(|| anyhow::anyhow!("adopt: missing \"session\""))?;
+        Ok((rid, streamed, max_new, stream, record))
+    })();
+    let (rid, streamed, max_new, stream, record) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            push_error(c, net, &e);
+            return;
+        }
+    };
+    let ring = Arc::new(Spsc::new(NetSink::ring_capacity(max_new)));
+    let sink = NetSink::new(conn_id, ring.clone(), ready.clone(), net.clone());
+    let adopt = crate::coordinator::AdoptNet {
+        rid,
+        streamed,
+        max_new,
+        record,
+        stream: if stream { Some(FrameSink::Net(sink.clone())) } else { None },
+        resp: RespSink::Net(sink),
+    };
+    match api.adopt_net(adopt) {
+        Ok(()) => c.subs.push(Sub { id: rid, ring, done: false }),
+        Err(e) => push_error(c, net, &e),
+    }
 }
 
 /// Copy pending engine events (frames, terminals) into the write

@@ -1,0 +1,225 @@
+//! Consistent-hash ring for prefix-affinity placement across replicas.
+//!
+//! The router places a request by its [`prompt_fingerprint`] digest
+//! (`crate::kv::paged::prompt_fingerprint`): same shared-prefix traffic
+//! → same digest → same replica, so the replica that already holds the
+//! prefix blocks keeps getting the requests that can adopt them. PR 5
+//! mapped digests to replicas with a plain `% n` — fine while the
+//! replica set is fixed for the process lifetime, catastrophic for a
+//! mesh: changing `n` by one remaps ~`(n-1)/n` of all keys, evicting
+//! almost every warmed prefix in the fleet at once.
+//!
+//! A consistent-hash ring bounds that movement. Each replica owns
+//! [`VNODES`] pseudo-random points on a `u64` ring (splitmix64 of
+//! `(replica, vnode)` — deterministic, no coordination); a key belongs
+//! to the first replica point clockwise from its digest. Removing a
+//! replica only reassigns keys in the arcs its points owned (~`1/R` of
+//! the keyspace, spread across survivors); adding one only steals
+//! ~`1/(R+1)`. Keys whose owning replica survives NEVER move — both
+//! properties are property-tested in this module.
+//!
+//! Membership is a set of opaque `u64` replica ids, so the ring keeps
+//! working as replicas die and rejoin (a rejoining replica reclaims
+//! exactly its old arcs).
+
+/// Virtual nodes per replica. More vnodes → smoother load split between
+/// survivors when a replica dies (each survivor inherits many small
+/// arcs instead of one big one); 64 keeps the max/min keyspace share
+/// within ~2x for small fleets while the sorted ring stays tiny
+/// (R × 64 points).
+pub const VNODES: usize = 64;
+
+/// splitmix64 — the same finalizer `util::rng` seeds from; good 64-bit
+/// avalanche so ring points spread uniformly.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Sorted ring of (point, replica-id) pairs.
+#[derive(Debug, Clone, Default)]
+pub struct HashRing {
+    points: Vec<(u64, u64)>,
+}
+
+impl HashRing {
+    /// Build a ring over the given replica ids (duplicates ignored).
+    pub fn new(replicas: &[u64]) -> HashRing {
+        let mut ring = HashRing::default();
+        for &r in replicas {
+            ring.add(r);
+        }
+        ring
+    }
+
+    /// Add a replica's vnode points (no-op if already present).
+    pub fn add(&mut self, replica: u64) {
+        if self.contains(replica) {
+            return;
+        }
+        for v in 0..VNODES as u64 {
+            // mix the replica id first so consecutive ids don't produce
+            // correlated point sets, then spread its vnodes
+            let point = splitmix64(splitmix64(replica) ^ v.wrapping_mul(0xd6e8feb86659fd93));
+            self.points.push((point, replica));
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Remove every point a replica owns (no-op if absent).
+    pub fn remove(&mut self, replica: u64) {
+        self.points.retain(|&(_, r)| r != replica);
+    }
+
+    pub fn contains(&self, replica: u64) -> bool {
+        self.points.iter().any(|&(_, r)| r == replica)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Number of distinct replicas on the ring.
+    pub fn len(&self) -> usize {
+        let mut ids: Vec<u64> = self.points.iter().map(|&(_, r)| r).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+
+    /// Owner of `key`: the first ring point at or clockwise past the
+    /// key's hash (wrapping to the smallest point). `None` on an empty
+    /// ring. The key is re-mixed so callers may pass raw fingerprints
+    /// without worrying about their distribution.
+    pub fn owner(&self, key: u64) -> Option<u64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = splitmix64(key);
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let (_, r) = self.points[i % self.points.len()];
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn corpus(rng: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let ring = HashRing::default();
+        assert!(ring.owner(42).is_none());
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn single_replica_owns_everything() {
+        let ring = HashRing::new(&[7]);
+        for k in 0..1000u64 {
+            assert_eq!(ring.owner(k), Some(7));
+        }
+    }
+
+    #[test]
+    fn add_remove_roundtrip_is_identity() {
+        let mut ring = HashRing::new(&[1, 2, 3, 4]);
+        let before: Vec<_> = (0..2000u64).map(|k| ring.owner(k)).collect();
+        ring.remove(3);
+        ring.add(3);
+        let after: Vec<_> = (0..2000u64).map(|k| ring.owner(k)).collect();
+        assert_eq!(before, after, "a rejoining replica must reclaim exactly its old arcs");
+    }
+
+    /// Property (the bounded-movement contract): removing one of R
+    /// replicas remaps at most ~1/R of a fingerprint corpus — and never
+    /// a key whose owner survived; adding one back steals at most
+    /// ~1/(R+1), only for itself.
+    #[test]
+    fn prop_membership_change_remaps_at_most_one_rth() {
+        check("ring bounded movement", 20, |rng| {
+            let r = 2 + rng.below(7) as u64; // fleets of 2..=8
+            let ids: Vec<u64> = (0..r).map(|i| rng.next_u64() ^ i).collect();
+            let ring = HashRing::new(&ids);
+            let keys = corpus(rng, 4000);
+            let owners: Vec<u64> = keys.iter().map(|&k| ring.owner(k).unwrap()).collect();
+            // remove one replica
+            let victim = ids[rng.below(r as usize)];
+            let mut shrunk = ring.clone();
+            shrunk.remove(victim);
+            let mut moved = 0usize;
+            for (k, &old) in keys.iter().zip(&owners) {
+                let new = shrunk.owner(*k).unwrap();
+                prop_assert!(new != victim, "removed replica must own nothing");
+                prop_assert!(
+                    old == victim || new == old,
+                    "key with surviving owner remapped {old} -> {new} (R={r})"
+                );
+                if new != old {
+                    moved += 1;
+                }
+            }
+            // expected share is 1/R; vnode variance keeps it well under
+            // 2/R for any fleet size tested here
+            let bound = (2.0 / r as f64 * keys.len() as f64).ceil() as usize;
+            prop_assert!(
+                moved <= bound,
+                "removing 1 of {r} replicas moved {moved}/{} keys (bound {bound})",
+                keys.len()
+            );
+            // adding a fresh replica steals at most ~1/(R+1), and only
+            // for itself
+            let newcomer = rng.next_u64() | 1 << 63;
+            let mut grown = ring.clone();
+            grown.add(newcomer);
+            let mut stolen = 0usize;
+            for (k, &old) in keys.iter().zip(&owners) {
+                let new = grown.owner(*k).unwrap();
+                prop_assert!(
+                    new == old || new == newcomer,
+                    "growth may only move keys TO the newcomer"
+                );
+                if new != old {
+                    stolen += 1;
+                }
+            }
+            let bound = (2.0 / (r + 1) as f64 * keys.len() as f64).ceil() as usize;
+            prop_assert!(
+                stolen <= bound,
+                "adding to {r} replicas stole {stolen} keys (bound {bound})"
+            );
+            Ok(())
+        });
+    }
+
+    /// Load balance sanity: with VNODES points per replica no replica
+    /// owns a grossly outsized keyspace share.
+    #[test]
+    fn prop_load_split_is_roughly_uniform() {
+        let mut rng = Rng::new(0xfeed);
+        let ids: Vec<u64> = (0..4u64).map(|i| rng.next_u64() ^ i).collect();
+        let ring = HashRing::new(&ids);
+        let keys = corpus(&mut rng, 8000);
+        let mut counts = std::collections::HashMap::new();
+        for k in &keys {
+            *counts.entry(ring.owner(*k).unwrap()).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 4, "every replica must own some keys");
+        for (id, c) in counts {
+            let share = c as f64 / keys.len() as f64;
+            assert!(
+                (0.08..=0.55).contains(&share),
+                "replica {id} owns {share:.2} of the keyspace"
+            );
+        }
+    }
+}

@@ -1,10 +1,20 @@
 //! Multi-replica router front-end: the subsystem that turns one engine
 //! into a service.
 //!
-//! The [`Router`] owns N data-parallel engine **replicas** — each a full
-//! [`Coordinator`] with its own engine thread, [`crate::scheduler`], and
-//! paged K,V pool — and places every incoming request by a pluggable
-//! [`RoutePolicy`]:
+//! The [`Router`] fronts N data-parallel engine **replicas**, each
+//! reached through a location-transparent [`ReplicaTransport`]:
+//!
+//! * `--transport local` — every replica is a full in-process
+//!   [`Coordinator`] with its own engine thread, [`crate::scheduler`],
+//!   and paged K,V pool (PR 5's shape, zero serialization).
+//! * `--transport process` (Linux) — every replica is a separate
+//!   `chai replica` child process serving the same line-JSON protocol
+//!   over [`crate::net`]'s epoll reactor; the router keeps one data
+//!   connection (submits, frames, terminals, drain) and one control
+//!   connection (lockstep probe/cancel/stats) per replica. A replica
+//!   crash — up to `kill -9` — cannot take the router down.
+//!
+//! Placement is a pluggable [`RoutePolicy`]:
 //!
 //! * **round-robin** (`--route rr`) — classic rotation, the baseline.
 //! * **least-loaded** (`--route least-loaded`) — picks the replica with
@@ -14,20 +24,32 @@
 //! * **prefix-affinity** (`--route prefix`) — hashes the prompt's
 //!   shareable prefix ([`prompt_fingerprint`]: the token-hash chain of
 //!   its leading full blocks, the exact keys the paged pool's prefix
-//!   index uses) and pins the request to `digest % N`. Repeated system
-//!   prompts therefore land on the replica that already holds those
-//!   blocks, multiplying the paged cache's prefix-sharing wins — the
-//!   same observation RelayAttention exploits for shared system
-//!   prompts, applied at the replica-placement level.
+//!   index uses) and looks the digest up on a consistent-hash ring
+//!   ([`hashring::HashRing`], one entry per live replica). Repeated
+//!   system prompts land on the replica that already holds those
+//!   blocks; when a replica dies only ~1/N of the keyspace moves, so
+//!   the survivors' warmed prefixes stay put.
 //!
-//! Replicas share model weights: on the reference backend the router
-//! loads/synthesizes the model once ([`SharedRefModel`]) and each
+//! **Failure handling** (process transport): a supervisor thread probes
+//! every replica on a `--probe-ms` cadence; `--probe-suspect`
+//! consecutive failed probes — or the child process exiting — declares
+//! the replica dead. Death tears its ring points out and **requeues**
+//! every request the router had accepted onto survivors at the request's
+//! recorded stream offset, so a `kill -9` loses zero accepted requests
+//! and streaming clients see an exactly-once, bit-identical token
+//! sequence (greedy decode). [`Router::drain_replica`] is the graceful
+//! version: the replica freezes its live sessions ([`crate::mesh`] wire
+//! form, bit-deterministic) and survivors adopt them mid-generation
+//! instead of recomputing from scratch.
+//!
+//! Replicas share model weights in-process: on the reference backend the
+//! router loads/synthesizes the model once ([`SharedRefModel`]) and each
 //! replica's engine thread wraps the `Arc`'d weights in its own
-//! backend, so N replicas cost one model copy plus N K,V pools. The
-//! router owns the request-id space (ids stay unique across replicas);
-//! cancellation broadcasts to every replica (exactly one holds the id;
-//! the rest no-op), so the front-end needs no id→replica bookkeeping
-//! that could leak.
+//! backend, so N local replicas cost one model copy plus N K,V pools.
+//! The router owns the request-id space (ids stay unique across
+//! replicas); cancellation broadcasts to every replica (exactly one
+//! holds the id; the rest no-op), so the front-end needs no id→replica
+//! bookkeeping that could leak.
 //!
 //! [`Frontend`] is the seam the TCP server drives — both a bare
 //! [`Coordinator`] (single replica, zero router overhead) and the
@@ -38,14 +60,23 @@
 //! `router` section (`router_*` counters, per-replica routed counts,
 //! live load costs), and keep the per-replica breakdown.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+pub mod hashring;
+mod transport;
+
+pub use transport::{LocalReplica, MeshDrained, MeshSession, ReplicaTransport};
+#[cfg(target_os = "linux")]
+pub use transport::ProcessReplica;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::config::ServingConfig;
-use crate::coordinator::{Coordinator, CoordinatorHandle};
+use crate::coordinator::Coordinator;
 use crate::engine::Engine;
 use crate::kv::paged::prompt_fingerprint;
 use crate::metrics::{sum_json_objects, Metrics};
@@ -53,6 +84,7 @@ use crate::model::tokenizer;
 use crate::runtime::reference::{RefBackend, SharedRefModel};
 use crate::scheduler::{RespSink, Response, SubmitOpts};
 use crate::util::json::Json;
+use hashring::HashRing;
 
 /// The serving surface the TCP server (and benches) drive — implemented
 /// by both a single [`Coordinator`] and the multi-replica [`Router`].
@@ -63,8 +95,16 @@ pub trait Frontend: Clone + Send + 'static {
     /// channel (the epoll reactor path: the response lands in the
     /// request's lock-free event ring); returns the assigned id.
     fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64;
+    /// Submit with a caller-supplied id AND sink — the mesh path, where
+    /// the router assigned the id before placing the request and a
+    /// requeue onto a different replica must keep it (the client's
+    /// stream is keyed by it).
+    fn submit_rid(&self, id: u64, opts: SubmitOpts, resp: RespSink);
     /// Request an abort of `id` (async; unknown ids are a no-op).
     fn cancel(&self, id: u64);
+    /// `{"cmd":"probe"}` — cheap liveness + load heartbeat (never
+    /// touches the engine thread; safe at high frequency).
+    fn probe_json(&self) -> Json;
     /// `{"cmd":"stats"}` — full counters/latency/gauges/info view.
     fn stats_json(&self) -> Json;
     /// `{"cmd":"kv"}` — paged-pool occupancy + sharing gauges.
@@ -73,6 +113,23 @@ pub trait Frontend: Clone + Send + 'static {
     fn sched_json(&self) -> Json;
     /// `{"cmd":"info"}` — static serving facts (backend, model, ...).
     fn info_json(&self) -> Json;
+    /// `{"cmd":"drain"}` (reactor transport only): stop admitting,
+    /// freeze/evict every request, and reply with one
+    /// `{"drained":[...]}` line on `sink`'s connection — serialized
+    /// after every frame/terminal of the drained requests. Only a bare
+    /// replica coordinator supports it; everything else refuses.
+    #[cfg(target_os = "linux")]
+    fn drain_net(&self, sink: crate::net::NetSink) -> Result<()> {
+        let _ = sink;
+        bail!("drain: only a replica coordinator can be drained")
+    }
+    /// `{"cmd":"adopt"}` (reactor transport only): resume a migrated
+    /// session under its original request id. Replica-side only.
+    #[cfg(target_os = "linux")]
+    fn adopt_net(&self, adopt: crate::coordinator::AdoptNet) -> Result<()> {
+        let _ = adopt;
+        bail!("adopt: only a replica coordinator can adopt sessions")
+    }
 }
 
 impl Frontend for Coordinator {
@@ -84,8 +141,22 @@ impl Frontend for Coordinator {
         Coordinator::submit_sink(self, opts, resp)
     }
 
+    fn submit_rid(&self, id: u64, opts: SubmitOpts, resp: RespSink) {
+        Coordinator::submit_request(self, id, opts, resp)
+    }
+
     fn cancel(&self, id: u64) {
         Coordinator::cancel(self, id)
+    }
+
+    fn probe_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("load", Json::Num(self.load_cost())),
+            ("pending", Json::Num(self.metrics.gauge("sched_pending"))),
+            ("live", Json::Num(self.metrics.gauge("sched_live"))),
+            ("preempted", Json::Num(self.metrics.gauge("sched_preempted"))),
+        ])
     }
 
     fn stats_json(&self) -> Json {
@@ -110,6 +181,18 @@ impl Frontend for Coordinator {
             .opt("info")
             .cloned()
             .unwrap_or_else(|| Json::obj(vec![]))
+    }
+
+    #[cfg(target_os = "linux")]
+    fn drain_net(&self, sink: crate::net::NetSink) -> Result<()> {
+        Coordinator::drain_net(self, sink);
+        Ok(())
+    }
+
+    #[cfg(target_os = "linux")]
+    fn adopt_net(&self, adopt: crate::coordinator::AdoptNet) -> Result<()> {
+        Coordinator::adopt_net(self, adopt);
+        Ok(())
     }
 }
 
@@ -157,70 +240,107 @@ impl RoutePolicy {
 /// Multi-replica front-end; cheap to clone (all state is `Arc`'d).
 #[derive(Clone)]
 pub struct Router {
-    replicas: Arc<Vec<Coordinator>>,
+    replicas: Arc<Vec<Arc<dyn ReplicaTransport>>>,
     policy: RoutePolicy,
     /// router-owned global id space (unique across replicas)
     next_id: Arc<AtomicU64>,
     rr: Arc<AtomicUsize>,
     /// router-level metrics only (`router_*`); replica metrics live on
-    /// each coordinator and are rolled up on read
+    /// each replica and are rolled up on read
     pub metrics: Arc<Metrics>,
     /// block size the prefix-affinity fingerprint is computed at (must
     /// match the replicas' paged pools so the digest keys align)
     kv_block_size: usize,
+    /// consistent-hash ring for prefix placement; replica index = ring
+    /// id. Dead/drained replicas are removed, so only their arcs remap.
+    ring: Arc<Mutex<HashRing>>,
+    /// tombstone per replica: set once when it is declared dead or
+    /// drained; routing, rollups and probes skip tombstoned replicas
+    down: Arc<Vec<AtomicBool>>,
 }
 
-/// Owns the replica engine threads; dropping (or `shutdown`) stops all.
+/// Owns the replica fleet and its supervisor thread; dropping (or
+/// `shutdown`) stops all of it.
 pub struct RouterHandle {
     pub router: Router,
-    replica_handles: Vec<CoordinatorHandle>,
+    supervisor: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
 }
 
 impl RouterHandle {
-    pub fn shutdown(self) {
-        for h in self.replica_handles {
-            h.shutdown();
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        for t in self.router.replicas.iter() {
+            t.shutdown();
         }
     }
 }
 
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
 impl Router {
-    /// Spawn `cfg.replicas` engine replicas (weights shared on the
-    /// reference backend) routed by `cfg.route`.
+    /// Spawn `cfg.replicas` engine replicas over `cfg.transport`
+    /// (weights shared on the local reference backend) routed by
+    /// `cfg.route`, plus the supervisor thread that probes them.
     pub fn start(cfg: ServingConfig) -> Result<RouterHandle> {
         let n = cfg.replicas.max(1);
         let policy = RoutePolicy::parse(&cfg.route)?;
-        // one physical copy of the model for all replicas (ref backend;
-        // the XLA backend is Rc-bound to its engine thread and loads
-        // per replica)
-        let shared = match crate::runtime::resolve_backend(&cfg)? {
-            "ref" => Some(SharedRefModel::load_or_toy(&cfg.artifacts_dir, cfg.seed)?),
-            _ => None,
-        };
-        let mut replicas = Vec::with_capacity(n);
-        let mut replica_handles = Vec::with_capacity(n);
-        for _ in 0..n {
-            let handle = match shared.clone() {
-                Some(model) => {
-                    let engine_cfg = cfg.clone();
-                    Coordinator::start_with(
-                        cfg.clone(),
-                        Box::new(move || {
-                            Engine::with_backend(
-                                Box::new(RefBackend::from_shared(&model)),
-                                engine_cfg,
-                            )
-                        }),
-                    )?
-                }
-                None => Coordinator::start(cfg.clone())?,
-            };
-            replicas.push(handle.coordinator.clone());
-            replica_handles.push(handle);
-        }
         let metrics = Arc::new(Metrics::new());
+        let mut replicas: Vec<Arc<dyn ReplicaTransport>> = Vec::with_capacity(n);
+        match cfg.transport.as_str() {
+            "local" => {
+                // one physical copy of the model for all replicas (ref
+                // backend; the XLA backend is Rc-bound to its engine
+                // thread and loads per replica)
+                let shared = match crate::runtime::resolve_backend(&cfg)? {
+                    "ref" => Some(SharedRefModel::load_or_toy(&cfg.artifacts_dir, cfg.seed)?),
+                    _ => None,
+                };
+                for _ in 0..n {
+                    let handle = match shared.clone() {
+                        Some(model) => {
+                            let engine_cfg = cfg.clone();
+                            Coordinator::start_with(
+                                cfg.clone(),
+                                Box::new(move || {
+                                    Engine::with_backend(
+                                        Box::new(RefBackend::from_shared(&model)),
+                                        engine_cfg,
+                                    )
+                                }),
+                            )?
+                        }
+                        None => Coordinator::start(cfg.clone())?,
+                    };
+                    replicas.push(Arc::new(LocalReplica::new(handle)));
+                }
+            }
+            #[cfg(target_os = "linux")]
+            "process" => {
+                for i in 0..n {
+                    replicas.push(Arc::new(ProcessReplica::spawn(i, &cfg, metrics.clone())?));
+                }
+            }
+            #[cfg(not(target_os = "linux"))]
+            "process" => bail!("--transport process requires linux (epoll reactor)"),
+            other => bail!("unknown replica transport {other:?} (local|process)"),
+        }
         metrics.set_info("router_policy", policy.name());
+        metrics.set_info("router_transport", &cfg.transport);
         metrics.set_gauge("router_replicas", n as f64);
+        metrics.set_gauge("router_replicas_alive", n as f64);
+        let ring = HashRing::new(&(0..n as u64).collect::<Vec<_>>());
         let router = Router {
             replicas: Arc::new(replicas),
             policy,
@@ -228,35 +348,66 @@ impl Router {
             rr: Arc::new(AtomicUsize::new(0)),
             metrics,
             kv_block_size: cfg.kv_block_size.max(1),
+            ring: Arc::new(Mutex::new(ring)),
+            down: Arc::new((0..n).map(|_| AtomicBool::new(false)).collect()),
         };
-        Ok(RouterHandle { replica_handles, router })
-    }
-
-    pub fn replicas(&self) -> &[Coordinator] {
-        &self.replicas
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let router = router.clone();
+            let stop = stop.clone();
+            let (probe_ms, suspect) = (cfg.probe_ms.max(1), cfg.probe_suspect.max(1));
+            thread::Builder::new()
+                .name("router-supervisor".into())
+                .spawn(move || supervise(router, stop, probe_ms, suspect))
+                .expect("spawn router supervisor")
+        };
+        Ok(RouterHandle { router, supervisor: Some(supervisor), stop })
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
 
+    fn is_down(&self, i: usize) -> bool {
+        self.down[i].load(Ordering::Relaxed)
+    }
+
+    fn alive_count(&self) -> usize {
+        self.down.iter().filter(|d| !d.load(Ordering::Relaxed)).count()
+    }
+
+    /// Next live replica in rotation; `None` when the whole fleet is
+    /// down (the caller fails the request instead of panicking).
+    fn pick_rr(&self) -> Option<usize> {
+        let n = self.replicas.len();
+        for _ in 0..n {
+            let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+            if !self.is_down(i) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
     /// Pick the replica for a request (see [`RoutePolicy`]).
     fn route(&self, opts: &SubmitOpts) -> usize {
-        let n = self.replicas.len();
         match self.policy {
-            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::RoundRobin => self.pick_rr().unwrap_or(0),
             RoutePolicy::LeastLoaded => {
-                // stable argmin: earliest replica wins ties
-                let mut best = 0usize;
+                // stable argmin: earliest live replica wins ties
+                let mut best = None;
                 let mut best_cost = f64::INFINITY;
-                for (i, c) in self.replicas.iter().enumerate() {
-                    let cost = c.load_cost();
+                for (i, t) in self.replicas.iter().enumerate() {
+                    if self.is_down(i) {
+                        continue;
+                    }
+                    let cost = t.load_cost();
                     if cost < best_cost {
-                        best = i;
+                        best = Some(i);
                         best_cost = cost;
                     }
                 }
-                best
+                best.unwrap_or(0)
             }
             RoutePolicy::PrefixAffinity => {
                 // one extra O(prompt) byte-level encode on the server
@@ -269,19 +420,101 @@ impl Router {
                     self.kv_block_size,
                     AFFINITY_PREFIX_BLOCKS,
                 );
-                (fp % n as u64) as usize
+                match self.ring.lock().unwrap().owner(fp) {
+                    Some(r) => r as usize,
+                    None => self.pick_rr().unwrap_or(0),
+                }
             }
         }
     }
 
-    /// Sum of a counter across all replicas.
-    pub fn counter_sum(&self, name: &str) -> u64 {
-        self.replicas.iter().map(|c| c.metrics.counter(name)).sum()
+    /// Declare replica `i` dead: tear its ring points out and requeue
+    /// every request the router had accepted on it onto survivors, each
+    /// from its recorded stream offset (idempotent; first caller wins).
+    fn on_replica_death(&self, i: usize) {
+        if self.down[i].swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.ring.lock().unwrap().remove(i as u64);
+        self.metrics.inc("router_replica_deaths");
+        self.metrics.set_gauge("router_replicas_alive", self.alive_count() as f64);
+        for d in self.replicas[i].take_orphans() {
+            self.metrics.inc("router_requeued");
+            self.place_orphan(d);
+        }
     }
 
-    /// Sum of a gauge across all replicas.
+    /// Re-place a drained/orphaned request on a surviving replica, or
+    /// fail it with a terminal error when none is left.
+    fn place_orphan(&self, d: MeshDrained) {
+        match self.pick_rr() {
+            Some(r) => {
+                self.metrics.inc("router_routed_total");
+                self.metrics.inc(&format!("router_routed_replica_{r}"));
+                self.replicas[r].adopt(d);
+            }
+            None => {
+                let id = d.req.id;
+                d.req.resp_tx.send(Response::error(id, "no replicas alive".into()));
+            }
+        }
+    }
+
+    /// Gracefully remove replica `i` from the mesh: stop routing to it,
+    /// freeze/collect everything it holds (live sessions keep their KV
+    /// in [`crate::mesh`] wire form), migrate each onto survivors, then
+    /// shut the replica down. Returns how many requests moved.
+    pub fn drain_replica(&self, i: usize) -> Result<usize> {
+        if i >= self.replicas.len() {
+            bail!("replica {i} out of range (fleet size {})", self.replicas.len());
+        }
+        if self.down[i].swap(true, Ordering::SeqCst) {
+            bail!("replica {i} is already out of the mesh");
+        }
+        self.ring.lock().unwrap().remove(i as u64);
+        self.metrics.set_gauge("router_replicas_alive", self.alive_count() as f64);
+        let drained = match self.replicas[i].drain() {
+            Ok(v) => v,
+            // a replica that dies mid-drain degrades to the crash path:
+            // whatever the router still holds entries for is requeued
+            Err(_) => self.replicas[i].take_orphans(),
+        };
+        let moved = drained.len();
+        for d in drained {
+            self.metrics.inc("router_migrated_sessions");
+            self.place_orphan(d);
+        }
+        self.replicas[i].shutdown();
+        Ok(moved)
+    }
+
+    /// Direct access to the fleet (benches and the failover drill).
+    pub fn transport(&self, i: usize) -> &Arc<dyn ReplicaTransport> {
+        &self.replicas[i]
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Sum of a counter across live replicas.
+    pub fn counter_sum(&self, name: &str) -> u64 {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.is_down(*i))
+            .map(|(_, t)| t.counter(name))
+            .sum()
+    }
+
+    /// Sum of a gauge across live replicas.
     pub fn gauge_sum(&self, name: &str) -> f64 {
-        self.replicas.iter().map(|c| c.metrics.gauge(name)).sum()
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.is_down(*i))
+            .map(|(_, t)| t.gauge(name))
+            .sum()
     }
 
     /// Aggregate prefix-sharing hit rate, recomputed from the summed
@@ -297,20 +530,33 @@ impl Router {
         }
     }
 
-    /// The `router` section of the rolled-up views: policy, replica
-    /// count, per-replica routed counts and live load costs, plus every
-    /// router-level counter.
+    /// The `router` section of the rolled-up views: policy, fleet and
+    /// liveness counts, per-replica routed counts and live load costs,
+    /// plus every router-level counter.
     fn router_json(&self) -> Json {
         let routed: Vec<Json> = (0..self.replicas.len())
             .map(|i| {
                 Json::Num(self.metrics.counter(&format!("router_routed_replica_{i}")) as f64)
             })
             .collect();
-        let load: Vec<Json> =
-            self.replicas.iter().map(|c| Json::Num(c.load_cost())).collect();
+        let load: Vec<Json> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if self.is_down(i) {
+                    Json::Null
+                } else {
+                    Json::Num(t.load_cost())
+                }
+            })
+            .collect();
+        let transport = self.replicas.first().map(|t| t.kind()).unwrap_or("local");
         Json::obj(vec![
             ("policy", Json::Str(self.policy.name().into())),
+            ("transport", Json::Str(transport.into())),
             ("replicas", Json::Num(self.replicas.len() as f64)),
+            ("alive", Json::Num(self.alive_count() as f64)),
             (
                 "routed_total",
                 Json::Num(self.metrics.counter("router_routed_total") as f64),
@@ -319,9 +565,37 @@ impl Router {
                 "cancel_requests",
                 Json::Num(self.metrics.counter("router_cancel_requests") as f64),
             ),
+            (
+                "deaths",
+                Json::Num(self.metrics.counter("router_replica_deaths") as f64),
+            ),
+            (
+                "requeued",
+                Json::Num(self.metrics.counter("router_requeued") as f64),
+            ),
+            (
+                "migrated",
+                Json::Num(self.metrics.counter("router_migrated_sessions") as f64),
+            ),
             ("routed", Json::Arr(routed)),
             ("load", Json::Arr(load)),
         ])
+    }
+
+    /// Per-replica view: the replica's own JSON when live, a tombstone
+    /// marker when dead (so array positions keep meaning replica index).
+    fn per_replica(&self, f: impl Fn(&Arc<dyn ReplicaTransport>) -> Json) -> Vec<Json> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if self.is_down(i) {
+                    Json::obj(vec![("dead", Json::Bool(true))])
+                } else {
+                    f(t)
+                }
+            })
+            .collect()
     }
 
     /// Roll gauges up across replicas and patch the aggregate hit rate
@@ -341,34 +615,92 @@ impl Router {
     }
 }
 
+/// Supervisor loop: watch child liveness every tick (cheap `try_wait`),
+/// probe on the `probe_ms` cadence, and escalate `suspect` consecutive
+/// probe failures to a declared death (which requeues the replica's
+/// accepted requests — see [`Router::on_replica_death`]).
+fn supervise(router: Router, stop: Arc<AtomicBool>, probe_ms: u64, suspect_after: u32) {
+    const TICK_MS: u64 = 10;
+    let ticks_per_probe = (probe_ms / TICK_MS).max(1);
+    let mut suspect = vec![0u32; router.replicas.len()];
+    let mut tick: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        thread::sleep(Duration::from_millis(TICK_MS));
+        tick += 1;
+        for (i, t) in router.replicas.iter().enumerate() {
+            if router.is_down(i) {
+                continue;
+            }
+            if !t.alive() {
+                // process exit (including kill -9) — no need to wait
+                // for the probe state machine
+                router.on_replica_death(i);
+                continue;
+            }
+            if tick % ticks_per_probe == 0 {
+                match t.probe() {
+                    Ok(_) => suspect[i] = 0,
+                    Err(_) => {
+                        suspect[i] += 1;
+                        if suspect[i] >= suspect_after {
+                            router.on_replica_death(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl Frontend for Router {
     fn submit_opts(&self, opts: SubmitOpts) -> (u64, Receiver<Response>) {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-        let r = self.route(&opts);
-        self.metrics.inc("router_routed_total");
-        self.metrics.inc(&format!("router_routed_replica_{r}"));
-        (id, self.replicas[r].submit_with_id(id, opts))
+        let (tx, rx) = channel();
+        let id = Frontend::submit_sink(self, opts, RespSink::Channel(tx));
+        (id, rx)
     }
 
     fn submit_sink(&self, opts: SubmitOpts, resp: RespSink) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        Frontend::submit_rid(self, id, opts, resp);
+        id
+    }
+
+    fn submit_rid(&self, id: u64, opts: SubmitOpts, resp: RespSink) {
         let r = self.route(&opts);
         self.metrics.inc("router_routed_total");
         self.metrics.inc(&format!("router_routed_replica_{r}"));
-        self.replicas[r].submit_request(id, opts, resp);
-        id
+        self.replicas[r].submit(id, opts, resp);
     }
 
     /// Broadcast: exactly one replica holds the id, the rest no-op.
     fn cancel(&self, id: u64) {
         self.metrics.inc("router_cancel_requests");
-        for c in self.replicas.iter() {
-            c.cancel(id);
+        for (i, t) in self.replicas.iter().enumerate() {
+            if !self.is_down(i) {
+                t.cancel(id);
+            }
         }
     }
 
+    fn probe_json(&self) -> Json {
+        let alive = self.alive_count();
+        let load: f64 = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.is_down(*i))
+            .map(|(_, t)| t.load_cost())
+            .sum();
+        Json::obj(vec![
+            ("ok", Json::Bool(alive > 0)),
+            ("load", Json::Num(load)),
+            ("replicas", Json::Num(self.replicas.len() as f64)),
+            ("alive", Json::Num(alive as f64)),
+        ])
+    }
+
     fn stats_json(&self) -> Json {
-        let per: Vec<Json> = self.replicas.iter().map(|c| c.metrics.to_json()).collect();
+        let per = self.per_replica(|t| t.metrics_json());
         let counters = sum_json_objects(per.iter().filter_map(|j| j.opt("counters")));
         let gauges = self.rolled_gauges(&per);
         let info = Frontend::info_json(self);
@@ -382,8 +714,7 @@ impl Frontend for Router {
     }
 
     fn kv_json(&self) -> Json {
-        let per: Vec<Json> =
-            self.replicas.iter().map(|c| Frontend::kv_json(c)).collect();
+        let per = self.per_replica(|t| t.view_json("kv"));
         self.rolled_gauges(
             &per.iter()
                 .map(|g| Json::obj(vec![("gauges", g.clone())]))
@@ -392,8 +723,7 @@ impl Frontend for Router {
     }
 
     fn sched_json(&self) -> Json {
-        let per: Vec<Json> =
-            self.replicas.iter().map(|c| Frontend::sched_json(c)).collect();
+        let per = self.per_replica(|t| t.view_json("sched"));
         let mut merged = sum_json_objects(per.iter());
         if let Json::Obj(m) = &mut merged {
             m.insert("router".into(), self.router_json());
@@ -403,11 +733,14 @@ impl Frontend for Router {
     }
 
     fn info_json(&self) -> Json {
-        // replica 0 speaks for the fleet (same backend/model everywhere)
+        // the first live replica speaks for the fleet (same
+        // backend/model everywhere)
         let mut info = self
             .replicas
-            .first()
-            .map(|c| Frontend::info_json(c))
+            .iter()
+            .enumerate()
+            .find(|(i, _)| !self.is_down(*i))
+            .map(|(_, t)| t.view_json("info"))
             .unwrap_or_else(|| Json::obj(vec![]));
         if let Json::Obj(m) = &mut info {
             m.insert("replicas".into(), Json::Num(self.replicas.len() as f64));
@@ -510,6 +843,37 @@ mod tests {
             picks.iter().all(|p| *p == picks[0]),
             "shared system prompt must pin to one replica: {picks:?}"
         );
+        handle.shutdown();
+    }
+
+    #[test]
+    fn drain_replica_migrates_and_survivors_finish() {
+        let handle = Router::start(toy_cfg(2, "rr")).unwrap();
+        let router = handle.router.clone();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                router
+                    .submit_opts(SubmitOpts::new(
+                        &format!("tom drains the mesh number {i}"),
+                        4,
+                        Variant::Chai,
+                    ))
+                    .1
+            })
+            .collect();
+        // rr spread 2/2; drain replica 0 immediately — whatever it holds
+        // (pending, live, or already finished) must not be lost
+        let moved = router.drain_replica(0).unwrap();
+        for rx in rxs {
+            let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        assert!(router.drain_replica(0).is_err(), "second drain must refuse");
+        assert_eq!(
+            router.metrics.counter("router_migrated_sessions") as usize,
+            moved
+        );
+        assert_eq!(router.metrics.gauge("router_replicas_alive") as usize, 1);
         handle.shutdown();
     }
 }

@@ -1,0 +1,800 @@
+//! Location-transparent replica transports behind the [`Router`].
+//!
+//! [`ReplicaTransport`] is the seam that makes the router indifferent
+//! to where a replica runs:
+//!
+//! * [`LocalReplica`] — PR 5's shape: a full in-process [`Coordinator`]
+//!   (engine thread + scheduler + paged pool). Zero serialization;
+//!   sessions migrate as in-memory [`MigratedSession`] values.
+//! * [`ProcessReplica`] (Linux) — a separate `chai replica` child
+//!   process serving the line-JSON protocol over the epoll reactor.
+//!   The router keeps two connections per replica: a **data**
+//!   connection carrying submits, token frames, terminals, and the
+//!   drain exchange (per-connection FIFO is what makes drain
+//!   race-free: the `{"drained":...}` reply is ordered after the final
+//!   frame/terminal of everything drained), and a **control**
+//!   connection for lockstep probe/cancel/stats calls (their replies
+//!   carry `"id"` without `"tok"` and would be misread as terminals on
+//!   the data stream).
+//!
+//! The router's per-request **entry registry** is the failover
+//! substrate: every accepted request is recorded (prompt, sinks,
+//! frames-forwarded count) *before* its wire line is written, so when
+//! a replica dies — `kill -9` included — [`ProcessReplica::take_orphans`]
+//! reconstructs every in-flight request and the router requeues it on
+//! survivors at the recorded stream offset. Greedy decode regenerates
+//! identical tokens; the offset keeps the client's stream exactly-once.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorHandle};
+use crate::engine::MigratedSession;
+use crate::scheduler::{Request, RespSink, SubmitOpts};
+use crate::util::json::Json;
+use crate::util::now_ms;
+
+use super::Frontend;
+
+/// A request reclaimed from a replica (graceful drain or crash
+/// requeue), carrying everything a survivor needs to finish it.
+pub struct MeshDrained {
+    pub req: Request,
+    /// frames the CLIENT has already received (the router's count, not
+    /// the dead replica's — only forwarded frames matter for
+    /// exactly-once streaming)
+    pub streamed: usize,
+    /// frozen session state; `None` restarts decode from scratch at the
+    /// stream offset (bit-identical under greedy decode)
+    pub session: Option<MeshSession>,
+}
+
+/// Frozen session state in whichever form the source transport holds.
+pub enum MeshSession {
+    /// in-memory handoff between local replicas (no serialization)
+    Local(MigratedSession),
+    /// [`crate::mesh`] wire record from a remote replica's drain reply;
+    /// decoded on the adopting engine's thread
+    Wire(Json),
+}
+
+/// One replica as the router sees it, wherever it runs.
+pub trait ReplicaTransport: Send + Sync {
+    /// Transport name for views ("local" | "process").
+    fn kind(&self) -> &'static str;
+    /// Place a request (the router already assigned `id`).
+    fn submit(&self, id: u64, opts: SubmitOpts, resp: RespSink);
+    /// Forward a cancel (unknown ids are a no-op).
+    fn cancel(&self, id: u64);
+    /// Latest known scheduling load (least-loaded routing).
+    fn load_cost(&self) -> f64;
+    /// Cheap liveness check (never blocks on I/O).
+    fn alive(&self) -> bool;
+    /// Active health probe; `Err` feeds the suspect→dead escalation.
+    fn probe(&self) -> Result<f64>;
+    /// One replica counter/gauge (rollup sums).
+    fn counter(&self, name: &str) -> u64;
+    fn gauge(&self, name: &str) -> f64;
+    /// Full metrics view (`{"counters":..., "gauges":..., ...}`).
+    fn metrics_json(&self) -> Json;
+    /// One named command view ("kv" | "sched" | "info").
+    fn view_json(&self, kind: &str) -> Json;
+    /// Graceful migration: stop admitting, freeze/collect every held
+    /// request. The replica is not shut down by this call.
+    fn drain(&self) -> Result<Vec<MeshDrained>>;
+    /// Resume a drained/orphaned request on this replica.
+    fn adopt(&self, d: MeshDrained);
+    /// Requests the router has accepted onto this replica that have not
+    /// reached their terminal yet (failover accounting).
+    fn inflight(&self) -> usize;
+    /// Reclaim every tracked in-flight request after a crash (session
+    /// state is gone; survivors replay from the stream offset).
+    fn take_orphans(&self) -> Vec<MeshDrained>;
+    /// Stop the replica (idempotent).
+    fn shutdown(&self);
+    /// SIGKILL the replica, bypassing every graceful path — the
+    /// failover drill's hammer. Errors on transports with nothing to
+    /// kill.
+    fn kill_hard(&self) -> Result<()>;
+}
+
+/// Rebuild a submittable request from a tracked entry (crash requeue or
+/// a drain record): survivors resume it at the recorded stream offset.
+fn entry_to_drained(rid: u64, e: Entry, session: Option<MeshSession>) -> MeshDrained {
+    let streamed = e.streamed;
+    MeshDrained {
+        req: Request {
+            id: rid,
+            prompt: e.prompt,
+            max_new: e.max_new,
+            variant: e.variant,
+            submitted_ms: now_ms(),
+            resp_tx: e.resp,
+            stream: e.stream,
+            stream_offset: streamed,
+        },
+        streamed,
+        session,
+    }
+}
+
+/// Router-side record of one request placed on a remote replica. Held
+/// from before the submit line is written until the terminal arrives —
+/// the registry IS the zero-loss guarantee.
+struct Entry {
+    prompt: String,
+    max_new: usize,
+    variant: crate::engine::Variant,
+    stream: Option<crate::scheduler::FrameSink>,
+    resp: RespSink,
+    /// frames forwarded to the client so far (authoritative for
+    /// exactly-once resume; the child's own count is irrelevant once
+    /// it is dead)
+    streamed: usize,
+}
+
+// ---------------------------------------------------------------------
+// Local transport
+// ---------------------------------------------------------------------
+
+/// In-process replica: a [`Coordinator`] behind the transport seam.
+pub struct LocalReplica {
+    coordinator: Coordinator,
+    handle: Mutex<Option<CoordinatorHandle>>,
+}
+
+impl LocalReplica {
+    pub fn new(handle: CoordinatorHandle) -> LocalReplica {
+        LocalReplica {
+            coordinator: handle.coordinator.clone(),
+            handle: Mutex::new(Some(handle)),
+        }
+    }
+}
+
+impl ReplicaTransport for LocalReplica {
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(&self, id: u64, opts: SubmitOpts, resp: RespSink) {
+        self.coordinator.submit_request(id, opts, resp);
+    }
+
+    fn cancel(&self, id: u64) {
+        self.coordinator.cancel(id);
+    }
+
+    fn load_cost(&self) -> f64 {
+        self.coordinator.load_cost()
+    }
+
+    fn alive(&self) -> bool {
+        true
+    }
+
+    fn probe(&self) -> Result<f64> {
+        Ok(self.coordinator.load_cost())
+    }
+
+    fn counter(&self, name: &str) -> u64 {
+        self.coordinator.metrics.counter(name)
+    }
+
+    fn gauge(&self, name: &str) -> f64 {
+        self.coordinator.metrics.gauge(name)
+    }
+
+    fn metrics_json(&self) -> Json {
+        self.coordinator.metrics.to_json()
+    }
+
+    fn view_json(&self, kind: &str) -> Json {
+        match kind {
+            "kv" => Frontend::kv_json(&self.coordinator),
+            "sched" => Frontend::sched_json(&self.coordinator),
+            "info" => Frontend::info_json(&self.coordinator),
+            _ => Json::Null,
+        }
+    }
+
+    fn drain(&self) -> Result<Vec<MeshDrained>> {
+        Ok(self
+            .coordinator
+            .drain_collect()
+            .into_iter()
+            .map(|d| MeshDrained {
+                req: d.req,
+                streamed: d.streamed,
+                session: d.session.map(MeshSession::Local),
+            })
+            .collect())
+    }
+
+    fn adopt(&self, d: MeshDrained) {
+        let MeshDrained { req, streamed, session } = d;
+        match session {
+            None => {
+                // no frozen state: replay from scratch at the offset
+                let Request { id, prompt, max_new, variant, resp_tx, stream, .. } = req;
+                let opts =
+                    SubmitOpts { prompt, max_new, variant, stream, stream_offset: streamed };
+                self.coordinator.submit_request(id, opts, resp_tx);
+            }
+            Some(MeshSession::Local(m)) => self.coordinator.adopt_local(req, m, streamed),
+            Some(MeshSession::Wire(j)) => self.coordinator.adopt_wire(req, j, streamed),
+        }
+    }
+
+    fn inflight(&self) -> usize {
+        // the coordinator owns its requests end-to-end; the router
+        // tracks nothing, so a local replica has no router-side
+        // in-flight set (and cannot crash independently)
+        0
+    }
+
+    fn take_orphans(&self) -> Vec<MeshDrained> {
+        Vec::new()
+    }
+
+    fn shutdown(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.shutdown();
+        }
+    }
+
+    fn kill_hard(&self) -> Result<()> {
+        bail!("local replicas share the router process; nothing to kill")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process transport (Linux: the replica serves over the epoll reactor)
+// ---------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+pub use process::ProcessReplica;
+
+#[cfg(target_os = "linux")]
+mod process {
+    use super::*;
+
+    use std::collections::HashMap;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::path::PathBuf;
+    use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::mpsc::{channel, Sender};
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    use anyhow::{anyhow, Context};
+
+    use crate::config::ServingConfig;
+    use crate::engine::Timing;
+    use crate::metrics::Metrics;
+    use crate::scheduler::Response;
+    use crate::scheduler::StreamFrame;
+    use crate::server::Client;
+
+    /// Lockstep control calls time out after this long; a probe that
+    /// blows it marks the control connection poisoned (a half-read
+    /// reply would desync its framing) and counts as a failed probe.
+    const CTL_TIMEOUT_MS: u64 = 1000;
+
+    /// Upper bound on waiting for a drain reply before degrading to the
+    /// crash path (requeue-from-scratch via the entry registry).
+    const DRAIN_TIMEOUT_SECS: u64 = 30;
+
+    /// How many 1ms attempts a frame forward gets when the client's
+    /// event ring is momentarily full before the frame is dropped
+    /// (terminals never drop; the count is surfaced as
+    /// `router_dropped_frames`).
+    const FRAME_RETRIES: usize = 2000;
+
+    type Entries = Arc<Mutex<HashMap<u64, Entry>>>;
+    type DrainWaiter = Arc<Mutex<Option<Sender<Vec<MeshDrained>>>>>;
+
+    /// One `chai replica` child process.
+    pub struct ProcessReplica {
+        child: Mutex<Child>,
+        /// held open for the child's lifetime: the child exits when its
+        /// stdin reaches EOF, so dropping this pipe (shutdown, or the
+        /// router process dying) is the orphan-cleanup signal
+        stdin: Mutex<Option<ChildStdin>>,
+        /// keeps the stdout pipe readable so a chatty child can never
+        /// block on a closed pipe
+        _stdout: Mutex<Option<ChildStdout>>,
+        addr: String,
+        data: Mutex<TcpStream>,
+        ctl: Mutex<Option<Client>>,
+        entries: Entries,
+        dead: Arc<AtomicBool>,
+        /// last probed load, as f64 bits
+        load: AtomicU64,
+        drain_waiter: DrainWaiter,
+        reader: Mutex<Option<thread::JoinHandle<()>>>,
+    }
+
+    impl ProcessReplica {
+        /// Spawn `chai replica`, wait for its one-line stdout handshake
+        /// (`{"replica_listening":"<addr>"}`), and connect the data +
+        /// control streams. `metrics` is the ROUTER's registry
+        /// (`router_dropped_frames` lands there).
+        pub fn spawn(index: usize, cfg: &ServingConfig, metrics: Arc<Metrics>) -> Result<Self> {
+            let exe: PathBuf = match &cfg.replica_cmd {
+                Some(p) => p.clone(),
+                None => std::env::current_exe().context("resolving current executable")?,
+            };
+            let mut cmd = Command::new(&exe);
+            cmd.arg("replica")
+                .arg("--backend")
+                .arg(&cfg.backend)
+                .arg("--artifacts")
+                .arg(&cfg.artifacts_dir)
+                .arg("--variant")
+                .arg(&cfg.variant)
+                .arg("--max-new")
+                .arg(cfg.max_new_tokens.to_string())
+                .arg("--max-batch")
+                .arg(cfg.max_batch.to_string())
+                .arg("--temperature")
+                .arg(cfg.temperature.to_string())
+                .arg("--seed")
+                .arg(cfg.seed.to_string())
+                .arg("--kv-block-size")
+                .arg(cfg.kv_block_size.to_string())
+                .arg("--kv-capacity-bytes")
+                .arg(cfg.kv_capacity_bytes.to_string())
+                .arg("--starve-ticks")
+                .arg(cfg.starve_ticks.to_string())
+                .arg("--swap-blocks")
+                .arg(cfg.swap_blocks.to_string())
+                .arg("--recompute-max-tokens")
+                .arg(cfg.recompute_max_tokens.to_string())
+                .arg("--net-inbox")
+                .arg(cfg.net_inbox.to_string());
+            if !cfg.paged_kv {
+                cmd.arg("--no-paged");
+            }
+            if !cfg.batched_decode {
+                cmd.arg("--no-batched-decode");
+            }
+            if cfg.preempt {
+                cmd.arg("--preempt");
+            }
+            cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+            let mut child = cmd
+                .spawn()
+                .with_context(|| format!("spawning replica {index} ({})", exe.display()))?;
+            let stdin = child.stdin.take();
+            let stdout = child.stdout.take().context("replica stdout not piped")?;
+            let mut lines = BufReader::new(stdout);
+            let mut line = String::new();
+            if lines.read_line(&mut line).unwrap_or(0) == 0 {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("replica {index} exited before its listening handshake");
+            }
+            let addr = (|| -> Result<String> {
+                Ok(Json::parse(line.trim())?.get("replica_listening")?.str()?.to_string())
+            })()
+            .with_context(|| format!("replica {index} handshake line {line:?}"))?;
+            let data = TcpStream::connect(&addr)
+                .with_context(|| format!("replica {index} data connection to {addr}"))?;
+            let _ = data.set_nodelay(true);
+            let ctl_stream = TcpStream::connect(&addr)
+                .with_context(|| format!("replica {index} control connection to {addr}"))?;
+            let _ = ctl_stream.set_nodelay(true);
+            ctl_stream.set_read_timeout(Some(Duration::from_millis(CTL_TIMEOUT_MS)))?;
+            let entries: Entries = Arc::new(Mutex::new(HashMap::new()));
+            let dead = Arc::new(AtomicBool::new(false));
+            let drain_waiter: DrainWaiter = Arc::new(Mutex::new(None));
+            let reader = {
+                let stream = data.try_clone()?;
+                let (entries, dead) = (entries.clone(), dead.clone());
+                let (drain_waiter, metrics) = (drain_waiter.clone(), metrics);
+                thread::Builder::new()
+                    .name(format!("replica-{index}-reader"))
+                    .spawn(move || reader_loop(stream, entries, drain_waiter, dead, metrics))?
+            };
+            Ok(ProcessReplica {
+                child: Mutex::new(child),
+                stdin: Mutex::new(stdin),
+                _stdout: Mutex::new(Some(lines.into_inner())),
+                addr,
+                data: Mutex::new(data),
+                ctl: Mutex::new(Some(Client::from_stream(ctl_stream)?)),
+                entries,
+                dead,
+                load: AtomicU64::new(0),
+                drain_waiter,
+                reader: Mutex::new(Some(reader)),
+            })
+        }
+
+        pub fn addr(&self) -> &str {
+            &self.addr
+        }
+
+        /// Write one line on the data connection. The connection-wide
+        /// writer mutex is the FIFO guarantee drain relies on: a drain
+        /// command serializes after every submit written before it.
+        fn write_data(&self, line: String) -> std::io::Result<()> {
+            let mut s = self.data.lock().unwrap();
+            s.write_all(line.as_bytes())?;
+            s.write_all(b"\n")
+        }
+
+        /// Lockstep call on the control connection. Any failure poisons
+        /// the connection (its lockstep framing can no longer be
+        /// trusted) — subsequent probes fail and the supervisor
+        /// escalates suspect→dead.
+        fn ctl_call(&self, req: &Json) -> Result<Json> {
+            let mut g = self.ctl.lock().unwrap();
+            let client = g.as_mut().ok_or_else(|| anyhow!("control connection lost"))?;
+            match client.call(req) {
+                Ok(j) => Ok(j),
+                Err(e) => {
+                    *g = None;
+                    Err(e)
+                }
+            }
+        }
+
+        fn ctl_cmd(&self, cmd: &str) -> Result<Json> {
+            self.ctl_call(&Json::obj(vec![("cmd", Json::Str(cmd.into()))]))
+        }
+
+        fn register_and_write(&self, id: u64, entry: Entry, wire: Json) {
+            // register BEFORE writing: a failed write leaves the entry
+            // as an orphan and the request is requeued — a request can
+            // be re-run (benign under greedy decode + stream offsets)
+            // but never lost
+            self.entries.lock().unwrap().insert(id, entry);
+            if self.write_data(wire.to_string()).is_err() {
+                self.dead.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    impl ReplicaTransport for ProcessReplica {
+        fn kind(&self) -> &'static str {
+            "process"
+        }
+
+        fn submit(&self, id: u64, opts: SubmitOpts, resp: RespSink) {
+            if self.dead.load(Ordering::Relaxed) {
+                resp.send(Response::error(id, "replica process is dead".into()));
+                return;
+            }
+            let mut line = vec![
+                ("prompt", Json::Str(opts.prompt.clone())),
+                ("max_new", Json::Num(opts.max_new as f64)),
+                ("variant", Json::Str(opts.variant.name())),
+                ("rid", Json::Num(id as f64)),
+            ];
+            if opts.stream.is_some() {
+                line.push(("stream", Json::Bool(true)));
+            }
+            if opts.stream_offset > 0 {
+                line.push(("offset", Json::Num(opts.stream_offset as f64)));
+            }
+            let wire = Json::obj(line);
+            let entry = Entry {
+                prompt: opts.prompt,
+                max_new: opts.max_new,
+                variant: opts.variant,
+                stream: opts.stream,
+                resp,
+                streamed: opts.stream_offset,
+            };
+            self.register_and_write(id, entry, wire);
+        }
+
+        fn cancel(&self, id: u64) {
+            if self.dead.load(Ordering::Relaxed) {
+                return;
+            }
+            let _ = self.ctl_call(&Json::obj(vec![
+                ("cmd", Json::Str("cancel".into())),
+                ("id", Json::Num(id as f64)),
+            ]));
+        }
+
+        fn load_cost(&self) -> f64 {
+            f64::from_bits(self.load.load(Ordering::Relaxed))
+        }
+
+        fn alive(&self) -> bool {
+            if self.dead.load(Ordering::Relaxed) {
+                return false;
+            }
+            matches!(self.child.lock().unwrap().try_wait(), Ok(None))
+        }
+
+        fn probe(&self) -> Result<f64> {
+            if self.dead.load(Ordering::Relaxed) {
+                bail!("replica process is dead");
+            }
+            let j = self.ctl_cmd("probe")?;
+            let load = j.get("load")?.num()?;
+            self.load.store(load.to_bits(), Ordering::Relaxed);
+            Ok(load)
+        }
+
+        fn counter(&self, name: &str) -> u64 {
+            self.ctl_cmd("stats")
+                .ok()
+                .and_then(|j| j.opt("counters")?.opt(name)?.usize().ok())
+                .unwrap_or(0) as u64
+        }
+
+        fn gauge(&self, name: &str) -> f64 {
+            self.ctl_cmd("stats")
+                .ok()
+                .and_then(|j| j.opt("gauges")?.opt(name)?.num().ok())
+                .unwrap_or(0.0)
+        }
+
+        fn metrics_json(&self) -> Json {
+            self.ctl_cmd("stats")
+                .unwrap_or_else(|_| Json::obj(vec![("unreachable", Json::Bool(true))]))
+        }
+
+        fn view_json(&self, kind: &str) -> Json {
+            self.ctl_cmd(kind)
+                .unwrap_or_else(|_| Json::obj(vec![("unreachable", Json::Bool(true))]))
+        }
+
+        fn drain(&self) -> Result<Vec<MeshDrained>> {
+            if self.dead.load(Ordering::Relaxed) {
+                return Ok(self.take_orphans());
+            }
+            let (tx, rx) = channel();
+            *self.drain_waiter.lock().unwrap() = Some(tx);
+            let cmd = Json::obj(vec![("cmd", Json::Str("drain".into()))]);
+            if self.write_data(cmd.to_string()).is_err() {
+                self.dead.store(true, Ordering::SeqCst);
+                self.drain_waiter.lock().unwrap().take();
+                return Ok(self.take_orphans());
+            }
+            match rx.recv_timeout(Duration::from_secs(DRAIN_TIMEOUT_SECS)) {
+                Ok(v) => Ok(v),
+                Err(_) => {
+                    // degrade to the crash path: whatever the registry
+                    // still holds restarts from scratch on survivors
+                    self.dead.store(true, Ordering::SeqCst);
+                    self.drain_waiter.lock().unwrap().take();
+                    Ok(self.take_orphans())
+                }
+            }
+        }
+
+        fn adopt(&self, d: MeshDrained) {
+            if self.dead.load(Ordering::Relaxed) {
+                let id = d.req.id;
+                d.req.resp_tx.send(Response::error(id, "replica process is dead".into()));
+                return;
+            }
+            let MeshDrained { req, streamed, session } = d;
+            let record = match session {
+                None => {
+                    // no frozen state — plain re-submit at the offset
+                    let Request { id, prompt, max_new, variant, resp_tx, stream, .. } = req;
+                    let opts =
+                        SubmitOpts { prompt, max_new, variant, stream, stream_offset: streamed };
+                    self.submit(id, opts, resp_tx);
+                    return;
+                }
+                Some(MeshSession::Wire(j)) => j,
+                Some(MeshSession::Local(m)) => crate::mesh::encode_migrated(&m),
+            };
+            let wire = Json::obj(vec![
+                ("cmd", Json::Str("adopt".into())),
+                ("rid", Json::Num(req.id as f64)),
+                ("streamed", Json::Num(streamed as f64)),
+                ("max_new", Json::Num(req.max_new as f64)),
+                ("stream", Json::Bool(req.stream.is_some())),
+                ("session", record),
+            ]);
+            let id = req.id;
+            let entry = Entry {
+                prompt: req.prompt,
+                max_new: req.max_new,
+                variant: req.variant,
+                stream: req.stream,
+                resp: req.resp_tx,
+                streamed,
+            };
+            self.register_and_write(id, entry, wire);
+        }
+
+        fn inflight(&self) -> usize {
+            self.entries.lock().unwrap().len()
+        }
+
+        fn take_orphans(&self) -> Vec<MeshDrained> {
+            let taken = std::mem::take(&mut *self.entries.lock().unwrap());
+            taken.into_iter().map(|(rid, e)| entry_to_drained(rid, e, None)).collect()
+        }
+
+        fn shutdown(&self) {
+            self.dead.store(true, Ordering::SeqCst);
+            // graceful exit signal: the child leaves on stdin EOF
+            *self.stdin.lock().unwrap() = None;
+            {
+                let mut child = self.child.lock().unwrap();
+                let mut exited = false;
+                for _ in 0..100 {
+                    if matches!(child.try_wait(), Ok(Some(_))) {
+                        exited = true;
+                        break;
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+                if !exited {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+            // child is gone → the data socket reached EOF → the reader
+            // thread is exiting; joining it cannot hang
+            if let Some(h) = self.reader.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+
+        fn kill_hard(&self) -> Result<()> {
+            // SIGKILL, nothing else: death detection must go through
+            // the same supervisor/reader paths a real crash would take
+            self.child.lock().unwrap().kill().context("kill replica process")
+        }
+    }
+
+    /// The data-connection reader: the single thread that processes the
+    /// child's frames, terminals, and drain replies, strictly in wire
+    /// order. Single-threaded processing + per-connection FIFO is the
+    /// whole concurrency story — a drain reply is handled only after
+    /// every frame/terminal written before it.
+    fn reader_loop(
+        stream: TcpStream,
+        entries: Entries,
+        drain_waiter: DrainWaiter,
+        dead: Arc<AtomicBool>,
+        metrics: Arc<Metrics>,
+    ) {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            let Ok(j) = Json::parse(line.trim()) else { continue };
+            if j.opt("drained").is_some() {
+                handle_drain_reply(&j, &entries, &drain_waiter);
+                continue;
+            }
+            if j.opt("tok").is_some() {
+                if let Some((id, index, token, text)) = parse_frame(&j) {
+                    forward_frame(&entries, &metrics, id, index, token, text);
+                }
+                continue;
+            }
+            if let Some((id, resp)) = parse_terminal(&j) {
+                // terminal: the request is over — drop the entry so a
+                // later crash cannot requeue a finished request
+                if let Some(e) = entries.lock().unwrap().remove(&id) {
+                    e.resp.send(resp);
+                }
+            }
+            // lines without an id (connection-level protocol errors)
+            // have no request to route to
+        }
+        // connection gone (child exit, kill -9, network error): mark
+        // dead first so no new entries are registered, then hand the
+        // orphans to a waiting drain call if there is one — otherwise
+        // they stay registered for take_orphans
+        dead.store(true, Ordering::SeqCst);
+        if let Some(tx) = drain_waiter.lock().unwrap().take() {
+            let taken = std::mem::take(&mut *entries.lock().unwrap());
+            let orphans: Vec<MeshDrained> =
+                taken.into_iter().map(|(rid, e)| entry_to_drained(rid, e, None)).collect();
+            let _ = tx.send(orphans);
+        }
+    }
+
+    /// Join the child's drain records with the router's entry registry.
+    /// The registry is emptied atomically: every later line on this
+    /// connection (there should be none) finds no entry and no-ops.
+    fn handle_drain_reply(j: &Json, entries: &Entries, drain_waiter: &DrainWaiter) {
+        let Some(tx) = drain_waiter.lock().unwrap().take() else {
+            return; // unsolicited — nobody is draining; ignore the line
+        };
+        let records = crate::mesh::parse_drain_reply(j).unwrap_or_default();
+        let mut taken = std::mem::take(&mut *entries.lock().unwrap());
+        let mut out = Vec::new();
+        for r in records {
+            // entries finished before the drain landed have already
+            // been removed by their terminal — skip their records
+            if let Some(e) = taken.remove(&r.rid) {
+                out.push(entry_to_drained(r.rid, e, r.session.map(MeshSession::Wire)));
+            }
+        }
+        // leftovers the child never reported (a submit racing the drain
+        // write, or a lost terminal): restart from scratch. Re-running
+        // an already-finished request is benign — greedy decode sends a
+        // bit-identical terminal and the offset suppresses its frames.
+        for (rid, e) in taken {
+            out.push(entry_to_drained(rid, e, None));
+        }
+        let _ = tx.send(out);
+    }
+
+    fn parse_frame(j: &Json) -> Option<(u64, usize, i32, String)> {
+        Some((
+            j.opt("id")?.usize().ok()? as u64,
+            j.opt("i")?.usize().ok()?,
+            j.opt("tok")?.int().ok()? as i32,
+            j.opt("text")?.str().ok()?.to_string(),
+        ))
+    }
+
+    /// Forward one token frame to the client's sink, bounded-retrying
+    /// while its event ring is momentarily full. The registry lock is
+    /// dropped between attempts so submits/terminals are never blocked
+    /// behind a slow client.
+    fn forward_frame(
+        entries: &Entries,
+        metrics: &Metrics,
+        id: u64,
+        index: usize,
+        token: i32,
+        text: String,
+    ) {
+        for _ in 0..FRAME_RETRIES {
+            {
+                let mut g = entries.lock().unwrap();
+                // entry gone: terminal or drain raced us — drop
+                let Some(e) = g.get_mut(&id) else { return };
+                // duplicate of an already-forwarded index (a requeued
+                // replica replaying): exactly-once means drop it
+                if index < e.streamed {
+                    return;
+                }
+                let Some(stream) = &e.stream else { return };
+                if stream.send(StreamFrame { id, index, token, text: text.clone() }) {
+                    e.streamed = e.streamed.max(index + 1);
+                    return;
+                }
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        metrics.inc("router_dropped_frames");
+    }
+
+    /// Reconstruct a terminal [`Response`] from its wire line (summary,
+    /// error, or cancelled — anything with `"id"` and no `"tok"`).
+    fn parse_terminal(j: &Json) -> Option<(u64, Response)> {
+        let id = j.opt("id")?.usize().ok()? as u64;
+        let num = |k: &str| j.opt(k).and_then(|v| v.num().ok()).unwrap_or(0.0);
+        let timing = Timing { ttft_ms: num("ttft_ms"), ..Timing::default() };
+        let resp = Response {
+            id,
+            text: j.opt("text").and_then(|v| v.str().ok()).unwrap_or("").to_string(),
+            n_prompt: 0,
+            n_generated: num("n_generated") as usize,
+            queue_ms: num("queue_ms"),
+            e2e_ms: num("e2e_ms"),
+            timing,
+            error: j.opt("error").and_then(|v| v.str().ok()).map(|s| s.to_string()),
+            cancelled: j.opt("cancelled").and_then(|v| v.boolean().ok()).unwrap_or(false),
+        };
+        Some((id, resp))
+    }
+}

@@ -60,11 +60,11 @@
 pub mod batcher;
 pub mod policy;
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::mpsc::Sender;
 
 use crate::config::Manifest;
-use crate::engine::{Admission, Engine, FrozenSession, Session, Timing, Variant};
+use crate::engine::{Admission, Engine, FrozenSession, MigratedSession, Session, Timing, Variant};
 use crate::kv::paged::is_pool_exhausted;
 use crate::kv::KvPool;
 use crate::metrics::Metrics;
@@ -83,6 +83,13 @@ pub struct Request {
     /// per-token frame sink (`"stream": true` requests); `None`
     /// means the client only wants the final summary
     pub stream: Option<FrameSink>,
+    /// generated tokens the client has ALREADY received frames for —
+    /// nonzero only on mesh requeues, where a request replays from
+    /// scratch on a survivor replica after its original replica died.
+    /// Greedy decode regenerates the same tokens; this offset keeps
+    /// them from being re-emitted, so the client's stream stays
+    /// exactly-once and bit-identical.
+    pub stream_offset: usize,
 }
 
 /// Where a request's terminal [`Response`] goes: a per-request channel
@@ -158,11 +165,19 @@ pub struct SubmitOpts {
     pub max_new: usize,
     pub variant: Variant,
     pub stream: Option<FrameSink>,
+    /// see [`Request::stream_offset`] (0 for fresh submissions)
+    pub stream_offset: usize,
 }
 
 impl SubmitOpts {
     pub fn new(prompt: &str, max_new: usize, variant: Variant) -> SubmitOpts {
-        SubmitOpts { prompt: prompt.to_string(), max_new, variant, stream: None }
+        SubmitOpts {
+            prompt: prompt.to_string(),
+            max_new,
+            variant,
+            stream: None,
+            stream_offset: 0,
+        }
     }
 }
 
@@ -274,6 +289,17 @@ impl Live {
     }
 }
 
+/// One evacuated request from [`Scheduler::drain`]: the request, how
+/// many frames its client has already received, and the exported
+/// session state (`None` = never started, or unfreezable — the adopter
+/// resubmits it from scratch with `stream_offset = streamed` so the
+/// replayed tokens never reach the client twice).
+pub struct DrainedItem {
+    pub req: Request,
+    pub streamed: usize,
+    pub session: Option<MigratedSession>,
+}
+
 /// A preempted session awaiting resume.
 struct Preempted {
     req: Request,
@@ -293,7 +319,16 @@ pub struct SchedStats {
     pub preempt_oom: u64,
     pub resume_swap: u64,
     pub resume_recompute: u64,
+    /// cancels that raced ahead of their submit and were applied from
+    /// the tombstone set at submit time (the cancel-vs-inbox race)
+    pub cancelled_unseen: u64,
 }
+
+/// Bound on the cancelled-unseen tombstone set. Ids are globally unique
+/// and never reused (router-owned id space), so a tombstone can only
+/// ever match its own request; the cap just bounds memory against a
+/// client spraying cancels for ids that will never arrive.
+const TOMBSTONE_CAP: usize = 1024;
 
 pub struct Scheduler {
     policy: SchedPolicy,
@@ -308,6 +343,10 @@ pub struct Scheduler {
     head_starved_ticks: u64,
     /// consecutive ticks the preempted-queue front has failed to resume
     resume_starved_ticks: u64,
+    /// cancelled-unseen ids: cancels that arrived before their submit
+    /// was drained from the inbox (FIFO eviction at [`TOMBSTONE_CAP`])
+    tombstones: VecDeque<u64>,
+    tombstone_set: HashSet<u64>,
     pub stats: SchedStats,
 }
 
@@ -323,13 +362,43 @@ impl Scheduler {
             tick: 0,
             head_starved_ticks: 0,
             resume_starved_ticks: 0,
+            tombstones: VecDeque::new(),
+            tombstone_set: HashSet::new(),
             stats: SchedStats::default(),
         }
     }
 
-    /// Enqueue a request (FCFS).
+    /// Enqueue a request (FCFS). A request whose cancel already raced
+    /// past it (see [`Scheduler::note_cancelled_unseen`]) is aborted
+    /// right here instead of queued — the client gets the same terminal
+    /// cancelled response it would have gotten had the cancel landed
+    /// after the submit.
     pub fn submit(&mut self, req: Request) {
+        if self.tombstone_set.remove(&req.id) {
+            self.tombstones.retain(|t| *t != req.id);
+            self.stats.cancelled_unseen += 1;
+            req.resp_tx.send(Response::aborted(req.id, 0));
+            return;
+        }
         self.pending.push_back(req);
+    }
+
+    /// Record a cancel for an id the scheduler has never seen. The
+    /// coordinator calls this when [`Scheduler::cancel`] misses: with
+    /// the bounded MPSC inbox, a cancel can be processed before its
+    /// matching submit is drained (the submitter is still mid-push), and
+    /// dropping it would let the request run to completion. The id joins
+    /// a bounded tombstone set consulted by [`Scheduler::submit`].
+    pub fn note_cancelled_unseen(&mut self, id: u64) {
+        if !self.tombstone_set.insert(id) {
+            return;
+        }
+        self.tombstones.push_back(id);
+        while self.tombstones.len() > TOMBSTONE_CAP {
+            if let Some(old) = self.tombstones.pop_front() {
+                self.tombstone_set.remove(&old);
+            }
+        }
     }
 
     /// Nothing pending, live, or frozen.
@@ -489,13 +558,14 @@ impl Scheduler {
                         Ok(session) => {
                             metrics.inc("admitted");
                             metrics.observe_ms("ttft", session.timing.ttft_ms);
+                            let offset = req.stream_offset;
                             let mut l = Live {
                                 req,
                                 session,
                                 started_ms: t0,
                                 last_decode_tick: self.tick,
                                 admitted_tick: self.tick,
-                                streamed: 0,
+                                streamed: offset,
                             };
                             // prefill sampled the first generated token
                             l.emit_new_frames();
@@ -646,6 +716,83 @@ impl Scheduler {
     }
 
     // ------------------------------------------------------------------
+    // Mesh drain / adopt
+    // ------------------------------------------------------------------
+
+    /// Evacuate every request this scheduler holds, for migration to a
+    /// peer replica. Pending requests leave verbatim (never started);
+    /// live sessions first flush sampled-but-unsent frames, then freeze
+    /// preferring swap (so the cached K,V travels with them) and export;
+    /// already-preempted sessions export their frozen state directly.
+    /// Sessions the engine cannot freeze (legacy contiguous path) are
+    /// released and leave with `session: None` — the adopter replays
+    /// them from scratch, and [`Request::stream_offset`] keeps the
+    /// regenerated tokens from reaching the client twice. The scheduler
+    /// is idle afterwards.
+    pub fn drain(&mut self, engine: &Engine, metrics: &Metrics) -> Vec<DrainedItem> {
+        let mut out = Vec::new();
+        for req in self.pending.drain(..) {
+            let streamed = req.stream_offset;
+            out.push(DrainedItem { req, streamed, session: None });
+        }
+        let paged = engine.paged_enabled();
+        for mut l in self.live.drain(..) {
+            l.emit_new_frames();
+            let Live { req, mut session, streamed, .. } = l;
+            let item = if engine.can_freeze(&session) {
+                let (frozen, _) = engine.freeze_session(session, true);
+                DrainedItem { req, streamed, session: Some(engine.export_frozen(frozen)) }
+            } else {
+                if paged {
+                    engine.release_session(&mut session);
+                } else {
+                    let _ = self.legacy_pool.release(req.id);
+                }
+                DrainedItem { req, streamed, session: None }
+            };
+            out.push(item);
+        }
+        for p in self.preempted.drain(..) {
+            out.push(DrainedItem {
+                req: p.req,
+                streamed: p.streamed,
+                session: Some(engine.export_frozen(p.frozen)),
+            });
+        }
+        self.head_starved_ticks = 0;
+        self.resume_starved_ticks = 0;
+        metrics.add("sched_drained", out.len() as u64);
+        out
+    }
+
+    /// Adopt a migrated session from a draining or dead peer: stage its
+    /// K,V payload into this engine (degrading to recompute-on-resume
+    /// when the spill tier can't take it — still bit-identical) and
+    /// park it on the preempted queue, where it resumes with priority
+    /// exactly like a local preemption. A cancel that already raced in
+    /// through the tombstone set aborts the adoption instead, same as
+    /// [`Scheduler::submit`].
+    pub fn adopt(
+        &mut self,
+        req: Request,
+        m: MigratedSession,
+        streamed: usize,
+        engine: &Engine,
+        metrics: &Metrics,
+    ) {
+        if self.tombstone_set.remove(&req.id) {
+            self.tombstones.retain(|t| *t != req.id);
+            self.stats.cancelled_unseen += 1;
+            let generated = m.tokens.len().saturating_sub(m.prompt_len);
+            req.resp_tx.send(Response::aborted(req.id, generated));
+            return;
+        }
+        let frozen = engine.import_frozen(m);
+        metrics.inc("sched_adopted");
+        self.preempted.push_back(Preempted { req, frozen, started_ms: now_ms(), streamed });
+    }
+
+    // ------------------------------------------------------------------
     // Decode + retire
     // ------------------------------------------------------------------
 
@@ -760,6 +907,7 @@ impl Scheduler {
         metrics.set_gauge("sched_pending", self.pending.len() as f64);
         metrics.set_gauge("sched_live", self.live.len() as f64);
         metrics.set_gauge("sched_preempted", self.preempted.len() as f64);
+        metrics.set_gauge("sched_cancelled_unseen", self.stats.cancelled_unseen as f64);
         if let Some(snap) = engine.swap_snapshot() {
             metrics.set_gauge("swap_capacity_bytes", snap.capacity_bytes as f64);
             metrics.set_gauge("swap_used_bytes", snap.used_bytes as f64);
@@ -842,6 +990,7 @@ mod tests {
                 submitted_ms: now_ms(),
                 resp_tx: tx.into(),
                 stream: None,
+                stream_offset: 0,
             },
             rx,
         )
@@ -1039,6 +1188,47 @@ mod tests {
         }
         assert!(sched.is_idle());
         assert_eq!(engine.paged_snapshot().unwrap().live_tables, 0, "no leaked tables");
+    }
+
+    /// Regression (cancel-vs-inbox race): a cancel that arrives before
+    /// its submit is drained must not be a silent no-op. The tombstone
+    /// recorded by `note_cancelled_unseen` aborts the submit at drain
+    /// time with the same terminal cancelled response, is consumed
+    /// exactly once, and never touches other ids.
+    #[test]
+    fn cancelled_unseen_tombstone_aborts_late_submit() {
+        let engine = Engine::load(toy_cfg()).unwrap();
+        let metrics = Metrics::new();
+        let mut sched = Scheduler::new(SchedPolicy::from_config(&toy_cfg()));
+        // the cancel misses (id 7 was never submitted) → tombstone
+        assert!(!sched.cancel(7, &engine, &metrics));
+        sched.note_cancelled_unseen(7);
+        // the racing submit drains afterwards: aborted, never enqueued
+        let (req, rx) = make_req(7, "the color of tom is", 8);
+        sched.submit(req);
+        let r = rx.try_recv().expect("tombstoned submit must be answered");
+        assert!(r.cancelled && r.error.is_none(), "{r:?}");
+        assert_eq!(r.n_generated, 0);
+        assert_eq!(sched.pending_len(), 0, "tombstoned request must not queue");
+        assert_eq!(sched.stats.cancelled_unseen, 1);
+        // consumed: a later submit under a fresh id (ids are never
+        // reused, but the tombstone must still be one-shot) runs
+        let (req, rx) = make_req(7, "the color of tom is", 2);
+        sched.submit(req);
+        drive(&mut sched, &engine, &metrics, 10_000);
+        assert!(rx.try_recv().unwrap().error.is_none());
+        // other ids are unaffected by an outstanding tombstone
+        sched.note_cancelled_unseen(42);
+        let (req, rx) = make_req(43, "tom keeps the hat", 2);
+        sched.submit(req);
+        drive(&mut sched, &engine, &metrics, 10_000);
+        assert!(rx.try_recv().unwrap().error.is_none());
+        // FIFO eviction caps the set: after CAP more ids, 42 is gone
+        for i in 0..(TOMBSTONE_CAP as u64) {
+            sched.note_cancelled_unseen(1000 + i);
+        }
+        assert!(!sched.tombstone_set.contains(&42), "oldest tombstone evicted");
+        assert_eq!(sched.tombstones.len(), TOMBSTONE_CAP);
     }
 
     /// Preemption is off by default: the same overload defers but never

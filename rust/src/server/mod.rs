@@ -12,6 +12,37 @@
 //! `{"cmd": "cancel", "id": N}` — abort request `N` wherever it lives
 //! (pending, live mid-decode, or preempted); may be sent from ANY
 //! connection, since request ids are global across the front-end
+//! `{"cmd": "probe"}` — cheap liveness + load heartbeat (never blocks
+//! on the engine thread; the mesh supervisor's health-check primitive)
+//!
+//! ## Replica mesh extensions
+//!
+//! A `chai replica` child process serves this exact protocol over the
+//! reactor transport; its handshake is one line on **stdout** —
+//! `{"replica_listening": "<addr>"}` — printed once the socket is
+//! bound. The router then drives it with three extensions:
+//!
+//! * `{"prompt": ..., "rid": N, "offset": K}` — submit under the
+//!   caller-pinned id `N` instead of a server-assigned one (mesh
+//!   requeues must keep the router-assigned id the client's stream is
+//!   keyed by). With `"stream": true`, frames start at generated-token
+//!   index `K`: a requeued request replays greedy decode from scratch
+//!   but never re-emits frames its client already received.
+//! * `{"cmd": "drain"}` (reactor only) — stop admitting, freeze every
+//!   pending/live/preempted request, and reply
+//!   `{"drained": [{"rid", "streamed", "session"}, ...]}` where
+//!   `session` is the [`crate::mesh`] bit-exact wire form (absent when
+//!   the request restarts from scratch). The reply line is written on
+//!   the SAME connection after the final frame/terminal of everything
+//!   drained — FIFO ordering is what makes migration race-free.
+//! * `{"cmd": "adopt", "rid": N, "streamed": K, "max_new": M,
+//!   "stream": B, "session": {...}}` (reactor only) — resume a
+//!   migrated session under its original id; decode continues
+//!   bit-exactly from the frozen KV.
+//!
+//! On the threaded transport `drain`/`adopt` answer with a
+//! deterministic error line (its lockstep read loop cannot order the
+//! drain reply behind in-flight streams).
 //!
 //! ## Responses
 //!
@@ -84,7 +115,7 @@ use anyhow::{Context, Result};
 use crate::engine::Variant;
 use crate::net::{NetMode, NetStats};
 use crate::router::Frontend;
-use crate::scheduler::{StreamFrame, SubmitOpts};
+use crate::scheduler::{RespSink, StreamFrame, SubmitOpts};
 use crate::util::json::Json;
 
 /// Reject prompts above this many bytes at the protocol layer — far
@@ -101,6 +132,14 @@ pub const MAX_PROMPT_BYTES: usize = 1 << 20;
 /// answered with an error LINE, never a closed connection; only lines
 /// no legal request could produce close the stream.
 pub const MAX_LINE_BYTES: usize = 6 * MAX_PROMPT_BYTES + (64 << 10);
+
+/// Error reported when a client closes the connection with buffered
+/// bytes and no trailing newline. The partial line is REJECTED, never
+/// processed — one deterministic behavior, byte-identical across the
+/// threads and reactor transports (a half-line could be a truncated
+/// prompt; guessing at it would make the two transports diverge on the
+/// same byte stream).
+pub const TRUNCATED_EOF_ERROR: &str = "truncated request line at EOF (missing trailing newline)";
 
 /// Poll interval for in-flight work: how quickly a connection thread
 /// streaming frames (or waiting on a terminal) observes `stop`.
@@ -397,7 +436,16 @@ fn handle_conn<F: Frontend>(
                     );
                     return Ok(());
                 } else {
-                    return Ok(()); // client closed mid-line
+                    // client closed mid-line (EOF before the newline):
+                    // reject the partial line with the same error line
+                    // as the reactor transport, then close — it is
+                    // never processed as a request
+                    net.truncated_eof.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_line(
+                        &mut writer,
+                        &Json::obj(vec![("error", Json::Str(TRUNCATED_EOF_ERROR.into()))]),
+                    );
+                    return Ok(());
                 }
             }
             // timeout: bytes read so far stay in `buf`; either exit
@@ -495,15 +543,17 @@ fn handle_streaming<F: Frontend>(
     writer: &mut TcpStream,
     stop: &AtomicBool,
 ) -> Result<()> {
-    let opts = match parse_generation(req) {
-        Ok(o) => o,
+    let (frame_tx, frame_rx) = channel();
+    let submitted = parse_generation(req).and_then(|opts| {
+        submit_with_channel(req, api, SubmitOpts { stream: Some(frame_tx.into()), ..opts })
+    });
+    let (id, resp_rx) = match submitted {
+        Ok(p) => p,
         Err(e) => {
             write_line(writer, &Json::obj(vec![("error", Json::Str(format!("{e:#}")))]))?;
             return Ok(());
         }
     };
-    let (frame_tx, frame_rx) = channel();
-    let (id, resp_rx) = api.submit_opts(SubmitOpts { stream: Some(frame_tx.into()), ..opts });
     let mut abort_sent = false;
     loop {
         match frame_rx.recv_timeout(Duration::from_millis(POLL_MS)) {
@@ -555,7 +605,29 @@ pub(crate) fn parse_generation(req: &Json) -> Result<SubmitOpts> {
     let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
     let variant =
         Variant::parse(req.opt("variant").map(|v| v.str()).transpose()?.unwrap_or("chai"))?;
-    Ok(SubmitOpts::new(&prompt, max_new, variant))
+    let mut opts = SubmitOpts::new(&prompt, max_new, variant);
+    // mesh requeues replay from scratch but must not re-emit frames the
+    // client already received (see Request::stream_offset)
+    opts.stream_offset = req.opt("offset").map(|v| v.usize()).transpose()?.unwrap_or(0);
+    Ok(opts)
+}
+
+/// Submit honoring a caller-pinned `"rid"` (the mesh path: requeues and
+/// adopts keep the router-assigned id); plain requests get a fresh id.
+pub(crate) fn submit_with_channel<F: Frontend>(
+    req: &Json,
+    api: &F,
+    opts: SubmitOpts,
+) -> Result<(u64, Receiver<crate::scheduler::Response>)> {
+    match req.opt("rid") {
+        Some(v) => {
+            let id = v.usize()? as u64;
+            let (tx, rx) = channel();
+            api.submit_rid(id, opts, RespSink::Channel(tx));
+            Ok((id, rx))
+        }
+        None => Ok(api.submit_opts(opts)),
+    }
 }
 
 /// One stream frame as its wire line (`"tok"` marks it non-terminal).
@@ -613,6 +685,18 @@ pub(crate) fn command_json<F: Frontend>(req: &Json, api: &F, view: &NetView<'_>)
         "sched" => Ok(api.sched_json()),
         // static serving facts: compute backend, model name
         "info" => Ok(api.info_json()),
+        // liveness + load heartbeat: reads gauges only, never waits on
+        // the engine thread, so the mesh supervisor can call it at high
+        // frequency without perturbing decode
+        "probe" => Ok(api.probe_json()),
+        // mesh migration needs the reply FIFO-ordered behind in-flight
+        // frames on the same connection — only the reactor transport
+        // can provide that (it intercepts these before dispatching
+        // here); the threaded transport refuses deterministically
+        "drain" | "adopt" => Ok(Json::obj(vec![(
+            "error",
+            Json::Str("drain/adopt require the reactor transport (--net reactor)".into()),
+        )])),
         // abort by id, from any connection (ids are front-end
         // global); ack is immediate, the abort lands on the next
         // engine tick and the submitting connection receives the
@@ -642,7 +726,7 @@ fn handle_line<F: Frontend>(
         return command_json(req, api, view);
     }
     let opts = parse_generation(req)?;
-    let (id, rx) = api.submit_opts(opts);
+    let (id, rx) = submit_with_channel(req, api, opts)?;
     let resp = recv_terminal(&rx, id, api, stop)?;
     Ok(response_json(&resp))
 }
@@ -656,6 +740,13 @@ pub struct Client {
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Client::from_stream(stream)
+    }
+
+    /// Wrap an already-connected stream (the mesh control path: the
+    /// caller sets socket timeouts before handing the stream over so a
+    /// wedged replica fails a probe instead of hanging it).
+    pub fn from_stream(stream: TcpStream) -> Result<Client> {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
     }
 

@@ -9,12 +9,15 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 
-/// Monotonic wall-clock helper used by benches and metrics.
+/// Monotonic clock helper used by benches and metrics: milliseconds since
+/// the first call in this process. Anchored to a process-start `Instant`
+/// (NOT `SystemTime`, which jumps under NTP slew and can hand negative
+/// durations to the scheduler wait metrics and bench p99/TTFT gates).
+/// Every caller takes differences of two readings, so the epoch is
+/// irrelevant — only monotonicity matters.
 pub fn now_ms() -> f64 {
-    use std::time::{SystemTime, UNIX_EPOCH};
-    SystemTime::now()
-        .duration_since(UNIX_EPOCH)
-        .unwrap()
-        .as_secs_f64()
-        * 1e3
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
 }

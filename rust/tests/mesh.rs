@@ -1,0 +1,274 @@
+//! Integration tests for the replica mesh: the location-transparent
+//! process transport (`chai replica` children behind the router),
+//! graceful drain with live-session migration, and the crash contract —
+//! a `kill -9`'d replica loses ZERO accepted requests; survivors finish
+//! them with exactly-once, bit-identical token streams (greedy decode).
+//! Everything runs on the pure-Rust reference backend (seeded toy
+//! model), with the replica child binary pointed at the freshly-built
+//! `chai` via `CARGO_BIN_EXE_chai`.
+
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::Variant;
+use chai::router::{Frontend, Router};
+use chai::scheduler::{Response, StreamFrame, SubmitOpts};
+
+fn ref_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: PathBuf::from("no-artifacts"),
+        backend: "ref".into(),
+        ..Default::default()
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn process_cfg(replicas: usize) -> ServingConfig {
+    ServingConfig {
+        replicas,
+        transport: "process".into(),
+        replica_cmd: Some(PathBuf::from(env!("CARGO_BIN_EXE_chai"))),
+        // fast suspect->dead escalation keeps the failover tests quick
+        probe_ms: 50,
+        probe_suspect: 3,
+        ..ref_cfg()
+    }
+}
+
+/// Greedy-decode oracle: each prompt generated alone on a plain
+/// single-engine coordinator. The mesh must reproduce these bytes no
+/// matter where (or how many times) it places the request.
+fn oracle_texts(prompts: &[String], max_new: usize) -> Vec<String> {
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let texts = prompts
+        .iter()
+        .map(|p| {
+            let r = handle
+                .coordinator
+                .submit(p, max_new, Variant::Chai)
+                .recv_timeout(Duration::from_secs(600))
+                .unwrap();
+            assert!(r.error.is_none(), "oracle: {:?}", r.error);
+            r.text
+        })
+        .collect();
+    handle.shutdown();
+    texts
+}
+
+/// One in-flight streaming request: its frame channel and terminal rx.
+struct Stream {
+    frames: Receiver<StreamFrame>,
+    resp: Receiver<Response>,
+}
+
+fn submit_stream(router: &Router, prompt: &str, max_new: usize) -> Stream {
+    let (tx, frames) = std::sync::mpsc::channel();
+    let (_, resp) = router.submit_opts(SubmitOpts {
+        stream: Some(tx.into()),
+        ..SubmitOpts::new(prompt, max_new, Variant::Chai)
+    });
+    Stream { frames, resp }
+}
+
+/// Wait for the terminal, then require the stream to be complete and
+/// exactly-once: frame indexes 0..n-1 with no gap or duplicate (across
+/// however many replicas served it), concatenating to `want`.
+fn assert_stream_exact(label: &str, s: Stream, want: &str) {
+    let r = s.resp.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(r.error.is_none(), "[{label}] {:?}", r.error);
+    assert!(!r.cancelled, "[{label}] spurious cancel");
+    assert_eq!(r.text, want, "[{label}] terminal text must match the oracle");
+    // frames are forwarded before their terminal (single reader, wire
+    // order), so after recv'ing the terminal the channel holds them all
+    let got: Vec<StreamFrame> = s.frames.try_iter().collect();
+    assert_eq!(got.len(), r.n_generated, "[{label}] one frame per token");
+    let mut cat = String::new();
+    for (i, f) in got.iter().enumerate() {
+        assert_eq!(f.index, i, "[{label}] frames contiguous, exactly once");
+        cat.push_str(&f.text);
+    }
+    assert_eq!(cat, want, "[{label}] frames must concatenate to the oracle text");
+}
+
+// ---------------------------------------------------------------------------
+// Process transport: placement transparency
+// ---------------------------------------------------------------------------
+
+/// Separate `chai replica` processes behind the router serve the exact
+/// request streams the in-process replicas do — location transparency
+/// down to the bytes, for both plain and streaming requests.
+#[cfg(target_os = "linux")]
+#[test]
+fn process_replicas_match_the_single_engine_oracle() {
+    let prompts: Vec<String> =
+        (0..4).map(|i| format!("the color of tom number {i}")).collect();
+    let want = oracle_texts(&prompts, 6);
+
+    let handle = Router::start(process_cfg(2)).unwrap();
+    let router = handle.router.clone();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| router.submit_opts(SubmitOpts::new(p, 6, Variant::Chai)).1)
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(600)).unwrap();
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        assert_eq!(r.text, want[i], "request {i} text must match the oracle");
+    }
+    // both children actually served traffic
+    assert!(router.metrics.counter("router_routed_replica_0") >= 1);
+    assert!(router.metrics.counter("router_routed_replica_1") >= 1);
+    assert_eq!(router.counter_sum("completed"), 4);
+
+    // streaming crosses the process boundary frame-for-frame
+    let s = submit_stream(&router, &prompts[0], 6);
+    assert_stream_exact("process stream", s, &want[0]);
+
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Graceful drain: live sessions migrate mid-generation
+// ---------------------------------------------------------------------------
+
+/// Draining a process replica mid-decode freezes its live sessions into
+/// the mesh wire form, survivors adopt them, and every client stream
+/// stays complete and bit-identical — the continuation decodes on a
+/// DIFFERENT process than the prefix did.
+#[cfg(target_os = "linux")]
+#[test]
+fn process_drain_migrates_live_sessions_mid_decode() {
+    let prompts: Vec<String> =
+        (0..2).map(|i| format!("tom keeps the hat in box {i}")).collect();
+    let want = oracle_texts(&prompts, 40);
+
+    let handle = Router::start(process_cfg(2)).unwrap();
+    let router = handle.router.clone();
+    // round-robin on a fresh router: request 0 -> replica 0, 1 -> 1
+    let streams: Vec<Stream> =
+        prompts.iter().map(|p| submit_stream(&router, p, 40)).collect();
+    // three observed frames prove request 0 is admitted and mid-decode
+    let mut seen = 0usize;
+    for _ in 0..3 {
+        let f = streams[0].frames.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(f.index, seen);
+        seen += 1;
+    }
+
+    let moved = router.drain_replica(0).unwrap();
+    assert!(moved >= 1, "the mid-decode session must migrate");
+    assert_eq!(router.metrics.counter("router_migrated_sessions") as usize, moved);
+    assert_eq!(router.metrics.gauge("router_replicas_alive") as usize, 1);
+
+    // the drained stream finishes on the survivor; the frames the
+    // client already holds are never re-sent (indexes stay contiguous)
+    for (i, s) in streams.into_iter().enumerate() {
+        assert_stream_exact(&format!("drained stream {i}"), s, &want[i]);
+    }
+    assert!(router.drain_replica(0).is_err(), "second drain must refuse");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// The crash contract: kill -9 loses nothing
+// ---------------------------------------------------------------------------
+
+/// The acceptance drill: 4 process replicas, a burst of streaming
+/// requests, SIGKILL one replica mid-decode. The supervisor declares it
+/// dead, every request it had accepted is requeued on survivors at its
+/// recorded stream offset, and EVERY accepted request completes with an
+/// exactly-once, oracle-identical stream. Zero losses, zero duplicates.
+#[cfg(target_os = "linux")]
+#[test]
+fn sigkill_mid_decode_loses_zero_accepted_requests() {
+    let prompts: Vec<String> =
+        (0..8).map(|i| format!("a long tale of tom number {i}")).collect();
+    let want = oracle_texts(&prompts, 40);
+
+    let handle = Router::start(process_cfg(4)).unwrap();
+    let router = handle.router.clone();
+    let streams: Vec<Stream> =
+        prompts.iter().map(|p| submit_stream(&router, p, 40)).collect();
+    // wait until decode is demonstrably underway...
+    let f = streams[0].frames.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(f.index, 0);
+    // ...then SIGKILL the replica holding the most accepted requests
+    let victim = (0..router.replica_count())
+        .max_by_key(|i| router.transport(*i).inflight())
+        .unwrap();
+    let in_flight = router.transport(victim).inflight();
+    assert!(in_flight >= 1, "victim must hold accepted requests when killed");
+    router.transport(victim).kill_hard().unwrap();
+
+    // every accepted request still completes, bit-identically, with
+    // contiguous frame indexes across the replica generations
+    for (i, s) in streams.into_iter().enumerate() {
+        assert_stream_exact(&format!("stream {i}"), s, &want[i]);
+    }
+    assert_eq!(router.metrics.counter("router_replica_deaths"), 1);
+    assert_eq!(router.metrics.gauge("router_replicas_alive") as usize, 3);
+    assert!(
+        router.metrics.counter("router_requeued") >= 1,
+        "the victim's accepted requests must have been requeued"
+    );
+
+    // the mesh keeps serving new work after the death
+    let s = submit_stream(&router, &prompts[0], 6);
+    let r = s.resp.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(r.error.is_none(), "post-crash submit: {:?}", r.error);
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Local transport: the same drain semantics without serialization
+// ---------------------------------------------------------------------------
+
+/// Draining an in-process replica migrates a mid-decode streaming
+/// session over the zero-copy path ([`chai::router::MeshSession`] stays
+/// in memory) with the identical client-visible contract: contiguous
+/// frames, oracle-identical text.
+#[test]
+fn local_drain_keeps_streams_contiguous_and_bit_identical() {
+    let prompt = "tom keeps the hat in the box".to_string();
+    let want = oracle_texts(&[prompt.clone()], 40);
+
+    let cfg = ServingConfig { replicas: 2, ..ref_cfg() };
+    let handle = Router::start(cfg).unwrap();
+    let router = handle.router.clone();
+    // fresh rr rotation: the first submit lands on replica 0
+    let s = submit_stream(&router, &prompt, 40);
+    for i in 0..3 {
+        let f = s.frames.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(f.index, i, "frames in order before the drain");
+    }
+    let moved = router.drain_replica(0).unwrap();
+    assert!(moved >= 1, "the live streaming session must migrate");
+    assert_stream_exact("local drained stream", s, &want[0]);
+    handle.shutdown();
+}
+
+/// A router with every replica gone fails new submissions with a
+/// terminal error instead of hanging the client.
+#[test]
+fn empty_fleet_fails_requests_with_terminal_errors() {
+    let cfg = ServingConfig { replicas: 1, ..ref_cfg() };
+    let handle = Router::start(cfg).unwrap();
+    let router = handle.router.clone();
+    let moved = router.drain_replica(0).unwrap();
+    assert_eq!(moved, 0);
+    let (_, rx) = router.submit_opts(SubmitOpts::new("tom", 4, Variant::Chai));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let r = loop {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(r) => break r,
+            Err(_) if Instant::now() < deadline => continue,
+            Err(e) => panic!("request into an empty fleet hung: {e}"),
+        }
+    };
+    assert!(r.error.is_some(), "must fail, not hang: {r:?}");
+    handle.shutdown();
+}

@@ -244,6 +244,71 @@ fn reactor_slow_reader_never_delays_other_sessions() {
 }
 
 // ---------------------------------------------------------------------------
+// Partial line at EOF: identical rejection on both transports
+// ---------------------------------------------------------------------------
+
+/// A connection that closes with buffered bytes and no trailing newline
+/// gets the same deterministic treatment on `--net threads` and `--net
+/// reactor`: the partial line is REJECTED with the shared
+/// `TRUNCATED_EOF_ERROR` line — never processed as a request — and the
+/// connection is closed. A half-line could be a truncated prompt;
+/// guessing at it would make the transports diverge on one byte stream.
+#[test]
+fn partial_line_at_eof_is_rejected_identically_on_both_transports() {
+    use std::io::{Read, Write};
+    use std::net::{Shutdown, TcpStream};
+
+    let modes: Vec<NetMode> = {
+        #[cfg(target_os = "linux")]
+        {
+            vec![NetMode::Threads, NetMode::Reactor]
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            vec![NetMode::Threads]
+        }
+    };
+    let mut replies: Vec<String> = Vec::new();
+    for mode in modes {
+        let handle = Coordinator::start(ref_cfg()).unwrap();
+        let server =
+            Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", mode).unwrap();
+        let addr = server.addr.to_string();
+
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(b"{\"prompt\": \"the color of to").unwrap();
+        raw.shutdown(Shutdown::Write).unwrap();
+        let mut reply = String::new();
+        raw.read_to_string(&mut reply).unwrap();
+        let line = reply.lines().next().unwrap_or("").to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(
+            j.get("error").unwrap().str().unwrap(),
+            chai::server::TRUNCATED_EOF_ERROR,
+            "mode {}: {j:?}",
+            mode.name()
+        );
+        assert_eq!(reply.lines().count(), 1, "error line then close, nothing else");
+
+        // the rejection is visible in the transport's stats, and the
+        // half-line was never admitted as a request
+        let mut client = Client::connect(&addr).unwrap();
+        let stats = client.stats().unwrap();
+        let net = stats.get("net").unwrap();
+        assert_eq!(net.get("net_truncated_eof").unwrap().usize().unwrap(), 1);
+        assert_eq!(handle.coordinator.metrics.counter("completed"), 0);
+
+        replies.push(line);
+        server.stop();
+        handle.shutdown();
+    }
+    // byte-identical error line across every transport that ran
+    for w in replies.windows(2) {
+        assert_eq!(w[0], w[1], "transports must agree on the rejection line");
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Bounded inbox: overloaded shed (transport-independent)
 // ---------------------------------------------------------------------------
 
