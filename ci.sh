@@ -40,6 +40,14 @@ echo "== serving smoke: batched block-native vs sequential bucket decode (ref ba
 # sequential path; writes bench_results/BENCH_serving.json
 cargo bench --bench bench_serving -- --backend ref --smoke
 
+echo "== relay decode gate: shared-prefix burst, relay groups vs fused rows (ref backend) =="
+# relay contract: a burst sharing a >= 4-block system prompt decodes
+# with bit-identical token streams relay-on vs --no-relay, relay tok/s
+# strictly above fused, and the relay counters firing (relay_groups,
+# relay_prefix_tokens_saved > 0); merges a "relay" section into
+# bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --relay
+
 echo "== serving overload smoke: preempt-and-requeue under an over-capacity burst (ref backend) =="
 # overload contract: zero dropped requests, bounded p99 queue wait, and
 # both preemption flavors exercised (swap-out with a roomy spill tier,

@@ -96,12 +96,132 @@ fn main() -> anyhow::Result<()> {
     cl.row(vec!["k-means only (approx)".into(), fmt_ms(cluster_ms - probe_ms)]);
     cl.print();
 
+    // ---- paged attention kernels: block-wise slab hoist (before/after) ----
+    // The serving decode path reads K,V straight out of pool slabs; the
+    // hoisted kernels look the slab up once per block and stop at the
+    // causal bound, where the original walked `blocks[kj/B]` per key and
+    // accumulated the softmaxed-to-zero masked tail. Same numbers
+    // (asserted bitwise), different constant factor.
+    let (kh, kdh, kb, klen, ktq) = (8usize, 32usize, 16usize, 512usize, 128usize);
+    let q_offset = klen - ktq;
+    let slab_len = 2 * kh * kb * kdh;
+    let v_base = kh * kb * kdh;
+    // deterministic LCG fill — no RNG dependency in benches
+    let mut state = 0x2545f4914f6cdd1du64;
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+    };
+    let slabs_owned: Vec<Vec<f32>> = (0..klen / kb)
+        .map(|_| (0..slab_len).map(|_| next()).collect())
+        .collect();
+    let slabs: Vec<&[f32]> = slabs_owned.iter().map(|s| s.as_slice()).collect();
+    let q: Vec<f32> = (0..kh * ktq * kdh).map(|_| next()).collect();
+
+    let hoisted = chai::runtime::refkernels::paged_mha_attention(
+        &q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen,
+    );
+    let naive = naive_paged_mha(&q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen);
+    assert_eq!(
+        hoisted, naive,
+        "hoisted paged kernels must be bit-identical to the per-key-lookup original"
+    );
+
+    let after_ms = median(&time_ms(1, iters, || {
+        chai::runtime::refkernels::paged_mha_attention(
+            &q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen,
+        );
+    }));
+    let before_ms = median(&time_ms(1, iters, || {
+        naive_paged_mha(&q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen);
+    }));
+    let mut pk = Table::new(
+        "Paged attention kernel (scores+AV, h=8 dh=32 B=16 len=512 tq=128)",
+        &["kernel", "median ms"],
+    );
+    pk.row(vec!["per-key slab lookup + full AV walk (before)".into(), fmt_ms(before_ms)]);
+    pk.row(vec!["block-wise hoist + causal-bounded AV (after)".into(), fmt_ms(after_ms)]);
+    pk.row(vec!["speedup".into(), format!("{:.2}x", before_ms / after_ms.max(1e-9))]);
+    pk.print();
+
     common::write_results(
         "microbench",
         Json::obj(vec![
             ("artifacts", Json::Arr(rows)),
             ("online_membership_ms", Json::Num(cluster_ms)),
+            ("paged_kernel_before_ms", Json::Num(before_ms)),
+            ("paged_kernel_after_ms", Json::Num(after_ms)),
         ]),
     );
     Ok(())
+}
+
+/// The pre-hoist paged MHA kernel, kept verbatim as the microbench
+/// baseline: slab lookup per key (`blocks[kj / B]` inside the hot
+/// loop), masked tail scored at -1e9, and the AV pass walking every key
+/// in `[0, len)` including the masked entries that softmaxed to 0.0.
+#[allow(clippy::too_many_arguments)]
+fn naive_paged_mha(
+    q: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    v_base: usize,
+    h: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+) -> Vec<f32> {
+    let scale = (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; h * tq * len];
+    for gi in 0..h {
+        for qi in 0..tq {
+            let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            let orow = &mut probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
+            for (kj, slot) in orow.iter_mut().enumerate() {
+                if kj > q_offset + qi {
+                    *slot = -1e9;
+                    continue;
+                }
+                let slab = blocks[kj / block_size];
+                let base = k_base + (gi * block_size + kj % block_size) * dh;
+                let krow = &slab[base..base + dh];
+                let mut acc = 0.0f32;
+                for d in 0..dh {
+                    acc += qrow[d] * krow[d];
+                }
+                *slot = acc / scale;
+            }
+            let kmax = (q_offset + qi + 1).min(len);
+            let mx = orow[..kmax].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in orow[..kmax].iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            for x in orow[..kmax].iter_mut() {
+                *x /= sum;
+            }
+            for x in orow[kmax..].iter_mut() {
+                *x = ((*x) - mx).exp(); // underflows to exactly 0.0
+            }
+        }
+    }
+    let mut out = vec![0.0f32; h * tq * dh];
+    for gi in 0..h {
+        for qi in 0..tq {
+            let prow = &probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
+            let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+            for (kj, &p) in prow.iter().enumerate() {
+                let slab = blocks[kj / block_size];
+                let base = v_base + (gi * block_size + kj % block_size) * dh;
+                let vrow = &slab[base..base + dh];
+                for d in 0..dh {
+                    orow[d] += p * vrow[d];
+                }
+            }
+        }
+    }
+    out
 }

@@ -37,6 +37,14 @@
 //!           # strictly better at high concurrency, and reactor
 //!           # throughput within/above bounds; merges a "connections"
 //!           # section into BENCH_serving.json
+//!       cargo bench --bench bench_serving -- --backend ref --relay
+//!           # CI relay-decode gate: a same-instant burst of requests
+//!           # that share a >= 4-block system prompt, served with relay
+//!           # decode on vs --no-relay; asserts bit-identical token
+//!           # streams, relay tok/s strictly above fused, and that the
+//!           # relay path actually fired (relay_groups > 0,
+//!           # relay_prefix_tokens_saved > 0); merges a "relay" section
+//!           # into BENCH_serving.json
 //!       cargo bench --bench bench_serving -- --backend ref --failover
 //!           # CI failover drill (Linux): 4 `chai replica` processes
 //!           # behind the router (process transport), a burst of
@@ -179,6 +187,143 @@ fn smoke(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Res
             ("identical_streams", Json::Bool(true)),
         ]),
     );
+    Ok(())
+}
+
+/// Relay gate (`--relay`): a same-instant burst whose prompts share a
+/// long system prefix (>= 4 full KV blocks), decoded with relay groups
+/// on vs `--no-relay`. The relay path computes the shared-prefix
+/// attention once per group (once per rep panel for CHAI) and merges
+/// per-row suffixes by online softmax, so it must deliver strictly more
+/// tok/s than the fused per-row path on this workload — with
+/// bit-identical token streams (the merge is exact softmax algebra) and
+/// the relay counters proving the fast path actually served the burst.
+/// Merges a "relay" section into `bench_results/BENCH_serving.json`.
+fn relay(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --relay needs a paged-native backend (ref); skipping");
+        return Ok(());
+    }
+    let n = args.usize("requests", 8)?.max(8);
+    let max_new = args.usize("max-new", 8)?;
+    // block size 8 (>= probe_tokens, so CHAI prefix sharing stays
+    // sound): the 42-token system prompt spans 5 full blocks — past the
+    // gate's >= 4-block bar — and prompt + decode stays inside the toy
+    // model's 64-position window
+    let sys = "you are a helpful assistant for tom today";
+    let prompts: Vec<String> = (0..n).map(|i| format!("{sys} q{i}")).collect();
+
+    let mut table = Table::new(
+        "Relay decode: shared-system-prompt burst, relay groups vs fused rows",
+        &["mode", "ok", "tok/s", "relay groups", "prefix tok saved", "fallback"],
+    );
+    let mut json_rows = Vec::new();
+    let mut streams: Vec<Vec<String>> = Vec::new();
+    let mut tok_s_by_mode = Vec::new();
+
+    for (mode, relay_on) in [("relay", true), ("no-relay", false)] {
+        let cfg = ServingConfig {
+            max_batch: n,
+            kv_block_size: 8,
+            relay: relay_on,
+            ..base_cfg.clone()
+        };
+        let handle = Coordinator::start(cfg)?;
+        let coord = handle.coordinator.clone();
+        coord.submit("warm up please", 2, Variant::Chai).recv().unwrap();
+
+        // best-of-3 bursts: one wall-clock sample on a shared runner can
+        // be skewed by a single scheduler preemption
+        let mut texts = Vec::new();
+        let mut ok = 0usize;
+        let mut tok_s = 0.0f64;
+        for rep in 0..3 {
+            let t0 = now_ms();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| coord.submit(p, max_new, Variant::Chai))
+                .collect();
+            let mut rep_texts = Vec::new();
+            let mut tokens = 0usize;
+            let mut rep_ok = 0usize;
+            for rx in rxs {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+                if r.error.is_none() {
+                    rep_ok += 1;
+                    tokens += r.n_generated;
+                }
+                rep_texts.push(r.text);
+            }
+            let span_s = ((now_ms() - t0) / 1e3).max(1e-9);
+            tok_s = tok_s.max(tokens as f64 / span_s);
+            if rep == 0 {
+                texts = rep_texts;
+                ok = rep_ok;
+            } else {
+                assert_eq!(texts, rep_texts, "[{mode}] rep {rep} diverged");
+            }
+        }
+        let groups = coord.metrics.gauge("relay_groups");
+        let saved = coord.metrics.gauge("relay_prefix_tokens_saved");
+        let fallback = coord.metrics.gauge("relay_fallback");
+        handle.shutdown();
+
+        assert_eq!(ok, n, "[{mode}] all requests must succeed");
+        if relay_on {
+            assert!(groups >= 1.0, "[{mode}] the shared-prefix burst must form relay groups");
+            assert!(
+                saved >= 1.0,
+                "[{mode}] relay groups must skip shared-prefix attention positions"
+            );
+        } else {
+            assert_eq!(groups, 0.0, "[{mode}] --no-relay must never form relay groups");
+        }
+        table.row(vec![
+            mode.to_string(),
+            format!("{ok}/{n}"),
+            format!("{tok_s:.1}"),
+            format!("{groups:.0}"),
+            format!("{saved:.0}"),
+            format!("{fallback:.0}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("requests", Json::Num(n as f64)),
+            ("throughput_tok_s", Json::Num(tok_s)),
+            ("relay_groups", Json::Num(groups)),
+            ("relay_prefix_tokens_saved", Json::Num(saved)),
+            ("relay_fallback", Json::Num(fallback)),
+        ]));
+        streams.push(texts);
+        tok_s_by_mode.push(tok_s);
+    }
+    table.print();
+
+    assert_eq!(
+        streams[0], streams[1],
+        "relay and fused decode must produce identical token streams"
+    );
+    // the PR's acceptance criterion: computing the shared prefix once
+    // per batch must strictly beat recomputing it per row
+    assert!(
+        tok_s_by_mode[0] > tok_s_by_mode[1],
+        "relay {:.1} tok/s must be strictly above fused {:.1} tok/s on a shared-prefix burst",
+        tok_s_by_mode[0],
+        tok_s_by_mode[1]
+    );
+    println!(
+        "\nshape: one shared-prefix attention pass serves the whole group; \
+         fused rows re-read those blocks per request"
+    );
+
+    // merge next to the other sections rather than clobbering them
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert("relay".to_string(), Json::Arr(json_rows));
+    common::write_results("BENCH_serving", Json::Obj(fields));
     Ok(())
 }
 
@@ -1062,6 +1207,9 @@ fn main() -> anyhow::Result<()> {
     let Some(base_cfg) = common::serving_config(&args) else { return Ok(()) };
     if args.bool("smoke") {
         return smoke(&args, &base_cfg);
+    }
+    if args.bool("relay") {
+        return relay(&args, &base_cfg);
     }
     if args.bool("overload") {
         return overload(&args, &base_cfg);

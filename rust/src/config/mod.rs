@@ -265,6 +265,15 @@ pub struct ServingConfig {
     /// binary to spawn for `--transport process` replicas
     /// (`--replica-cmd`); `None` re-executes the current binary
     pub replica_cmd: Option<PathBuf>,
+    /// relay decode (`--no-relay` disables): batchmates whose block
+    /// tables share a block-aligned physical prefix compute that span's
+    /// attention ONCE per tick (per rep panel for CHAI) and LSE-merge it
+    /// with their private suffix phase — exact softmax math, logits
+    /// within 1e-5 of the fused path, greedy streams identical
+    pub relay: bool,
+    /// pin the engine tick and reactor threads to dedicated cores via
+    /// `sched_setaffinity` (`--pin-cores`; Linux, off by default)
+    pub pin_cores: bool,
 }
 
 impl Default for ServingConfig {
@@ -293,6 +302,8 @@ impl Default for ServingConfig {
             probe_ms: 100,
             probe_suspect: 3,
             replica_cmd: None,
+            relay: true,
+            pin_cores: false,
         }
     }
 }

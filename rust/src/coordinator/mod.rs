@@ -146,6 +146,10 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
     next_id: Arc<Mutex<u64>>,
+    /// `--pin-cores`: surfaced through [`crate::router::Frontend`] so
+    /// the reactor thread (spawned by the server, which holds no
+    /// config) knows whether to pin itself
+    pub(crate) pin_cores: bool,
 }
 
 pub struct CoordinatorHandle {
@@ -169,6 +173,7 @@ impl Coordinator {
             shared: shared.clone(),
             metrics: metrics.clone(),
             next_id: Arc::new(Mutex::new(0)),
+            pin_cores: cfg.pin_cores,
         };
         let thread_shared = shared;
         let thread_metrics = metrics;
@@ -435,6 +440,14 @@ impl Drop for CoordinatorHandle {
 /// sender quietly died; the `submitting` gate guarantees the final
 /// drain sees every push that beat the shutdown flag.
 fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &Metrics) {
+    // --pin-cores: park this tick thread on its own core (best-effort;
+    // the gauge reports where it landed so `{"cmd":"stats"}` can verify)
+    #[cfg(target_os = "linux")]
+    if cfg.pin_cores {
+        if let Some(cpu) = crate::net::sys::pin_next_core() {
+            metrics.set_gauge("pin_engine_cpu", cpu as f64);
+        }
+    }
     // surface which compute backend this engine serves with (the server's
     // `stats` command and benches read these back)
     metrics.set_info("backend", engine.backend_name());

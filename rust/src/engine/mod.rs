@@ -38,7 +38,7 @@ use crate::kv::paged::{
 };
 use crate::kv::CacheKind;
 use crate::model::tokenizer;
-use crate::runtime::{backend_for, Backend, ClusterAssignment, In, PagedDecodeRow};
+use crate::runtime::{backend_for, Backend, ClusterAssignment, In, PagedDecodeRow, RelayRef};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -1060,15 +1060,68 @@ impl Engine {
         if ready.is_empty() {
             return;
         }
+        // relay grouping: partition the ready rows by their longest
+        // common run of shared physical blocks. Recomputed fresh every
+        // tick AFTER `ensure_append_slot` CoW'd any diverging tails, so
+        // a session that forked off a shared chain regroups (or falls
+        // out) the very tick its table diverges — a group can never
+        // reference a stale panel.
+        let mut relay_of: Vec<Option<RelayRef>> = vec![None; ready.len()];
+        if self.cfg.relay && ready.len() >= 2 {
+            let seqs: Vec<u64> = ready
+                .iter()
+                .map(|&i| paged_seq_of(&sessions[i]).expect("native session without seq"))
+                .collect();
+            let bsz = st.block_size;
+            let mut gid = 0usize;
+            for grp in st.relay_groups(&seqs) {
+                // CHAI soundness: one prefix pass per rep panel serves
+                // the whole group only if every member agrees on the
+                // cluster assignment. A chain match pins the probe
+                // prefix, which determines membership — verify anyway.
+                let lead = &sessions[ready[grp.members[0]]];
+                let coherent = grp.members.iter().all(|&mi| {
+                    match (&lead.clusters, &sessions[ready[mi]].clusters) {
+                        (None, None) => true,
+                        (Some(a), Some(b)) => a.membership == b.membership && a.reps == b.reps,
+                        _ => false,
+                    }
+                });
+                if !coherent {
+                    st.stats.relay_fallback += grp.members.len() as u64;
+                    continue;
+                }
+                let prefix_len = grp.prefix_blocks * bsz;
+                for &mi in &grp.members {
+                    relay_of[mi] = Some(RelayRef { group: gid, prefix_len });
+                }
+                st.stats.relay_groups += 1;
+                st.stats.relay_prefix_tokens_saved +=
+                    (grp.members.len() as u64 - 1) * prefix_len as u64;
+                gid += 1;
+            }
+            // rows whose first block is shared but that ended up without
+            // a groupmate decode fused — the missed-saving counter
+            for (mi, &seq) in seqs.iter().enumerate() {
+                if relay_of[mi].is_none() {
+                    let t = st.table(seq).expect("ready row has a table");
+                    if t.full_blocks() > 0 && st.block_shared(t.blocks[0]) {
+                        st.stats.relay_fallback += 1;
+                    }
+                }
+            }
+        }
         let rows: Vec<PagedDecodeRow> = ready
             .iter()
-            .map(|&i| {
+            .enumerate()
+            .map(|(mi, &i)| {
                 let s = &sessions[i];
                 PagedDecodeRow {
                     seq: paged_seq_of(s).expect("native session without seq"),
                     token: *s.tokens.last().unwrap(),
                     pos: s.tokens.len() - 1,
                     clusters: s.clusters.as_ref(),
+                    relay: relay_of[mi],
                 }
             })
             .collect();

@@ -44,7 +44,10 @@ use crate::kv::CacheKind;
 use crate::tensor::Tensor;
 
 pub use pool::{BlockId, BlockPool, ReleaseOutcome};
-pub use prefix::{chain_hash, chain_seed, partial_hash, prompt_fingerprint, PrefixIndex};
+pub use prefix::{
+    chain_hash, chain_seed, group_by_block_prefix, partial_hash, prompt_fingerprint, PrefixGroup,
+    PrefixIndex,
+};
 pub use swap::{SwapHandle, SwapPool, SwapSnapshot, SwappedBlock, SwappedSeq};
 pub use table::BlockTable;
 
@@ -176,6 +179,17 @@ pub struct PagedStats {
     /// prompt positions whose prefill *compute* was skipped because
     /// their blocks were adopted from the prefix index
     pub prefill_skipped_tokens: u64,
+    /// relay groups formed across decode ticks (one shared-prefix
+    /// attention pass served ≥2 rows)
+    pub relay_groups: u64,
+    /// key positions whose decode-tick attention was NOT recomputed
+    /// because a groupmate's shared-prefix pass covered them:
+    /// `Σ (members − 1) · prefix_len` per group per tick
+    pub relay_prefix_tokens_saved: u64,
+    /// rows that shared their first block with live company but decoded
+    /// on the fused path anyway (left without a groupmate by the
+    /// deepest-first split, or a cluster-assignment mismatch)
+    pub relay_fallback: u64,
 }
 
 impl PagedStats {
@@ -556,6 +570,13 @@ impl PagedKv {
         self.pool.data(id)
     }
 
+    /// Whether more than one reference counts on `id` — a block that
+    /// can anchor a relay group (and, on the swap path, one that is
+    /// pinned hot by another reader).
+    pub fn block_shared(&self, id: BlockId) -> bool {
+        self.pool.block(id).refs > 1
+    }
+
     /// Mutable view of a block's slab. The caller must hold the only
     /// reference (decode tails after [`Self::ensure_append_slot`], or
     /// freshly allocated prefill blocks).
@@ -593,6 +614,34 @@ impl PagedKv {
             }
         }
         Ok(n.min(t.len))
+    }
+
+    // ------------------------------------------------------------------
+    // Relay decode (shared-prefix attention)
+    // ------------------------------------------------------------------
+
+    /// Partition live sequences by their longest common block-aligned
+    /// physical prefix — the relay-decode grouping query. `seqs` are one
+    /// decode tick's candidate rows (one attention variant); the result
+    /// indexes into that slice. Only each table's *full* blocks
+    /// participate (a partial tail — the row's append slot, sole-owned
+    /// after CoW — is never part of a shared prefix), and only while the
+    /// pool still counts more than one reference on every shared block,
+    /// so a session that forked off a shared chain regroups or falls out
+    /// the very tick its table diverges. Rows left without a groupmate
+    /// are omitted: they decode on the fused path.
+    pub fn relay_groups(&self, seqs: &[u64]) -> Vec<PrefixGroup> {
+        let chains: Vec<&[BlockId]> = seqs
+            .iter()
+            .map(|id| {
+                self.tables
+                    .get(id)
+                    .map(|t| &t.blocks[..t.full_blocks()])
+                    .unwrap_or(&[][..])
+            })
+            .collect();
+        let shared = |b: BlockId| self.pool.block(b).refs > 1;
+        group_by_block_prefix(&chains, &shared)
     }
 
     // ------------------------------------------------------------------

@@ -92,6 +92,73 @@ pub fn prompt_fingerprint(
     h
 }
 
+/// One relay group from [`group_by_block_prefix`]: `members` index into
+/// the input chain slice; all of them begin with the SAME
+/// `prefix_blocks` physical blocks (block-aligned common prefix).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixGroup {
+    pub members: Vec<usize>,
+    pub prefix_blocks: usize,
+}
+
+/// Partition block chains by their longest common *shared* block prefix
+/// — the relay-decode grouping query.
+///
+/// Input: each live row's leading physical block ids (its full blocks
+/// only — a partial tail is never part of a shared prefix). `is_shared`
+/// reports whether a block may anchor a group (the manager passes
+/// `refs > 1`; equality across ≥2 live tables already implies it, the
+/// predicate guards the caller's invariant).
+///
+/// Greedy deepest-first: rows agreeing on a longer prefix split away
+/// from shallower company, because a group saves `(members−1) ·
+/// prefix_blocks` block-passes per tick — two pairs at depth 2 beat one
+/// quad at depth 1. Rows left without company (or with no shared first
+/// block) are NOT returned; they decode on the fused path.
+pub fn group_by_block_prefix(
+    chains: &[&[BlockId]],
+    is_shared: &dyn Fn(BlockId) -> bool,
+) -> Vec<PrefixGroup> {
+    fn refine(
+        chains: &[&[BlockId]],
+        is_shared: &dyn Fn(BlockId) -> bool,
+        members: Vec<usize>,
+        depth: usize,
+        out: &mut Vec<PrefixGroup>,
+    ) {
+        // members all share blocks [0, depth); try to split deeper
+        let mut buckets: HashMap<BlockId, Vec<usize>> = HashMap::new();
+        let mut rest: Vec<usize> = Vec::new();
+        for i in members {
+            match chains[i].get(depth) {
+                Some(&b) if is_shared(b) => buckets.entry(b).or_default().push(i),
+                _ => rest.push(i),
+            }
+        }
+        let mut deeper: Vec<Vec<usize>> = Vec::new();
+        for (_, bucket) in buckets {
+            if bucket.len() >= 2 {
+                deeper.push(bucket);
+            } else {
+                rest.extend(bucket);
+            }
+        }
+        // deterministic group order regardless of hash-map iteration
+        deeper.sort_by_key(|b| b[0]);
+        for bucket in deeper {
+            refine(chains, is_shared, bucket, depth + 1, out);
+        }
+        if rest.len() >= 2 && depth > 0 {
+            rest.sort_unstable();
+            out.push(PrefixGroup { members: rest, prefix_blocks: depth });
+        }
+    }
+    let mut out = Vec::new();
+    refine(chains, is_shared, (0..chains.len()).collect(), 0, &mut out);
+    out.sort_by_key(|g| g.members[0]);
+    out
+}
+
 /// hash → block id map. The manager keeps it consistent with block
 /// lifetimes: entries are added when a block's content is final for its
 /// key, and removed on eviction or before in-place mutation.
@@ -235,6 +302,58 @@ mod tests {
             prompt_fingerprint("mha", &a, b, 2),
             prompt_fingerprint("mha", &c, b, 2),
             "capped at the shared head: same replica"
+        );
+    }
+
+    #[test]
+    fn grouping_prefers_deeper_prefixes() {
+        let all = |_: BlockId| true;
+        // a,b share 2 blocks; c shares only the first with them; d is
+        // alone; e,f share 3 blocks on a different chain head
+        let chains: Vec<&[BlockId]> = vec![
+            &[10, 11],         // a
+            &[10, 11],         // b
+            &[10, 12],         // c
+            &[30],             // d
+            &[20, 21, 22, 23], // e
+            &[20, 21, 22],     // f
+        ];
+        let groups = group_by_block_prefix(&chains, &all);
+        assert_eq!(
+            groups,
+            vec![
+                PrefixGroup { members: vec![0, 1], prefix_blocks: 2 },
+                PrefixGroup { members: vec![4, 5], prefix_blocks: 3 },
+            ],
+            "deepest-first: c and d fall back to the fused path"
+        );
+    }
+
+    #[test]
+    fn grouping_respects_shared_predicate_and_empty_chains() {
+        // block 10 is not shareable → no group can anchor on it
+        let chains: Vec<&[BlockId]> = vec![&[10, 11], &[10, 11], &[]];
+        assert!(group_by_block_prefix(&chains, &|b| b != 10).is_empty());
+        // but the group re-forms once the anchor is shareable, capped at
+        // the depth where the predicate stops holding
+        let groups = group_by_block_prefix(&chains, &|b| b == 10);
+        assert_eq!(groups, vec![PrefixGroup { members: vec![0, 1], prefix_blocks: 1 }]);
+    }
+
+    #[test]
+    fn grouping_is_deterministic_across_runs() {
+        let all = |_: BlockId| true;
+        let chains: Vec<&[BlockId]> = vec![&[1, 2], &[3, 4], &[1, 2], &[3, 4], &[1, 9]];
+        let a = group_by_block_prefix(&chains, &all);
+        for _ in 0..8 {
+            assert_eq!(a, group_by_block_prefix(&chains, &all));
+        }
+        assert_eq!(
+            a,
+            vec![
+                PrefixGroup { members: vec![0, 2], prefix_blocks: 2 },
+                PrefixGroup { members: vec![1, 3], prefix_blocks: 2 },
+            ]
         );
     }
 

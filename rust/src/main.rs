@@ -111,6 +111,12 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // replica child binary override (tests point this at the
         // freshly-built `chai`); default re-executes the current binary
         replica_cmd: args.opt_str("replica-cmd").map(PathBuf::from),
+        // relay decode is the default on the paged path; --no-relay
+        // restores fully fused per-row attention for comparison
+        relay: !args.bool("no-relay"),
+        // --pin-cores pins the engine tick + reactor threads to
+        // dedicated cores (sched_setaffinity; Linux, off by default)
+        pin_cores: args.bool("pin-cores"),
     })
 }
 

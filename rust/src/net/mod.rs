@@ -100,6 +100,9 @@ pub struct NetStats {
     /// terminal events that found their (correctly-sized) ring full —
     /// always 0 unless an invariant broke
     pub lost_terminals: AtomicU64,
+    /// `--pin-cores`: 1 + the CPU the reactor thread pinned itself to
+    /// (0 = not pinned; the +1 keeps "pinned to CPU 0" observable)
+    pub pinned_cpu_plus1: AtomicU64,
 }
 
 impl NetStats {
@@ -125,6 +128,7 @@ impl NetStats {
             ("net_conn_buffer_kills", n(&self.conn_buffer_kills)),
             ("net_truncated_eof", n(&self.truncated_eof)),
             ("net_lost_terminals", n(&self.lost_terminals)),
+            ("net_pinned_cpu_plus1", n(&self.pinned_cpu_plus1)),
         ])
     }
 }

@@ -133,6 +133,14 @@ fn run<F: Frontend>(
     net: &Arc<NetStats>,
     active: &Arc<AtomicUsize>,
 ) {
+    // --pin-cores (asked of the frontend — this thread is spawned by
+    // the server, which holds no config): dedicate a core to the I/O
+    // loop and surface it through the `net` stats section
+    if api.pin_cores() {
+        if let Some(cpu) = crate::net::sys::pin_next_core() {
+            net.pinned_cpu_plus1.store(cpu as u64 + 1, Ordering::Relaxed);
+        }
+    }
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_id: u64 = 1;
     let mut events = vec![EpollEvent::zeroed(); EVENTS_PER_WAIT];

@@ -130,6 +130,12 @@ pub trait Frontend: Clone + Send + 'static {
         let _ = adopt;
         bail!("adopt: only a replica coordinator can adopt sessions")
     }
+    /// Whether `--pin-cores` is on for this serving stack — the reactor
+    /// thread asks its frontend (it has no config of its own) and pins
+    /// itself to a dedicated core when true.
+    fn pin_cores(&self) -> bool {
+        false
+    }
 }
 
 impl Frontend for Coordinator {
@@ -194,6 +200,10 @@ impl Frontend for Coordinator {
         Coordinator::adopt_net(self, adopt);
         Ok(())
     }
+
+    fn pin_cores(&self) -> bool {
+        self.pin_cores
+    }
 }
 
 /// Base of the router-assigned request-id space. Disjoint from the
@@ -257,6 +267,8 @@ pub struct Router {
     /// tombstone per replica: set once when it is declared dead or
     /// drained; routing, rollups and probes skip tombstoned replicas
     down: Arc<Vec<AtomicBool>>,
+    /// `--pin-cores` (forwarded to the reactor via [`Frontend`])
+    pin_cores: bool,
 }
 
 /// Owns the replica fleet and its supervisor thread; dropping (or
@@ -350,6 +362,7 @@ impl Router {
             kv_block_size: cfg.kv_block_size.max(1),
             ring: Arc::new(Mutex::new(ring)),
             down: Arc::new((0..n).map(|_| AtomicBool::new(false)).collect()),
+            pin_cores: cfg.pin_cores,
         };
         let stop = Arc::new(AtomicBool::new(false));
         let supervisor = {
@@ -747,6 +760,10 @@ impl Frontend for Router {
             m.insert("route".into(), Json::Str(self.policy.name().into()));
         }
         info
+    }
+
+    fn pin_cores(&self) -> bool {
+        self.pin_cores
     }
 }
 

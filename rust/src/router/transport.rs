@@ -366,6 +366,12 @@ mod process {
             if cfg.preempt {
                 cmd.arg("--preempt");
             }
+            if !cfg.relay {
+                cmd.arg("--no-relay");
+            }
+            if cfg.pin_cores {
+                cmd.arg("--pin-cores");
+            }
             cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
             let mut child = cmd
                 .spawn()

@@ -50,6 +50,20 @@ pub struct ClusterAssignment {
     pub reps: Vec<Vec<usize>>,
 }
 
+/// Relay-group membership of one decode row (see
+/// `kv::paged::PagedKv::relay_groups`): rows of the same `group` share
+/// the identical leading physical blocks covering positions
+/// `[0, prefix_len)`, so the backend computes that span's attention ONCE
+/// for the whole group (per rep panel for CHAI) and LSE-merges it with
+/// each row's private-suffix phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelayRef {
+    /// group index within this `decode_paged` call
+    pub group: usize,
+    /// block-aligned shared-prefix length in token positions
+    pub prefix_len: usize,
+}
+
 /// One row of a batched block-table-native decode call
 /// ([`Backend::decode_paged`]): the next token of one live sequence.
 /// The block table itself is resolved through the store by `seq`; rows
@@ -64,6 +78,8 @@ pub struct PagedDecodeRow<'a> {
     pub pos: usize,
     /// CHAI membership/reps; `None` selects the dense MHA kernel
     pub clusters: Option<&'a ClusterAssignment>,
+    /// shared-prefix relay descriptor; `None` decodes fully fused
+    pub relay: Option<RelayRef>,
 }
 
 /// The compute seam between the engine and whatever executes the model

@@ -27,7 +27,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::refkernels as rk;
 use super::{Backend, ClusterAssignment, In, Out, PagedDecodeRow};
 use crate::config::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
-use crate::kv::paged::PagedKv;
+use crate::kv::paged::{BlockId, PagedKv};
 use crate::tensor::{io, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -177,10 +177,13 @@ impl Backend for RefBackend {
 
     /// Batched ragged decode against block-resident K,V: every row
     /// appends its token's rows into its own (pre-CoW'd) tail block and
-    /// attends in place — zero bucket-shaped copies. Rows are
-    /// independent, so batching is a dispatch fusion, not a numeric
-    /// change: per-row logits are bit-for-bit the single-row result,
-    /// and one row's failure never poisons its batchmates.
+    /// attends in place — zero bucket-shaped copies. Rows without a
+    /// relay descriptor are independent, so batching is a dispatch
+    /// fusion, not a numeric change: their logits are bit-for-bit the
+    /// single-row result, and one row's failure never poisons its
+    /// batchmates. Rows the engine relay-grouped run the shared-prefix
+    /// two-phase path instead ([`Self::relay_forward`]): exact softmax
+    /// math, float association differs, logits within 1e-5 of fused.
     fn decode_paged(&self, rows: &[PagedDecodeRow], store: &mut PagedKv) -> Vec<Result<Tensor>> {
         *self
             .exec_counts
@@ -188,25 +191,85 @@ impl Backend for RefBackend {
             .entry("decode_paged".to_string())
             .or_insert(0) += rows.len() as u64;
         let v = self.manifest.model.vocab_size;
-        rows.iter()
-            .map(|r| {
-                let len_now = store
-                    .table(r.seq)
-                    .ok_or_else(|| anyhow!("unknown paged sequence {}", r.seq))?
-                    .len;
-                if r.pos != len_now {
-                    bail!(
-                        "decode row at position {} but sequence {} has length {len_now}",
-                        r.pos,
-                        r.seq
-                    );
+        let mut out: Vec<Option<Result<Tensor>>> = (0..rows.len()).map(|_| None).collect();
+        // validate every row up front; relay groups span valid rows only
+        for (ri, r) in rows.iter().enumerate() {
+            let len_now = match store.table(r.seq) {
+                Some(t) => t.len,
+                None => {
+                    out[ri] = Some(Err(anyhow!("unknown paged sequence {}", r.seq)));
+                    continue;
                 }
-                let logits = self
-                    .paged_forward(store, r.seq, &[r.token], r.pos, r.pos + 1, r.clusters, true)
-                    .with_context(|| format!("paged decode of sequence {}", r.seq))?;
-                Ok(Tensor::f32(vec![v], logits))
-            })
-            .collect()
+            };
+            if r.pos != len_now {
+                out[ri] = Some(Err(anyhow!(
+                    "decode row at position {} but sequence {} has length {len_now}",
+                    r.pos,
+                    r.seq
+                )));
+            }
+        }
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (ri, r) in rows.iter().enumerate() {
+            if out[ri].is_none() {
+                if let Some(rl) = r.relay {
+                    groups.entry(rl.group).or_default().push(ri);
+                }
+            }
+        }
+        for members in groups.into_values() {
+            // degenerate or heterogeneous groups fall back to fused —
+            // never a wrong answer, only a missed saving
+            let lead = &rows[members[0]];
+            let coherent = members.len() >= 2
+                && members.iter().all(|&ri| {
+                    rows[ri].relay.map(|rl| rl.prefix_len) == lead.relay.map(|rl| rl.prefix_len)
+                        && match (lead.clusters, rows[ri].clusters) {
+                            (None, None) => true,
+                            (Some(a), Some(b)) => {
+                                a.membership == b.membership && a.reps == b.reps
+                            }
+                            _ => false,
+                        }
+                });
+            if !coherent {
+                continue;
+            }
+            *self
+                .exec_counts
+                .borrow_mut()
+                .entry("decode_relay_groups".to_string())
+                .or_insert(0) += 1;
+            let specs: Vec<(u64, i32, usize)> = members
+                .iter()
+                .map(|&ri| (rows[ri].seq, rows[ri].token, rows[ri].pos))
+                .collect();
+            let prefix_len = lead.relay.expect("grouped row has a descriptor").prefix_len;
+            match self.relay_forward(store, &specs, prefix_len, lead.clusters) {
+                Ok(per_row) => {
+                    for (&ri, logits) in members.iter().zip(per_row) {
+                        out[ri] = Some(Ok(Tensor::f32(vec![v], logits)));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("relay decode group failed: {e:#}");
+                    for &ri in &members {
+                        out[ri] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        for (ri, r) in rows.iter().enumerate() {
+            if out[ri].is_some() {
+                continue;
+            }
+            let res = self
+                .paged_forward(store, r.seq, &[r.token], r.pos, r.pos + 1, r.clusters, true)
+                .with_context(|| format!("paged decode of sequence {}", r.seq))
+                .map(|logits| Tensor::f32(vec![v], logits));
+            out[ri] = Some(res);
+        }
+        out.into_iter().map(|o| o.expect("every decode row resolved")).collect()
     }
 
     /// Prefix-skipping prefill: forward only positions `[start, len)`,
@@ -310,6 +373,18 @@ fn parse_membership(t: &Tensor, l: usize, h: usize, k_list: &[usize]) -> Result<
         out.push(row);
     }
     Ok(out)
+}
+
+/// Broadcast per-panel relay exp-weights `[kc, n, len]` to member heads
+/// `[h, n, len]` — the relay analogue of the `probs_full` broadcast
+/// inside `rk::paged_clustered_attention`.
+fn broadcast_expw(ew: &[f32], membership: &[usize], h: usize, n: usize, len: usize) -> Vec<f32> {
+    let mut full = vec![0.0f32; h * n * len];
+    for (hh, &m) in membership.iter().enumerate() {
+        full[hh * n * len..(hh + 1) * n * len]
+            .copy_from_slice(&ew[m * n * len..(m + 1) * n * len]);
+    }
+    full
 }
 
 /// reps [L, k_cols] → per-layer representative-head lists of length
@@ -1006,6 +1081,197 @@ impl RefBackend {
         }
         c.unembed(&x[(tq - 1) * c.d..], 1)
     }
+
+    /// One relay group's decode step: the group's single-token rows run
+    /// the forward stacked (`t = n`; every non-attention op is
+    /// row-independent, so stacking is bit-neutral), and each layer's
+    /// attention splits into two phases — the shared prefix `[0, S)`
+    /// computed ONCE from the group's common blocks with all n queries
+    /// in one pass per rep panel (the CHAI compounding: once per batch
+    /// AND once per cluster), then each row's private suffix
+    /// `[S, pos+1)` over its own tail blocks — merged by
+    /// [`rk::relay_merge`] into the exact softmax-weighted output.
+    ///
+    /// Every row's new K,V rows are appended BEFORE any attention
+    /// reads; tails are sole-owned post-CoW, so groupmates never
+    /// observe each other's writes and cross-row write order is
+    /// immaterial. Returns per-row logits in input order.
+    fn relay_forward(
+        &self,
+        store: &mut PagedKv,
+        rows: &[(u64, i32, usize)],
+        prefix_len: usize,
+        clusters: Option<&ClusterAssignment>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let c = Ctx::new(self);
+        let n = rows.len();
+        let b = store.block_size;
+        if n < 2 || prefix_len == 0 || prefix_len % b != 0 {
+            bail!("malformed relay group: {n} rows, shared prefix {prefix_len} (block {b})");
+        }
+        let pb = prefix_len / b;
+        let mut layout = None;
+        let mut tables: Vec<Vec<BlockId>> = Vec::with_capacity(n);
+        for &(seq, _tok, pos) in rows {
+            let t = store
+                .table(seq)
+                .ok_or_else(|| anyhow!("unknown paged sequence {seq}"))?;
+            if pos != t.len {
+                bail!("relay row at position {pos} but sequence {seq} has length {}", t.len);
+            }
+            if prefix_len > t.len || t.blocks.len() * b < t.len + 1 {
+                bail!("relay prefix {prefix_len} outside sequence {seq} (len {})", t.len);
+            }
+            match &layout {
+                None => layout = Some(t.layout.clone()),
+                Some(l) => {
+                    if l.k_heads != t.layout.k_heads {
+                        bail!("relay group mixes table layouts");
+                    }
+                }
+            }
+            tables.push(t.blocks.clone());
+        }
+        let layout = layout.expect("n >= 2");
+        if layout.n_layers != c.l || layout.n_heads != c.h || layout.head_dim != c.dh {
+            bail!("table layout does not match the model: {layout:?}");
+        }
+        match clusters {
+            Some(cl) => {
+                for (i, r) in cl.reps.iter().enumerate() {
+                    if r.len() != layout.k_heads[i] {
+                        bail!(
+                            "layer {i}: {} representatives for a {}-panel table",
+                            r.len(),
+                            layout.k_heads[i]
+                        );
+                    }
+                }
+            }
+            None => {
+                if layout.k_heads.iter().any(|&k| k != c.h) {
+                    bail!("dense paged kernel on a clustered table");
+                }
+            }
+        }
+        // the shared prefix must be the SAME physical blocks everywhere —
+        // a member that CoW-forked off the chain would fail this, but the
+        // engine regroups from live refcounts every tick, so a stale
+        // grouping is an invariant violation, not an expected state
+        let shared: Vec<BlockId> = tables[0][..pb].to_vec();
+        for (ti, t) in tables.iter().enumerate() {
+            if t[..pb] != shared[..] {
+                bail!("relay group member {ti} does not hold the shared prefix blocks");
+            }
+        }
+        let positions: Vec<usize> = rows.iter().map(|r| r.2).collect();
+        let tokens: Vec<i32> = rows.iter().map(|r| r.1).collect();
+        let all: Vec<usize> = (0..c.h).collect();
+        let mut x = c.embed(&tokens)?;
+        for i in 0..c.l {
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, n, d, c.eps);
+            let k_heads: &[usize] = match clusters {
+                Some(cl) => &cl.reps[i],
+                None => &all,
+            };
+            let gk = k_heads.len();
+            let mut q = rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, k_heads, n, d, h, dh);
+            rk::rope(&mut q, &positions, gk, n, dh, c.theta);
+            let mut k_new =
+                rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, k_heads, n, d, h, dh);
+            rk::rope(&mut k_new, &positions, gk, n, dh, c.theta);
+            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, n, d, h, dh);
+            let k_base = layout.k_layer_offset(i, b);
+            let v_base = layout.v_layer_offset(i, b);
+            for ri in 0..n {
+                let p = positions[ri];
+                let bid = tables[ri][p / b];
+                if store.block_hash(bid).is_some() {
+                    continue;
+                }
+                let off = p % b;
+                let slab = store.block_data_mut(bid);
+                for gi in 0..gk {
+                    let dst = k_base + (gi * b + off) * dh;
+                    slab[dst..dst + dh]
+                        .copy_from_slice(&k_new[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
+                }
+                for hh in 0..h {
+                    let dst = v_base + (hh * b + off) * dh;
+                    slab[dst..dst + dh]
+                        .copy_from_slice(&v_new[(hh * n + ri) * dh..(hh * n + ri) * dh + dh]);
+                }
+            }
+            // phase 1: shared prefix, one stacked-Q pass per rep panel
+            let pslabs: Vec<&[f32]> = shared.iter().map(|&bid| store.block_data(bid)).collect();
+            let (ew_p, m_p, s_p) =
+                rk::paged_relay_scores(&q, &pslabs, k_base, gk, n, dh, b, prefix_len);
+            let ew_p_owned;
+            let ew_p_h: &[f32] = match clusters {
+                None => &ew_p,
+                Some(cl) => {
+                    ew_p_owned = broadcast_expw(&ew_p, &cl.membership[i], h, n, prefix_len);
+                    &ew_p_owned
+                }
+            };
+            let o_p = rk::paged_attn_av(
+                ew_p_h,
+                &pslabs,
+                v_base,
+                h,
+                n,
+                dh,
+                b,
+                prefix_len - 1,
+                prefix_len,
+            );
+            drop(pslabs);
+            // phase 2: per-row private suffix, then the LSE merge
+            let mut merged = vec![0.0f32; h * n * dh];
+            for ri in 0..n {
+                let slen = positions[ri] + 1 - prefix_len;
+                let sslabs: Vec<&[f32]> =
+                    tables[ri][pb..].iter().map(|&bid| store.block_data(bid)).collect();
+                let mut qr = vec![0.0f32; gk * dh];
+                for gi in 0..gk {
+                    qr[gi * dh..(gi + 1) * dh]
+                        .copy_from_slice(&q[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
+                }
+                let (ew_s, m_s, s_s) =
+                    rk::paged_relay_scores(&qr, &sslabs, k_base, gk, 1, dh, b, slen);
+                let ew_s_owned;
+                let ew_s_h: &[f32] = match clusters {
+                    None => &ew_s,
+                    Some(cl) => {
+                        ew_s_owned = broadcast_expw(&ew_s, &cl.membership[i], h, 1, slen);
+                        &ew_s_owned
+                    }
+                };
+                let o_s = rk::paged_attn_av(ew_s_h, &sslabs, v_base, h, 1, dh, b, slen - 1, slen);
+                for hh in 0..h {
+                    let g = match clusters {
+                        Some(cl) => cl.membership[i][hh],
+                        None => hh,
+                    };
+                    let dst = (hh * n + ri) * dh;
+                    rk::relay_merge(
+                        &o_p[dst..dst + dh],
+                        m_p[g * n + ri],
+                        s_p[g * n + ri],
+                        &o_s[hh * dh..(hh + 1) * dh],
+                        m_s[g],
+                        s_s[g],
+                        &mut merged[dst..dst + dh],
+                    );
+                }
+            }
+            c.add_attn_out(&mut x, i, &merged, h, n)?;
+            c.residual_mlp(&mut x, i, n)?;
+        }
+        let logits = c.unembed(&x, n)?;
+        Ok((0..n).map(|ri| logits[ri * c.v..(ri + 1) * c.v].to_vec()).collect())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1478,7 +1744,7 @@ mod tests {
             )
             .unwrap();
         kv.ensure_append_slot(1).unwrap();
-        let rows = [PagedDecodeRow { seq: 1, token: tok, pos: n, clusters: None }];
+        let rows = [PagedDecodeRow { seq: 1, token: tok, pos: n, clusters: None, relay: None }];
         let dgot = be.decode_paged(&rows, &mut kv).unwrap();
         assert_eq!(
             bits(&douts[0].to_tensor().unwrap()),
@@ -1545,7 +1811,8 @@ mod tests {
         ins.push(In::Host(&rt_));
         let douts = be.run(&format!("decode_chai_t{t}"), &ins).unwrap();
         kv.ensure_append_slot(9).unwrap();
-        let rows = [PagedDecodeRow { seq: 9, token: 80, pos: n, clusters: Some(&cl) }];
+        let rows =
+            [PagedDecodeRow { seq: 9, token: 80, pos: n, clusters: Some(&cl), relay: None }];
         let dgot = be.decode_paged(&rows, &mut kv).unwrap();
         assert_eq!(
             bits(&douts[0].to_tensor().unwrap()),

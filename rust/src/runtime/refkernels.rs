@@ -228,17 +228,23 @@ pub fn paged_attention_scores(
         for qi in 0..tq {
             let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
             let orow = &mut out[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
-            // keys [0, kmax) are unmasked for this query
+            // keys [0, kmax) are unmasked for this query; walk whole
+            // blocks so the slab lookup runs once per block, not per key
             let kmax = (q_offset + qi + 1).min(len);
-            for (kj, slot) in orow.iter_mut().enumerate().take(kmax) {
+            let mut kj = 0usize;
+            while kj < kmax {
                 let slab = blocks[kj / block_size];
-                let koff = k_base + (gi * block_size + kj % block_size) * dh;
-                let krow = &slab[koff..koff + dh];
-                let mut acc = 0.0f32;
-                for d in 0..dh {
-                    acc += qrow[d] * krow[d];
+                let hi = (kj - kj % block_size + block_size).min(kmax);
+                let base = k_base + gi * block_size * dh;
+                for (slot, off) in orow[kj..hi].iter_mut().zip(kj % block_size..) {
+                    let krow = &slab[base + off * dh..base + off * dh + dh];
+                    let mut acc = 0.0f32;
+                    for d in 0..dh {
+                        acc += qrow[d] * krow[d];
+                    }
+                    *slot = acc / scale;
                 }
-                *slot = acc / scale;
+                kj = hi;
             }
             let mx = orow[..kmax].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut sum = 0.0f32;
@@ -256,6 +262,11 @@ pub fn paged_attention_scores(
 
 /// `probs [g, tq, len] × block-resident V → [g, tq, dh]`; V row `j` for
 /// panel `g` at `blocks[j/B][v_base + (g*B + j%B)*dh]`.
+///
+/// Query `qi` sits at absolute position `q_offset + qi`, so only its
+/// unmasked prefix `[0, kmax)` is accumulated — the causal tail was
+/// softmaxed to exact 0.0 and `+= 0.0 * v` contributes nothing, making
+/// the bound bit-identical to the full `[0, len)` walk.
 #[allow(clippy::too_many_arguments)]
 pub fn paged_attn_av(
     probs: &[f32],
@@ -265,6 +276,7 @@ pub fn paged_attn_av(
     tq: usize,
     dh: usize,
     block_size: usize,
+    q_offset: usize,
     len: usize,
 ) -> Vec<f32> {
     assert_eq!(probs.len(), g * tq * len, "probs shape");
@@ -273,13 +285,19 @@ pub fn paged_attn_av(
         for qi in 0..tq {
             let prow = &probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
             let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
-            for (kj, &p) in prow.iter().enumerate() {
+            let kmax = (q_offset + qi + 1).min(len);
+            let mut kj = 0usize;
+            while kj < kmax {
                 let slab = blocks[kj / block_size];
-                let voff = v_base + (gi * block_size + kj % block_size) * dh;
-                let vrow = &slab[voff..voff + dh];
-                for d in 0..dh {
-                    orow[d] += p * vrow[d];
+                let hi = (kj - kj % block_size + block_size).min(kmax);
+                let base = v_base + gi * block_size * dh;
+                for (&p, off) in prow[kj..hi].iter().zip(kj % block_size..) {
+                    let vrow = &slab[base + off * dh..base + off * dh + dh];
+                    for d in 0..dh {
+                        orow[d] += p * vrow[d];
+                    }
                 }
+                kj = hi;
             }
         }
     }
@@ -301,7 +319,7 @@ pub fn paged_mha_attention(
     len: usize,
 ) -> Vec<f32> {
     let probs = paged_attention_scores(q, blocks, k_base, h, tq, dh, block_size, q_offset, len);
-    paged_attn_av(&probs, blocks, v_base, h, tq, dh, block_size, len)
+    paged_attn_av(&probs, blocks, v_base, h, tq, dh, block_size, q_offset, len)
 }
 
 /// CHAI clustered attention against block-resident K-reps and V: scores
@@ -332,7 +350,116 @@ pub fn paged_clustered_attention(
         probs_full[hh * tq * len..(hh + 1) * tq * len]
             .copy_from_slice(&probs[m * tq * len..(m + 1) * tq * len]);
     }
-    paged_attn_av(&probs_full, blocks, v_base, h, tq, dh, block_size, len)
+    paged_attn_av(&probs_full, blocks, v_base, h, tq, dh, block_size, q_offset, len)
+}
+
+// ---------------------------------------------------------------------------
+// Relay decode (shared-prefix attention, RelayAttention-style)
+//
+// A relay group is a set of decode rows whose block tables begin with the
+// SAME physical blocks (block-aligned common prefix, refcount > 1). The
+// attention of each row's single query splits into two phases:
+//
+//   prefix phase  — keys [0, S)        computed ONCE for the whole group
+//                   from the shared slabs, with every group query stacked
+//                   into one `[g, n, dh]` pass per rep panel;
+//   suffix phase  — keys [S, len_r)    computed per row over its private
+//                   tail blocks.
+//
+// Each phase returns *unnormalized* softmax partials per (panel, row):
+// the running row max `m`, the sum of exponentials `s = Σ exp(score−m)`,
+// and the exp-weights themselves (which weight V into a partial output
+// `o = Σ exp(score−m)·v`). `relay_merge` then renormalizes:
+//
+//   M   = max(m_p, m_s)
+//   out = (o_p·e^{m_p−M} + o_s·e^{m_s−M}) / (s_p·e^{m_p−M} + s_s·e^{m_s−M})
+//
+// which is algebraically the exact softmax-weighted value over the full
+// key range — only the float *association* differs from the fused
+// kernel, so relay logits land within 1e-5 of the fused oracle rather
+// than bit-identical (the engine-level property tests pin both bounds).
+// ---------------------------------------------------------------------------
+
+/// One phase of relay attention: raw `q·kᵀ/√dh` scores of `n` stacked
+/// single-token queries (`q: [g, n, dh]`) against block-resident keys
+/// `[0, len)`, returned as softmax partials.
+///
+/// No causal mask is applied: relay phases only ever cover keys at or
+/// below every stacked query's position (the shared prefix sits below
+/// all group members; a private suffix ends at the row's own position).
+///
+/// Returns `(expw [g, n, len], m [g, n], s [g, n])` where
+/// `expw[kj] = exp(score_kj − m)` and `s = Σ expw`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_relay_scores(
+    q: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    g: usize,
+    n: usize,
+    dh: usize,
+    block_size: usize,
+    len: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(q.len(), g * n * dh, "q shape");
+    assert!(blocks.len() * block_size >= len, "block table too short for len");
+    assert!(len > 0, "relay phase over an empty key range");
+    let scale = (dh as f32).sqrt();
+    let mut expw = vec![0.0f32; g * n * len];
+    let mut m = vec![0.0f32; g * n];
+    let mut s = vec![0.0f32; g * n];
+    for gi in 0..g {
+        for qi in 0..n {
+            let qrow = &q[(gi * n + qi) * dh..(gi * n + qi) * dh + dh];
+            let orow = &mut expw[(gi * n + qi) * len..(gi * n + qi) * len + len];
+            let mut kj = 0usize;
+            while kj < len {
+                let slab = blocks[kj / block_size];
+                let hi = (kj - kj % block_size + block_size).min(len);
+                let base = k_base + gi * block_size * dh;
+                for (slot, off) in orow[kj..hi].iter_mut().zip(kj % block_size..) {
+                    let krow = &slab[base + off * dh..base + off * dh + dh];
+                    let mut acc = 0.0f32;
+                    for d in 0..dh {
+                        acc += qrow[d] * krow[d];
+                    }
+                    *slot = acc / scale;
+                }
+                kj = hi;
+            }
+            let mx = orow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for x in orow.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            m[gi * n + qi] = mx;
+            s[gi * n + qi] = sum;
+        }
+    }
+    (expw, m, s)
+}
+
+/// Log-sum-exp merge of two relay phases into the exact softmax-weighted
+/// output (one head panel, one row): `o_*` are the unnormalized partial
+/// value accumulations `Σ exp(score−m)·v` of each phase.
+pub fn relay_merge(
+    o_p: &[f32],
+    m_p: f32,
+    s_p: f32,
+    o_s: &[f32],
+    m_s: f32,
+    s_s: f32,
+    out: &mut [f32],
+) {
+    assert_eq!(o_p.len(), out.len(), "prefix partial shape");
+    assert_eq!(o_s.len(), out.len(), "suffix partial shape");
+    let mx = m_p.max(m_s);
+    let (w_p, w_s) = ((m_p - mx).exp(), (m_s - mx).exp());
+    let denom = s_p * w_p + s_s * w_s;
+    for ((o, &a), &b) in out.iter_mut().zip(o_p).zip(o_s) {
+        *o = (a * w_p + b * w_s) / denom;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -602,11 +729,25 @@ mod tests {
         }
         let slabs: Vec<&[f32]> = blocks.iter().map(|x| x.as_slice()).collect();
 
-        let (want, _) = mha_attention(&q, &k, &v, h, tq, tk, dh, q_offset, len, None);
+        let (want, wprobs) = mha_attention(&q, &k, &v, h, tq, tk, dh, q_offset, len, None);
         let got =
             paged_mha_attention(&q, &slabs, k_base, v_base, h, tq, dh, b, q_offset, len);
         let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&want), bits(&got), "paged MHA must equal bucket MHA bitwise");
+
+        // the AV bound to the unmasked prefix must be bit-identical to the
+        // bucket AV over the full padded range (skipped terms are exact 0)
+        let probs = paged_attention_scores(&q, &slabs, k_base, h, tq, dh, b, q_offset, len);
+        let mut probs_padded = vec![0.0f32; h * tq * tk];
+        for gi in 0..h {
+            for qi in 0..tq {
+                probs_padded[(gi * tq + qi) * tk..(gi * tq + qi) * tk + len]
+                    .copy_from_slice(&probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len]);
+            }
+        }
+        assert_eq!(bits(&probs_padded), bits(&wprobs), "paged scores must match bucket scores");
+        let av = paged_attn_av(&probs, &slabs, v_base, h, tq, dh, b, q_offset, len);
+        assert_eq!(bits(&want), bits(&av), "bounded paged AV must equal bucket AV bitwise");
 
         // clustered: kc=1 rep panel broadcast to both heads
         let membership = vec![0usize, 0];
@@ -638,6 +779,94 @@ mod tests {
             len,
         );
         assert_eq!(bits(&cwant), bits(&cgot), "paged CHAI must equal bucket CHAI bitwise");
+    }
+
+    #[test]
+    fn relay_split_matches_fused_softmax() {
+        // split keys [0, len) at a block boundary, run the two relay
+        // phases, LSE-merge — must agree with the fused paged kernel to
+        // 1e-5 (the split only reassociates the float accumulation)
+        let (g, dh, b, len, split) = (3usize, 4, 4, 12, 8);
+        let n = 4; // stacked decode queries, all at positions >= len-1
+        let q = fill(g * n * dh, 30);
+        let k = fill(g * len * dh, 31);
+        let v = fill(g * len * dh, 32);
+        let slab_floats = 2 * g * b * dh;
+        let (k_base, v_base) = (0usize, g * b * dh);
+        let mut blocks = blocks_from_contiguous(&k, g, dh, b, k_base, slab_floats, len, len);
+        for (bi, vb) in blocks_from_contiguous(&v, g, dh, b, v_base, slab_floats, len, len)
+            .into_iter()
+            .enumerate()
+        {
+            blocks[bi][v_base..].copy_from_slice(&vb[v_base..]);
+        }
+        let slabs: Vec<&[f32]> = blocks.iter().map(|x| x.as_slice()).collect();
+
+        // fused oracle: every query sees all len keys (q_offset high
+        // enough that no causal masking applies)
+        let fused = paged_mha_attention(&q, &slabs, k_base, v_base, g, n, dh, b, len - 1, len);
+
+        // relay: prefix phase over [0, split), suffix over [split, len)
+        let (ew_p, m_p, s_p) =
+            paged_relay_scores(&q, &slabs[..split / b], k_base, g, n, dh, b, split);
+        let o_p = paged_attn_av(&ew_p, &slabs[..split / b], v_base, g, n, dh, b, split - 1, split);
+        let slen = len - split;
+        let (ew_s, m_s, s_s) =
+            paged_relay_scores(&q, &slabs[split / b..], k_base, g, n, dh, b, slen);
+        let o_s = paged_attn_av(&ew_s, &slabs[split / b..], v_base, g, n, dh, b, slen - 1, slen);
+        let mut merged = vec![0.0f32; g * n * dh];
+        for gi in 0..g {
+            for qi in 0..n {
+                let r = gi * n + qi;
+                let (lo, hi) = (r * dh, r * dh + dh);
+                relay_merge(
+                    &o_p[lo..hi],
+                    m_p[r],
+                    s_p[r],
+                    &o_s[lo..hi],
+                    m_s[r],
+                    s_s[r],
+                    &mut merged[lo..hi],
+                );
+            }
+        }
+        for (i, (a, b)) in fused.iter().zip(&merged).enumerate() {
+            assert!((a - b).abs() <= 1e-5, "relay merge diverged at {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn relay_single_phase_is_plain_softmax_attention() {
+        // degenerate merge (suffix covers everything, empty-weight prefix)
+        // reduces to normalizing one phase — sanity for the partials
+        let (g, dh, b, len) = (2usize, 4, 4, 8);
+        let q = fill(g * dh, 33);
+        let k = fill(g * len * dh, 34);
+        let v = fill(g * len * dh, 35);
+        let slab_floats = 2 * g * b * dh;
+        let (k_base, v_base) = (0usize, g * b * dh);
+        let mut blocks = blocks_from_contiguous(&k, g, dh, b, k_base, slab_floats, len, len);
+        for (bi, vb) in blocks_from_contiguous(&v, g, dh, b, v_base, slab_floats, len, len)
+            .into_iter()
+            .enumerate()
+        {
+            blocks[bi][v_base..].copy_from_slice(&vb[v_base..]);
+        }
+        let slabs: Vec<&[f32]> = blocks.iter().map(|x| x.as_slice()).collect();
+        let fused = paged_mha_attention(&q, &slabs, k_base, v_base, g, 1, dh, b, len - 1, len);
+        let (ew, m, s) = paged_relay_scores(&q, &slabs, k_base, g, 1, dh, b, len);
+        let o = paged_attn_av(&ew, &slabs, v_base, g, 1, dh, b, len - 1, len);
+        let mut got = vec![0.0f32; g * dh];
+        for gi in 0..g {
+            let (lo, hi) = (gi * dh, gi * dh + dh);
+            // empty prefix: m = -inf would poison exp, so fold via a
+            // zero-weight partial at the same max
+            let zero = vec![0.0f32; dh];
+            relay_merge(&zero, m[gi], 0.0, &o[lo..hi], m[gi], s[gi], &mut got[lo..hi]);
+        }
+        for (a, b) in fused.iter().zip(&got) {
+            assert!((a - b).abs() <= 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

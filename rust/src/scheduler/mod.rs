@@ -945,6 +945,15 @@ impl Scheduler {
                 "paged_prefill_skipped_tokens",
                 snap.stats.prefill_skipped_tokens as f64,
             );
+            // relay decode: shared-prefix groups formed, positions of
+            // prefix attention skipped, and rows that fell back to the
+            // fully fused path
+            metrics.set_gauge("relay_groups", snap.stats.relay_groups as f64);
+            metrics.set_gauge(
+                "relay_prefix_tokens_saved",
+                snap.stats.relay_prefix_tokens_saved as f64,
+            );
+            metrics.set_gauge("relay_fallback", snap.stats.relay_fallback as f64);
         }
     }
 }

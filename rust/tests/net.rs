@@ -244,6 +244,57 @@ fn reactor_slow_reader_never_delays_other_sessions() {
 }
 
 // ---------------------------------------------------------------------------
+// --pin-cores: flag round-trip + pinned-CPU reporting (satellite)
+// ---------------------------------------------------------------------------
+
+/// `--pin-cores` round-trips through the config into both pinnable
+/// threads: the engine tick thread reports its core via the
+/// `pin_engine_cpu` gauge and the reactor via `net_pinned_cpu_plus1`,
+/// both visible in one `{"cmd":"stats"}` reply — and serving results
+/// are unaffected by pinning.
+#[cfg(target_os = "linux")]
+#[test]
+fn pin_cores_round_trips_and_threads_report_pinned_cpus() {
+    let cfg = ServingConfig { pin_cores: true, ..ref_cfg() };
+    let handle = Coordinator::start(cfg).unwrap();
+    let server =
+        Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", NetMode::Reactor).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+
+    let r = client.generate("the color of tom is", 6, "chai").unwrap();
+    assert!(r.opt("error").is_none(), "pinned serving must still work: {r:?}");
+
+    let stats = client.stats().unwrap();
+    let gauges = stats.get("gauges").unwrap();
+    let engine_cpu = gauges.get("pin_engine_cpu").unwrap().usize().unwrap();
+    assert!(engine_cpu < 1024, "engine tick thread must report its pinned CPU");
+    let net = stats.get("net").unwrap();
+    let reactor_cpu = net.get("net_pinned_cpu_plus1").unwrap().usize().unwrap();
+    assert!(reactor_cpu >= 1, "reactor thread must report its pinned CPU");
+    server.stop();
+    handle.shutdown();
+
+    // default-off: an unpinned stack reports neither
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    let server =
+        Server::start_with(handle.coordinator.clone(), "127.0.0.1:0", NetMode::Reactor).unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    assert!(client.ping().unwrap());
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.get("gauges").unwrap().opt("pin_engine_cpu").is_none(),
+        "pinning must be off by default"
+    );
+    assert_eq!(
+        stats.get("net").unwrap().get("net_pinned_cpu_plus1").unwrap().usize().unwrap(),
+        0,
+        "reactor must not pin by default"
+    );
+    server.stop();
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // Partial line at EOF: identical rejection on both transports
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,334 @@
+//! Property tests for relay decode (shared-prefix attention computed
+//! once per batch, merged by online softmax).
+//!
+//! The acceptance contract, exercised over random share topologies:
+//!
+//! 1. Backend level: `decode_paged` with relay descriptors produces
+//!    logits within 1e-5 of the fused per-row oracle, and the greedy
+//!    argmax never flips — including groups that gain a member
+//!    mid-decode and rows whose private tails started as CoW forks of
+//!    a groupmate's blocks.
+//! 2. Engine level: a relay engine and a `--no-relay` engine produce
+//!    identical token streams for random mixes of shared-prefix
+//!    sessions, unrelated singletons, and sessions forked mid-decode —
+//!    while the relay engine actually forms groups and skips prefix
+//!    positions (`relay_prefix_tokens_saved > 0`).
+//!
+//! Everything runs artifact-free on the seeded toy model.
+
+use std::path::PathBuf;
+
+use chai::config::ServingConfig;
+use chai::engine::{Engine, Session, Variant};
+use chai::kv::paged::{KvLayout, PagedKv};
+use chai::kv::CacheKind;
+use chai::runtime::reference::RefBackend;
+use chai::runtime::{Backend, PagedDecodeRow, RelayRef};
+use chai::util::proptest::check;
+use chai::util::rng::Rng;
+
+fn toy_cfg(seed: u64, relay: bool) -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: PathBuf::from("definitely-no-artifacts-here"),
+        backend: "ref".into(),
+        seed,
+        relay,
+        ..Default::default()
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Backend level: relay logits vs the fused oracle
+// ---------------------------------------------------------------------------
+
+/// Run one decode step on `store` for `seqs` (current length `lens[i]`,
+/// feeding `toks[i]`), with or without relay descriptors over the
+/// shared prefix `sp`. Returns per-row logits.
+fn step(
+    be: &RefBackend,
+    store: &mut PagedKv,
+    seqs: &[u64],
+    toks: &[i32],
+    lens: &[usize],
+    sp: usize,
+    relay: bool,
+) -> Result<Vec<Vec<f32>>, String> {
+    for &s in seqs {
+        store.ensure_append_slot(s).map_err(|e| e.to_string())?;
+    }
+    let rows: Vec<PagedDecodeRow> = seqs
+        .iter()
+        .zip(toks)
+        .zip(lens)
+        .map(|((&seq, &token), &pos)| PagedDecodeRow {
+            seq,
+            token,
+            pos,
+            clusters: None,
+            relay: relay.then_some(RelayRef { group: 0, prefix_len: sp }),
+        })
+        .collect();
+    be.decode_paged(&rows, store)
+        .into_iter()
+        .map(|r| r.map_err(|e| format!("{e:#}")).and_then(|t| {
+            t.as_f32().map(|v| v.to_vec()).map_err(|e| e.to_string())
+        }))
+        .collect()
+}
+
+#[test]
+fn relay_decode_logits_match_fused_oracle_within_1e5() {
+    check("relay-vs-fused-logits", 6, |rng| {
+        let be = RefBackend::toy(rng.next_u64());
+        let m = be.manifest().clone();
+        let layout = KvLayout::from_manifest(&m, CacheKind::Mha);
+        let b = 4usize;
+        let pb = rng.range(1, 4); // shared full blocks
+        let sp = pb * b;
+        let n = rng.range(2, 5);
+        let prefix: Vec<i32> = (0..sp).map(|_| rng.below(256) as i32).collect();
+
+        // rows 0 and 1 share their ENTIRE prompt (partial tail adopted
+        // too), so the first append slot is a CoW fork of a groupmate's
+        // block; later rows diverge after the shared prefix
+        let twin_tail: Vec<i32> = (0..rng.range(1, 3)).map(|_| rng.below(256) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|i| {
+                let tail: Vec<i32> = if i < 2 {
+                    twin_tail.clone()
+                } else {
+                    (0..rng.below(4)).map(|_| rng.below(256) as i32).collect()
+                };
+                prefix.iter().chain(tail.iter()).copied().collect()
+            })
+            .collect();
+
+        // two stores populated identically: relay group vs fused oracle
+        let mut kv_r = PagedKv::new(b, 1 << 24);
+        let mut kv_f = PagedKv::new(b, 1 << 24);
+        for (i, p) in prompts.iter().enumerate() {
+            let seq = (i + 1) as u64;
+            for kv in [&mut kv_r, &mut kv_f] {
+                kv.admit(seq, layout.clone(), "mha", true, p).map_err(|e| e.to_string())?;
+                let start = kv.adopted_prefix_len(seq).map_err(|e| e.to_string())?;
+                be.prefill_paged(seq, start, None, kv).map_err(|e| e.to_string())?;
+                kv.commit_prefill(seq).map_err(|e| e.to_string())?;
+            }
+        }
+
+        let mut seqs: Vec<u64> = (1..=n as u64).collect();
+        let mut toks: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+        let mut lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let steps = rng.range(2, 5);
+        for s in 0..steps {
+            // the group gains a late member mid-decode: a fresh fork of
+            // the shared prefix joins before the second step
+            if s == 1 {
+                let seq = (n + 1) as u64;
+                for kv in [&mut kv_r, &mut kv_f] {
+                    kv.admit(seq, layout.clone(), "mha", true, &prefix)
+                        .map_err(|e| e.to_string())?;
+                    let start = kv.adopted_prefix_len(seq).map_err(|e| e.to_string())?;
+                    be.prefill_paged(seq, start, None, kv).map_err(|e| e.to_string())?;
+                    kv.commit_prefill(seq).map_err(|e| e.to_string())?;
+                }
+                seqs.push(seq);
+                toks.push(rng.below(256) as i32);
+                lens.push(prefix.len());
+            }
+            let relayed = step(&be, &mut kv_r, &seqs, &toks, &lens, sp, true)?;
+            let fused = step(&be, &mut kv_f, &seqs, &toks, &lens, sp, false)?;
+            for (ri, (rl, fl)) in relayed.iter().zip(&fused).enumerate() {
+                let worst = rl
+                    .iter()
+                    .zip(fl)
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                chai::prop_assert!(
+                    worst <= 1e-5,
+                    "step {s} row {ri}: relay logits drift {worst} > 1e-5"
+                );
+                chai::prop_assert!(
+                    argmax(rl) == argmax(fl),
+                    "step {s} row {ri}: greedy argmax flipped ({} vs {})",
+                    argmax(rl),
+                    argmax(fl)
+                );
+            }
+            // commit the fused argmax as the next fed token, same on
+            // both stores, so the streams stay lockstep-greedy
+            for (ri, &seq) in seqs.iter().enumerate() {
+                kv_r.append_committed(seq, toks[ri]).map_err(|e| e.to_string())?;
+                kv_f.append_committed(seq, toks[ri]).map_err(|e| e.to_string())?;
+                toks[ri] = argmax(&fused[ri]) as i32;
+                lens[ri] += 1;
+            }
+        }
+        // the relay path actually ran: one group per step
+        let counts = be.exec_counts.borrow();
+        let ran = counts.get("decode_relay_groups").copied().unwrap_or(0);
+        chai::prop_assert!(
+            ran == steps as u64,
+            "expected {steps} relay group executions, got {ran}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Engine level: relay streams vs --no-relay streams
+// ---------------------------------------------------------------------------
+
+fn random_suffix(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| (rng.range(32, 127) as u8) as char).collect()
+}
+
+/// Tick `sessions` to completion; a fork of `fork_prompt` joins after
+/// `fork_after` ticks. Returns every session's stream, fork last.
+fn run_with_fork(
+    engine: &Engine,
+    sessions: &mut Vec<Session>,
+    variant: &Variant,
+    fork_prompt: &str,
+    fork_after: usize,
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>, String> {
+    let mut ticks = 0usize;
+    loop {
+        if ticks == fork_after {
+            let s = engine
+                .start_session(fork_prompt, max_new, variant)
+                .map_err(|e| e.to_string())?;
+            sessions.push(s);
+        }
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().filter(|s| !s.done).collect();
+        if refs.is_empty() {
+            break;
+        }
+        for o in engine.decode_tick(&mut refs) {
+            o.map_err(|e| format!("decode_tick: {e:#}"))?;
+        }
+        ticks += 1;
+    }
+    Ok(sessions.iter().map(|s| s.tokens.clone()).collect())
+}
+
+#[test]
+fn relay_streams_equal_fused_streams_across_topologies() {
+    check("relay-vs-fused-streams", 6, |rng| {
+        let seed = rng.next_u64();
+        let variant = if rng.below(2) == 0 { Variant::Mha } else { Variant::Chai };
+        // shared system prompt covering >= 2 full 16-token blocks, plus
+        // per-session suffixes (empty = identical prompts), plus one
+        // unrelated singleton that must quietly stay fused
+        let shared = random_suffix(rng, 33, 42);
+        let n = rng.range(2, 5);
+        let prompts: Vec<String> = (0..n)
+            .map(|_| format!("{shared}{}", random_suffix(rng, 0, 6)))
+            .chain(std::iter::once(random_suffix(rng, 3, 12)))
+            .collect();
+        let max_new = rng.range(4, 9);
+        let fork_after = rng.range(1, 3);
+
+        let mut streams: Vec<Vec<Vec<i32>>> = Vec::new();
+        for relay in [true, false] {
+            let engine = Engine::load(toy_cfg(seed, relay)).map_err(|e| e.to_string())?;
+            let mut sessions: Vec<Session> = prompts
+                .iter()
+                .map(|p| engine.start_session(p, max_new, &variant))
+                .collect::<anyhow::Result<_>>()
+                .map_err(|e| e.to_string())?;
+            // the fork re-submits session 0's full prompt mid-decode: it
+            // adopts the shared blocks while its groupmates' tails have
+            // already CoW-diverged, and must regroup, never read stale
+            let got = run_with_fork(
+                &engine,
+                &mut sessions,
+                &variant,
+                &prompts[0],
+                fork_after,
+                max_new,
+            )?;
+            let snap = engine.paged_snapshot().unwrap();
+            if relay {
+                chai::prop_assert!(
+                    snap.stats.relay_groups > 0,
+                    "relay engine must form groups for {n} shared-prefix sessions"
+                );
+                chai::prop_assert!(
+                    snap.stats.relay_prefix_tokens_saved > 0,
+                    "relay groups must skip prefix positions"
+                );
+            } else {
+                chai::prop_assert!(
+                    snap.stats.relay_groups == 0,
+                    "--no-relay engine must never form relay groups"
+                );
+            }
+            for s in sessions {
+                engine.finish_session(s);
+            }
+            streams.push(got);
+        }
+        chai::prop_assert!(
+            streams[0] == streams[1],
+            "{} relay streams {:?} != fused streams {:?}",
+            variant.name(),
+            streams[0],
+            streams[1]
+        );
+        Ok(())
+    });
+}
+
+/// Deterministic spot check of the metrics surface: identical prompts
+/// form one group per tick, savings scale with (members - 1) * prefix,
+/// and the escape hatch (`relay: false`) restores the fused path with
+/// the same stream.
+#[test]
+fn relay_metrics_count_groups_and_savings() {
+    let prompt = "the color of tom is red and bob is blue"; // 40 tokens w/ bos: 2 full blocks
+    let relay = Engine::load(toy_cfg(3, true)).unwrap();
+    let mut sessions: Vec<Session> =
+        (0..3).map(|_| relay.start_session(prompt, 5, &Variant::Chai).unwrap()).collect();
+    loop {
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().filter(|s| !s.done).collect();
+        if refs.is_empty() {
+            break;
+        }
+        for o in relay.decode_tick(&mut refs) {
+            o.unwrap();
+        }
+    }
+    let snap = relay.paged_snapshot().unwrap();
+    assert!(snap.stats.relay_groups > 0, "identical prompts must relay-group");
+    // every tick saves (3 - 1) members x (>= 2 full blocks) positions
+    assert!(
+        snap.stats.relay_prefix_tokens_saved >= snap.stats.relay_groups * 2 * 32,
+        "savings {} too small for {} groups",
+        snap.stats.relay_prefix_tokens_saved,
+        snap.stats.relay_groups
+    );
+    let streams: Vec<Vec<i32>> = sessions.iter().map(|s| s.tokens.clone()).collect();
+    assert_eq!(streams[0], streams[1]);
+    assert_eq!(streams[0], streams[2]);
+    for s in sessions {
+        relay.finish_session(s);
+    }
+
+    let fused = Engine::load(toy_cfg(3, false)).unwrap();
+    let g = fused.generate(prompt, 5, &Variant::Chai).unwrap();
+    assert_eq!(g.tokens, streams[0], "escape hatch must not change the stream");
+    assert_eq!(fused.paged_snapshot().unwrap().stats.relay_groups, 0);
+}
