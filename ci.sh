@@ -34,6 +34,22 @@ echo "== cargo test -q =="
 # checkout the full engine/coordinator/server stack executes here
 cargo test -q
 
+echo "== cargo test -q, CHAI_THREADS=3 (worker-pool race shake) =="
+# the whole suite again with every engine's kernel pool forced to 3
+# threads: the kernels partition only over independent output slices,
+# so every test must pass bit-for-bit at any pool size — this run
+# shakes out data races and partitioning mistakes the serial default
+# cannot see
+CHAI_THREADS=3 cargo test -q
+
+echo "== parallel-kernel gate: decode burst, worker pool vs --threads 1 (ref backend) =="
+# parallel contract: a same-instant burst of distinct prompts decodes
+# with bit-identical token streams --threads 1 vs the auto-sized pool,
+# the pool actually fires (pool_tasks > 0), and pool tok/s is strictly
+# above serial on multi-core runners (>= 1.8x on >= 4 cores); merges a
+# "parallel" section into bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --parallel
+
 echo "== serving smoke: batched block-native vs sequential bucket decode (ref backend) =="
 # smoke (no absolute-perf thresholds): asserts identical token streams,
 # zero decode-path bucket copies, and batched tok/s strictly above the

@@ -144,6 +144,81 @@ fn main() -> anyhow::Result<()> {
     pk.row(vec!["speedup".into(), format!("{:.2}x", before_ms / after_ms.max(1e-9))]);
     pk.print();
 
+    // ---- rope: per-position sin/cos hoist (before/after) -------------------
+    // The old body recomputed `angle.sin()/.cos()` for every head group;
+    // the hoisted kernel builds the (position, channel) table once and
+    // reuses it across all g groups. Same calls per unique angle, so the
+    // result is bitwise-pinned (asserted).
+    let (rg, rt, rdh) = (32usize, 256usize, 64usize);
+    let rope_positions: Vec<usize> = (100..100 + rt).collect();
+    let rope_x: Vec<f32> = (0..rg * rt * rdh).map(|_| next()).collect();
+    let mut x_old = rope_x.clone();
+    let mut x_new = rope_x.clone();
+    naive_rope(&mut x_old, &rope_positions, rg, rt, rdh, 10000.0);
+    chai::runtime::refkernels::rope(&mut x_new, &rope_positions, rg, rt, rdh, 10000.0);
+    assert_eq!(x_old, x_new, "hoisted rope must be bit-identical to the per-group original");
+    let rope_before_ms = median(&time_ms(1, iters, || {
+        let mut x = rope_x.clone();
+        naive_rope(&mut x, &rope_positions, rg, rt, rdh, 10000.0);
+    }));
+    let rope_after_ms = median(&time_ms(1, iters, || {
+        let mut x = rope_x.clone();
+        chai::runtime::refkernels::rope(&mut x, &rope_positions, rg, rt, rdh, 10000.0);
+    }));
+    let mut rp = Table::new("Rope kernel (g=32 t=256 dh=64)", &["kernel", "median ms"]);
+    rp.row(vec!["sin/cos per head group (before)".into(), fmt_ms(rope_before_ms)]);
+    rp.row(vec!["sin/cos hoisted per position (after)".into(), fmt_ms(rope_after_ms)]);
+    rp.row(vec!["speedup".into(), format!("{:.2}x", rope_before_ms / rope_after_ms.max(1e-9))]);
+    rp.print();
+
+    // ---- kernel scaling across pool sizes ----------------------------------
+    // Installs an explicit pool per row (replacing the engine's) and times
+    // the two hottest kernels. Outputs are asserted bitwise-identical to
+    // the 1-thread run at every size — the partitioning invariant the
+    // parallel test suite pins down, visible here as a scaling table.
+    let (sm, sk, sn) = (128usize, 512usize, 512usize);
+    let sa: Vec<f32> = (0..sm * sk).map(|_| next()).collect();
+    let sb: Vec<f32> = (0..sk * sn).map(|_| next()).collect();
+    let mut scal = Table::new(
+        "Kernel scaling (matmul 128x512x512; paged attn h=8 dh=32 len=512 tq=128)",
+        &["threads", "matmul ms", "paged attn ms"],
+    );
+    let mut scaling_rows = Vec::new();
+    let mut base: Option<(Vec<f32>, Vec<f32>)> = None;
+    for &threads in [1usize, 2, 4].iter() {
+        if threads > 1 && threads > chai::runtime::pool::allowed_cpu_count() {
+            continue;
+        }
+        let p = std::sync::Arc::new(chai::runtime::pool::Pool::new(threads, false));
+        chai::runtime::pool::install(&p);
+        let mm = chai::runtime::refkernels::matmul(&sa, &sb, sm, sk, sn);
+        let at = chai::runtime::refkernels::paged_mha_attention(
+            &q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen,
+        );
+        match &base {
+            None => base = Some((mm, at)),
+            Some((bmm, bat)) => {
+                assert_eq!(bmm, &mm, "matmul must be pool-size invariant");
+                assert_eq!(bat, &at, "paged attention must be pool-size invariant");
+            }
+        }
+        let mm_ms = median(&time_ms(1, iters, || {
+            chai::runtime::refkernels::matmul(&sa, &sb, sm, sk, sn);
+        }));
+        let at_ms = median(&time_ms(1, iters, || {
+            chai::runtime::refkernels::paged_mha_attention(
+                &q, &slabs, 0, v_base, kh, ktq, kdh, kb, q_offset, klen,
+            );
+        }));
+        scal.row(vec![format!("{threads}"), fmt_ms(mm_ms), fmt_ms(at_ms)]);
+        scaling_rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("matmul_ms", Json::Num(mm_ms)),
+            ("paged_attn_ms", Json::Num(at_ms)),
+        ]));
+    }
+    scal.print();
+
     common::write_results(
         "microbench",
         Json::obj(vec![
@@ -151,9 +226,38 @@ fn main() -> anyhow::Result<()> {
             ("online_membership_ms", Json::Num(cluster_ms)),
             ("paged_kernel_before_ms", Json::Num(before_ms)),
             ("paged_kernel_after_ms", Json::Num(after_ms)),
+            ("rope_before_ms", Json::Num(rope_before_ms)),
+            ("rope_after_ms", Json::Num(rope_after_ms)),
+            ("scaling", Json::Arr(scaling_rows)),
         ]),
     );
     Ok(())
+}
+
+/// The pre-hoist rope body, kept verbatim as the microbench baseline:
+/// `angle.sin()/.cos()` recomputed inside the per-head-group loop, i.e.
+/// `g`× per (position, channel) pair.
+fn naive_rope(x: &mut [f32], positions: &[usize], g: usize, t: usize, dh: usize, theta: f32) {
+    assert_eq!(x.len(), g * t * dh, "x shape");
+    assert_eq!(positions.len(), t, "positions shape");
+    assert_eq!(dh % 2, 0, "head_dim must be even for rope");
+    let half = dh / 2;
+    // frequencies depend only on the channel — hoist out of the hot loop
+    let freqs: Vec<f32> =
+        (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect();
+    for gi in 0..g {
+        for ti in 0..t {
+            let row = &mut x[(gi * t + ti) * dh..(gi * t + ti) * dh + dh];
+            let pos = positions[ti] as f32;
+            for (i, &freq) in freqs.iter().enumerate() {
+                let angle = pos * freq;
+                let (sin, cos) = (angle.sin(), angle.cos());
+                let (x1, x2) = (row[i], row[half + i]);
+                row[i] = x1 * cos - x2 * sin;
+                row[half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
 }
 
 /// The pre-hoist paged MHA kernel, kept verbatim as the microbench

@@ -45,6 +45,15 @@
 //!           # relay path actually fired (relay_groups > 0,
 //!           # relay_prefix_tokens_saved > 0); merges a "relay" section
 //!           # into BENCH_serving.json
+//!       cargo bench --bench bench_serving -- --backend ref --parallel
+//!           # CI parallel-kernel gate: a same-instant decode-heavy
+//!           # burst of DISTINCT prompts served with --threads 1 (the
+//!           # exact legacy serial kernels) vs the auto-sized worker
+//!           # pool; asserts bit-identical token streams, that the pool
+//!           # actually fired (pool_tasks > 0), and pool tok/s strictly
+//!           # above serial on multi-core runners (>= 1.8x on >= 4
+//!           # cores); merges a "parallel" section into
+//!           # BENCH_serving.json
 //!       cargo bench --bench bench_serving -- --backend ref --failover
 //!           # CI failover drill (Linux): 4 `chai replica` processes
 //!           # behind the router (process transport), a burst of
@@ -327,6 +336,141 @@ fn relay(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Res
     Ok(())
 }
 
+/// Parallel-kernel gate: a same-instant decode-heavy burst of DISTINCT
+/// prompts (no shared prefix, so every row decodes through the fused
+/// cluster-coherent batch whose per-row attention fans across the
+/// pool), served twice from the same config: `--threads 1` — the exact
+/// legacy serial kernels — vs the worker pool auto-sized from the
+/// allowed-cpu mask. The kernels partition only over independent
+/// output slices (DESIGN.md §Parallel kernel execution), so the token
+/// streams must be bit-identical at every pool size; the pool must
+/// also actually fire (pool_tasks > 0) and, on multi-core runners,
+/// deliver strictly more decode tok/s — >= 1.8x on >= 4 cores.
+/// Merges a "parallel" section into `bench_results/BENCH_serving.json`.
+fn parallel(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::Result<()> {
+    if chai::runtime::resolve_backend(base_cfg)? != "ref" {
+        eprintln!("[bench] --parallel needs the ref backend (pool-dispatched kernels); skipping");
+        return Ok(());
+    }
+    let n = args.usize("requests", 24)?.max(8);
+    let max_new = args.usize("max-new", 32)?;
+    let cores = chai::runtime::pool::allowed_cpu_count();
+    // distinct prompts — no prefix sharing, so the burst exercises the
+    // fused decode path rather than relay's shared-prefix fast path
+    let prompts: Vec<String> = (0..n).map(|i| format!("parallel case {i:02} go")).collect();
+
+    let mut table = Table::new(
+        "Parallel kernels: decode-heavy burst, worker pool vs --threads 1",
+        &["mode", "workers", "ok", "tok/s", "pool tasks"],
+    );
+    let mut json_rows = Vec::new();
+    let mut streams: Vec<Vec<String>> = Vec::new();
+    let mut tok_s_by_mode = Vec::new();
+
+    for (mode, threads) in [("serial", 1usize), ("pool", 0usize)] {
+        let cfg = ServingConfig { max_batch: n, threads, ..base_cfg.clone() };
+        let handle = Coordinator::start(cfg)?;
+        let coord = handle.coordinator.clone();
+        coord.submit("warm up please", 2, Variant::Mha).recv().unwrap();
+
+        // best-of-3 bursts: one wall-clock sample on a shared runner can
+        // be skewed by a single scheduler preemption
+        let mut texts = Vec::new();
+        let mut ok = 0usize;
+        let mut tok_s = 0.0f64;
+        for rep in 0..3 {
+            let t0 = now_ms();
+            let rxs: Vec<_> =
+                prompts.iter().map(|p| coord.submit(p, max_new, Variant::Mha)).collect();
+            let mut rep_texts = Vec::new();
+            let mut tokens = 0usize;
+            let mut rep_ok = 0usize;
+            for rx in rxs {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(600)).unwrap();
+                if r.error.is_none() {
+                    rep_ok += 1;
+                    tokens += r.n_generated;
+                }
+                rep_texts.push(r.text);
+            }
+            let span_s = ((now_ms() - t0) / 1e3).max(1e-9);
+            tok_s = tok_s.max(tokens as f64 / span_s);
+            if rep == 0 {
+                texts = rep_texts;
+                ok = rep_ok;
+            } else {
+                assert_eq!(texts, rep_texts, "[{mode}] rep {rep} diverged");
+            }
+        }
+        let workers = coord.metrics.gauge("pool_workers");
+        let tasks = coord.metrics.gauge("pool_tasks");
+        handle.shutdown();
+
+        assert_eq!(ok, n, "[{mode}] all requests must succeed");
+        if threads == 1 {
+            assert_eq!(workers, 1.0, "[{mode}] --threads 1 must run the exact serial path");
+        } else if cores > 1 {
+            assert!(workers > 1.0, "[{mode}] auto sizing must start >1 thread on {cores} cores");
+            assert!(tasks > 0.0, "[{mode}] the pool must actually execute kernel tasks");
+        }
+        table.row(vec![
+            mode.to_string(),
+            format!("{workers:.0}"),
+            format!("{ok}/{n}"),
+            format!("{tok_s:.1}"),
+            format!("{tasks:.0}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::Str(mode.into())),
+            ("threads", Json::Num(workers)),
+            ("requests", Json::Num(n as f64)),
+            ("throughput_tok_s", Json::Num(tok_s)),
+            ("pool_tasks", Json::Num(tasks)),
+        ]));
+        streams.push(texts);
+        tok_s_by_mode.push(tok_s);
+    }
+    table.print();
+
+    assert_eq!(
+        streams[0], streams[1],
+        "pool size must not change token streams — kernels partition only \
+         over independent output slices"
+    );
+    if cores >= 4 {
+        // the PR's acceptance criterion on a >= 4-core runner
+        assert!(
+            tok_s_by_mode[1] >= 1.8 * tok_s_by_mode[0],
+            "pool {:.1} tok/s must be >= 1.8x serial {:.1} tok/s on {cores} cores",
+            tok_s_by_mode[1],
+            tok_s_by_mode[0]
+        );
+    } else if cores > 1 {
+        assert!(
+            tok_s_by_mode[1] > tok_s_by_mode[0],
+            "pool {:.1} tok/s must be strictly above serial {:.1} tok/s on {cores} cores",
+            tok_s_by_mode[1],
+            tok_s_by_mode[0]
+        );
+    } else {
+        eprintln!("[bench] single-core runner: skipping the pool-vs-serial throughput gate");
+    }
+    println!(
+        "\nshape: the same tick fans per-row attention and blocked matmul \
+         tiles across the pool; --threads 1 is the bit-identical baseline"
+    );
+
+    // merge next to the other sections rather than clobbering them
+    let path = std::path::Path::new("bench_results/BENCH_serving.json");
+    let mut fields = match Json::parse_file(path) {
+        Ok(Json::Obj(m)) => m,
+        _ => Default::default(),
+    };
+    fields.insert("parallel".to_string(), Json::Arr(json_rows));
+    common::write_results("BENCH_serving", Json::Obj(fields));
+    Ok(())
+}
+
 /// Overload smoke: an instantaneous burst whose working set is several
 /// times the KV pool, served with `--preempt` on. Two modes, both
 /// over capacity: a roomy spill tier (preemptions swap out) and a
@@ -512,7 +656,9 @@ fn replicas(args: &chai::util::args::Args, base_cfg: &ServingConfig) -> anyhow::
     let n = args.usize("requests", 12)?.max(8);
     let max_new = args.usize("max-new", 16)?;
     let fleet = args.usize("replica-count", 4)?.max(2);
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    // allowed-cpu mask, not available_parallelism: cgroup/affinity-
+    // restricted CI runners report the machine's cores otherwise
+    let cores = chai::runtime::pool::allowed_cpu_count();
 
     let mut table = Table::new(
         "Router: data-parallel replicas under a burst (shared weights)",
@@ -1210,6 +1356,9 @@ fn main() -> anyhow::Result<()> {
     }
     if args.bool("relay") {
         return relay(&args, &base_cfg);
+    }
+    if args.bool("parallel") {
+        return parallel(&args, &base_cfg);
     }
     if args.bool("overload") {
         return overload(&args, &base_cfg);

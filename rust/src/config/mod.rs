@@ -274,6 +274,13 @@ pub struct ServingConfig {
     /// pin the engine tick and reactor threads to dedicated cores via
     /// `sched_setaffinity` (`--pin-cores`; Linux, off by default)
     pub pin_cores: bool,
+    /// compute threads per engine for intra-tick kernel parallelism
+    /// (`--threads N`). 0 = auto: the allowed-cpu mask divided across
+    /// replicas (`CHAI_THREADS` env overrides auto, for `cargo test`).
+    /// 1 = the exact legacy serial path, no workers spawned. Any value
+    /// produces bitwise-identical outputs — tasks partition only
+    /// independent output slices, never a reduction.
+    pub threads: usize,
 }
 
 impl Default for ServingConfig {
@@ -304,6 +311,7 @@ impl Default for ServingConfig {
             replica_cmd: None,
             relay: true,
             pin_cores: false,
+            threads: 0,
         }
     }
 }

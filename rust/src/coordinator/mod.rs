@@ -503,6 +503,12 @@ fn engine_loop(engine: &Engine, cfg: &ServingConfig, shared: &Shared, metrics: &
         sched.run_tick(engine, metrics);
         metrics.set_gauge("net_inbox_depth", shared.inbox.len() as f64);
         metrics.set_gauge("net_inbox_hwm", shared.inbox.high_water() as f64);
+        // kernel-pool counters: sized threads, cumulative tasks run and
+        // worker busy time (the router sums gauges across replicas)
+        let (pool_workers, pool_tasks, pool_busy_ns) = engine.pool_stats();
+        metrics.set_gauge("pool_workers", pool_workers as f64);
+        metrics.set_gauge("pool_tasks", pool_tasks as f64);
+        metrics.set_gauge("pool_busy_ns", pool_busy_ns as f64);
     }
     // shutdown: wait out submitters that passed the shutdown check
     // before the flag landed (they are mid-push right now), take what

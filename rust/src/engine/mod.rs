@@ -154,6 +154,12 @@ pub struct Engine {
     /// `swap_blocks == 0` or on the legacy path): frozen sessions stage
     /// their sole-owner blocks here instead of recomputing on resume.
     swap: Option<std::cell::RefCell<SwapPool>>,
+    /// Persistent worker pool for intra-tick kernel parallelism. Owned
+    /// by the engine (workers join on drop) and installed into the
+    /// constructing thread's dispatch slot, so the kernels this engine
+    /// runs fan out over it; sized by `cfg.threads` (0 = allowed-cpu
+    /// mask divided across replicas, 1 = exact legacy serial path).
+    pool: std::sync::Arc<crate::runtime::pool::Pool>,
     next_seq: std::cell::Cell<u64>,
 }
 
@@ -183,6 +189,12 @@ impl Engine {
                 .block_bytes(cfg.kv_block_size.max(1));
             std::cell::RefCell::new(SwapPool::new(cfg.swap_blocks * block))
         });
+        // the engine runs on the thread that built it (the coordinator
+        // spawns one engine thread per replica and constructs there),
+        // so installing here routes this engine's kernels to its pool
+        let threads = crate::runtime::pool::resolve_threads(cfg.threads, cfg.replicas);
+        let pool = std::sync::Arc::new(crate::runtime::pool::Pool::new(threads, cfg.pin_cores));
+        crate::runtime::pool::install(&pool);
         Ok(Engine {
             rt,
             cfg,
@@ -192,6 +204,7 @@ impl Engine {
             membership_cache: std::cell::RefCell::new(Default::default()),
             paged,
             swap,
+            pool,
             next_seq: std::cell::Cell::new(0),
         })
     }
@@ -207,6 +220,12 @@ impl Engine {
     /// Short name of the active compute backend ("xla" | "ref").
     pub fn backend_name(&self) -> &'static str {
         self.rt.name()
+    }
+
+    /// Worker-pool counters for the metrics roll-up:
+    /// `(threads, tasks_completed, busy_ns)`.
+    pub fn pool_stats(&self) -> (usize, u64, u64) {
+        self.pool.stats()
     }
 
     // ------------------------------------------------------------------

@@ -117,6 +117,9 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // --pin-cores pins the engine tick + reactor threads to
         // dedicated cores (sched_setaffinity; Linux, off by default)
         pin_cores: args.bool("pin-cores"),
+        // --threads N sizes each engine's kernel worker pool; 0 = auto
+        // (allowed-cpu mask / replicas), 1 = exact legacy serial path
+        threads: args.usize("threads", 0)?,
     })
 }
 

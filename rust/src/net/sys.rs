@@ -228,8 +228,10 @@ static NEXT_CORE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsiz
 
 /// CPUs this thread may run on (its inherited affinity mask — pinning
 /// must stay inside a container/cgroup cpuset). Falls back to
-/// `available_parallelism` if the syscall fails; never empty.
-fn allowed_cpus() -> Vec<usize> {
+/// `available_parallelism` if the syscall fails; never empty. Public
+/// so pool sizing and bench fleet sizing see the same cgroup-aware
+/// count instead of raw `available_parallelism`.
+pub fn allowed_cpus() -> Vec<usize> {
     let mut mask = [0u64; CPU_SET_WORDS];
     if unsafe { sched_getaffinity(0, CPU_SET_WORDS * 8, mask.as_mut_ptr()) } == 0 {
         let cpus: Vec<usize> = (0..CPU_SET_WORDS * 64)

@@ -26,6 +26,7 @@
 //!   result arrives either as one tuple buffer or already untupled —
 //!   [`Executable::run`] normalizes both cases.
 
+pub mod pool;
 pub mod refkernels;
 pub mod reference;
 

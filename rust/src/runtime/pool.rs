@@ -1,0 +1,476 @@
+//! Persistent worker pool for intra-tick kernel parallelism.
+//!
+//! Hand-rolled in the repo style (no rayon/crossbeam): N-1 parked
+//! worker threads plus the submitting engine thread cooperate on one
+//! scoped job at a time. A job is a closure over borrowed slices and a
+//! task count; [`Pool::run`] does not return until every task has
+//! finished, which is what makes handing workers a lifetime-erased
+//! borrow sound.
+//!
+//! Ownership contract: the [`Engine`](crate::engine::Engine) owns its
+//! pool (`Arc<Pool>`, one per engine thread) and *installs* a `Weak`
+//! alias into this thread's local slot. Kernels dispatch through the
+//! module-level [`run`]/[`par_ranges`] helpers, which upgrade the alias
+//! — when the engine (and its pool) is gone, or when the caller is
+//! already inside a pool task (workers never install a pool; the
+//! submitter sets a re-entrancy flag), the helpers degrade to the exact
+//! serial loop. Dropping the pool parks nothing: `Drop` flags shutdown,
+//! wakes every worker and joins them.
+//!
+//! Partitioning invariant (see DESIGN.md): tasks split only over
+//! independent *output* slices — matmul row tiles and column panels,
+//! head panels, paged (head, query) rows — never over a reduction
+//! axis, so each output element is accumulated by one task in the same
+//! scalar order at every pool size and the results are bitwise
+//! identical to `--threads 1`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Instant;
+
+/// One in-flight scoped job: a lifetime-erased borrow of the caller's
+/// closure plus claim/drain cursors. The borrow is only dereferenced
+/// between job post and `pending == 0`, and `Pool::run` blocks until
+/// then, so the erased lifetime never outlives the real one.
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    n: usize,
+    next: usize,
+    pending: usize,
+    panicked: bool,
+}
+
+struct Slot {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Inner {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+    tasks: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+pub struct Pool {
+    inner: Arc<Inner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with `threads` compute threads total: `threads - 1` parked
+    /// workers plus the submitting thread, which participates in every
+    /// job. `threads <= 1` spawns nothing and [`Pool::run`] is the
+    /// plain serial loop. With `pin`, each worker pins itself to the
+    /// next allowed core (Linux), round-robining the same cursor as the
+    /// engine/reactor threads.
+    pub fn new(threads: usize, pin: bool) -> Pool {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            slot: Mutex::new(Slot { job: None, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            tasks: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+        });
+        let handles = (0..threads - 1)
+            .map(|wi| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("chai-pool-{wi}"))
+                    .spawn(move || worker(&inner, pin))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { inner, handles, threads }
+    }
+
+    /// Total compute threads (workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `(threads, tasks_completed, busy_ns)` — fed to the
+    /// `pool_{workers,tasks,busy_ns}` gauges.
+    pub fn stats(&self) -> (usize, u64, u64) {
+        (
+            self.threads,
+            self.inner.tasks.load(Ordering::Relaxed),
+            self.inner.busy_ns.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the pool and the calling
+    /// thread, returning once ALL tasks completed. Tasks must write
+    /// disjoint data. Single submitter per pool (the owning engine
+    /// thread); nested calls must go through the module-level [`run`],
+    /// which degrades them to serial instead of deadlocking.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // Erase the borrow's lifetime; run() blocks until pending == 0,
+        // so no worker touches `f` after this frame unwinds.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let mut slot = self.inner.slot.lock().unwrap();
+        debug_assert!(slot.job.is_none(), "one scoped job at a time");
+        slot.job = Some(Job { f: f_static, n, next: 0, pending: n, panicked: false });
+        self.inner.work.notify_all();
+        // participate: claim tasks alongside the workers
+        loop {
+            let i = match slot.job.as_mut() {
+                Some(j) if j.next < j.n => {
+                    let i = j.next;
+                    j.next += 1;
+                    i
+                }
+                _ => break,
+            };
+            drop(slot);
+            let t0 = Instant::now();
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
+            self.inner.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.inner.tasks.fetch_add(1, Ordering::Relaxed);
+            slot = self.inner.slot.lock().unwrap();
+            let j = slot.job.as_mut().expect("job present while tasks pending");
+            j.panicked |= !ok;
+            j.pending -= 1;
+            if j.pending == 0 {
+                break;
+            }
+        }
+        // drain: workers may still be running claimed tasks
+        let panicked = loop {
+            match &slot.job {
+                Some(j) if j.pending > 0 => slot = self.inner.done.wait(slot).unwrap(),
+                Some(j) => {
+                    let p = j.panicked;
+                    slot.job = None;
+                    break p;
+                }
+                None => break false,
+            }
+        };
+        drop(slot);
+        if panicked {
+            panic!("pool task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.inner.slot.lock().unwrap();
+            slot.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(inner: &Inner, pin: bool) {
+    #[cfg(target_os = "linux")]
+    if pin {
+        let _ = crate::net::sys::pin_next_core();
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = pin;
+    let mut slot = inner.slot.lock().unwrap();
+    loop {
+        if slot.shutdown {
+            return;
+        }
+        let claim = match slot.job.as_mut() {
+            Some(j) if j.next < j.n => {
+                let i = j.next;
+                j.next += 1;
+                Some((j.f, i))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((f, i)) => {
+                drop(slot);
+                let t0 = Instant::now();
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))).is_ok();
+                inner.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                inner.tasks.fetch_add(1, Ordering::Relaxed);
+                slot = inner.slot.lock().unwrap();
+                let j = slot.job.as_mut().expect("job present while tasks pending");
+                j.panicked |= !ok;
+                j.pending -= 1;
+                if j.pending == 0 {
+                    inner.done.notify_all();
+                }
+            }
+            None => slot = inner.work.wait(slot).unwrap(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local dispatch (what the kernels call)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: RefCell<Weak<Pool>> = const { RefCell::new(Weak::new()) };
+    static IN_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Alias `pool` as this thread's kernel-dispatch pool (non-owning; the
+/// caller keeps the `Arc` — the engine stores it so pool lifetime ==
+/// engine lifetime).
+pub fn install(pool: &Arc<Pool>) {
+    CURRENT.with(|c| *c.borrow_mut() = Arc::downgrade(pool));
+}
+
+fn installed() -> Option<Arc<Pool>> {
+    CURRENT.with(|c| c.borrow().upgrade())
+}
+
+/// Compute threads available to kernel dispatch on this thread (1 when
+/// no pool is installed or when already inside a pool task).
+pub fn threads() -> usize {
+    if IN_JOB.with(|f| f.get()) {
+        return 1;
+    }
+    installed().map(|p| p.threads()).unwrap_or(1)
+}
+
+/// Dispatch `n` tasks through this thread's installed pool, or run them
+/// serially (no pool, pool of 1, or nested inside another task). Tasks
+/// must write disjoint data; results are bitwise independent of the
+/// pool size because task boundaries only partition output elements.
+pub fn run(n: usize, f: impl Fn(usize) + Sync) {
+    let pool = if IN_JOB.with(|g| g.get()) { None } else { installed() };
+    match pool {
+        Some(p) if p.threads() > 1 && n > 1 => {
+            struct Reset;
+            impl Drop for Reset {
+                fn drop(&mut self) {
+                    IN_JOB.with(|g| g.set(false));
+                }
+            }
+            IN_JOB.with(|g| g.set(true));
+            let _reset = Reset;
+            p.run(n, &f);
+        }
+        _ => {
+            for i in 0..n {
+                f(i);
+            }
+        }
+    }
+}
+
+/// Split `items` into contiguous ranges of at least `min_per_task`
+/// items and run `f(start, end)` on each through the pool. The range
+/// boundaries depend only on the pool size, never the data, and each
+/// output element belongs to exactly one range.
+pub fn par_ranges(items: usize, min_per_task: usize, f: impl Fn(usize, usize) + Sync) {
+    if items == 0 {
+        return;
+    }
+    let t = threads();
+    let max_tasks = (items / min_per_task.max(1)).max(1);
+    let tasks = max_tasks.min(t * 2).min(items);
+    if tasks <= 1 {
+        f(0, items);
+        return;
+    }
+    let per = items.div_ceil(tasks);
+    let tasks = items.div_ceil(per);
+    run(tasks, |i| {
+        let s = i * per;
+        let e = (s + per).min(items);
+        if s < e {
+            f(s, e);
+        }
+    });
+}
+
+/// Raw mutable base pointer for scoped parallel writes into DISJOINT
+/// regions of one output buffer (matmul tiles, head panels, per-row
+/// attention outputs). Sound because [`Pool::run`] joins before
+/// returning — the pointee outlives every task — and because callers
+/// partition the buffer so no element is written by two tasks.
+#[derive(Clone, Copy)]
+pub struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    pub fn new(s: &mut [f32]) -> SendPtr {
+        SendPtr(s.as_mut_ptr())
+    }
+
+    /// # Safety
+    /// `start..start + len` must be in bounds of the original slice and
+    /// disjoint from every other task's range.
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &'static mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sizing
+// ---------------------------------------------------------------------------
+
+/// CPUs this process may run on: the affinity/cgroup-aware mask on
+/// Linux (see `net::sys::allowed_cpus`), `available_parallelism`
+/// elsewhere. Never 0.
+pub fn allowed_cpu_count() -> usize {
+    #[cfg(target_os = "linux")]
+    {
+        crate::net::sys::allowed_cpus().len().max(1)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Pool size for an engine: `--threads N` wins, then the `CHAI_THREADS`
+/// env override (how CI shakes races under `cargo test`, which has no
+/// such flag), then the allowed-cpu mask divided across data-parallel
+/// replicas so an N-replica fleet does not oversubscribe the box.
+pub fn resolve_threads(requested: usize, replicas: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(s) = std::env::var("CHAI_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    (allowed_cpu_count() / replicas.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let pool = Pool::new(threads, false);
+            let n = 100;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}: every task exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn scoped_tasks_write_borrowed_slices() {
+        let pool = Pool::new(4, false);
+        let mut out = vec![0.0f32; 64];
+        let p = SendPtr::new(&mut out);
+        pool.run(8, &|i| {
+            let chunk = unsafe { p.slice(i * 8, 8) };
+            for (j, e) in chunk.iter_mut().enumerate() {
+                *e = (i * 8 + j) as f32;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as f32));
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_workers() {
+        let pool = Pool::new(3, false);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(7, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 350);
+        let (t, tasks, _) = pool.stats();
+        assert_eq!(t, 3);
+        assert_eq!(tasks, 350);
+    }
+
+    #[test]
+    fn panicking_task_propagates_without_hanging() {
+        let pool = Pool::new(4, false);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 11 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        // the pool survives and accepts the next job
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn thread_local_dispatch_degrades_serially() {
+        // no pool installed: run() is the serial loop
+        let hits = AtomicUsize::new(0);
+        run(5, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        // installed pool: parallel, and nested calls degrade to serial
+        // instead of deadlocking on the single job slot
+        let pool = Arc::new(Pool::new(4, false));
+        install(&pool);
+        let outer = AtomicUsize::new(0);
+        run(8, |_| {
+            run(8, |_| {
+                outer.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 64);
+        drop(pool);
+        // weak alias expired: back to serial
+        assert_eq!(threads(), 1);
+    }
+
+    #[test]
+    fn par_ranges_covers_exactly_once() {
+        let pool = Arc::new(Pool::new(3, false));
+        install(&pool);
+        let n = 1001;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(n, 16, |s, e| {
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn resolve_threads_precedence() {
+        assert_eq!(resolve_threads(5, 1), 5);
+        assert_eq!(resolve_threads(1, 8), 1);
+        // auto divides the allowed mask across replicas, floor 1
+        let auto = resolve_threads(0, usize::MAX);
+        assert_eq!(auto, 1);
+    }
+}

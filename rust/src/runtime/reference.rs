@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::pool;
 use super::refkernels as rk;
 use super::{Backend, ClusterAssignment, In, Out, PagedDecodeRow};
 use crate::config::{ArtifactSpec, Manifest, ModelConfig, TensorSpec};
@@ -37,8 +38,45 @@ pub struct RefBackend {
     /// `Arc`'d so data-parallel replicas (the router's N engines) share
     /// one physical copy of the model weights
     weights: std::sync::Arc<BTreeMap<String, Tensor>>,
+    /// panel-major repacks of every projection matrix (see
+    /// [`rk::pack_b`]), built once at load so the per-token matmuls
+    /// stream their B operand contiguously; shared across replicas
+    /// like `weights`
+    packed: std::sync::Arc<BTreeMap<String, rk::PackedB>>,
+    /// tick-lifetime scratch buffers for the forward walk (engine
+    /// thread only — pool workers never touch the arena)
+    scratch: RefCell<Scratch>,
     /// cumulative executions per artifact (parity with `Runtime`)
     pub exec_counts: RefCell<BTreeMap<String, u64>>,
+}
+
+/// A free-list of `Vec<f32>` scratch buffers. The forward walks
+/// allocate the same handful of per-layer intermediates (`xn`, `q`,
+/// `k_new`, `v_new`, attention output, MLP gate/up) every layer of
+/// every tick; recycling them turns that steady-state allocator
+/// traffic into two `Vec` pops. `take` zero-fills, so a recycled
+/// buffer is indistinguishable from a fresh one (the `_into` kernels
+/// additionally overwrite every element they produce).
+#[derive(Default)]
+struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    fn put(&mut self, v: Vec<f32>) {
+        // a forward walk holds well under this many buffers at once;
+        // the cap only guards against unbounded growth on odd paths
+        if self.free.len() < 32 {
+            self.free.push(v);
+        }
+    }
 }
 
 /// The shareable half of a [`RefBackend`]: manifest + `Arc`'d weights.
@@ -51,6 +89,7 @@ pub struct RefBackend {
 pub struct SharedRefModel {
     manifest: Manifest,
     weights: std::sync::Arc<BTreeMap<String, Tensor>>,
+    packed: std::sync::Arc<BTreeMap<String, rk::PackedB>>,
 }
 
 impl SharedRefModel {
@@ -58,7 +97,7 @@ impl SharedRefModel {
     /// seeded toy model otherwise) and wrap for sharing.
     pub fn load_or_toy(dir: &Path, seed: u64) -> Result<SharedRefModel> {
         let be = RefBackend::load_or_toy(dir, seed)?;
-        Ok(SharedRefModel { manifest: be.manifest, weights: be.weights })
+        Ok(SharedRefModel { manifest: be.manifest, weights: be.weights, packed: be.packed })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -135,9 +174,12 @@ impl RefBackend {
         if manifest.k_list.iter().any(|&k| k == 0 || k > m.n_heads) {
             bail!("manifest k_list {:?} invalid for H={}", manifest.k_list, m.n_heads);
         }
+        let packed = pack_projection_weights(m, &weights)?;
         Ok(RefBackend {
             manifest,
             weights: std::sync::Arc::new(weights),
+            packed: std::sync::Arc::new(packed),
+            scratch: RefCell::new(Scratch::default()),
             exec_counts: RefCell::new(BTreeMap::new()),
         })
     }
@@ -148,6 +190,8 @@ impl RefBackend {
         RefBackend {
             manifest: model.manifest.clone(),
             weights: model.weights.clone(),
+            packed: model.packed.clone(),
+            scratch: RefCell::new(Scratch::default()),
             exec_counts: RefCell::new(BTreeMap::new()),
         }
     }
@@ -158,6 +202,52 @@ impl RefBackend {
             .ok_or_else(|| anyhow!("weight {name} missing"))?
             .as_f32()
     }
+
+    fn wp(&self, name: &str) -> Result<&rk::PackedB> {
+        self.packed
+            .get(name)
+            .ok_or_else(|| anyhow!("packed panels for weight {name} missing"))
+    }
+
+    fn take(&self, len: usize) -> Vec<f32> {
+        self.scratch.borrow_mut().take(len)
+    }
+
+    fn put(&self, buf: Vec<f32>) {
+        self.scratch.borrow_mut().put(buf)
+    }
+}
+
+/// Repack every matmul right-hand side once at weight load. Q/K/V pack
+/// with one panel per head (`panel = head_dim`) so the per-head
+/// projections stream each head's column block contiguously; the wide
+/// matmuls (`wo`, MLP, `lm_head`) use the cache-blocked [`rk::PANEL`].
+fn pack_projection_weights(
+    m: &ModelConfig,
+    weights: &BTreeMap<String, Tensor>,
+) -> Result<BTreeMap<String, rk::PackedB>> {
+    let w = |name: &str| -> Result<&[f32]> {
+        weights.get(name).ok_or_else(|| anyhow!("weight {name} missing"))?.as_f32()
+    };
+    let (d, f, hd) = (m.d_model, m.d_ff, m.n_heads * m.head_dim);
+    let mut packed = BTreeMap::new();
+    packed.insert("lm_head".to_string(), rk::pack_b(w("lm_head")?, d, m.vocab_size, rk::PANEL));
+    for i in 0..m.n_layers {
+        for name in [format!("l{i}.wq"), format!("l{i}.wk"), format!("l{i}.wv")] {
+            let p = rk::pack_b(w(&name)?, d, hd, m.head_dim);
+            packed.insert(name, p);
+        }
+        for (name, kk, n) in [
+            (format!("l{i}.wo"), hd, d),
+            (format!("l{i}.wg"), d, f),
+            (format!("l{i}.wu"), d, f),
+            (format!("l{i}.wd"), f, d),
+        ] {
+            let p = rk::pack_b(w(&name)?, kk, n, rk::PANEL);
+            packed.insert(name, p);
+        }
+    }
+    Ok(packed)
 }
 
 impl Backend for RefBackend {
@@ -256,6 +346,37 @@ impl Backend for RefBackend {
                     for &ri in &members {
                         out[ri] = Some(Err(anyhow!("{msg}")));
                     }
+                }
+            }
+        }
+        // stack the remaining independent rows: cluster-coherent rows
+        // fuse into one multi-row forward (bit-identical per row, the
+        // attention fanned across the worker pool); a batch that fails
+        // validation falls through to the per-row path below, which
+        // also isolates whichever row was at fault
+        let mut remaining: Vec<usize> = (0..rows.len()).filter(|&ri| out[ri].is_none()).collect();
+        while !remaining.is_empty() {
+            let lead = rows[remaining[0]].clusters;
+            let (batch, rest): (Vec<usize>, Vec<usize>) =
+                remaining.into_iter().partition(|&ri| match (lead, rows[ri].clusters) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => a.membership == b.membership && a.reps == b.reps,
+                    _ => false,
+                });
+            remaining = rest;
+            if batch.len() < 2 {
+                continue;
+            }
+            let specs: Vec<(u64, i32, usize)> =
+                batch.iter().map(|&ri| (rows[ri].seq, rows[ri].token, rows[ri].pos)).collect();
+            if let Ok(per_row) = self.fused_forward(store, &specs, lead) {
+                *self
+                    .exec_counts
+                    .borrow_mut()
+                    .entry("decode_fused_groups".to_string())
+                    .or_insert(0) += 1;
+                for (&ri, logits) in batch.iter().zip(per_row) {
+                    out[ri] = Some(Ok(Tensor::f32(vec![v], logits)));
                 }
             }
         }
@@ -468,39 +589,54 @@ impl<'a> Ctx<'a> {
     }
 
     fn unembed(&self, x: &[f32], t: usize) -> Result<Vec<f32>> {
-        let xn = rk::rmsnorm(x, self.be.w("final_norm")?, t, self.d, self.eps);
-        Ok(rk::matmul(&xn, self.be.w("lm_head")?, t, self.d, self.v))
+        let mut xn = self.be.take(t * self.d);
+        rk::rmsnorm_into(x, self.be.w("final_norm")?, t, self.d, self.eps, &mut xn);
+        let logits = rk::matmul_packed(&xn, self.be.wp("lm_head")?, t);
+        self.be.put(xn);
+        Ok(logits)
     }
 
     fn residual_mlp(&self, x: &mut [f32], i: usize, t: usize) -> Result<()> {
-        let xn2 = rk::rmsnorm(x, self.be.w(&format!("l{i}.mlp_norm"))?, t, self.d, self.eps);
-        let mlp = rk::swiglu(
+        let be = self.be;
+        let mut xn2 = be.take(t * self.d);
+        rk::rmsnorm_into(x, be.w(&format!("l{i}.mlp_norm"))?, t, self.d, self.eps, &mut xn2);
+        let mut gate = be.take(t * self.f);
+        let mut up = be.take(t * self.f);
+        let mut mlp = be.take(t * self.d);
+        rk::swiglu_packed_into(
             &xn2,
-            self.be.w(&format!("l{i}.wg"))?,
-            self.be.w(&format!("l{i}.wu"))?,
-            self.be.w(&format!("l{i}.wd"))?,
+            be.wp(&format!("l{i}.wg"))?,
+            be.wp(&format!("l{i}.wu"))?,
+            be.wp(&format!("l{i}.wd"))?,
             t,
             self.d,
             self.f,
+            &mut gate,
+            &mut up,
+            &mut mlp,
         );
         for (xe, me) in x.iter_mut().zip(&mlp) {
             *xe += me;
         }
+        be.put(xn2);
+        be.put(gate);
+        be.put(up);
+        be.put(mlp);
         Ok(())
     }
 
     fn add_attn_out(&self, x: &mut [f32], i: usize, out: &[f32], g: usize, t: usize) -> Result<()> {
         debug_assert_eq!(g, self.h);
-        let proj = rk::matmul(
-            &rk::unheads(out, g, t, self.dh),
-            self.be.w(&format!("l{i}.wo"))?,
-            t,
-            g * self.dh,
-            self.d,
-        );
+        let be = self.be;
+        let mut heads = be.take(t * g * self.dh);
+        rk::unheads_into(out, g, t, self.dh, &mut heads);
+        let mut proj = be.take(t * self.d);
+        rk::matmul_packed_into(&heads, be.wp(&format!("l{i}.wo"))?, t, &mut proj);
         for (xe, pe) in x.iter_mut().zip(&proj) {
             *xe += pe;
         }
+        be.put(heads);
+        be.put(proj);
         Ok(())
     }
 
@@ -1017,19 +1153,48 @@ impl RefBackend {
         let mut x = c.embed(tokens)?;
         for i in 0..c.l {
             let (h, dh, d) = (c.h, c.dh, c.d);
-            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, tq, d, c.eps);
+            let mut xn = self.take(tq * d);
+            rk::rmsnorm_into(&x, self.w(&format!("l{i}.attn_norm"))?, tq, d, c.eps, &mut xn);
             let k_heads: &[usize] = match clusters {
                 Some(cl) => &cl.reps[i],
                 None => &all,
             };
             let gk = k_heads.len();
-            let mut q =
-                rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, k_heads, tq, d, h, dh);
+            let mut q = self.take(gk * tq * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wq"))?,
+                k_heads,
+                tq,
+                d,
+                h,
+                dh,
+                &mut q,
+            );
             rk::rope(&mut q, &positions, gk, tq, dh, c.theta);
-            let mut k_new =
-                rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, k_heads, tq, d, h, dh);
+            let mut k_new = self.take(gk * tq * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wk"))?,
+                k_heads,
+                tq,
+                d,
+                h,
+                dh,
+                &mut k_new,
+            );
             rk::rope(&mut k_new, &positions, gk, tq, dh, c.theta);
-            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, tq, d, h, dh);
+            let mut v_new = self.take(h * tq * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wv"))?,
+                &all,
+                tq,
+                d,
+                h,
+                dh,
+                &mut v_new,
+            );
             let k_base = layout.k_layer_offset(i, b);
             let v_base = layout.v_layer_offset(i, b);
             if write_rows {
@@ -1078,6 +1243,10 @@ impl RefBackend {
             drop(slabs);
             c.add_attn_out(&mut x, i, &out, h, tq)?;
             c.residual_mlp(&mut x, i, tq)?;
+            self.put(xn);
+            self.put(q);
+            self.put(k_new);
+            self.put(v_new);
         }
         c.unembed(&x[(tq - 1) * c.d..], 1)
     }
@@ -1170,18 +1339,48 @@ impl RefBackend {
         let mut x = c.embed(&tokens)?;
         for i in 0..c.l {
             let (h, dh, d) = (c.h, c.dh, c.d);
-            let xn = rk::rmsnorm(&x, self.w(&format!("l{i}.attn_norm"))?, n, d, c.eps);
+            let mut xn = self.take(n * d);
+            rk::rmsnorm_into(&x, self.w(&format!("l{i}.attn_norm"))?, n, d, c.eps, &mut xn);
             let k_heads: &[usize] = match clusters {
                 Some(cl) => &cl.reps[i],
                 None => &all,
             };
             let gk = k_heads.len();
-            let mut q = rk::project_heads(&xn, self.w(&format!("l{i}.wq"))?, k_heads, n, d, h, dh);
+            let mut q = self.take(gk * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wq"))?,
+                k_heads,
+                n,
+                d,
+                h,
+                dh,
+                &mut q,
+            );
             rk::rope(&mut q, &positions, gk, n, dh, c.theta);
-            let mut k_new =
-                rk::project_heads(&xn, self.w(&format!("l{i}.wk"))?, k_heads, n, d, h, dh);
+            let mut k_new = self.take(gk * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wk"))?,
+                k_heads,
+                n,
+                d,
+                h,
+                dh,
+                &mut k_new,
+            );
             rk::rope(&mut k_new, &positions, gk, n, dh, c.theta);
-            let v_new = rk::project_heads(&xn, self.w(&format!("l{i}.wv"))?, &all, n, d, h, dh);
+            let mut v_new = self.take(h * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wv"))?,
+                &all,
+                n,
+                d,
+                h,
+                dh,
+                &mut v_new,
+            );
             let k_base = layout.k_layer_offset(i, b);
             let v_base = layout.v_layer_offset(i, b);
             for ri in 0..n {
@@ -1227,47 +1426,258 @@ impl RefBackend {
                 prefix_len,
             );
             drop(pslabs);
-            // phase 2: per-row private suffix, then the LSE merge
-            let mut merged = vec![0.0f32; h * n * dh];
-            for ri in 0..n {
-                let slen = positions[ri] + 1 - prefix_len;
-                let sslabs: Vec<&[f32]> =
-                    tables[ri][pb..].iter().map(|&bid| store.block_data(bid)).collect();
-                let mut qr = vec![0.0f32; gk * dh];
-                for gi in 0..gk {
-                    qr[gi * dh..(gi + 1) * dh]
-                        .copy_from_slice(&q[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
-                }
-                let (ew_s, m_s, s_s) =
-                    rk::paged_relay_scores(&qr, &sslabs, k_base, gk, 1, dh, b, slen);
-                let ew_s_owned;
-                let ew_s_h: &[f32] = match clusters {
-                    None => &ew_s,
-                    Some(cl) => {
-                        ew_s_owned = broadcast_expw(&ew_s, &cl.membership[i], h, 1, slen);
-                        &ew_s_owned
+            // phase 2: per-row private suffix, then the LSE merge.
+            // Rows are independent — each reads only its own tail
+            // blocks and writes only its own `merged` rows — so they
+            // fan out across the pool; every per-row computation is
+            // the serial loop body verbatim, so the result is bitwise
+            // invariant under the pool size.
+            let mut merged = self.take(h * n * dh);
+            {
+                let mptr = pool::SendPtr::new(&mut merged);
+                let store_ro: &PagedKv = store;
+                let (q_ref, tables_ref, positions_ref) = (&q, &tables, &positions);
+                let (o_p_ref, m_p_ref, s_p_ref) = (&o_p, &m_p, &s_p);
+                let membership: Option<&[usize]> =
+                    clusters.map(|cl| cl.membership[i].as_slice());
+                pool::run(n, |ri| {
+                    let slen = positions_ref[ri] + 1 - prefix_len;
+                    let sslabs: Vec<&[f32]> = tables_ref[ri][pb..]
+                        .iter()
+                        .map(|&bid| store_ro.block_data(bid))
+                        .collect();
+                    let mut qr = vec![0.0f32; gk * dh];
+                    for gi in 0..gk {
+                        qr[gi * dh..(gi + 1) * dh]
+                            .copy_from_slice(&q_ref[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
                     }
-                };
-                let o_s = rk::paged_attn_av(ew_s_h, &sslabs, v_base, h, 1, dh, b, slen - 1, slen);
-                for hh in 0..h {
-                    let g = match clusters {
-                        Some(cl) => cl.membership[i][hh],
-                        None => hh,
+                    let (ew_s, m_s, s_s) =
+                        rk::paged_relay_scores(&qr, &sslabs, k_base, gk, 1, dh, b, slen);
+                    let ew_s_owned;
+                    let ew_s_h: &[f32] = match membership {
+                        None => &ew_s,
+                        Some(mem) => {
+                            ew_s_owned = broadcast_expw(&ew_s, mem, h, 1, slen);
+                            &ew_s_owned
+                        }
                     };
-                    let dst = (hh * n + ri) * dh;
-                    rk::relay_merge(
-                        &o_p[dst..dst + dh],
-                        m_p[g * n + ri],
-                        s_p[g * n + ri],
-                        &o_s[hh * dh..(hh + 1) * dh],
-                        m_s[g],
-                        s_s[g],
-                        &mut merged[dst..dst + dh],
-                    );
-                }
+                    let o_s =
+                        rk::paged_attn_av(ew_s_h, &sslabs, v_base, h, 1, dh, b, slen - 1, slen);
+                    for hh in 0..h {
+                        let g = match membership {
+                            Some(mem) => mem[hh],
+                            None => hh,
+                        };
+                        let dst = (hh * n + ri) * dh;
+                        let mrow = unsafe { mptr.slice(dst, dh) };
+                        rk::relay_merge(
+                            &o_p_ref[dst..dst + dh],
+                            m_p_ref[g * n + ri],
+                            s_p_ref[g * n + ri],
+                            &o_s[hh * dh..(hh + 1) * dh],
+                            m_s[g],
+                            s_s[g],
+                            mrow,
+                        );
+                    }
+                });
             }
             c.add_attn_out(&mut x, i, &merged, h, n)?;
             c.residual_mlp(&mut x, i, n)?;
+            self.put(xn);
+            self.put(q);
+            self.put(k_new);
+            self.put(v_new);
+            self.put(merged);
+        }
+        let logits = c.unembed(&x, n)?;
+        Ok((0..n).map(|ri| logits[ri * c.v..(ri + 1) * c.v].to_vec()).collect())
+    }
+
+    /// Fused decode for independent (non-relay) rows that share a
+    /// cluster assignment: the whole tick's single-token rows run the
+    /// forward stacked (`t = n`) so the projection / MLP / unembed
+    /// matmuls see one tall multiplicand instead of `n` degenerate
+    /// one-row ones, and each layer's per-row attention — the only op
+    /// that is NOT row-independent in shape — fans out across the
+    /// worker pool, one task per row over that row's own block table.
+    ///
+    /// Every non-attention op is row-independent and each row's
+    /// attention call is the single-row [`Self::paged_forward`] call
+    /// verbatim (same slabs, same `tq = 1` kernel arguments), so the
+    /// per-row logits are bit-for-bit the sequential result at every
+    /// pool size, including `--threads 1`. Like the relay path, all
+    /// K/V appends land in sole-owned post-CoW tail blocks before any
+    /// attention reads, so cross-row write order is immaterial.
+    fn fused_forward(
+        &self,
+        store: &mut PagedKv,
+        rows: &[(u64, i32, usize)],
+        clusters: Option<&ClusterAssignment>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let c = Ctx::new(self);
+        let n = rows.len();
+        let b = store.block_size;
+        if n < 2 {
+            bail!("fused decode needs at least 2 rows, got {n}");
+        }
+        let mut layout = None;
+        let mut tables: Vec<Vec<BlockId>> = Vec::with_capacity(n);
+        for &(seq, _tok, pos) in rows {
+            let t = store
+                .table(seq)
+                .ok_or_else(|| anyhow!("unknown paged sequence {seq}"))?;
+            if pos != t.len {
+                bail!("fused row at position {pos} but sequence {seq} has length {}", t.len);
+            }
+            if t.blocks.len() * b < t.len + 1 {
+                bail!("block table of sequence {seq} has no room for position {pos}");
+            }
+            match &layout {
+                None => layout = Some(t.layout.clone()),
+                Some(l) => {
+                    if l.k_heads != t.layout.k_heads {
+                        bail!("fused decode batch mixes table layouts");
+                    }
+                }
+            }
+            tables.push(t.blocks.clone());
+        }
+        let layout = layout.expect("n >= 2");
+        if layout.n_layers != c.l || layout.n_heads != c.h || layout.head_dim != c.dh {
+            bail!("table layout does not match the model: {layout:?}");
+        }
+        match clusters {
+            Some(cl) => {
+                for (i, r) in cl.reps.iter().enumerate() {
+                    if r.len() != layout.k_heads[i] {
+                        bail!(
+                            "layer {i}: {} representatives for a {}-panel table",
+                            r.len(),
+                            layout.k_heads[i]
+                        );
+                    }
+                }
+            }
+            None => {
+                if layout.k_heads.iter().any(|&k| k != c.h) {
+                    bail!("dense paged kernel on a clustered table");
+                }
+            }
+        }
+        let positions: Vec<usize> = rows.iter().map(|r| r.2).collect();
+        let tokens: Vec<i32> = rows.iter().map(|r| r.1).collect();
+        let all: Vec<usize> = (0..c.h).collect();
+        let mut x = c.embed(&tokens)?;
+        for i in 0..c.l {
+            let (h, dh, d) = (c.h, c.dh, c.d);
+            let mut xn = self.take(n * d);
+            rk::rmsnorm_into(&x, self.w(&format!("l{i}.attn_norm"))?, n, d, c.eps, &mut xn);
+            let k_heads: &[usize] = match clusters {
+                Some(cl) => &cl.reps[i],
+                None => &all,
+            };
+            let gk = k_heads.len();
+            let mut q = self.take(gk * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wq"))?,
+                k_heads,
+                n,
+                d,
+                h,
+                dh,
+                &mut q,
+            );
+            rk::rope(&mut q, &positions, gk, n, dh, c.theta);
+            let mut k_new = self.take(gk * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wk"))?,
+                k_heads,
+                n,
+                d,
+                h,
+                dh,
+                &mut k_new,
+            );
+            rk::rope(&mut k_new, &positions, gk, n, dh, c.theta);
+            let mut v_new = self.take(h * n * dh);
+            rk::project_heads_packed_into(
+                &xn,
+                self.wp(&format!("l{i}.wv"))?,
+                &all,
+                n,
+                d,
+                h,
+                dh,
+                &mut v_new,
+            );
+            let k_base = layout.k_layer_offset(i, b);
+            let v_base = layout.v_layer_offset(i, b);
+            // append every row's new K,V before any attention reads
+            for ri in 0..n {
+                let p = positions[ri];
+                let bid = tables[ri][p / b];
+                if store.block_hash(bid).is_some() {
+                    continue;
+                }
+                let off = p % b;
+                let slab = store.block_data_mut(bid);
+                for gi in 0..gk {
+                    let dst = k_base + (gi * b + off) * dh;
+                    slab[dst..dst + dh]
+                        .copy_from_slice(&k_new[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
+                }
+                for hh in 0..h {
+                    let dst = v_base + (hh * b + off) * dh;
+                    slab[dst..dst + dh]
+                        .copy_from_slice(&v_new[(hh * n + ri) * dh..(hh * n + ri) * dh + dh]);
+                }
+            }
+            // per-row attention, one pool task per row: each reads only
+            // its own table's blocks and writes only its own rows of
+            // `attn`, in exactly the single-row kernel call shape
+            let mut attn = self.take(h * n * dh);
+            {
+                let aptr = pool::SendPtr::new(&mut attn);
+                let store_ro: &PagedKv = store;
+                let (q_ref, tables_ref, positions_ref) = (&q, &tables, &positions);
+                let membership: Option<&[usize]> =
+                    clusters.map(|cl| cl.membership[i].as_slice());
+                pool::run(n, |ri| {
+                    let pos = positions_ref[ri];
+                    let len_r = pos + 1;
+                    let slabs: Vec<&[f32]> = tables_ref[ri]
+                        .iter()
+                        .map(|&bid| store_ro.block_data(bid))
+                        .collect();
+                    let mut qr = vec![0.0f32; gk * dh];
+                    for gi in 0..gk {
+                        qr[gi * dh..(gi + 1) * dh]
+                            .copy_from_slice(&q_ref[(gi * n + ri) * dh..(gi * n + ri) * dh + dh]);
+                    }
+                    let out_r = match membership {
+                        None => rk::paged_mha_attention(
+                            &qr, &slabs, k_base, v_base, h, 1, dh, b, pos, len_r,
+                        ),
+                        Some(mem) => rk::paged_clustered_attention(
+                            &qr, &slabs, k_base, v_base, mem, gk, h, 1, dh, b, pos, len_r,
+                        ),
+                    };
+                    for hh in 0..h {
+                        let dst = unsafe { aptr.slice((hh * n + ri) * dh, dh) };
+                        dst.copy_from_slice(&out_r[hh * dh..(hh + 1) * dh]);
+                    }
+                });
+            }
+            c.add_attn_out(&mut x, i, &attn, h, n)?;
+            c.residual_mlp(&mut x, i, n)?;
+            self.put(xn);
+            self.put(q);
+            self.put(k_new);
+            self.put(v_new);
+            self.put(attn);
         }
         let logits = c.unembed(&x, n)?;
         Ok((0..n).map(|ri| logits[ri * c.v..(ri + 1) * c.v].to_vec()).collect())

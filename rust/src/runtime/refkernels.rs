@@ -18,8 +18,162 @@
 //! Masking: query i sits at absolute position `q_offset + i`; key j at
 //! position j. Allowed iff `j <= q_offset + i && j < length`.
 
+use super::pool;
+use super::pool::SendPtr;
+
 /// Additive mask value (mirrors `ref.NEG_INF`).
 pub const NEG_INF: f32 = -1e9;
+
+// ---------------------------------------------------------------------------
+// Parallel partitioning helpers
+//
+// Every kernel below splits work ONLY over independent output slices —
+// matmul row tiles and column panels, head panels, (head, query) rows —
+// never over the k-reduction, so each output element is produced by one
+// task accumulating in the same scalar order as the serial loop and the
+// results are bitwise identical at every pool size (tests/parallel.rs).
+// Thresholds gate dispatch on work size so toy decode shapes skip the
+// pool; they tune only WHERE work runs, never what is computed.
+// ---------------------------------------------------------------------------
+
+/// Minimum per-task work (≈ multiply-adds) worth a pool dispatch.
+const PAR_MIN_FLOPS: usize = 8 * 1024;
+
+/// Contiguous `i`-th of `parts` slices of `0..len` (balanced, in order).
+#[inline]
+fn split(len: usize, parts: usize, i: usize) -> (usize, usize) {
+    (i * len / parts, (i + 1) * len / parts)
+}
+
+/// Task grid `(row_tiles, col_tiles)` for an `m×kk×n` matmul under the
+/// current pool; `(1, 1)` means run serial. Columns only split when the
+/// rows alone cannot feed every thread (short-m decode matmuls).
+fn par_grid(m: usize, kk: usize, n: usize, col_unit: usize) -> (usize, usize) {
+    let t = pool::threads();
+    if t <= 1 {
+        return (1, 1);
+    }
+    let max_tasks = ((m * kk * n) / PAR_MIN_FLOPS).max(1).min(t * 2);
+    if max_tasks <= 1 {
+        return (1, 1);
+    }
+    let tm = m.min(max_tasks);
+    let tn = (max_tasks / tm).clamp(1, n.div_ceil(col_unit).max(1));
+    (tm, tn)
+}
+
+/// Half-open `(start, end)` index range of an output partition.
+type Span = (usize, usize);
+
+/// Serial matmul over an output tile: rows `[r0, r1)` × cols `[c0, c1)`
+/// of `a [m, kk] @ b [kk, n]`, accumulated in ascending-`ki` order (the
+/// same per-element order as the whole-matrix loop). `out` is the full
+/// `[m, n]` buffer; tiles are disjoint, so the raw pointer is sound.
+fn mm_tile(a: &[f32], b: &[f32], kk: usize, n: usize, r: Span, c: Span, out: SendPtr) {
+    let (r0, r1) = r;
+    let (c0, c1) = c;
+    for mi in r0..r1 {
+        let arow = &a[mi * kk..(mi + 1) * kk];
+        let orow = unsafe { out.slice(mi * n + c0, c1 - c0) };
+        for (ki, &av) in arow.iter().enumerate() {
+            let brow = &b[ki * n + c0..ki * n + c1];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed weight panels
+//
+// `pack_b` re-lays a `[kk, n]` weight matrix panel-major: `panel`-wide
+// column groups stored contiguously per `ki`, so the blocked matmul's
+// inner loop streams one cache-resident panel instead of striding `n`
+// floats between rows. Packing is a pure data reorder — `matmul_packed`
+// visits `ki` in the same ascending order per output element, so its
+// results are bitwise identical to `matmul` (asserted below). Panels
+// are packed ONCE at weight load (`reference.rs`) and shared read-only
+// across replicas and pool workers.
+// ---------------------------------------------------------------------------
+
+/// Default packing width: 64 f32 = 2 cache lines per `ki` row.
+pub const PANEL: usize = 64;
+
+/// A `[kk, n]` matrix packed panel-major (see module comment). The last
+/// panel is zero-padded to `panel` width; the pad is never read.
+pub struct PackedB {
+    pub kk: usize,
+    pub n: usize,
+    pub panel: usize,
+    data: Vec<f32>,
+}
+
+/// Pack `b [kk, n]` into `panel`-wide column panels.
+pub fn pack_b(b: &[f32], kk: usize, n: usize, panel: usize) -> PackedB {
+    assert_eq!(b.len(), kk * n, "b shape");
+    assert!(panel > 0, "panel width");
+    let np = n.div_ceil(panel);
+    let mut data = vec![0.0f32; np * kk * panel];
+    for p in 0..np {
+        let c0 = p * panel;
+        let w = (n - c0).min(panel);
+        for ki in 0..kk {
+            data[(p * kk + ki) * panel..(p * kk + ki) * panel + w]
+                .copy_from_slice(&b[ki * n + c0..ki * n + c0 + w]);
+        }
+    }
+    PackedB { kk, n, panel, data }
+}
+
+/// Serial packed-matmul tile: rows `[r0, r1)` × panels `[p0, p1)`.
+fn mmp_tile(a: &[f32], bp: &PackedB, r: (usize, usize), p: (usize, usize), out: SendPtr) {
+    let (kk, n, panel) = (bp.kk, bp.n, bp.panel);
+    for pi in p.0..p.1 {
+        let c0 = pi * panel;
+        let w = (n - c0).min(panel);
+        for mi in r.0..r.1 {
+            let arow = &a[mi * kk..(mi + 1) * kk];
+            let orow = unsafe { out.slice(mi * n + c0, w) };
+            for (ki, &av) in arow.iter().enumerate() {
+                let brow = &bp.data[(pi * kk + ki) * panel..(pi * kk + ki) * panel + w];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `a [m, kk] @ packed b → out [m, n]`, blocked over the packed panels
+/// and parallel over (row tile × panel tile) output cells. Bitwise
+/// identical to `matmul` with the unpacked matrix.
+pub fn matmul_packed_into(a: &[f32], bp: &PackedB, m: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * bp.kk, "a shape");
+    assert_eq!(out.len(), m * bp.n, "out shape");
+    out.fill(0.0);
+    let np = bp.n.div_ceil(bp.panel);
+    let t = pool::threads();
+    let max_tasks = ((m * bp.kk * bp.n) / PAR_MIN_FLOPS).max(1).min(t * 2);
+    let tm = m.min(max_tasks);
+    let tp = (max_tasks / tm.max(1)).clamp(1, np);
+    let ptr = SendPtr::new(out);
+    if t <= 1 || tm * tp <= 1 {
+        mmp_tile(a, bp, (0, m), (0, np), ptr);
+        return;
+    }
+    pool::run(tm * tp, |i| {
+        let (ri, pi) = (i / tp, i % tp);
+        mmp_tile(a, bp, split(m, tm, ri), split(np, tp, pi), ptr);
+    });
+}
+
+/// Allocating wrapper over [`matmul_packed_into`].
+pub fn matmul_packed(a: &[f32], bp: &PackedB, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * bp.n];
+    matmul_packed_into(a, bp, m, &mut out);
+    out
+}
 
 /// `softmax(q kᵀ / sqrt(dh))` with causal + length masking.
 ///
@@ -41,10 +195,15 @@ pub fn attention_scores(
     assert_eq!(k.len(), g * tk * dh, "k shape");
     let scale = (dh as f32).sqrt();
     let mut out = vec![0.0f32; g * tq * tk];
-    for gi in 0..g {
-        for qi in 0..tq {
-            let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
-            let orow = &mut out[(gi * tq + qi) * tk..(gi * tq + qi) * tk + tk];
+    // parallel over (head, query) output rows — each row's score walk,
+    // max, and normalize are self-contained
+    let ptr = SendPtr::new(&mut out);
+    let min_rows = (PAR_MIN_FLOPS / (tk * dh).max(1)).max(1);
+    pool::par_ranges(g * tq, min_rows, |r0, r1| {
+        for r in r0..r1 {
+            let (gi, qi) = (r / tq, r % tq);
+            let qrow = &q[r * dh..r * dh + dh];
+            let orow = unsafe { ptr.slice(r * tk, tk) };
             let qpos = q_offset + qi;
             for (kj, slot) in orow.iter_mut().enumerate() {
                 let mut s = if kj <= qpos && kj < length {
@@ -73,7 +232,7 @@ pub fn attention_scores(
                 *x /= sum;
             }
         }
-    }
+    });
     out
 }
 
@@ -82,10 +241,13 @@ pub fn attn_av(probs: &[f32], v: &[f32], g: usize, tq: usize, tk: usize, dh: usi
     assert_eq!(probs.len(), g * tq * tk, "probs shape");
     assert_eq!(v.len(), g * tk * dh, "v shape");
     let mut out = vec![0.0f32; g * tq * dh];
-    for gi in 0..g {
-        for qi in 0..tq {
-            let prow = &probs[(gi * tq + qi) * tk..(gi * tq + qi) * tk + tk];
-            let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+    let ptr = SendPtr::new(&mut out);
+    let min_rows = (PAR_MIN_FLOPS / (tk * dh).max(1)).max(1);
+    pool::par_ranges(g * tq, min_rows, |r0, r1| {
+        for r in r0..r1 {
+            let gi = r / tq;
+            let prow = &probs[r * tk..r * tk + tk];
+            let orow = unsafe { ptr.slice(r * dh, dh) };
             for (kj, &p) in prow.iter().enumerate() {
                 let vrow = &v[(gi * tk + kj) * dh..(gi * tk + kj) * dh + dh];
                 for d in 0..dh {
@@ -93,7 +255,7 @@ pub fn attn_av(probs: &[f32], v: &[f32], g: usize, tq: usize, tk: usize, dh: usi
                 }
             }
         }
-    }
+    });
     out
 }
 
@@ -220,14 +382,38 @@ pub fn paged_attention_scores(
     q_offset: usize,
     len: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; g * tq * len];
+    paged_attention_scores_into(q, blocks, k_base, g, tq, dh, block_size, q_offset, len, &mut out);
+    out
+}
+
+/// [`paged_attention_scores`] into a caller-owned (scratch-arena)
+/// buffer; parallel over (panel, query) output rows.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_attention_scores_into(
+    q: &[f32],
+    blocks: &[&[f32]],
+    k_base: usize,
+    g: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+    out: &mut [f32],
+) {
     assert_eq!(q.len(), g * tq * dh, "q shape");
+    assert_eq!(out.len(), g * tq * len, "out shape");
     assert!(blocks.len() * block_size >= len, "block table too short for len");
     let scale = (dh as f32).sqrt();
-    let mut out = vec![0.0f32; g * tq * len];
-    for gi in 0..g {
-        for qi in 0..tq {
-            let qrow = &q[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
-            let orow = &mut out[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
+    out.fill(0.0); // masked tail entries must be exact 0.0
+    let ptr = SendPtr::new(out);
+    let min_rows = (PAR_MIN_FLOPS / (len * dh).max(1)).max(1);
+    pool::par_ranges(g * tq, min_rows, |r0, r1| {
+        for r in r0..r1 {
+            let (gi, qi) = (r / tq, r % tq);
+            let qrow = &q[r * dh..r * dh + dh];
+            let orow = unsafe { ptr.slice(r * len, len) };
             // keys [0, kmax) are unmasked for this query; walk whole
             // blocks so the slab lookup runs once per block, not per key
             let kmax = (q_offset + qi + 1).min(len);
@@ -256,8 +442,7 @@ pub fn paged_attention_scores(
                 *x /= sum;
             }
         }
-    }
-    out
+    });
 }
 
 /// `probs [g, tq, len] × block-resident V → [g, tq, dh]`; V row `j` for
@@ -279,12 +464,36 @@ pub fn paged_attn_av(
     q_offset: usize,
     len: usize,
 ) -> Vec<f32> {
-    assert_eq!(probs.len(), g * tq * len, "probs shape");
     let mut out = vec![0.0f32; g * tq * dh];
-    for gi in 0..g {
-        for qi in 0..tq {
-            let prow = &probs[(gi * tq + qi) * len..(gi * tq + qi) * len + len];
-            let orow = &mut out[(gi * tq + qi) * dh..(gi * tq + qi) * dh + dh];
+    paged_attn_av_into(probs, blocks, v_base, g, tq, dh, block_size, q_offset, len, &mut out);
+    out
+}
+
+/// [`paged_attn_av`] into a caller-owned (scratch-arena) buffer;
+/// parallel over (panel, query) output rows.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_attn_av_into(
+    probs: &[f32],
+    blocks: &[&[f32]],
+    v_base: usize,
+    g: usize,
+    tq: usize,
+    dh: usize,
+    block_size: usize,
+    q_offset: usize,
+    len: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(probs.len(), g * tq * len, "probs shape");
+    assert_eq!(out.len(), g * tq * dh, "out shape");
+    out.fill(0.0);
+    let ptr = SendPtr::new(out);
+    let min_rows = (PAR_MIN_FLOPS / (len * dh).max(1)).max(1);
+    pool::par_ranges(g * tq, min_rows, |r0, r1| {
+        for r in r0..r1 {
+            let (gi, qi) = (r / tq, r % tq);
+            let prow = &probs[r * len..r * len + len];
+            let orow = unsafe { ptr.slice(r * dh, dh) };
             let kmax = (q_offset + qi + 1).min(len);
             let mut kj = 0usize;
             while kj < kmax {
@@ -300,8 +509,7 @@ pub fn paged_attn_av(
                 kj = hi;
             }
         }
-    }
-    out
+    });
 }
 
 /// Dense MHA attention against block-resident K,V. Returns `[h, tq, dh]`.
@@ -408,10 +616,15 @@ pub fn paged_relay_scores(
     let mut expw = vec![0.0f32; g * n * len];
     let mut m = vec![0.0f32; g * n];
     let mut s = vec![0.0f32; g * n];
-    for gi in 0..g {
-        for qi in 0..n {
-            let qrow = &q[(gi * n + qi) * dh..(gi * n + qi) * dh + dh];
-            let orow = &mut expw[(gi * n + qi) * len..(gi * n + qi) * len + len];
+    let ew_ptr = SendPtr::new(&mut expw);
+    let m_ptr = SendPtr::new(&mut m);
+    let s_ptr = SendPtr::new(&mut s);
+    let min_rows = (PAR_MIN_FLOPS / (len * dh).max(1)).max(1);
+    pool::par_ranges(g * n, min_rows, |r0, r1| {
+        for r in r0..r1 {
+            let gi = r / n;
+            let qrow = &q[r * dh..r * dh + dh];
+            let orow = unsafe { ew_ptr.slice(r * len, len) };
             let mut kj = 0usize;
             while kj < len {
                 let slab = blocks[kj / block_size];
@@ -433,10 +646,12 @@ pub fn paged_relay_scores(
                 *x = (*x - mx).exp();
                 sum += *x;
             }
-            m[gi * n + qi] = mx;
-            s[gi * n + qi] = sum;
+            unsafe {
+                m_ptr.slice(r, 1)[0] = mx;
+                s_ptr.slice(r, 1)[0] = sum;
+            }
         }
-    }
+    });
     (expw, m, s)
 }
 
@@ -468,66 +683,106 @@ pub fn relay_merge(
 
 /// RMSNorm over the last axis: `x [t, d] * rsqrt(mean(x²) + eps) * w [d]`.
 pub fn rmsnorm(x: &[f32], w: &[f32], t: usize, d: usize, eps: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    rmsnorm_into(x, w, t, d, eps, &mut out);
+    out
+}
+
+/// [`rmsnorm`] into a caller-owned (scratch-arena) buffer; parallel
+/// over token rows.
+pub fn rmsnorm_into(x: &[f32], w: &[f32], t: usize, d: usize, eps: f32, out: &mut [f32]) {
     assert_eq!(x.len(), t * d, "x shape");
     assert_eq!(w.len(), d, "w shape");
-    let mut out = vec![0.0f32; t * d];
-    for ti in 0..t {
-        let row = &x[ti * d..(ti + 1) * d];
-        let mut var = 0.0f32;
-        for v in row {
-            var += v * v;
+    assert_eq!(out.len(), t * d, "out shape");
+    let ptr = SendPtr::new(out);
+    let min_rows = (PAR_MIN_FLOPS / (2 * d).max(1)).max(1);
+    pool::par_ranges(t, min_rows, |t0, t1| {
+        for ti in t0..t1 {
+            let row = &x[ti * d..(ti + 1) * d];
+            let mut var = 0.0f32;
+            for v in row {
+                var += v * v;
+            }
+            var /= d as f32;
+            let r = 1.0 / (var + eps).sqrt();
+            let orow = unsafe { ptr.slice(ti * d, d) };
+            for i in 0..d {
+                orow[i] = row[i] * r * w[i];
+            }
         }
-        var /= d as f32;
-        let r = 1.0 / (var + eps).sqrt();
-        let orow = &mut out[ti * d..(ti + 1) * d];
-        for i in 0..d {
-            orow[i] = row[i] * r * w[i];
-        }
-    }
-    out
+    });
 }
 
 /// Rotary embedding, in place. x: `[g, t, dh]`; `positions [t]` are the
 /// absolute positions of the t rows; `dh` must be even.
+///
+/// The per-position sin/cos table depends only on `(ti, channel)`, so it
+/// is computed ONCE and reused by every head group (it used to be
+/// recomputed `g`× per token — `bench_microbench` times the hoist
+/// against the old body). Head-group panels are independent output
+/// slices, so they fan out across the pool.
 pub fn rope(x: &mut [f32], positions: &[usize], g: usize, t: usize, dh: usize, theta: f32) {
     assert_eq!(x.len(), g * t * dh, "x shape");
     assert_eq!(positions.len(), t, "positions shape");
     assert_eq!(dh % 2, 0, "head_dim must be even for rope");
     let half = dh / 2;
     // frequencies depend only on the channel — hoist out of the hot loop
-    let freqs: Vec<f32> =
-        (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect();
-    for gi in 0..g {
-        for ti in 0..t {
-            let row = &mut x[(gi * t + ti) * dh..(gi * t + ti) * dh + dh];
-            let pos = positions[ti] as f32;
-            for (i, &freq) in freqs.iter().enumerate() {
-                let angle = pos * freq;
-                let (sin, cos) = (angle.sin(), angle.cos());
-                let (x1, x2) = (row[i], row[half + i]);
-                row[i] = x1 * cos - x2 * sin;
-                row[half + i] = x1 * sin + x2 * cos;
-            }
+    let freqs: Vec<f32> = (0..half).map(|i| theta.powf(-(i as f32) / half as f32)).collect();
+    // sin/cos per (position row, channel), shared by all g head groups;
+    // same `angle.sin()/.cos()` calls as before, so bitwise-pinned
+    let mut sincos = vec![0.0f32; t * half * 2];
+    for ti in 0..t {
+        let pos = positions[ti] as f32;
+        for (i, &freq) in freqs.iter().enumerate() {
+            let angle = pos * freq;
+            let e = &mut sincos[(ti * half + i) * 2..(ti * half + i) * 2 + 2];
+            e[0] = angle.sin();
+            e[1] = angle.cos();
         }
     }
+    let ptr = SendPtr::new(x);
+    let min_groups = (PAR_MIN_FLOPS / (t * 3 * dh).max(1)).max(1);
+    pool::par_ranges(g, min_groups, |g0, g1| {
+        for gi in g0..g1 {
+            for ti in 0..t {
+                let row = unsafe { ptr.slice((gi * t + ti) * dh, dh) };
+                for i in 0..half {
+                    let (sin, cos) = (sincos[(ti * half + i) * 2], sincos[(ti * half + i) * 2 + 1]);
+                    let (x1, x2) = (row[i], row[half + i]);
+                    row[i] = x1 * cos - x2 * sin;
+                    row[half + i] = x1 * sin + x2 * cos;
+                }
+            }
+        }
+    });
 }
 
 /// `a [m, kk] @ b [kk, n] → [m, n]`.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, kk: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, b, m, kk, n, &mut out);
+    out
+}
+
+/// [`matmul`] into a caller-owned buffer, parallel over (row tile ×
+/// column tile) output cells. Each cell accumulates its elements in the
+/// same ascending-`ki` order as the serial loop — the reduction is
+/// never split — so results are bitwise identical at every pool size.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, kk: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * kk, "a shape");
     assert_eq!(b.len(), kk * n, "b shape");
-    let mut out = vec![0.0f32; m * n];
-    for mi in 0..m {
-        let arow = &a[mi * kk..(mi + 1) * kk];
-        let orow = &mut out[mi * n..(mi + 1) * n];
-        for (ki, &av) in arow.iter().enumerate() {
-            let brow = &b[ki * n..(ki + 1) * n];
-            for ni in 0..n {
-                orow[ni] += av * brow[ni];
-            }
-        }
+    assert_eq!(out.len(), m * n, "out shape");
+    out.fill(0.0);
+    let ptr = SendPtr::new(out);
+    let (tm, tn) = par_grid(m, kk, n, 16);
+    if tm * tn <= 1 {
+        mm_tile(a, b, kk, n, (0, m), (0, n), ptr);
+        return;
     }
-    out
+    pool::run(tm * tn, |i| {
+        let (ri, ci) = (i / tn, i % tn);
+        mm_tile(a, b, kk, n, split(m, tm, ri), split(n, tn, ci), ptr);
+    });
 }
 
 /// SwiGLU MLP: `(silu(x@wg) * (x@wu)) @ wd` with x `[t, d]`,
@@ -540,6 +795,56 @@ pub fn swiglu(x: &[f32], wg: &[f32], wu: &[f32], wd: &[f32], t: usize, d: usize,
         *g = *g / (1.0 + (-*g).exp()) * u;
     }
     matmul(&gate, wd, t, f, d)
+}
+
+/// SwiGLU over packed weight panels with caller-owned (scratch-arena)
+/// gate/up/out buffers. The gate and up projections are independent
+/// matmuls over the same `x`, so they dispatch CONCURRENTLY as one task
+/// grid spanning both outputs; numerics are bitwise-identical to
+/// [`swiglu`] (same packed-vs-plain argument as `matmul_packed_into`,
+/// and the gate/up split touches disjoint buffers).
+#[allow(clippy::too_many_arguments)]
+pub fn swiglu_packed_into(
+    x: &[f32],
+    wg: &PackedB,
+    wu: &PackedB,
+    wd: &PackedB,
+    t: usize,
+    d: usize,
+    f: usize,
+    gate: &mut [f32],
+    up: &mut [f32],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), t * d, "x shape");
+    assert_eq!((wg.kk, wg.n), (d, f), "wg shape");
+    assert_eq!((wu.kk, wu.n), (d, f), "wu shape");
+    assert_eq!((wd.kk, wd.n), (f, d), "wd shape");
+    assert_eq!(gate.len(), t * f, "gate shape");
+    assert_eq!(up.len(), t * f, "up shape");
+    gate.fill(0.0);
+    up.fill(0.0);
+    let np = f.div_ceil(wg.panel);
+    let t_pool = pool::threads();
+    let max_tasks = ((t * d * f) / PAR_MIN_FLOPS).max(1).min(t_pool.max(1));
+    let tm = t.min(max_tasks);
+    let tp = (max_tasks / tm.max(1)).clamp(1, np);
+    let cells = tm * tp;
+    let (gp, upp) = (SendPtr::new(gate), SendPtr::new(up));
+    pool::run(2 * cells, |i| {
+        let (which, cell) = (i / cells, i % cells);
+        let (ri, pi) = (cell / tp, cell % tp);
+        let (bp, outp) = if which == 0 { (wg, gp) } else { (wu, upp) };
+        mmp_tile(x, bp, split(t, tm, ri), split(np, tp, pi), outp);
+    });
+    let gp = SendPtr::new(gate);
+    pool::par_ranges(t * f, PAR_MIN_FLOPS / 8, |e0, e1| {
+        let grow = unsafe { gp.slice(e0, e1 - e0) };
+        for (g, &u) in grow.iter_mut().zip(&up[e0..e1]) {
+            *g = *g / (1.0 + (-*g).exp()) * u;
+        }
+    });
+    matmul_packed_into(gate, wd, t, out);
 }
 
 /// Per-head Q/K/V projection: gather head columns of `w [d, h*dh]` for
@@ -560,33 +865,86 @@ pub fn project_heads(
     assert_eq!(w.len(), d * h * dh, "w shape");
     let hd = h * dh;
     let mut out = vec![0.0f32; heads.len() * t * dh];
-    for (gi, &hh) in heads.iter().enumerate() {
-        assert!(hh < h, "head {hh} out of range (h={h})");
-        for ti in 0..t {
-            let xrow = &xn[ti * d..(ti + 1) * d];
-            let orow = &mut out[(gi * t + ti) * dh..(gi * t + ti) * dh + dh];
-            for (j, &xv) in xrow.iter().enumerate() {
-                let wrow = &w[j * hd + hh * dh..j * hd + hh * dh + dh];
-                for dd in 0..dh {
-                    orow[dd] += xv * wrow[dd];
+    // each head's [t, dh] output panel is contiguous and independent —
+    // the CHAI-natural parallel axis (reps only on the clustered path)
+    let ptr = SendPtr::new(&mut out);
+    let min_heads = (PAR_MIN_FLOPS / (t * d * dh).max(1)).max(1);
+    pool::par_ranges(heads.len(), min_heads, |g0, g1| {
+        for (gi, &hh) in heads.iter().enumerate().take(g1).skip(g0) {
+            assert!(hh < h, "head {hh} out of range (h={h})");
+            for ti in 0..t {
+                let xrow = &xn[ti * d..(ti + 1) * d];
+                let orow = unsafe { ptr.slice((gi * t + ti) * dh, dh) };
+                for (j, &xv) in xrow.iter().enumerate() {
+                    let wrow = &w[j * hd + hh * dh..j * hd + hh * dh + dh];
+                    for dd in 0..dh {
+                        orow[dd] += xv * wrow[dd];
+                    }
                 }
             }
         }
-    }
+    });
     out
+}
+
+/// [`project_heads`] over a head-major packed projection matrix
+/// (`pack_b(w, d, h*dh, panel = dh)` — one panel per head, so head
+/// `hh`'s weight column block streams contiguously instead of striding
+/// `h*dh` floats per feature). Writes a caller-owned (scratch-arena)
+/// buffer; bitwise identical to [`project_heads`] (same per-element
+/// ascending-`j` accumulation).
+#[allow(clippy::too_many_arguments)]
+pub fn project_heads_packed_into(
+    xn: &[f32],
+    wp: &PackedB,
+    heads: &[usize],
+    t: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(xn.len(), t * d, "xn shape");
+    assert_eq!((wp.kk, wp.n, wp.panel), (d, h * dh, dh), "w packing");
+    assert_eq!(out.len(), heads.len() * t * dh, "out shape");
+    out.fill(0.0);
+    let ptr = SendPtr::new(out);
+    let min_heads = (PAR_MIN_FLOPS / (t * d * dh).max(1)).max(1);
+    pool::par_ranges(heads.len(), min_heads, |g0, g1| {
+        for (gi, &hh) in heads.iter().enumerate().take(g1).skip(g0) {
+            assert!(hh < h, "head {hh} out of range (h={h})");
+            let wbase = hh * d * dh; // panel hh: (hh*d + j)*dh
+            for ti in 0..t {
+                let xrow = &xn[ti * d..(ti + 1) * d];
+                let orow = unsafe { ptr.slice((gi * t + ti) * dh, dh) };
+                for (j, &xv) in xrow.iter().enumerate() {
+                    let wrow = &wp.data[wbase + j * dh..wbase + j * dh + dh];
+                    for dd in 0..dh {
+                        orow[dd] += xv * wrow[dd];
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// `[h, t, dh] → [t, h*dh]` (the `_unheads` transpose).
 pub fn unheads(x: &[f32], h: usize, t: usize, dh: usize) -> Vec<f32> {
-    assert_eq!(x.len(), h * t * dh, "x shape");
     let mut out = vec![0.0f32; t * h * dh];
+    unheads_into(x, h, t, dh, &mut out);
+    out
+}
+
+/// [`unheads`] into a caller-owned (scratch-arena) buffer.
+pub fn unheads_into(x: &[f32], h: usize, t: usize, dh: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), h * t * dh, "x shape");
+    assert_eq!(out.len(), t * h * dh, "out shape");
     for hh in 0..h {
         for ti in 0..t {
             let src = &x[(hh * t + ti) * dh..(hh * t + ti) * dh + dh];
             out[ti * h * dh + hh * dh..ti * h * dh + hh * dh + dh].copy_from_slice(src);
         }
     }
-    out
 }
 
 /// Boolean mask of the `n_keep` largest entries by rank counting
@@ -923,5 +1281,71 @@ mod tests {
         // ties: everything tied at the boundary stays
         let m = top_mask(&[1.0, 1.0, 0.0], 1);
         assert_eq!(m, vec![true, true, false]);
+    }
+
+    #[test]
+    fn packed_matmul_matches_plain_bitwise() {
+        let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        // odd shapes force a ragged trailing panel
+        for &(m, kk, n) in &[(1usize, 16usize, 16usize), (7, 33, 129), (64, 48, 70)] {
+            let a = fill(m * kk, 40);
+            let b = fill(kk * n, 41);
+            let plain = matmul(&a, &b, m, kk, n);
+            let packed = matmul_packed(&a, &pack_b(&b, kk, n, PANEL), m);
+            assert_eq!(bits(&plain), bits(&packed), "m={m} kk={kk} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_project_heads_matches_plain_bitwise() {
+        let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        let (t, d, h, dh) = (5usize, 16usize, 4usize, 6usize);
+        let xn = fill(t * d, 42);
+        let w = fill(d * h * dh, 43);
+        let wp = pack_b(&w, d, h * dh, dh);
+        for heads in [vec![0, 1, 2, 3], vec![2, 0], vec![3]] {
+            let plain = project_heads(&xn, &w, &heads, t, d, h, dh);
+            let mut packed = vec![1.0f32; heads.len() * t * dh]; // non-zero: _into must overwrite
+            project_heads_packed_into(&xn, &wp, &heads, t, d, h, dh, &mut packed);
+            assert_eq!(bits(&plain), bits(&packed), "heads {heads:?}");
+        }
+    }
+
+    #[test]
+    fn packed_swiglu_matches_plain_bitwise() {
+        let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        let (t, d, f) = (3usize, 16usize, 32usize);
+        let x = fill(t * d, 44);
+        let (wg, wu, wd) = (fill(d * f, 45), fill(d * f, 46), fill(f * d, 47));
+        let plain = swiglu(&x, &wg, &wu, &wd, t, d, f);
+        let (wgp, wup, wdp) =
+            (pack_b(&wg, d, f, PANEL), pack_b(&wu, d, f, PANEL), pack_b(&wd, f, d, PANEL));
+        let (mut gate, mut up, mut out) =
+            (vec![1.0f32; t * f], vec![1.0f32; t * f], vec![1.0f32; t * d]);
+        swiglu_packed_into(&x, &wgp, &wup, &wdp, t, d, f, &mut gate, &mut up, &mut out);
+        assert_eq!(bits(&plain), bits(&out));
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_scratch() {
+        // the arena hands back dirty buffers; every _into must fully
+        // define its output
+        let bits = |x: &[f32]| x.iter().map(|e| e.to_bits()).collect::<Vec<_>>();
+        let (t, d) = (4usize, 8usize);
+        let x = fill(t * d, 48);
+        let w = fill(d, 49);
+        let want = rmsnorm(&x, &w, t, d, 1e-5);
+        let mut got = vec![7.0f32; t * d];
+        rmsnorm_into(&x, &w, t, d, 1e-5, &mut got);
+        assert_eq!(bits(&want), bits(&got));
+        let b = fill(d * d, 50);
+        let want = matmul(&x, &b, t, d, d);
+        let mut got = vec![7.0f32; t * d];
+        matmul_into(&x, &b, t, d, d, &mut got);
+        assert_eq!(bits(&want), bits(&got));
+        let want = unheads(&x, 2, 2, d);
+        let mut got = vec![7.0f32; t * d];
+        unheads_into(&x, 2, 2, d, &mut got);
+        assert_eq!(bits(&want), bits(&got));
     }
 }

@@ -1,0 +1,437 @@
+//! Property tests for intra-tick parallel kernel execution.
+//!
+//! The partitioning contract: every kernel splits work ONLY over
+//! independent output slices (row tiles, head panels, paged rows) and
+//! never splits a k-reduction, so outputs are **bitwise identical** to
+//! the serial path at every pool size. Exercised here:
+//!
+//! 1. Kernel level: every parallelized `refkernels` entry point over
+//!    random shapes, serial (no pool installed) vs pool sizes
+//!    {1, 2, 3, 8} — outputs compared bit-for-bit.
+//! 2. Backend level: `decode_paged` over a multi-row tick (the fused
+//!    stacked path, attention fanned across the pool) produces logits
+//!    bit-for-bit equal to one-row-at-a-time decodes, and the fused
+//!    counter fires.
+//! 3. Engine level: token streams are identical `--threads 1` vs
+//!    `--threads {2, 3, 8}` over a topology mixing relay groups,
+//!    independent fused MHA rows, and clustered (CHAI) rows.
+//!
+//! Everything runs artifact-free on the seeded toy model.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use chai::config::ServingConfig;
+use chai::engine::{Engine, Session, Variant};
+use chai::kv::paged::{KvLayout, PagedKv};
+use chai::kv::CacheKind;
+use chai::runtime::pool::{self, Pool};
+use chai::runtime::reference::RefBackend;
+use chai::runtime::{Backend, PagedDecodeRow};
+use chai::util::proptest::check;
+use chai::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Kernel level: bitwise identity across pool sizes
+// ---------------------------------------------------------------------------
+
+use chai::runtime::refkernels as rk;
+
+fn rand_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.below(2001) as f32 / 1000.0) - 1.0).collect()
+}
+
+/// Random shapes + operands for one round of every parallel kernel.
+struct KernelInputs {
+    t: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    f: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    xn: Vec<f32>,
+    wqkv: Vec<f32>,
+    wg: Vec<f32>,
+    wu: Vec<f32>,
+    wd: Vec<f32>,
+    norm_w: Vec<f32>,
+    heads: Vec<usize>,
+    positions: Vec<usize>,
+    qkv_flat: Vec<f32>,
+    // paged attention: slab-resident K,V with k_base = 0 and
+    // v_base = h * bsz * dh (one layer's worth of panels per block)
+    bsz: usize,
+    tq: usize,
+    q_off: usize,
+    len: usize,
+    q_paged: Vec<f32>,
+    slabs: Vec<Vec<f32>>,
+    // relay scores over the leading full blocks
+    n_relay: usize,
+    prefix_len: usize,
+    q_relay: Vec<f32>,
+}
+
+impl KernelInputs {
+    fn random(rng: &mut Rng) -> KernelInputs {
+        let t = rng.range(1, 9);
+        let d = rng.range(4, 33);
+        let h = rng.range(1, 5);
+        let dh = rng.range(2, 7);
+        let f = rng.range(8, 41);
+        // a random non-empty head subset (the CHAI reps shape)
+        let mut heads: Vec<usize> = (0..h).filter(|_| rng.below(2) == 0).collect();
+        if heads.is_empty() {
+            heads.push(rng.below(h));
+        }
+        let bsz = 4usize;
+        let tq = rng.range(1, 4);
+        let q_off = rng.below(2 * bsz);
+        let len = q_off + tq;
+        let n_blocks = len.div_ceil(bsz);
+        let slab = 2 * h * bsz * dh;
+        let n_relay = rng.range(2, 5);
+        let pb = rng.range(1, 3);
+        let prefix_len = pb * bsz;
+        let relay_blocks = pb.max(n_blocks);
+        KernelInputs {
+            t,
+            d,
+            h,
+            dh,
+            f,
+            a: rand_f32s(rng, t * d),
+            b: rand_f32s(rng, d * f),
+            xn: rand_f32s(rng, t * d),
+            wqkv: rand_f32s(rng, d * h * dh),
+            wg: rand_f32s(rng, d * f),
+            wu: rand_f32s(rng, d * f),
+            wd: rand_f32s(rng, f * d),
+            norm_w: rand_f32s(rng, d),
+            heads,
+            positions: (0..t).map(|_| rng.below(64)).collect(),
+            qkv_flat: rand_f32s(rng, h * t * dh),
+            bsz,
+            tq,
+            q_off,
+            len,
+            q_paged: rand_f32s(rng, h * tq * dh),
+            slabs: (0..relay_blocks).map(|_| rand_f32s(rng, slab)).collect(),
+            n_relay,
+            prefix_len,
+            q_relay: rand_f32s(rng, h * n_relay * dh),
+        }
+    }
+}
+
+/// Run every parallelized kernel once; outputs in a fixed order.
+fn run_kernels(inp: &KernelInputs) -> Vec<Vec<f32>> {
+    let (t, d, h, dh, f) = (inp.t, inp.d, inp.h, inp.dh, inp.f);
+    let mut outs = Vec::new();
+    outs.push(rk::matmul(&inp.a, &inp.b, t, d, f));
+    // ragged panel width on purpose
+    let bp = rk::pack_b(&inp.b, d, f, 5);
+    outs.push(rk::matmul_packed(&inp.a, &bp, t));
+    outs.push(rk::rmsnorm(&inp.xn, &inp.norm_w, t, d, 1e-5));
+    let mut roped = inp.qkv_flat.clone();
+    rk::rope(&mut roped, &inp.positions, h, t, dh, 10000.0);
+    outs.push(roped);
+    outs.push(rk::project_heads(&inp.xn, &inp.wqkv, &inp.heads, t, d, h, dh));
+    let wp = rk::pack_b(&inp.wqkv, d, h * dh, dh);
+    let mut projected = vec![1.0f32; inp.heads.len() * t * dh];
+    rk::project_heads_packed_into(&inp.xn, &wp, &inp.heads, t, d, h, dh, &mut projected);
+    outs.push(projected);
+    outs.push(rk::swiglu(&inp.xn, &inp.wg, &inp.wu, &inp.wd, t, d, f));
+    let (pg, pu, pd) = (
+        rk::pack_b(&inp.wg, d, f, rk::PANEL),
+        rk::pack_b(&inp.wu, d, f, rk::PANEL),
+        rk::pack_b(&inp.wd, f, d, rk::PANEL),
+    );
+    let mut gate = vec![1.0f32; t * f];
+    let mut up = vec![1.0f32; t * f];
+    let mut mlp = vec![1.0f32; t * d];
+    rk::swiglu_packed_into(&inp.xn, &pg, &pu, &pd, t, d, f, &mut gate, &mut up, &mut mlp);
+    outs.push(mlp);
+    let (attn, probs) =
+        rk::mha_attention(&inp.qkv_flat, &inp.qkv_flat, &inp.qkv_flat, h, t, t, dh, 0, t, None);
+    outs.push(attn);
+    outs.push(probs);
+    // paged kernels over hand-rolled slabs
+    let slabs: Vec<&[f32]> = inp.slabs.iter().map(|s| s.as_slice()).collect();
+    let v_base = h * inp.bsz * dh;
+    let pprobs = rk::paged_attention_scores(
+        &inp.q_paged,
+        &slabs[..inp.len.div_ceil(inp.bsz)],
+        0,
+        h,
+        inp.tq,
+        dh,
+        inp.bsz,
+        inp.q_off,
+        inp.len,
+    );
+    let pav = rk::paged_attn_av(
+        &pprobs,
+        &slabs[..inp.len.div_ceil(inp.bsz)],
+        v_base,
+        h,
+        inp.tq,
+        dh,
+        inp.bsz,
+        inp.q_off,
+        inp.len,
+    );
+    outs.push(pprobs);
+    outs.push(pav);
+    let (ew, m, s) = rk::paged_relay_scores(
+        &inp.q_relay,
+        &slabs[..inp.prefix_len / inp.bsz],
+        0,
+        h,
+        inp.n_relay,
+        dh,
+        inp.bsz,
+        inp.prefix_len,
+    );
+    outs.push(ew);
+    outs.push(m);
+    outs.push(s);
+    outs
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn kernels_bitwise_identical_at_every_pool_size() {
+    check("kernel-pool-identity", 6, |rng| {
+        let inp = KernelInputs::random(rng);
+        // serial baseline: this test thread has no pool installed
+        let serial = run_kernels(&inp);
+        for threads in [1usize, 2, 3, 8] {
+            let pool = Arc::new(Pool::new(threads, false));
+            pool::install(&pool);
+            let par = run_kernels(&inp);
+            drop(pool); // expire the thread-local Weak
+            chai::prop_assert!(
+                serial.len() == par.len(),
+                "kernel count mismatch at {threads} threads"
+            );
+            for (ki, (s, p)) in serial.iter().zip(&par).enumerate() {
+                chai::prop_assert!(
+                    bits(s) == bits(p),
+                    "kernel #{ki} not bitwise identical at pool size {threads} \
+                     (t={} d={} h={} dh={} f={})",
+                    inp.t,
+                    inp.d,
+                    inp.h,
+                    inp.dh,
+                    inp.f
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backend level: fused multi-row decode vs one-row-at-a-time
+// ---------------------------------------------------------------------------
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One decode step over `store` (no relay descriptors): all rows in one
+/// `decode_paged` call when `fused`, else one call per row.
+fn step(
+    be: &RefBackend,
+    store: &mut PagedKv,
+    seqs: &[u64],
+    toks: &[i32],
+    lens: &[usize],
+    fused: bool,
+) -> Result<Vec<Vec<f32>>, String> {
+    for &s in seqs {
+        store.ensure_append_slot(s).map_err(|e| e.to_string())?;
+    }
+    let rows: Vec<PagedDecodeRow> = seqs
+        .iter()
+        .zip(toks)
+        .zip(lens)
+        .map(|((&seq, &token), &pos)| PagedDecodeRow {
+            seq,
+            token,
+            pos,
+            clusters: None,
+            relay: None,
+        })
+        .collect();
+    let grab = |r: Result<chai::tensor::Tensor, anyhow::Error>| {
+        r.map_err(|e| format!("{e:#}"))
+            .and_then(|t| t.as_f32().map(|v| v.to_vec()).map_err(|e| e.to_string()))
+    };
+    if fused {
+        be.decode_paged(&rows, store).into_iter().map(grab).collect()
+    } else {
+        rows.iter()
+            .map(|r| {
+                let one = [PagedDecodeRow {
+                    seq: r.seq,
+                    token: r.token,
+                    pos: r.pos,
+                    clusters: None,
+                    relay: None,
+                }];
+                grab(be.decode_paged(&one, store).remove(0))
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn fused_decode_matches_per_row_decode_bitwise() {
+    check("fused-vs-per-row", 6, |rng| {
+        let be = RefBackend::toy(rng.next_u64());
+        let m = be.manifest().clone();
+        let layout = KvLayout::from_manifest(&m, CacheKind::Mha);
+        let bsz = 4usize;
+        let n = rng.range(2, 6);
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|_| (0..rng.range(2, 11)).map(|_| rng.below(256) as i32).collect())
+            .collect();
+        let mut kv_f = PagedKv::new(bsz, 1 << 24);
+        let mut kv_s = PagedKv::new(bsz, 1 << 24);
+        for (i, p) in prompts.iter().enumerate() {
+            let seq = (i + 1) as u64;
+            for kv in [&mut kv_f, &mut kv_s] {
+                kv.admit(seq, layout.clone(), "mha", true, p).map_err(|e| e.to_string())?;
+                let start = kv.adopted_prefix_len(seq).map_err(|e| e.to_string())?;
+                be.prefill_paged(seq, start, None, kv).map_err(|e| e.to_string())?;
+                kv.commit_prefill(seq).map_err(|e| e.to_string())?;
+            }
+        }
+        let seqs: Vec<u64> = (1..=n as u64).collect();
+        let mut toks: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+        let mut lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let steps = rng.range(2, 5);
+        let fused_before =
+            be.exec_counts.borrow().get("decode_fused_groups").copied().unwrap_or(0);
+        for s in 0..steps {
+            let fused = step(&be, &mut kv_f, &seqs, &toks, &lens, true)?;
+            let serial = step(&be, &mut kv_s, &seqs, &toks, &lens, false)?;
+            for (ri, (fl, sl)) in fused.iter().zip(&serial).enumerate() {
+                chai::prop_assert!(
+                    bits(fl) == bits(sl),
+                    "step {s} row {ri}: fused logits not bitwise equal to per-row"
+                );
+            }
+            for (ri, &seq) in seqs.iter().enumerate() {
+                kv_f.append_committed(seq, toks[ri]).map_err(|e| e.to_string())?;
+                kv_s.append_committed(seq, toks[ri]).map_err(|e| e.to_string())?;
+                toks[ri] = argmax(&serial[ri]) as i32;
+                lens[ri] += 1;
+            }
+        }
+        let fused_after =
+            be.exec_counts.borrow().get("decode_fused_groups").copied().unwrap_or(0);
+        chai::prop_assert!(
+            fused_after == fused_before + steps as u64,
+            "expected {steps} fused group executions, got {}",
+            fused_after - fused_before
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Engine level: stream identity across --threads
+// ---------------------------------------------------------------------------
+
+fn random_suffix(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| (rng.range(32, 127) as u8) as char).collect()
+}
+
+/// Build an engine with the given pool size on its own thread (so each
+/// engine's pool install is isolated), run every session to completion
+/// through fused ticks, and return the token streams.
+fn streams_with_threads(
+    seed: u64,
+    threads: usize,
+    specs: Vec<(String, Variant)>,
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>, String> {
+    std::thread::spawn(move || -> Result<Vec<Vec<i32>>, String> {
+        let engine = Engine::load(ServingConfig {
+            artifacts_dir: PathBuf::from("definitely-no-artifacts-here"),
+            backend: "ref".into(),
+            seed,
+            threads,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
+        let mut sessions: Vec<Session> = specs
+            .iter()
+            .map(|(p, v)| engine.start_session(p, max_new, v))
+            .collect::<anyhow::Result<_>>()
+            .map_err(|e| e.to_string())?;
+        loop {
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().filter(|s| !s.done).collect();
+            if refs.is_empty() {
+                break;
+            }
+            for o in engine.decode_tick(&mut refs) {
+                o.map_err(|e| format!("decode_tick: {e:#}"))?;
+            }
+        }
+        let streams = sessions.iter().map(|s| s.tokens.clone()).collect();
+        for s in sessions {
+            engine.finish_session(s);
+        }
+        Ok(streams)
+    })
+    .join()
+    .map_err(|_| "engine thread panicked".to_string())?
+}
+
+#[test]
+fn engine_streams_bit_identical_across_thread_counts() {
+    check("threads-stream-identity", 3, |rng| {
+        let seed = rng.next_u64();
+        // relay group: >= 2 full 16-token blocks of shared prefix
+        let shared = random_suffix(rng, 33, 42);
+        let mut specs: Vec<(String, Variant)> = Vec::new();
+        for _ in 0..rng.range(2, 4) {
+            specs.push((format!("{shared}{}", random_suffix(rng, 0, 5)), Variant::Mha));
+        }
+        // independent MHA rows: the fused stacked path
+        for _ in 0..rng.range(2, 4) {
+            specs.push((random_suffix(rng, 3, 14), Variant::Mha));
+        }
+        // clustered rows: identical short prompts share a membership, so
+        // they stack as one clustered fused group (too short to relay)
+        let chai_prompt = random_suffix(rng, 3, 12);
+        for _ in 0..rng.range(2, 4) {
+            specs.push((chai_prompt.clone(), Variant::Chai));
+        }
+        let max_new = rng.range(4, 9);
+        let base = streams_with_threads(seed, 1, specs.clone(), max_new)?;
+        for threads in [2usize, 3, 8] {
+            let got = streams_with_threads(seed, threads, specs.clone(), max_new)?;
+            chai::prop_assert!(
+                got == base,
+                "streams diverge between --threads 1 and --threads {threads}"
+            );
+        }
+        Ok(())
+    });
+}
