@@ -105,6 +105,14 @@ echo "== failover drill: SIGKILL one of 4 replica processes mid-decode (ref back
 # bench_results/BENCH_serving.json
 cargo bench --bench bench_serving -- --backend ref --failover
 
+echo "== observability gate: obs-on vs --no-obs decode burst, trace coverage (ref backend) =="
+# observability contract: token streams bit-identical obs-on vs
+# --no-obs, obs-on tok/s >= 0.98x obs-off (the <= 2% overhead budget),
+# and the drained Chrome trace covers >= 99% of submitted requests
+# (distinct queue-span trace ids); writes bench_results/obs_trace.json
+# and merges an "obs" section into bench_results/BENCH_serving.json
+cargo bench --bench bench_serving -- --backend ref --obs
+
 echo "== streaming + cancellation example client (ref backend) =="
 # examples/stream_cancel.rs: spins a 2-replica router + TCP server,
 # streams a generation frame-by-frame, then cancels one mid-decode and

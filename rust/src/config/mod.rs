@@ -281,6 +281,15 @@ pub struct ServingConfig {
     /// produces bitwise-identical outputs — tasks partition only
     /// independent output slices, never a reduction.
     pub threads: usize,
+    /// span tracing + flight recorder + per-tick profiler
+    /// ([`crate::obs`]; `--no-obs` disables). Always-on by default —
+    /// the `bench_serving --obs` gate holds the overhead at ≤2% decode
+    /// tok/s, and token streams are bit-identical either way.
+    pub obs: bool,
+    /// write the merged Chrome-trace dump here on shutdown and on
+    /// replica death (`--trace-out`); `{"cmd":"trace"}` serves the same
+    /// dump on demand
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServingConfig {
@@ -312,6 +321,8 @@ impl Default for ServingConfig {
             relay: true,
             pin_cores: false,
             threads: 0,
+            obs: true,
+            trace_out: None,
         }
     }
 }

@@ -138,6 +138,9 @@ pub struct AdoptNet {
     pub record: Json,
     pub stream: Option<FrameSink>,
     pub resp: RespSink,
+    /// observability trace id carried over the wire (0 = untraced) so
+    /// the adopted request keeps the timeline it started on
+    pub trace: u64,
 }
 
 /// Handle owned by front-ends; cheap to clone.
@@ -167,6 +170,10 @@ impl Coordinator {
     /// Spawn the engine thread around a caller-supplied engine factory
     /// (executed on the engine thread, since backends are not `Send`).
     pub fn start_with(cfg: ServingConfig, make_engine: EngineFactory) -> Result<CoordinatorHandle> {
+        // `--no-obs`: the escape hatch is a process-global flag (spans
+        // are recorded from many threads; streams are bit-identical
+        // either way, obs only reads clocks)
+        crate::obs::set_enabled(cfg.obs);
         let shared = Arc::new(Shared::new(cfg.net_inbox));
         let metrics = Arc::new(Metrics::new());
         let coord = Coordinator {
@@ -250,6 +257,14 @@ impl Coordinator {
     /// the shutdown check *and* the push so the engine's final drain
     /// can wait out every in-flight submission (see [`engine_loop`]).
     pub fn submit_request(&self, id: u64, opts: SubmitOpts, resp_tx: RespSink) {
+        // admission to the serving stack mints the trace id (unless the
+        // router or a parent process already did — wire submissions to
+        // `chai replica` children arrive with one)
+        let trace = if opts.trace != 0 || !crate::obs::enabled() {
+            opts.trace
+        } else {
+            crate::obs::next_trace_id()
+        };
         let req = Request {
             id,
             prompt: opts.prompt,
@@ -259,6 +274,7 @@ impl Coordinator {
             resp_tx,
             stream: opts.stream,
             stream_offset: opts.stream_offset,
+            trace,
         };
         let sh = &*self.shared;
         sh.submitting.fetch_add(1, Ordering::SeqCst);
@@ -383,6 +399,7 @@ impl Coordinator {
             resp_tx: a.resp,
             stream: a.stream,
             stream_offset: a.streamed,
+            trace: a.trace,
         };
         self.adopt_op(req, AdoptPayload::Wire(a.record), a.streamed);
     }

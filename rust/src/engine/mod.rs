@@ -1145,7 +1145,11 @@ impl Engine {
             })
             .collect();
         let t0 = Instant::now();
+        let w0 = crate::util::now_ms();
         let outs = self.rt.decode_paged(&rows, &mut st);
+        let w1 = crate::util::now_ms();
+        crate::obs::record(0, crate::obs::SpanKind::Fused, w0, w1);
+        crate::obs::tick_phase_add(crate::obs::SpanKind::Fused, w1 - w0);
         // one fused call serves the whole batch; attribute wall time
         // evenly for the per-session Figure-12 decomposition
         let per_row_ms = t0.elapsed().as_secs_f64() * 1e3 / ready.len() as f64;

@@ -44,6 +44,13 @@
 //!   thread-per-connection transport or [`net`]'s single-thread epoll
 //!   reactor with lock-free ring buffers on the request and token-frame
 //!   hot paths (`--net threads|reactor`).
+//! * [`obs`] is the always-on observability layer: per-request span
+//!   tracing over per-thread flight-recorder rings (trace ids minted at
+//!   admission and propagated over the wire, so a cross-process request
+//!   yields one stitched Chrome-trace timeline via `{"cmd":"trace"}` /
+//!   `--trace-out`), plus the per-tick profiler feeding the `obs_*`
+//!   histograms. `--no-obs` is the escape hatch; streams are
+//!   bit-identical either way.
 //! * [`util`] contains the substrates the offline build needs (JSON,
 //!   PRNG, CLI args, stats, a property-testing harness) — the crates.io
 //!   mirror in this environment only vendors `xla` + `anyhow`.
@@ -60,6 +67,7 @@ pub mod mesh;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod router;
 pub mod runtime;
 pub mod scheduler;

@@ -31,6 +31,9 @@
 //!                                                        # separate `chai replica` process behind the same router;
 //!                                                        # health probes (--probe-ms 100 --probe-suspect 3) requeue
 //!                                                        # a dead replica's in-flight requests on the survivors
+//!   chai serve --trace-out trace.json                    # dump the observability flight recorder (Chrome trace JSON)
+//!                                                        # on shutdown/replica death; {"cmd":"trace"} drains it live;
+//!                                                        # --no-obs disables span recording entirely
 //!   chai generate --prompt "the color of tom is" --variant chai
 //!   chai eval --variant chai --suites piqa-syn,boolq-syn --max-items 20
 //!   chai analyze --samples 64
@@ -120,6 +123,13 @@ fn serving_config(args: &Args) -> Result<ServingConfig> {
         // --threads N sizes each engine's kernel worker pool; 0 = auto
         // (allowed-cpu mask / replicas), 1 = exact legacy serial path
         threads: args.usize("threads", 0)?,
+        // always-on observability (span rings + per-tick profiler);
+        // --no-obs is the escape hatch: no spans recorded, no trace ids
+        // minted or propagated (token streams are identical either way)
+        obs: !args.bool("no-obs"),
+        // --trace-out FILE dumps the flight recorder as Chrome
+        // trace-event JSON on shutdown and on replica death
+        trace_out: args.opt_str("trace-out").map(PathBuf::from),
     })
 }
 
@@ -176,6 +186,7 @@ fn cmd_replica(args: &Args) -> Result<()> {
 
     let mut cfg = serving_config(args)?;
     cfg.replicas = 1; // a replica is exactly one engine; fan-out is the parent's job
+    let trace_out = cfg.trace_out.take(); // the child dumps its own rings
     let handle = chai::coordinator::Coordinator::start(cfg)?;
     let server = Server::start_with(
         handle.coordinator.clone(),
@@ -192,6 +203,11 @@ fn cmd_replica(args: &Args) -> Result<()> {
     let _ = std::io::stdin().read_to_end(&mut sink);
     server.stop();
     handle.shutdown();
+    if let Some(path) = trace_out {
+        if let Err(e) = std::fs::write(&path, chai::obs::dump_json().to_string()) {
+            eprintln!("[replica] --trace-out {}: {e}", path.display());
+        }
+    }
     Ok(())
 }
 

@@ -116,6 +116,19 @@ impl Metrics {
                             ("p50_ms", Json::Num(h.quantile(0.5))),
                             ("p95_ms", Json::Num(h.quantile(0.95))),
                             ("p99_ms", Json::Num(h.quantile(0.99))),
+                            ("sum_ms", Json::Num(h.sum_ms)),
+                            // raw bucket counts: the mergeable form —
+                            // quantiles of sums are nonsense, sums of
+                            // buckets are exact.
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    h.counts()
+                                        .iter()
+                                        .map(|c| Json::Num(*c as f64))
+                                        .collect(),
+                                ),
+                            ),
                         ]),
                     )
                 })
@@ -137,9 +150,11 @@ impl Metrics {
 }
 
 /// Key-wise sum of the numeric fields of several JSON objects — the
-/// router's per-replica rollup primitive (counters and gauges are both
-/// flat `name → number` objects). Non-numeric fields are skipped; a key
-/// missing from some replicas contributes only where present.
+/// router's rollup primitive for *counters*, which are the only metric
+/// kind where plain addition is always the right merge. Non-numeric
+/// fields are skipped; a key missing from some replicas contributes
+/// only where present. Gauges go through [`merge_gauge_objects`] and
+/// latency histograms through [`merge_latency_objects`] instead.
 pub fn sum_json_objects<'a>(objs: impl IntoIterator<Item = &'a Json>) -> Json {
     let mut out: BTreeMap<String, f64> = BTreeMap::new();
     for o in objs {
@@ -154,6 +169,108 @@ pub fn sum_json_objects<'a>(objs: impl IntoIterator<Item = &'a Json>) -> Json {
     Json::Obj(out.into_iter().map(|(k, v)| (k, Json::Num(v))).collect())
 }
 
+/// How a gauge combines across replicas, declared by name suffix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GaugeKind {
+    /// Totals (bytes, blocks, queue depths, entry counts): add.
+    Sum,
+    /// Rates / fractions / per-core ids: the sum of N rates is
+    /// meaningless — report the mean across replicas that have the key.
+    Avg,
+    /// High-water marks and peaks: the fleet-wide peak is the max.
+    Max,
+}
+
+/// Classify a gauge by its name. The convention is enforced here rather
+/// than carried per-value over the wire: `_rate`/`_frac`/`_ratio` are
+/// averaged, `_hwm`/`_peak` are maxed, everything else (bytes, blocks,
+/// depths, counts) sums.
+pub fn gauge_kind(name: &str) -> GaugeKind {
+    if name.ends_with("_rate") || name.ends_with("_frac") || name.ends_with("_ratio") {
+        GaugeKind::Avg
+    } else if name.ends_with("_hwm") || name.ends_with("_peak") {
+        GaugeKind::Max
+    } else {
+        GaugeKind::Sum
+    }
+}
+
+/// Kind-aware merge of per-replica gauge objects ([`gauge_kind`] picks
+/// sum/avg/max per key). Avg divides by the number of replicas that
+/// reported the key, not the fleet size.
+pub fn merge_gauge_objects<'a>(objs: impl IntoIterator<Item = &'a Json>) -> Json {
+    let mut acc: BTreeMap<String, (f64, f64, u64)> = BTreeMap::new(); // (sum, max, n)
+    for o in objs {
+        if let Json::Obj(m) = o {
+            for (k, v) in m {
+                if let Json::Num(n) = v {
+                    let e = acc.entry(k.clone()).or_insert((0.0, f64::NEG_INFINITY, 0));
+                    e.0 += n;
+                    e.1 = e.1.max(*n);
+                    e.2 += 1;
+                }
+            }
+        }
+    }
+    Json::Obj(
+        acc.into_iter()
+            .map(|(k, (sum, max, n))| {
+                let v = match gauge_kind(&k) {
+                    GaugeKind::Sum => sum,
+                    GaugeKind::Avg => sum / n as f64,
+                    GaugeKind::Max => max,
+                };
+                (k, Json::Num(v))
+            })
+            .collect(),
+    )
+}
+
+/// Merge per-replica latency sections bucket-wise. Each input is a
+/// `name → {count, …, sum_ms, buckets}` object as produced by
+/// [`Metrics::to_json`]; the output has the same shape with exact
+/// merged buckets and quantiles recomputed from them (quantiles of
+/// sums would be nonsense). Entries without a `buckets` array (older
+/// replicas) contribute nothing rather than poisoning the merge.
+pub fn merge_latency_objects<'a>(objs: impl IntoIterator<Item = &'a Json>) -> Json {
+    let mut acc: BTreeMap<String, Histogram> = BTreeMap::new();
+    for o in objs {
+        if let Json::Obj(m) = o {
+            for (k, v) in m {
+                let (Some(Json::Arr(buckets)), Some(sum)) =
+                    (v.opt("buckets"), v.opt("sum_ms").and_then(|s| s.num().ok()))
+                else {
+                    continue;
+                };
+                let counts: Vec<u64> =
+                    buckets.iter().map(|b| b.num().unwrap_or(0.0) as u64).collect();
+                acc.entry(k.clone())
+                    .or_insert_with(Histogram::new)
+                    .absorb_counts(&counts, sum);
+            }
+        }
+    }
+    Json::Obj(
+        acc.into_iter()
+            .map(|(k, h)| {
+                let j = Json::obj(vec![
+                    ("count", Json::Num(h.total as f64)),
+                    ("mean_ms", Json::Num(h.mean())),
+                    ("p50_ms", Json::Num(h.quantile(0.5))),
+                    ("p95_ms", Json::Num(h.quantile(0.95))),
+                    ("p99_ms", Json::Num(h.quantile(0.99))),
+                    ("sum_ms", Json::Num(h.sum_ms)),
+                    (
+                        "buckets",
+                        Json::Arr(h.counts().iter().map(|c| Json::Num(*c as f64)).collect()),
+                    ),
+                ]);
+                (k, j)
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +283,88 @@ mod tests {
         assert_eq!(s.get("x").unwrap().num().unwrap(), 11.0);
         assert_eq!(s.get("y").unwrap().num().unwrap(), 2.0);
         assert!(s.opt("z").is_none(), "non-numeric fields are dropped");
+    }
+
+    #[test]
+    fn gauge_merge_is_kind_aware() {
+        let a = Json::obj(vec![
+            ("kv_used_bytes", Json::Num(100.0)),
+            ("paged_prefix_hit_rate", Json::Num(0.8)),
+            ("net_inbox_hwm", Json::Num(7.0)),
+        ]);
+        let b = Json::obj(vec![
+            ("kv_used_bytes", Json::Num(50.0)),
+            ("paged_prefix_hit_rate", Json::Num(0.4)),
+            ("net_inbox_hwm", Json::Num(3.0)),
+        ]);
+        let c = Json::obj(vec![("kv_used_bytes", Json::Num(25.0))]);
+        let m = merge_gauge_objects([&a, &b, &c]);
+        // totals add
+        assert_eq!(m.get("kv_used_bytes").unwrap().num().unwrap(), 175.0);
+        // rates average over replicas that reported the key (2, not 3)
+        assert!((m.get("paged_prefix_hit_rate").unwrap().num().unwrap() - 0.6).abs() < 1e-12);
+        // high-water marks take the fleet max
+        assert_eq!(m.get("net_inbox_hwm").unwrap().num().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn latency_merge_is_bucketwise_not_summed() {
+        // Two replicas with identical latency distributions: the merged
+        // p50 must equal the per-replica p50, not double it (the old
+        // sum-everything rollup produced 2x quantiles).
+        let m1 = Metrics::new();
+        let m2 = Metrics::new();
+        for i in 0..200 {
+            let x = 1.0 + (i % 50) as f64 * 0.37;
+            m1.observe_ms("ttft", x);
+            m2.observe_ms("ttft", x);
+        }
+        let j1 = m1.to_json();
+        let j2 = m2.to_json();
+        let l1 = j1.get("latency").unwrap();
+        let l2 = j2.get("latency").unwrap();
+        let merged = merge_latency_objects([l1, l2]);
+        let t = merged.get("ttft").unwrap();
+        let t1 = l1.get("ttft").unwrap();
+        assert_eq!(t.get("count").unwrap().num().unwrap(), 400.0);
+        assert_eq!(
+            t.get("p50_ms").unwrap().num().unwrap(),
+            t1.get("p50_ms").unwrap().num().unwrap()
+        );
+        assert_eq!(
+            t.get("p99_ms").unwrap().num().unwrap(),
+            t1.get("p99_ms").unwrap().num().unwrap()
+        );
+        assert!(
+            (t.get("mean_ms").unwrap().num().unwrap()
+                - t1.get("mean_ms").unwrap().num().unwrap())
+            .abs()
+                < 1e-9
+        );
+        // raw buckets survive the merge for downstream re-merging
+        let bk = t.get("buckets").unwrap();
+        match bk {
+            Json::Arr(xs) => {
+                let total: f64 = xs.iter().map(|x| x.num().unwrap()).sum();
+                assert_eq!(total, 400.0);
+            }
+            _ => panic!("buckets must be an array"),
+        }
+    }
+
+    #[test]
+    fn latency_json_exposes_raw_buckets() {
+        let m = Metrics::new();
+        m.observe_ms("ttft", 5.0);
+        let j = m.to_json();
+        let t = j.get("latency").unwrap().get("ttft").unwrap();
+        assert_eq!(t.get("sum_ms").unwrap().num().unwrap(), 5.0);
+        match t.get("buckets").unwrap() {
+            Json::Arr(xs) => {
+                assert_eq!(xs.iter().map(|x| x.num().unwrap()).sum::<f64>(), 1.0)
+            }
+            _ => panic!("buckets must be an array"),
+        }
     }
 
     #[test]

@@ -479,19 +479,22 @@ fn adopt_line<F: Frontend>(
     c: &mut Conn,
     mut req: Json,
 ) {
-    let parsed = (|| -> anyhow::Result<(u64, usize, usize, bool, Json)> {
+    let parsed = (|| -> anyhow::Result<(u64, usize, usize, bool, u64, Json)> {
         let rid = req.get("rid")?.usize()? as u64;
         let streamed = req.opt("streamed").map(|v| v.usize()).transpose()?.unwrap_or(0);
         let max_new = req.opt("max_new").map(|v| v.usize()).transpose()?.unwrap_or(32);
         let stream = req.opt("stream").map(|v| v.boolean()).transpose()?.unwrap_or(false);
+        // the adopted request keeps its original trace id so the
+        // migrated half of the timeline stitches onto the first half
+        let trace = req.opt("trace").map(|v| v.usize()).transpose()?.unwrap_or(0) as u64;
         let record = match &mut req {
             Json::Obj(m) => m.remove("session"),
             _ => None,
         };
         let record = record.ok_or_else(|| anyhow::anyhow!("adopt: missing \"session\""))?;
-        Ok((rid, streamed, max_new, stream, record))
+        Ok((rid, streamed, max_new, stream, trace, record))
     })();
-    let (rid, streamed, max_new, stream, record) = match parsed {
+    let (rid, streamed, max_new, stream, trace, record) = match parsed {
         Ok(p) => p,
         Err(e) => {
             push_error(c, net, &e);
@@ -504,6 +507,7 @@ fn adopt_line<F: Frontend>(
         rid,
         streamed,
         max_new,
+        trace,
         record,
         stream: if stream { Some(FrameSink::Net(sink.clone())) } else { None },
         resp: RespSink::Net(sink),

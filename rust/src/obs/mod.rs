@@ -1,0 +1,509 @@
+//! Always-on, low-overhead observability: span tracing, a flight
+//! recorder, and the per-tick profiler feed.
+//!
+//! ## Span tracing
+//!
+//! Every request carries a **trace id** minted at admission
+//! ([`next_trace_id`]: `pid << 32 | counter`, unique across the
+//! processes of one serving mesh). Instrumented code records
+//! fixed-size [`SpanEvent`]s — `(trace, kind, start, duration)` — into
+//! a **per-thread ring** ([`TraceRing`]), so the hot path never takes a
+//! lock and never allocates: recording a span is a TLS lookup plus a
+//! seqlock-guarded slot write. The trace id travels over the line-JSON
+//! wire (`"trace"` on submit/adopt lines) to `chai replica` children,
+//! so one cross-process request yields ONE stitched timeline — the
+//! parent's `frame_write` spans and the child's `queue`/`prefill`/
+//! decode spans share the id, including across a SIGKILL requeue (the
+//! router's entry registry keeps the id and replays it to the
+//! survivor).
+//!
+//! ## Flight recorder
+//!
+//! The rings double as a bounded postmortem buffer: a full ring
+//! **overwrites the oldest span** (unlike `net::ring`, which sheds the
+//! newest — for a crash investigation the most recent history is the
+//! valuable part). [`dump_json`] snapshots every registered ring —
+//! rings outlive their threads, so an engine thread that already
+//! exited still contributes — and emits Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto loadable): complete `"X"` events
+//! only, so a torn or dropped span can never leave an unmatched
+//! begin/end pair. Timestamps are anchored to the unix epoch
+//! ([`unix_anchor_ms`]), so dumps from different processes land on one
+//! common clock with no merge-time shifting.
+//!
+//! ## Per-tick profiler
+//!
+//! Engine-thread phase code additionally accumulates per-phase wall
+//! time into a thread-local tick summary ([`tick_phase_add`]); the
+//! scheduler drains it once per tick ([`take_tick_phases`]) into the
+//! `obs_*` latency histograms, so `{"cmd":"stats"}` and the
+//! `bench_serving --obs` gate can assert *where* tick time goes.
+//!
+//! ## Overhead contract
+//!
+//! Tracing is ON by default and must cost ≤2% decode tok/s (enforced
+//! by the `bench_serving --obs` CI gate). `--no-obs` is the escape
+//! hatch: it clears the process-global [`set_enabled`] flag, and every
+//! recording entry point early-outs on that one relaxed atomic load.
+//! Token streams are bit-identical either way — obs only ever reads
+//! clocks.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+use crate::util::now_ms;
+
+/// Span taxonomy. Fixed small set so events stay `Copy` and the wire
+/// names stay stable (DESIGN.md "Observability").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// submit → admission (scheduler pending queue wait)
+    Queue,
+    /// probe + cluster + prefill of one request
+    Prefill,
+    /// one fused scheduler/engine decode tick (trace 0: per tick, not
+    /// per request)
+    DecodeTick,
+    /// relay phase P: shared-prefix attention, once per group
+    RelayP,
+    /// relay phase S: per-row private-suffix attention + LSE merge
+    RelayS,
+    /// the fused `decode_paged` backend call of one tick
+    Fused,
+    /// preemption swap-out (freeze) of one session
+    SwapOut,
+    /// resume thaw (swap restore or recompute) of one session
+    SwapIn,
+    /// delivery of one request's newly decoded frames to its sink
+    FrameWrite,
+    /// one worker-pool kernel task (trace 0)
+    PoolTask,
+}
+
+impl SpanKind {
+    pub const COUNT: usize = 10;
+
+    pub const ALL: [SpanKind; SpanKind::COUNT] = [
+        SpanKind::Queue,
+        SpanKind::Prefill,
+        SpanKind::DecodeTick,
+        SpanKind::RelayP,
+        SpanKind::RelayS,
+        SpanKind::Fused,
+        SpanKind::SwapOut,
+        SpanKind::SwapIn,
+        SpanKind::FrameWrite,
+        SpanKind::PoolTask,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeTick => "decode_tick",
+            SpanKind::RelayP => "relay_p",
+            SpanKind::RelayS => "relay_s",
+            SpanKind::Fused => "fused",
+            SpanKind::SwapOut => "swap_out",
+            SpanKind::SwapIn => "swap_in",
+            SpanKind::FrameWrite => "frame_write",
+            SpanKind::PoolTask => "pool_task",
+        }
+    }
+}
+
+/// One recorded span: fixed-size and `Copy`, so a ring slot write is a
+/// handful of stores and a snapshot can read slots without ownership.
+/// `start_ms` is [`now_ms`] (process-monotonic); [`dump_json`] rebases
+/// onto the unix anchor at export time.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub kind: u8,
+    pub start_ms: f64,
+    pub dur_ms: f64,
+}
+
+/// Pad to a cache line (same idiom as `net::ring`): the producer's
+/// cursor must not false-share with whatever the allocator packed next
+/// to it.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+struct Slot {
+    /// seqlock: 0 = never written, odd = write in progress, even>0 =
+    /// committed (value encodes the generation, so a reader catches a
+    /// wrap-around overwrite between its two loads)
+    seq: AtomicUsize,
+    val: UnsafeCell<SpanEvent>,
+}
+
+/// Single-producer flight-recorder ring: bounded, lock-free, and —
+/// unlike the shed-on-full `net::ring` queues — **overwriting**: a full
+/// ring drops the OLDEST span, because the recorder's job is to hold
+/// the most recent history at a crash. Readers ([`TraceRing::snapshot`])
+/// run concurrently with the producer and skip torn slots via the
+/// per-slot seqlock instead of blocking it.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    mask: usize,
+    /// monotonic write cursor (single producer; readers only load)
+    cursor: CachePadded<AtomicUsize>,
+}
+
+unsafe impl Send for TraceRing {}
+unsafe impl Sync for TraceRing {}
+
+/// Per-thread recorder capacity. 8192 × 32-byte spans = 256 KiB per
+/// recording thread — hours of steady-state serving history per ring
+/// at the span rates the taxonomy produces.
+pub const RING_CAPACITY: usize = 8192;
+
+impl TraceRing {
+    /// `capacity` rounds up to a power of two (min 2).
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.next_power_of_two().max(2);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot { seq: AtomicUsize::new(0), val: UnsafeCell::new(SpanEvent::default()) })
+            .collect();
+        TraceRing {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            cursor: CachePadded(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Record one span (single producer). Never blocks, never fails:
+    /// past capacity the oldest span is overwritten.
+    pub fn push(&self, ev: SpanEvent) {
+        let pos = self.cursor.0.load(Ordering::Relaxed);
+        let slot = &self.slots[pos & self.mask];
+        // odd = mid-write: a concurrent snapshot skips this slot
+        slot.seq.store(2 * pos + 1, Ordering::Relaxed);
+        // the odd marker must be visible before the value changes
+        std::sync::atomic::fence(Ordering::Release);
+        unsafe {
+            *slot.val.get() = ev;
+        }
+        slot.seq.store(2 * (pos + 1), Ordering::Release);
+        self.cursor.0.store(pos + 1, Ordering::Release);
+    }
+
+    /// Spans recorded over this ring's lifetime (including overwritten
+    /// ones).
+    pub fn recorded(&self) -> usize {
+        self.cursor.0.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to overwrite so far (oldest-first, by construction).
+    pub fn overwritten(&self) -> usize {
+        self.recorded().saturating_sub(self.capacity())
+    }
+
+    /// Snapshot the retained spans, oldest first. Concurrent with the
+    /// producer: a slot that is mid-write — or overwritten between the
+    /// seqlock's two loads — is skipped, never returned torn. The ring
+    /// is not consumed; repeated snapshots are idempotent.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let end = self.cursor.0.load(Ordering::Acquire);
+        let start = end.saturating_sub(self.capacity());
+        let mut out = Vec::with_capacity(end - start);
+        for pos in start..end {
+            let slot = &self.slots[pos & self.mask];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * (pos + 1) {
+                continue; // torn, overwritten, or never committed
+            }
+            let ev = unsafe { *slot.val.get() };
+            // pairs with the Release fence in push: if the slot was
+            // re-entered since the first load, the value may be torn
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue;
+            }
+            out.push(ev);
+        }
+        out
+    }
+}
+
+/// Process-global enable flag (`--no-obs` clears it). Relaxed loads on
+/// the hot path: a toggle only has to become visible eventually, and
+/// recording itself is side-effect-free.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// All rings ever created in this process, in creation order (the
+/// dump's `tid`). Rings are `Arc`'d out of the registry so a thread's
+/// history survives its exit — postmortems outlive their threads.
+fn registry() -> &'static Mutex<Vec<Arc<TraceRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<TraceRing>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static TLS_RING: std::cell::OnceCell<Arc<TraceRing>> = const { std::cell::OnceCell::new() };
+    /// per-thread tick-phase accumulator (engine threads): total ms and
+    /// event count per span kind since the last `take_tick_phases`
+    static TICK_MS: Cell<[f64; SpanKind::COUNT]> = const { Cell::new([0.0; SpanKind::COUNT]) };
+}
+
+fn with_ring<R>(f: impl FnOnce(&TraceRing) -> R) -> R {
+    TLS_RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let ring = Arc::new(TraceRing::new(RING_CAPACITY));
+            registry().lock().unwrap().push(ring.clone());
+            ring
+        });
+        f(ring)
+    })
+}
+
+/// Mint a trace id: `(pid & 0xfffff) << 32 | counter`, so ids stay
+/// unique across every process of one serving mesh without
+/// coordination. The pid is masked to 20 bits and the counter wraps at
+/// 32 so the id stays below 2^53 — it travels as a JSON number (f64)
+/// on the wire and in trace dumps, and must survive that round-trip
+/// exactly. Never 0 — 0 on the wire and in [`SpanEvent::trace`] means
+/// "no request attribution" (per-tick spans).
+pub fn next_trace_id() -> u64 {
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let n = (CTR.fetch_add(1, Ordering::Relaxed) + 1) & 0xffff_ffff;
+    ((std::process::id() as u64 & 0xf_ffff) << 32) | n
+}
+
+/// Record one span into this thread's flight-recorder ring.
+/// `start_ms`/`end_ms` are [`now_ms`] readings. No-op when disabled.
+pub fn record(trace: u64, kind: SpanKind, start_ms: f64, end_ms: f64) {
+    if !enabled() {
+        return;
+    }
+    with_ring(|r| {
+        r.push(SpanEvent {
+            trace,
+            kind: kind as u8,
+            start_ms,
+            dur_ms: (end_ms - start_ms).max(0.0),
+        })
+    });
+}
+
+/// Accumulate `ms` of phase time into this thread's tick summary (the
+/// per-tick profiler feed). No-op when disabled.
+pub fn tick_phase_add(kind: SpanKind, ms: f64) {
+    if !enabled() {
+        return;
+    }
+    TICK_MS.with(|c| {
+        let mut a = c.get();
+        a[kind as usize] += ms;
+        c.set(a);
+    });
+}
+
+/// Drain this thread's tick summary: `(kind, total_ms)` for every
+/// phase that accrued time since the last call, then reset. The
+/// scheduler calls this once per tick and feeds `obs_<kind>_ms`
+/// histograms.
+pub fn take_tick_phases() -> Vec<(SpanKind, f64)> {
+    TICK_MS.with(|c| {
+        let a = c.replace([0.0; SpanKind::COUNT]);
+        SpanKind::ALL
+            .iter()
+            .filter(|k| a[**k as usize] > 0.0)
+            .map(|k| (*k, a[*k as usize]))
+            .collect()
+    })
+}
+
+/// Offset that rebases [`now_ms`] readings onto the unix epoch:
+/// `unix_ms = unix_anchor_ms() + now_ms_reading`. Captured once per
+/// process; parent and children each anchor their own monotonic clock
+/// to the shared wall clock, which is what lets their dumps stitch
+/// without any merge-time shifting.
+pub fn unix_anchor_ms() -> f64 {
+    static ANCHOR: OnceLock<f64> = OnceLock::new();
+    *ANCHOR.get_or_init(|| {
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        unix - now_ms()
+    })
+}
+
+/// Snapshot every ring in this process as Chrome trace-event JSON:
+/// `{"traceEvents": [...], "pid": N, "spans_dropped": M}`. Events are
+/// complete (`"ph":"X"`) with µs timestamps on the unix epoch; `tid`
+/// is the ring's registration index and `args.trace` carries the
+/// request attribution. Idempotent — the recorder is not consumed.
+pub fn dump_json() -> Json {
+    let anchor = unix_anchor_ms();
+    let pid = std::process::id() as f64;
+    let rings: Vec<Arc<TraceRing>> = registry().lock().unwrap().clone();
+    let mut events = Vec::new();
+    let mut dropped = 0usize;
+    for (tid, ring) in rings.iter().enumerate() {
+        dropped += ring.overwritten();
+        for ev in ring.snapshot() {
+            events.push(Json::obj(vec![
+                ("name", Json::Str(SpanKind::ALL[ev.kind as usize].as_str().into())),
+                ("cat", Json::Str("obs".into())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num((anchor + ev.start_ms) * 1e3)),
+                ("dur", Json::Num(ev.dur_ms * 1e3)),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(tid as f64)),
+                ("args", Json::obj(vec![("trace", Json::Num(ev.trace as f64))])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("pid", Json::Num(pid)),
+        ("spans_dropped", Json::Num(dropped as f64)),
+    ])
+}
+
+/// Merge trace dumps from other processes into `base` (concatenating
+/// `traceEvents` and summing `spans_dropped`) — the router stitches
+/// its own dump with each `chai replica` child's `{"cmd":"trace"}`
+/// reply. Events already share the unix-epoch clock, so a merge is a
+/// plain concatenation.
+pub fn merge_dumps(base: Json, others: impl IntoIterator<Item = Json>) -> Json {
+    let mut events = match base.opt("traceEvents").and_then(|v| v.arr().ok()) {
+        Some(a) => a.to_vec(),
+        None => Vec::new(),
+    };
+    let mut dropped = base.opt("spans_dropped").and_then(|v| v.num().ok()).unwrap_or(0.0);
+    let pid = base.opt("pid").and_then(|v| v.num().ok()).unwrap_or(0.0);
+    for o in others {
+        if let Some(a) = o.opt("traceEvents").and_then(|v| v.arr().ok()) {
+            events.extend(a.iter().cloned());
+        }
+        dropped += o.opt("spans_dropped").and_then(|v| v.num().ok()).unwrap_or(0.0);
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("pid", Json::Num(pid)),
+        ("spans_dropped", Json::Num(dropped)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overflow_drops_oldest_not_newest() {
+        let r = TraceRing::new(8);
+        assert_eq!(r.capacity(), 8);
+        for i in 0..20u64 {
+            r.push(SpanEvent { trace: i, kind: 0, start_ms: i as f64, dur_ms: 1.0 });
+        }
+        assert_eq!(r.recorded(), 20);
+        assert_eq!(r.overwritten(), 12);
+        let got: Vec<u64> = r.snapshot().iter().map(|e| e.trace).collect();
+        assert_eq!(got, (12..20).collect::<Vec<_>>(), "newest 8 retained, oldest dropped");
+    }
+
+    #[test]
+    fn snapshot_is_idempotent_and_ordered() {
+        let r = TraceRing::new(16);
+        for i in 0..5u64 {
+            r.push(SpanEvent { trace: 100 + i, kind: 1, start_ms: i as f64, dur_ms: 0.5 });
+        }
+        let a = r.snapshot();
+        let b = r.snapshot();
+        assert_eq!(a, b, "snapshot must not consume the recorder");
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0].start_ms <= w[1].start_ms));
+    }
+
+    #[test]
+    fn snapshot_races_with_producer_without_torn_reads() {
+        let r = Arc::new(TraceRing::new(64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let producer = {
+            let (r, stop) = (r.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // trace doubles as a checksum of the payload
+                    r.push(SpanEvent { trace: i, kind: 2, start_ms: i as f64, dur_ms: i as f64 });
+                    i += 1;
+                }
+            })
+        };
+        for _ in 0..200 {
+            for ev in r.snapshot() {
+                assert_eq!(ev.start_ms, ev.trace as f64, "torn slot leaked");
+                assert_eq!(ev.dur_ms, ev.trace as f64, "torn slot leaked");
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_pid_prefixed() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, b);
+        assert_ne!(a, 0);
+        assert_eq!(a >> 32, std::process::id() as u64 & 0xf_ffff);
+        assert!(a < (1u64 << 53), "trace ids must survive a JSON f64 round-trip");
+        assert_eq!(a >> 32, b >> 32);
+    }
+
+    #[test]
+    fn tick_phases_accumulate_and_reset() {
+        // serialized against nothing: TICK_MS is thread-local
+        let _ = take_tick_phases();
+        tick_phase_add(SpanKind::Fused, 1.5);
+        tick_phase_add(SpanKind::Fused, 0.5);
+        tick_phase_add(SpanKind::RelayP, 2.0);
+        let got = take_tick_phases();
+        assert_eq!(
+            got,
+            vec![(SpanKind::RelayP, 2.0), (SpanKind::Fused, 2.0)],
+            "per-kind totals in taxonomy order"
+        );
+        assert!(take_tick_phases().is_empty(), "drain must reset");
+    }
+
+    #[test]
+    fn dump_merges_across_processes_by_concatenation() {
+        let a = Json::obj(vec![
+            (
+                "traceEvents",
+                Json::Arr(vec![Json::obj(vec![("name", Json::Str("queue".into()))])]),
+            ),
+            ("spans_dropped", Json::Num(1.0)),
+        ]);
+        let b = Json::obj(vec![
+            (
+                "traceEvents",
+                Json::Arr(vec![Json::obj(vec![("name", Json::Str("fused".into()))])]),
+            ),
+            ("spans_dropped", Json::Num(2.0)),
+        ]);
+        let m = merge_dumps(a, vec![b]);
+        assert_eq!(m.get("traceEvents").unwrap().arr().unwrap().len(), 2);
+        assert_eq!(m.get("spans_dropped").unwrap().num().unwrap(), 3.0);
+    }
+}

@@ -79,7 +79,7 @@ use crate::config::ServingConfig;
 use crate::coordinator::Coordinator;
 use crate::engine::Engine;
 use crate::kv::paged::prompt_fingerprint;
-use crate::metrics::{sum_json_objects, Metrics};
+use crate::metrics::{merge_gauge_objects, merge_latency_objects, sum_json_objects, Metrics};
 use crate::model::tokenizer;
 use crate::runtime::reference::{RefBackend, SharedRefModel};
 use crate::scheduler::{RespSink, Response, SubmitOpts};
@@ -113,6 +113,14 @@ pub trait Frontend: Clone + Send + 'static {
     fn sched_json(&self) -> Json;
     /// `{"cmd":"info"}` — static serving facts (backend, model, ...).
     fn info_json(&self) -> Json;
+    /// `{"cmd":"trace"}` — drain the flight recorder as Chrome
+    /// trace-event JSON ([`crate::obs::dump_json`]). The router
+    /// overrides this to stitch its own spans with every live process
+    /// replica's dump (one shared unix-epoch clock, so stitching is
+    /// concatenation).
+    fn trace_json(&self) -> Json {
+        crate::obs::dump_json()
+    }
     /// `{"cmd":"drain"}` (reactor transport only): stop admitting,
     /// freeze/evict every request, and reply with one
     /// `{"drained":[...]}` line on `sink`'s connection — serialized
@@ -269,6 +277,9 @@ pub struct Router {
     down: Arc<Vec<AtomicBool>>,
     /// `--pin-cores` (forwarded to the reactor via [`Frontend`])
     pin_cores: bool,
+    /// `--trace-out`: where the stitched flight-recorder dump lands on
+    /// shutdown and on every replica death (postmortem artifact)
+    trace_out: Arc<Option<std::path::PathBuf>>,
 }
 
 /// Owns the replica fleet and its supervisor thread; dropping (or
@@ -289,6 +300,8 @@ impl RouterHandle {
         if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
+        // dump while the children can still answer {"cmd":"trace"}
+        self.router.dump_trace_out();
         for t in self.router.replicas.iter() {
             t.shutdown();
         }
@@ -308,6 +321,9 @@ impl Router {
     pub fn start(cfg: ServingConfig) -> Result<RouterHandle> {
         let n = cfg.replicas.max(1);
         let policy = RoutePolicy::parse(&cfg.route)?;
+        // the process transport has no local coordinator to set this;
+        // children get `--no-obs` forwarded by ProcessReplica::spawn
+        crate::obs::set_enabled(cfg.obs);
         let metrics = Arc::new(Metrics::new());
         let mut replicas: Vec<Arc<dyn ReplicaTransport>> = Vec::with_capacity(n);
         match cfg.transport.as_str() {
@@ -363,6 +379,7 @@ impl Router {
             ring: Arc::new(Mutex::new(ring)),
             down: Arc::new((0..n).map(|_| AtomicBool::new(false)).collect()),
             pin_cores: cfg.pin_cores,
+            trace_out: Arc::new(cfg.trace_out.clone()),
         };
         let stop = Arc::new(AtomicBool::new(false));
         let supervisor = {
@@ -454,6 +471,19 @@ impl Router {
         for d in self.replicas[i].take_orphans() {
             self.metrics.inc("router_requeued");
             self.place_orphan(d);
+        }
+        // postmortem: snapshot what the router + survivors know right
+        // now (the dead child's unqueried spans died with it)
+        self.dump_trace_out();
+    }
+
+    /// Write the stitched flight-recorder dump to `--trace-out`
+    /// (best-effort; called on shutdown and on replica death).
+    fn dump_trace_out(&self) {
+        let Some(path) = self.trace_out.as_ref() else { return };
+        let dump = Frontend::trace_json(self);
+        if let Err(e) = std::fs::write(path, dump.to_string()) {
+            eprintln!("[router] --trace-out {}: {e}", path.display());
         }
     }
 
@@ -611,10 +641,13 @@ impl Router {
             .collect()
     }
 
-    /// Roll gauges up across replicas and patch the aggregate hit rate
-    /// (sums of rates are meaningless).
+    /// Roll gauges up across replicas by declared kind (totals sum,
+    /// `_rate`s average, `_hwm`s max — see [`crate::metrics::gauge_kind`])
+    /// and patch the aggregate hit rate, which must be recomputed from
+    /// the summed block counts rather than averaged (an idle replica's
+    /// rate would weight the same as a busy one's).
     fn rolled_gauges(&self, per: &[Json]) -> Json {
-        let mut gauges = sum_json_objects(per.iter().filter_map(|j| j.opt("gauges")));
+        let mut gauges = merge_gauge_objects(per.iter().filter_map(|j| j.opt("gauges")));
         if let Json::Obj(m) = &mut gauges {
             if m.contains_key("paged_prefix_hit_rate") {
                 m.insert(
@@ -678,7 +711,13 @@ impl Frontend for Router {
         id
     }
 
-    fn submit_rid(&self, id: u64, opts: SubmitOpts, resp: RespSink) {
+    fn submit_rid(&self, id: u64, mut opts: SubmitOpts, resp: RespSink) {
+        // mint the trace id HERE, before the wire write: the entry
+        // registry must know it so crash requeues and parent-side
+        // frame_write spans stay on the request's one timeline
+        if opts.trace == 0 && crate::obs::enabled() {
+            opts.trace = crate::obs::next_trace_id();
+        }
         let r = self.route(&opts);
         self.metrics.inc("router_routed_total");
         self.metrics.inc(&format!("router_routed_replica_{r}"));
@@ -715,10 +754,15 @@ impl Frontend for Router {
     fn stats_json(&self) -> Json {
         let per = self.per_replica(|t| t.metrics_json());
         let counters = sum_json_objects(per.iter().filter_map(|j| j.opt("counters")));
+        // bucket-wise histogram merge: p50/p99/mean recomputed from the
+        // summed raw buckets (summing per-replica quantiles would be
+        // nonsense)
+        let latency = merge_latency_objects(per.iter().filter_map(|j| j.opt("latency")));
         let gauges = self.rolled_gauges(&per);
         let info = Frontend::info_json(self);
         Json::obj(vec![
             ("counters", counters),
+            ("latency", latency),
             ("gauges", gauges),
             ("info", info),
             ("router", self.router_json()),
@@ -760,6 +804,20 @@ impl Frontend for Router {
             m.insert("route".into(), Json::Str(self.policy.name().into()));
         }
         info
+    }
+
+    fn trace_json(&self) -> Json {
+        // own rings (frame_write spans + local replicas' engine threads)
+        // stitched with every live process child's dump; local replicas
+        // contribute an empty view (their spans are already ours)
+        let others: Vec<Json> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| !self.is_down(*i) && t.kind() == "process")
+            .map(|(_, t)| t.view_json("trace"))
+            .collect();
+        crate::obs::merge_dumps(crate::obs::dump_json(), others)
     }
 
     fn pin_cores(&self) -> bool {

@@ -113,6 +113,9 @@ fn entry_to_drained(rid: u64, e: Entry, session: Option<MeshSession>) -> MeshDra
             resp_tx: e.resp,
             stream: e.stream,
             stream_offset: streamed,
+            // the SAME trace id survives the requeue: the request's
+            // second life on a survivor lands on the original timeline
+            trace: e.trace,
         },
         streamed,
         session,
@@ -132,6 +135,9 @@ struct Entry {
     /// exactly-once resume; the child's own count is irrelevant once
     /// it is dead)
     streamed: usize,
+    /// observability trace id (0 = untraced); outlives the child that
+    /// first served the request
+    trace: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -195,6 +201,10 @@ impl ReplicaTransport for LocalReplica {
             "kv" => Frontend::kv_json(&self.coordinator),
             "sched" => Frontend::sched_json(&self.coordinator),
             "info" => Frontend::info_json(&self.coordinator),
+            // a local replica's spans live in the router process's own
+            // per-thread rings — the router's dump already has them, so
+            // this view contributes nothing extra
+            "trace" => Json::obj(vec![("traceEvents", Json::Arr(Vec::new()))]),
             _ => Json::Null,
         }
     }
@@ -217,9 +227,15 @@ impl ReplicaTransport for LocalReplica {
         match session {
             None => {
                 // no frozen state: replay from scratch at the offset
-                let Request { id, prompt, max_new, variant, resp_tx, stream, .. } = req;
-                let opts =
-                    SubmitOpts { prompt, max_new, variant, stream, stream_offset: streamed };
+                let Request { id, prompt, max_new, variant, resp_tx, stream, trace, .. } = req;
+                let opts = SubmitOpts {
+                    prompt,
+                    max_new,
+                    variant,
+                    stream,
+                    stream_offset: streamed,
+                    trace,
+                };
                 self.coordinator.submit_request(id, opts, resp_tx);
             }
             Some(MeshSession::Local(m)) => self.coordinator.adopt_local(req, m, streamed),
@@ -372,6 +388,9 @@ mod process {
             if cfg.pin_cores {
                 cmd.arg("--pin-cores");
             }
+            if !cfg.obs {
+                cmd.arg("--no-obs");
+            }
             cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
             let mut child = cmd
                 .spawn()
@@ -489,6 +508,9 @@ mod process {
             if opts.stream_offset > 0 {
                 line.push(("offset", Json::Num(opts.stream_offset as f64)));
             }
+            if opts.trace != 0 {
+                line.push(("trace", Json::Num(opts.trace as f64)));
+            }
             let wire = Json::obj(line);
             let entry = Entry {
                 prompt: opts.prompt,
@@ -497,6 +519,7 @@ mod process {
                 stream: opts.stream,
                 resp,
                 streamed: opts.stream_offset,
+                trace: opts.trace,
             };
             self.register_and_write(id, entry, wire);
         }
@@ -590,23 +613,34 @@ mod process {
             let record = match session {
                 None => {
                     // no frozen state — plain re-submit at the offset
-                    let Request { id, prompt, max_new, variant, resp_tx, stream, .. } = req;
-                    let opts =
-                        SubmitOpts { prompt, max_new, variant, stream, stream_offset: streamed };
+                    let Request { id, prompt, max_new, variant, resp_tx, stream, trace, .. } =
+                        req;
+                    let opts = SubmitOpts {
+                        prompt,
+                        max_new,
+                        variant,
+                        stream,
+                        stream_offset: streamed,
+                        trace,
+                    };
                     self.submit(id, opts, resp_tx);
                     return;
                 }
                 Some(MeshSession::Wire(j)) => j,
                 Some(MeshSession::Local(m)) => crate::mesh::encode_migrated(&m),
             };
-            let wire = Json::obj(vec![
+            let mut wire = vec![
                 ("cmd", Json::Str("adopt".into())),
                 ("rid", Json::Num(req.id as f64)),
                 ("streamed", Json::Num(streamed as f64)),
                 ("max_new", Json::Num(req.max_new as f64)),
                 ("stream", Json::Bool(req.stream.is_some())),
-                ("session", record),
-            ]);
+            ];
+            if req.trace != 0 {
+                wire.push(("trace", Json::Num(req.trace as f64)));
+            }
+            wire.push(("session", record));
+            let wire = Json::obj(wire);
             let id = req.id;
             let entry = Entry {
                 prompt: req.prompt,
@@ -615,6 +649,7 @@ mod process {
                 stream: req.stream,
                 resp: req.resp_tx,
                 streamed,
+                trace: req.trace,
             };
             self.register_and_write(id, entry, wire);
         }
@@ -763,6 +798,7 @@ mod process {
         token: i32,
         text: String,
     ) {
+        let t0 = now_ms();
         for _ in 0..FRAME_RETRIES {
             {
                 let mut g = entries.lock().unwrap();
@@ -776,6 +812,15 @@ mod process {
                 let Some(stream) = &e.stream else { return };
                 if stream.send(StreamFrame { id, index, token, text: text.clone() }) {
                     e.streamed = e.streamed.max(index + 1);
+                    // parent-side frame_write span: pairs with the
+                    // child's spans on the same trace, proving the
+                    // timeline stitches across the process boundary
+                    crate::obs::record(
+                        e.trace,
+                        crate::obs::SpanKind::FrameWrite,
+                        t0,
+                        now_ms(),
+                    );
                     return;
                 }
             }

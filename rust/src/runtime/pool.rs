@@ -117,6 +117,7 @@ impl Pool {
         }
         // Erase the borrow's lifetime; run() blocks until pending == 0,
         // so no worker touches `f` after this frame unwinds.
+        let w0 = crate::util::now_ms();
         let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
         let mut slot = self.inner.slot.lock().unwrap();
         debug_assert!(slot.job.is_none(), "one scoped job at a time");
@@ -158,6 +159,14 @@ impl Pool {
             }
         };
         drop(slot);
+        // per-tick profiler: wall time of the parallel section, charged
+        // to the submitting (engine) thread's phase accumulator. No ring
+        // span — kernels post dozens of jobs per tick and per-job spans
+        // would evict the request-level history.
+        crate::obs::tick_phase_add(
+            crate::obs::SpanKind::PoolTask,
+            crate::util::now_ms() - w0,
+        );
         if panicked {
             panic!("pool task panicked");
         }

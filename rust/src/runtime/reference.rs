@@ -1403,6 +1403,7 @@ impl RefBackend {
                 }
             }
             // phase 1: shared prefix, one stacked-Q pass per rep panel
+            let p0 = crate::util::now_ms();
             let pslabs: Vec<&[f32]> = shared.iter().map(|&bid| store.block_data(bid)).collect();
             let (ew_p, m_p, s_p) =
                 rk::paged_relay_scores(&q, &pslabs, k_base, gk, n, dh, b, prefix_len);
@@ -1426,6 +1427,9 @@ impl RefBackend {
                 prefix_len,
             );
             drop(pslabs);
+            let p1 = crate::util::now_ms();
+            crate::obs::record(0, crate::obs::SpanKind::RelayP, p0, p1);
+            crate::obs::tick_phase_add(crate::obs::SpanKind::RelayP, p1 - p0);
             // phase 2: per-row private suffix, then the LSE merge.
             // Rows are independent — each reads only its own tail
             // blocks and writes only its own `merged` rows — so they
@@ -1482,6 +1486,9 @@ impl RefBackend {
                     }
                 });
             }
+            let p2 = crate::util::now_ms();
+            crate::obs::record(0, crate::obs::SpanKind::RelayS, p1, p2);
+            crate::obs::tick_phase_add(crate::obs::SpanKind::RelayS, p2 - p1);
             c.add_attn_out(&mut x, i, &merged, h, n)?;
             c.residual_mlp(&mut x, i, n)?;
             self.put(xn);

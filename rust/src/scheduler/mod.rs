@@ -68,6 +68,7 @@ use crate::engine::{Admission, Engine, FrozenSession, MigratedSession, Session, 
 use crate::kv::paged::is_pool_exhausted;
 use crate::kv::KvPool;
 use crate::metrics::Metrics;
+use crate::obs::{self, SpanKind};
 use crate::util::now_ms;
 
 pub use policy::{preempt_action, PreemptAction, SchedPolicy};
@@ -90,6 +91,12 @@ pub struct Request {
     /// them from being re-emitted, so the client's stream stays
     /// exactly-once and bit-identical.
     pub stream_offset: usize,
+    /// observability trace id ([`crate::obs`]): minted once at admission
+    /// to the serving stack (router or bare coordinator) and carried
+    /// across the wire, preemption, and mesh requeue, so every span a
+    /// request produces — in any process — lands on one timeline. 0
+    /// means untraced (obs disabled).
+    pub trace: u64,
 }
 
 /// Where a request's terminal [`Response`] goes: a per-request channel
@@ -167,6 +174,8 @@ pub struct SubmitOpts {
     pub stream: Option<FrameSink>,
     /// see [`Request::stream_offset`] (0 for fresh submissions)
     pub stream_offset: usize,
+    /// see [`Request::trace`] (0 = mint one at admission)
+    pub trace: u64,
 }
 
 impl SubmitOpts {
@@ -177,6 +186,7 @@ impl SubmitOpts {
             variant,
             stream: None,
             stream_offset: 0,
+            trace: 0,
         }
     }
 }
@@ -259,6 +269,10 @@ struct Live {
     /// preemption (a thawed session resumes at its pre-freeze count),
     /// so every token streams exactly once
     streamed: usize,
+    /// when this session last emitted a frame batch — `None` until the
+    /// first frame, so the frame path can tell TTFT (first frame) from
+    /// inter-token time (every later batch); survives preemption
+    last_frame_ms: Option<f64>,
 }
 
 impl Live {
@@ -267,12 +281,22 @@ impl Live {
     /// A bounded sink that momentarily refuses a frame holds the
     /// counter in place — the frame is re-offered on the next tick (and
     /// at retire/cancel), so nothing is ever skipped or duplicated.
-    fn emit_new_frames(&mut self) {
+    ///
+    /// This is also the request's frame-path observation point: each
+    /// accepted batch records a `frame_write` span on the request's
+    /// trace and one `obs_ttft_ms` (first frame ever) or `obs_tbt_ms`
+    /// (time since the previous batch) observation.
+    fn emit_new_frames(&mut self, metrics: &Metrics) {
         let n = self.session.generated();
         let Some(tx) = &self.req.stream else {
             self.streamed = n;
             return;
         };
+        if self.streamed >= n {
+            return;
+        }
+        let t0 = now_ms();
+        let before = self.streamed;
         while self.streamed < n {
             let tok = self.session.tokens[self.session.prompt_len + self.streamed];
             let accepted = tx.send(StreamFrame {
@@ -285,6 +309,15 @@ impl Live {
                 break;
             }
             self.streamed += 1;
+        }
+        if self.streamed > before {
+            let now = now_ms();
+            obs::record(self.req.trace, SpanKind::FrameWrite, t0, now);
+            match self.last_frame_ms {
+                None => metrics.observe_ms("obs_ttft_ms", now - self.req.submitted_ms),
+                Some(prev) => metrics.observe_ms("obs_tbt_ms", now - prev),
+            }
+            self.last_frame_ms = Some(now);
         }
     }
 }
@@ -307,6 +340,10 @@ struct Preempted {
     started_ms: f64,
     /// stream frames emitted before the freeze (resume continues here)
     streamed: usize,
+    /// see [`Live::last_frame_ms`] — preserved across freeze/thaw so a
+    /// resumed session's next frame records a (long) inter-token gap,
+    /// not a bogus second TTFT
+    last_frame_ms: Option<f64>,
 }
 
 /// Monotonic scheduler counters (mirrored into [`Metrics`]).
@@ -474,8 +511,11 @@ impl Scheduler {
                     let p = self.preempted.pop_front().unwrap();
                     self.resume_starved_ticks = 0;
                     let swapped = p.frozen.is_swapped();
+                    let trace = p.req.trace;
+                    let t0 = now_ms();
                     match engine.thaw_session(p.frozen) {
                         Ok(session) => {
+                            obs::record(trace, SpanKind::SwapIn, t0, now_ms());
                             if swapped {
                                 self.stats.resume_swap += 1;
                                 metrics.inc("sched_resume_swap");
@@ -490,6 +530,7 @@ impl Scheduler {
                                 last_decode_tick: self.tick,
                                 admitted_tick: self.tick,
                                 streamed: p.streamed,
+                                last_frame_ms: p.last_frame_ms,
                             });
                         }
                         Err(e) => {
@@ -551,11 +592,14 @@ impl Scheduler {
                 Admission::Admit => {
                     let req = self.pending.pop_front().unwrap();
                     self.head_starved_ticks = 0;
-                    let queue_ms = now_ms() - req.submitted_ms;
-                    metrics.observe_ms("queue", queue_ms);
                     let t0 = now_ms();
+                    let queue_ms = t0 - req.submitted_ms;
+                    metrics.observe_ms("queue", queue_ms);
+                    metrics.observe_ms("obs_queue_wait_ms", queue_ms);
+                    obs::record(req.trace, SpanKind::Queue, req.submitted_ms, t0);
                     match engine.start_session(&req.prompt, req.max_new, &req.variant) {
                         Ok(session) => {
+                            obs::record(req.trace, SpanKind::Prefill, t0, now_ms());
                             metrics.inc("admitted");
                             metrics.observe_ms("ttft", session.timing.ttft_ms);
                             let offset = req.stream_offset;
@@ -566,9 +610,10 @@ impl Scheduler {
                                 last_decode_tick: self.tick,
                                 admitted_tick: self.tick,
                                 streamed: offset,
+                                last_frame_ms: None,
                             };
                             // prefill sampled the first generated token
-                            l.emit_new_frames();
+                            l.emit_new_frames(metrics);
                             self.live.push(l);
                         }
                         Err(e) => {
@@ -617,8 +662,10 @@ impl Scheduler {
             engine.swap_free_bytes(),
             self.policy.recompute_max_tokens,
         );
+        let t0 = now_ms();
         let (frozen, swapped) =
             engine.freeze_session(l.session, action == PreemptAction::Swap);
+        obs::record(l.req.trace, SpanKind::SwapOut, t0, now_ms());
         if swapped {
             self.stats.preempt_swap += 1;
             metrics.inc("sched_preempt_swap");
@@ -635,6 +682,7 @@ impl Scheduler {
             frozen,
             started_ms: l.started_ms,
             streamed: l.streamed,
+            last_frame_ms: l.last_frame_ms,
         });
     }
 
@@ -668,7 +716,7 @@ impl Scheduler {
             }
             // flush sampled-but-unsent frames so "frames already
             // streamed stand" holds before the terminal goes out
-            l.emit_new_frames();
+            l.emit_new_frames(metrics);
             metrics.inc("sched_cancelled");
             l.req.resp_tx.send(Response::aborted(id, l.session.generated()));
             return true;
@@ -737,7 +785,7 @@ impl Scheduler {
         }
         let paged = engine.paged_enabled();
         for mut l in self.live.drain(..) {
-            l.emit_new_frames();
+            l.emit_new_frames(metrics);
             let Live { req, mut session, streamed, .. } = l;
             let item = if engine.can_freeze(&session) {
                 let (frozen, _) = engine.freeze_session(session, true);
@@ -789,7 +837,15 @@ impl Scheduler {
         }
         let frozen = engine.import_frozen(m);
         metrics.inc("sched_adopted");
-        self.preempted.push_back(Preempted { req, frozen, started_ms: now_ms(), streamed });
+        self.preempted.push_back(Preempted {
+            req,
+            frozen,
+            started_ms: now_ms(),
+            streamed,
+            // adopted sessions time their next frame from adoption (a
+            // fresh TTFT on the survivor), not the dead peer's clock
+            last_frame_ms: None,
+        });
     }
 
     // ------------------------------------------------------------------
@@ -809,8 +865,20 @@ impl Scheduler {
         metrics.observe("decode_batch", self.live.len() as f64);
         let mut sessions: Vec<&mut Session> =
             self.live.iter_mut().map(|l| &mut l.session).collect();
+        let t0 = now_ms();
         let outcomes = engine.decode_tick(&mut sessions);
         drop(sessions);
+        let t1 = now_ms();
+        // batch-level span (trace 0: a tick serves many requests) plus
+        // the per-phase profiler summary the engine/backend accumulated
+        // on this thread during the tick, drained into obs_* histograms
+        obs::record(0, SpanKind::DecodeTick, t0, t1);
+        if obs::enabled() {
+            metrics.observe_ms("obs_decode_tick_ms", t1 - t0);
+            for (kind, ms) in obs::take_tick_phases() {
+                metrics.observe_ms(&format!("obs_{}_ms", kind.as_str()), ms);
+            }
+        }
 
         // classify per session: keep decoding, retire, requeue (pool
         // exhausted mid-decode → preempt instead of failing), or fail
@@ -821,7 +889,7 @@ impl Scheduler {
                 Ok(more) => {
                     metrics.inc("tokens");
                     self.live[i].last_decode_tick = self.tick;
-                    self.live[i].emit_new_frames();
+                    self.live[i].emit_new_frames(metrics);
                     if let Some(ms) = self.live[i].session.timing.decode_ms.last() {
                         metrics.observe_ms("decode_step", *ms);
                     }
@@ -867,7 +935,7 @@ impl Scheduler {
     fn retire(&mut self, engine: &Engine, metrics: &Metrics, mut l: Live, paged: bool) {
         // re-offer any frame a bounded sink refused earlier: the
         // terminal line must never overtake a frame
-        l.emit_new_frames();
+        l.emit_new_frames(metrics);
         if paged {
             // idempotent: finish_session would release too, but errored
             // sessions never reach it
@@ -1000,6 +1068,7 @@ mod tests {
                 resp_tx: tx.into(),
                 stream: None,
                 stream_offset: 0,
+                trace: 0,
             },
             rx,
         )

@@ -14,6 +14,12 @@
 //! connection, since request ids are global across the front-end
 //! `{"cmd": "probe"}` — cheap liveness + load heartbeat (never blocks
 //! on the engine thread; the mesh supervisor's health-check primitive)
+//! `{"cmd": "trace"}` — drain the observability flight recorder as
+//! Chrome trace-event JSON (`{"traceEvents": [...], "pid": ...,
+//! "spans_dropped": N}`); on the router this stitches every live
+//! process replica's dump into the same timeline (timestamps are
+//! absolute unix microseconds). Disabled (`--no-obs`) servers answer
+//! with an empty event list.
 //!
 //! ## Replica mesh extensions
 //!
@@ -39,6 +45,12 @@
 //!   "stream": B, "session": {...}}` (reactor only) — resume a
 //!   migrated session under its original id; decode continues
 //!   bit-exactly from the frozen KV.
+//!
+//! Submit and adopt lines may additionally carry `"trace": T` — the
+//! router-minted observability trace id. The replica records its spans
+//! under `T` instead of minting its own, so one cross-process request
+//! (including a crash-requeued one) yields ONE stitched timeline in
+//! `{"cmd": "trace"}` output. Absent or `0` means "mint locally".
 //!
 //! On the threaded transport `drain`/`adopt` answer with a
 //! deterministic error line (its lockstep read loop cannot order the
@@ -609,6 +621,10 @@ pub(crate) fn parse_generation(req: &Json) -> Result<SubmitOpts> {
     // mesh requeues replay from scratch but must not re-emit frames the
     // client already received (see Request::stream_offset)
     opts.stream_offset = req.opt("offset").map(|v| v.usize()).transpose()?.unwrap_or(0);
+    // cross-process trace propagation: a router-minted trace id rides
+    // the wire so the child's spans land on the parent's timeline
+    // (absent/0 = mint locally at admission if obs is on)
+    opts.trace = req.opt("trace").map(|v| v.usize()).transpose()?.unwrap_or(0) as u64;
     Ok(opts)
 }
 
@@ -689,6 +705,10 @@ pub(crate) fn command_json<F: Frontend>(req: &Json, api: &F, view: &NetView<'_>)
         // the engine thread, so the mesh supervisor can call it at high
         // frequency without perturbing decode
         "probe" => Ok(api.probe_json()),
+        // flight recorder drain: Chrome trace-event JSON of every span
+        // still resident in the per-thread rings (the router stitches
+        // its process children's dumps into one timeline)
+        "trace" => Ok(api.trace_json()),
         // mesh migration needs the reply FIFO-ordered behind in-flight
         // frames on the same connection — only the reactor transport
         // can provide that (it intercepts these before dispatching

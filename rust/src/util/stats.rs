@@ -115,6 +115,39 @@ impl Histogram {
         }
     }
 
+    /// Raw bucket counts (`edges + 1` entries; last is the overflow
+    /// bucket). Every `Histogram` shares the same fixed edge set, so
+    /// index-wise addition across threads/processes/replicas is sound —
+    /// this is what the router's latency rollup merges.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Rebuild a histogram from raw bucket counts (the `buckets` array a
+    /// replica exports in its stats JSON) plus the running sum.
+    pub fn from_counts(counts: &[u64], sum_ms: f64) -> Histogram {
+        let mut h = Histogram::new();
+        h.absorb_counts(counts, sum_ms);
+        h
+    }
+
+    /// Bucket-wise merge of another histogram's raw counts into this
+    /// one. Extra trailing buckets (from a hypothetical wider exporter)
+    /// are folded into the overflow bucket rather than dropped.
+    pub fn absorb_counts(&mut self, counts: &[u64], sum_ms: f64) {
+        let last = self.counts.len() - 1;
+        for (i, c) in counts.iter().enumerate() {
+            self.counts[i.min(last)] += c;
+            self.total += c;
+        }
+        self.sum_ms += sum_ms;
+    }
+
+    /// Bucket-wise merge of a whole sibling histogram.
+    pub fn absorb(&mut self, other: &Histogram) {
+        self.absorb_counts(&other.counts, other.sum_ms);
+    }
+
     /// Approximate quantile from bucket boundaries (upper edge).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
@@ -181,6 +214,32 @@ mod tests {
         assert_eq!(h.total, 1000);
         assert!(h.quantile(0.5) <= h.quantile(0.99));
         assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn histogram_bucketwise_merge_matches_combined_stream() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        for i in 0..500 {
+            let x = 0.05 + i as f64 * 0.11;
+            a.record(x);
+            both.record(x);
+        }
+        for i in 0..300 {
+            let x = 40.0 + i as f64 * 1.7;
+            b.record(x);
+            both.record(x);
+        }
+        let mut merged = Histogram::from_counts(a.counts(), a.sum_ms);
+        merged.absorb(&b);
+        assert_eq!(merged.total, both.total);
+        assert_eq!(merged.counts(), both.counts());
+        assert!((merged.sum_ms - both.sum_ms).abs() < 1e-9);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), both.quantile(q));
+        }
+        assert!((merged.mean() - both.mean()).abs() < 1e-9);
     }
 
     #[test]

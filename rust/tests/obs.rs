@@ -1,0 +1,302 @@
+//! Integration tests for the observability layer (`chai::obs`): span
+//! tracing woven through router → coordinator → scheduler → engine,
+//! flight-recorder ring semantics, Chrome trace-event dump
+//! well-formedness, trace-id propagation across the process transport —
+//! including the SIGKILL requeue drill, where one request's timeline
+//! must stitch across the replica it died on and the survivor that
+//! finished it — and the ≤-zero-cost contract: token streams are
+//! bit-identical with observability on and off.
+//!
+//! The obs enable flag is process-global (`--no-obs`), so every test
+//! here serializes on one lock and restores the enabled state.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use chai::config::ServingConfig;
+use chai::coordinator::Coordinator;
+use chai::engine::Variant;
+use chai::obs::{self, SpanEvent, SpanKind, TraceRing};
+use chai::router::{Frontend, Router};
+use chai::scheduler::{Response, StreamFrame, SubmitOpts};
+use chai::util::json::Json;
+use std::sync::mpsc::Receiver;
+
+/// Tests toggle the process-global obs flag; run them one at a time.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ref_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: std::path::PathBuf::from("no-artifacts"),
+        backend: "ref".into(),
+        ..Default::default()
+    }
+}
+
+struct Stream {
+    frames: Receiver<StreamFrame>,
+    resp: Receiver<Response>,
+}
+
+fn submit_stream<F: Frontend>(api: &F, prompt: &str, max_new: usize) -> Stream {
+    let (tx, frames) = std::sync::mpsc::channel();
+    let (_, resp) = api.submit_opts(SubmitOpts {
+        stream: Some(tx.into()),
+        ..SubmitOpts::new(prompt, max_new, Variant::Chai)
+    });
+    Stream { frames, resp }
+}
+
+fn finish(label: &str, s: Stream) -> (String, Vec<String>) {
+    let r = s.resp.recv_timeout(Duration::from_secs(600)).unwrap();
+    assert!(r.error.is_none(), "[{label}] {:?}", r.error);
+    assert!(!r.cancelled, "[{label}] spurious cancel");
+    let frames: Vec<StreamFrame> = s.frames.try_iter().collect();
+    assert_eq!(frames.len(), r.n_generated, "[{label}] one frame per token");
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.index, i, "[{label}] contiguous frames");
+    }
+    (r.text, frames.into_iter().map(|f| f.text).collect())
+}
+
+/// Every nonzero trace id mentioned anywhere in a dump.
+fn trace_ids(dump: &Json) -> HashSet<u64> {
+    dump.get("traceEvents")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|ev| ev.get("args").unwrap().get("trace").unwrap().num().unwrap() as u64)
+        .filter(|&t| t != 0)
+        .collect()
+}
+
+/// Structural check on one Chrome trace event; returns
+/// `(name, pid, trace)`.
+fn check_event(ev: &Json) -> (String, u64, u64) {
+    let name = ev.get("name").unwrap().str().unwrap().to_string();
+    let known: HashSet<&str> = SpanKind::ALL.iter().map(|k| k.as_str()).collect();
+    assert!(known.contains(name.as_str()), "unknown span name {name:?}");
+    assert_eq!(ev.get("ph").unwrap().str().unwrap(), "X", "complete events only — no orphan B/E");
+    assert_eq!(ev.get("cat").unwrap().str().unwrap(), "obs");
+    assert!(ev.get("ts").unwrap().num().unwrap() > 0.0, "unix-epoch µs timestamp");
+    assert!(ev.get("dur").unwrap().num().unwrap() >= 0.0);
+    let pid = ev.get("pid").unwrap().num().unwrap() as u64;
+    assert!(pid > 0);
+    ev.get("tid").unwrap().num().unwrap();
+    let trace = ev.get("args").unwrap().get("trace").unwrap().num().unwrap() as u64;
+    (name, pid, trace)
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder ring: bounded, oldest-dropped
+// ---------------------------------------------------------------------------
+
+/// Overflowing the recorder drops the OLDEST spans: the ring's job is
+/// to hold the most recent history at a crash (the opposite of the
+/// shed-newest `net::ring` queues).
+#[test]
+fn flight_recorder_overflow_drops_oldest_not_newest() {
+    let r = TraceRing::new(16);
+    for i in 0..50u64 {
+        r.push(SpanEvent { trace: i, kind: 0, start_ms: i as f64, dur_ms: 1.0 });
+    }
+    assert_eq!(r.recorded(), 50);
+    assert_eq!(r.overwritten(), 50 - r.capacity());
+    let kept: Vec<u64> = r.snapshot().iter().map(|e| e.trace).collect();
+    let newest: Vec<u64> = (50 - r.capacity() as u64..50).collect();
+    assert_eq!(kept, newest, "newest spans retained, oldest overwritten");
+    // idempotent: draining the dump must not consume the recorder
+    assert_eq!(r.snapshot().len(), kept.len());
+}
+
+// ---------------------------------------------------------------------------
+// Trace dump well-formedness (single process)
+// ---------------------------------------------------------------------------
+
+/// A served coordinator's `{"cmd":"trace"}` dump is well-formed Chrome
+/// trace JSON: complete-only events with the span taxonomy, request
+/// spans attributed to nonzero trace ids, per-tick spans to trace 0.
+#[test]
+fn trace_dump_is_well_formed_chrome_trace_json() {
+    let _g = obs_lock();
+    let handle = Coordinator::start(ref_cfg()).unwrap();
+    assert!(obs::enabled(), "obs defaults to on");
+    let streams: Vec<Stream> = (0..2)
+        .map(|i| submit_stream(&handle.coordinator, &format!("the color of tom {i}"), 8))
+        .collect();
+    for (i, s) in streams.into_iter().enumerate() {
+        finish(&format!("req {i}"), s);
+    }
+
+    let dump = Frontend::trace_json(&handle.coordinator);
+    // survives the wire: render and reparse
+    let dump = Json::parse(&dump.to_string()).unwrap();
+    assert!(dump.get("pid").unwrap().num().unwrap() > 0.0);
+    assert!(dump.get("spans_dropped").unwrap().num().unwrap() >= 0.0);
+    let events = dump.get("traceEvents").unwrap().arr().unwrap();
+    assert!(!events.is_empty());
+    let mut names = HashSet::new();
+    let mut zero_trace = 0usize;
+    let mut req_traces = HashSet::new();
+    for ev in events {
+        let (name, _, trace) = check_event(ev);
+        if trace == 0 {
+            zero_trace += 1;
+        } else if name == "queue" {
+            req_traces.insert(trace);
+        }
+        names.insert(name);
+    }
+    for want in ["queue", "prefill", "decode_tick", "frame_write"] {
+        assert!(names.contains(want), "span kind {want:?} missing from {names:?}");
+    }
+    assert!(zero_trace > 0, "per-tick spans carry trace 0");
+    assert!(req_traces.len() >= 2, "each request minted its own trace id");
+
+    // the frame path feeds the per-request latency histograms, with raw
+    // buckets exposed for cross-replica merging
+    let stats = Frontend::stats_json(&handle.coordinator);
+    let lat = stats.get("latency").unwrap();
+    for key in ["obs_ttft_ms", "obs_queue_wait_ms", "obs_decode_tick_ms"] {
+        let h = lat.get(key).unwrap_or_else(|_| panic!("{key} missing"));
+        assert!(h.get("count").unwrap().num().unwrap() > 0.0, "{key} observed");
+        assert!(!h.get("buckets").unwrap().arr().unwrap().is_empty(), "{key} raw buckets");
+    }
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Cross-process propagation + the SIGKILL stitch
+// ---------------------------------------------------------------------------
+
+/// The acceptance drill: process replicas behind the router, SIGKILL
+/// one mid-decode. Every request keeps ONE trace id across admission,
+/// the wire, and the crash requeue — the merged dump holds each
+/// request's spans from both sides of the process boundary, and the
+/// requeued request's timeline continues under its original id on the
+/// survivor (no second timeline, no orphan spans).
+#[cfg(target_os = "linux")]
+#[test]
+fn sigkill_requeue_yields_one_stitched_timeline_per_request() {
+    let _g = obs_lock();
+    let n_req = 6usize;
+    let cfg = ServingConfig {
+        replicas: 3,
+        transport: "process".into(),
+        replica_cmd: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_chai"))),
+        probe_ms: 50,
+        probe_suspect: 3,
+        ..ref_cfg()
+    };
+    let trace_out = std::env::temp_dir().join(format!("chai-obs-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&trace_out);
+    let cfg = ServingConfig { trace_out: Some(trace_out.clone()), ..cfg };
+    // rings persist for the process lifetime, so earlier tests in this
+    // binary may have left spans behind — only traces minted from here
+    // on belong to this drill
+    let preexisting: HashSet<u64> = trace_ids(&obs::dump_json());
+    let handle = Router::start(cfg).unwrap();
+    let router = handle.router.clone();
+
+    let streams: Vec<Stream> = (0..n_req)
+        .map(|i| submit_stream(&router, &format!("a long tale of tom number {i}"), 40))
+        .collect();
+    // decode demonstrably underway, then SIGKILL the busiest replica
+    let f = streams[0].frames.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(f.index, 0);
+    let victim = (0..router.replica_count())
+        .max_by_key(|i| router.transport(*i).inflight())
+        .unwrap();
+    assert!(router.transport(victim).inflight() >= 1);
+    router.transport(victim).kill_hard().unwrap();
+
+    for (i, s) in streams.into_iter().enumerate() {
+        finish(&format!("stream {i}"), s);
+    }
+    assert_eq!(router.metrics.counter("router_replica_deaths"), 1);
+    assert!(router.metrics.counter("router_requeued") >= 1);
+
+    // one merged dump: the router's own rings + each live child's
+    let dump = Json::parse(&Frontend::trace_json(&router).to_string()).unwrap();
+    let parent_pid = dump.get("pid").unwrap().num().unwrap() as u64;
+    let events = dump.get("traceEvents").unwrap().arr().unwrap();
+    let mut pids = HashSet::new();
+    let mut child_queue_traces: HashSet<u64> = HashSet::new();
+    let mut parent_frame_traces: HashSet<u64> = HashSet::new();
+    for ev in events {
+        let (name, pid, trace) = check_event(ev);
+        pids.insert(pid);
+        if trace == 0 || preexisting.contains(&trace) {
+            continue;
+        }
+        if pid != parent_pid && name == "queue" {
+            child_queue_traces.insert(trace);
+        }
+        if pid == parent_pid && name == "frame_write" {
+            parent_frame_traces.insert(trace);
+        }
+    }
+    assert!(pids.len() >= 2, "spans from the router AND its children: {pids:?}");
+    // every request was admitted (queue span) in a surviving child
+    // under exactly its router-minted trace id — a requeue that minted
+    // a fresh id would show up as an extra timeline here
+    assert_eq!(
+        child_queue_traces.len(),
+        n_req,
+        "one trace id per request, stable across the SIGKILL requeue"
+    );
+    // the parent's frame_write spans stitch onto those same timelines
+    assert!(!parent_frame_traces.is_empty());
+    for t in &parent_frame_traces {
+        assert!(
+            child_queue_traces.contains(t),
+            "parent span with trace {t} has no child-side timeline (orphan)"
+        );
+    }
+    // replica death triggered a --trace-out flight-recorder dump
+    let on_disk = Json::parse_file(&trace_out).expect("--trace-out written on replica death");
+    assert!(!on_disk.get("traceEvents").unwrap().arr().unwrap().is_empty());
+
+    // router-merged stats carry the frame-path histograms bucket-wise
+    let stats = Frontend::stats_json(&router);
+    let lat = stats.get("latency").unwrap();
+    let ttft = lat.get("obs_ttft_ms").expect("merged obs_ttft_ms");
+    assert!(
+        ttft.get("count").unwrap().num().unwrap() >= n_req as f64,
+        "every streamed request recorded a TTFT"
+    );
+    assert!(lat.get("obs_tbt_ms").is_ok(), "inter-token histogram merged");
+    handle.shutdown();
+    let _ = std::fs::remove_file(&trace_out);
+}
+
+// ---------------------------------------------------------------------------
+// The overhead contract's correctness half: obs never touches tokens
+// ---------------------------------------------------------------------------
+
+/// `--no-obs` must change nothing but the recording: token streams are
+/// bit-identical with observability on and off (obs only reads clocks).
+#[test]
+fn streams_are_bit_identical_with_obs_on_and_off() {
+    let _g = obs_lock();
+    let prompt = "tom keeps the hat in the box";
+
+    let on = Coordinator::start(ref_cfg()).unwrap();
+    assert!(obs::enabled());
+    let (text_on, frames_on) = finish("obs on", submit_stream(&on.coordinator, prompt, 24));
+    on.shutdown();
+
+    let off = Coordinator::start(ServingConfig { obs: false, ..ref_cfg() }).unwrap();
+    assert!(!obs::enabled(), "--no-obs must gate the recorder globally");
+    let (text_off, frames_off) = finish("obs off", submit_stream(&off.coordinator, prompt, 24));
+    off.shutdown();
+    obs::set_enabled(true);
+
+    assert_eq!(text_on, text_off, "terminal text must be bit-identical");
+    assert_eq!(frames_on, frames_off, "per-token frames must be bit-identical");
+}
